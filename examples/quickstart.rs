@@ -1,0 +1,42 @@
+//! Quickstart: train the tiny LM data-parallel on 2 workers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This exercises the full three-layer stack end to end: the AOT-compiled
+//! JAX/Pallas train step runs under PJRT in two rust worker threads whose
+//! gradients meet in the rust doubling-halving all-reduce.
+
+use ringmaster::trainer::{train, TrainConfig};
+
+fn main() -> ringmaster::Result<()> {
+    let artifacts = std::env::var("RINGMASTER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut cfg = TrainConfig::new(artifacts, "tiny", 2);
+    cfg.log_every = 5;
+
+    println!("training tiny preset on {} workers...", cfg.workers);
+    let (ck, report) = train(&cfg, None, 60)?;
+
+    println!(
+        "\nalgorithm={}  startup={:.1}s  wall={:.2}s  steps/s={:.1}  tokens/s={:.0}",
+        report.algorithm,
+        report.startup_secs,
+        report.wall_secs,
+        report.steps_per_sec,
+        report.tokens_per_sec
+    );
+    println!("all-reduce traffic: {} msgs, {:.2} MiB", report.allreduce_msgs, report.allreduce_bytes as f64 / (1 << 20) as f64);
+    println!("\n  step   epoch    loss");
+    for l in &report.logs {
+        println!("  {:>4}  {:>6.3}  {:.4}", l.step, l.epoch, l.loss);
+    }
+
+    let first = report.logs.first().unwrap().loss;
+    let last = report.logs.last().unwrap().loss;
+    println!(
+        "\nloss {first:.3} -> {last:.3} over {} steps ({} epochs); checkpoint at step {}",
+        report.steps, format_args!("{:.2}", ck.epochs), ck.step
+    );
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT pipeline: lower every model entry point to HLO text + manifest.
+
+Run once at build time (``make artifacts``); the rust binary then loads
+``artifacts/*.hlo.txt`` via PJRT and never touches python again.
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowering goes stablehlo ->
+XlaComputation with ``return_tuple=True`` so rust unwraps one tuple.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--presets tiny,small,base]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def lower_preset(cfg: M.ModelConfig, out_dir: str) -> dict:
+    """Emit the four artifacts for one preset; return its manifest entry."""
+    n = M.n_params(cfg)
+    b, t = cfg.batch, cfg.seq_len
+    theta, tok = f32(n), i32(b, t)
+
+    entries = {
+        "train_step": (
+            lambda th, i, tg: M.train_step(cfg, th, i, tg),
+            (theta, tok, tok),
+            ["loss", "grad"],
+        ),
+        "fwd_loss": (
+            lambda th, i, tg: M.fwd_loss(cfg, th, i, tg),
+            (theta, tok, tok),
+            ["loss"],
+        ),
+        "sgd_update": (
+            M.sgd_update,
+            (theta, f32(n), f32(n), f32(), f32()),
+            ["theta", "mu"],
+        ),
+        "init_params": (
+            lambda s: (M.init_params(cfg, s),),
+            (u32(2),),
+            ["theta"],
+        ),
+    }
+
+    files = {}
+    for name, (fn, args, outs) in entries.items():
+        fname = f"{name}_{cfg.name}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[name] = {"file": fname, "outputs": outs}
+        print(f"  {fname}: {len(text)} chars")
+
+    return {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "n_params": n,
+        "tokens_per_step": b * t,
+        "entries": files,
+        "param_layout": [
+            {"name": nm, "shape": list(sh), "offset": off}
+            for nm, sh, off in M.param_layout(cfg)
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"presets": {}}
+    for name in args.presets.split(","):
+        name = name.strip()
+        cfg = M.PRESETS[name]
+        print(f"lowering preset {name} ({M.n_params(cfg)} params)")
+        manifest["presets"][name] = lower_preset(cfg, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

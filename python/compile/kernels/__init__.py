@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the emitted HLO is
+plain XLA ops that the CPU PJRT client (xla_extension 0.5.1) can execute.
+Real-TPU lowering would emit Mosaic custom-calls the CPU plugin cannot run;
+see DESIGN.md section 3 (Hardware adaptation).
+
+Public entry points:
+    matmul.matmul_pallas(x, w)          -- MXU-tiled matmul
+    fused_update.sgd_update_pallas(...) -- fused SGD+momentum parameter update
+    layernorm.layernorm_pallas(x, g, b) -- layernorm over the hidden dim
+
+``ref.py`` holds the pure-jnp oracles the pytest suite checks against.
+"""

@@ -1,0 +1,110 @@
+"""Differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no reverse-mode rule (even in interpret mode), so each
+kernel gets a ``jax.custom_vjp`` whose backward pass is *also* expressed
+with the Pallas kernels where the math allows:
+
+  matmul    : dx = dy @ w.T and dw = x.T @ dy — two more MXU-tiled matmuls.
+  layernorm : dx is row-local, computed by a dedicated Pallas backward
+              kernel; dgain/dbias are cross-row reductions handled by XLA.
+
+``fused_update`` needs no VJP — the optimizer step is outside the loss.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_pallas
+from .layernorm import layernorm_pallas, EPS, _clamp_block, DEFAULT_ROWS
+
+
+# ----------------------------------------------------------------------
+# matmul
+# ----------------------------------------------------------------------
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable MXU-tiled matmul: x (M,K) @ w (K,N) -> (M,N)."""
+    return matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    dx = matmul_pallas(dy, w.T)
+    dw = matmul_pallas(x.T, dy)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ----------------------------------------------------------------------
+# layernorm
+# ----------------------------------------------------------------------
+def _ln_bwd_kernel(x_ref, g_ref, dy_ref, dx_ref):
+    """Row-local LN input gradient.
+
+    With y_hat = (x - mean) * rsqrt(var + eps):
+      dx = rstd * (dy*g - mean(dy*g) - y_hat * mean(dy*g * y_hat))
+    """
+    x = x_ref[...].astype(jnp.float32)
+    dyg = dy_ref[...].astype(jnp.float32) * g_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    yhat = (x - mean) * rstd
+    m1 = jnp.mean(dyg, axis=-1, keepdims=True)
+    m2 = jnp.mean(dyg * yhat, axis=-1, keepdims=True)
+    dx_ref[...] = (rstd * (dyg - m1 - yhat * m2)).astype(dx_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_block",))
+def _ln_bwd_dx(x, gain, dy, *, rows_block: int = DEFAULT_ROWS):
+    rows, hidden = x.shape
+    rb = _clamp_block(rows_block, rows)
+    return pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(rows // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        interpret=True,
+    )(x, gain, dy)
+
+
+@jax.custom_vjp
+def layernorm(x: jax.Array, gain: jax.Array, bias: jax.Array) -> jax.Array:
+    """Differentiable Pallas layernorm over the last dim of (rows, hidden)."""
+    return layernorm_pallas(x, gain, bias)
+
+
+def _ln_fwd(x, gain, bias):
+    return layernorm_pallas(x, gain, bias), (x, gain)
+
+
+def _ln_bwd(res, dy):
+    x, gain = res
+    dx = _ln_bwd_dx(x, gain, dy)
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    yhat = (xf - mean) * jax.lax.rsqrt(var + EPS)
+    dyf = dy.astype(jnp.float32)
+    dgain = jnp.sum(dyf * yhat, axis=0).astype(gain.dtype)
+    dbias = jnp.sum(dyf, axis=0).astype(gain.dtype)
+    return dx, dgain, dbias
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,84 @@
+"""Fused SGD-with-momentum parameter update as a Pallas kernel.
+
+After the rust-side all-reduce averages gradients across workers, every
+worker applies the identical update:
+
+    mu'    = momentum * mu + g
+    theta' = theta - lr * mu'
+
+Fusing the two element-wise passes into one kernel halves HBM traffic on
+the full flattened parameter vector (the single biggest tensor in the
+system — see DESIGN.md section 8). The vector is tiled into 1-D VMEM
+blocks; ``lr`` and ``momentum`` arrive as scalar-prefetch style (1, 1)
+blocks so one compiled artifact serves every learning-rate (eq 7 rescales
+lr at restart without recompiling).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64 KiB of f32 per block: big enough to amortize pipeline overhead,
+# small enough that theta+grad+mu blocks fit VMEM many times over.
+DEFAULT_BLOCK = 16384
+
+
+def _sgd_kernel(lr_ref, mom_ref, theta_ref, grad_ref, mu_ref, theta_o, mu_o):
+    lr = lr_ref[0]
+    momentum = mom_ref[0]
+    mu_new = momentum * mu_ref[...] + grad_ref[...]
+    mu_o[...] = mu_new
+    theta_o[...] = theta_ref[...] - lr * mu_new
+
+
+def _clamp_block(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sgd_update_pallas(
+    theta: jax.Array,
+    grad: jax.Array,
+    mu: jax.Array,
+    lr: jax.Array,
+    momentum: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+):
+    """Fused SGD+momentum. All of theta/grad/mu are flat f32 vectors.
+
+    Returns (theta', mu').
+    """
+    (n,) = theta.shape
+    assert grad.shape == (n,) and mu.shape == (n,)
+    b = _clamp_block(block, n)
+    lr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    momentum = jnp.asarray(momentum, jnp.float32).reshape((1,))
+
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # lr broadcast to all blocks
+            pl.BlockSpec((1,), lambda i: (0,)),  # momentum
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), theta.dtype),
+            jax.ShapeDtypeStruct((n,), mu.dtype),
+        ],
+        interpret=True,
+    )(lr, momentum, theta, grad, mu)

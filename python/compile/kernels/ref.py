@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for every Layer-1 Pallas kernel.
+
+pytest checks kernel-vs-ref allclose — the core L1 correctness signal
+(DESIGN.md section 7). These stay deliberately naive: no tiling, no fusion,
+nothing shared with the kernel implementations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-5
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul.matmul_pallas."""
+    return jnp.matmul(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def sgd_update_ref(theta, grad, mu, lr, momentum):
+    """Oracle for kernels.fused_update.sgd_update_pallas."""
+    mu_new = momentum * mu + grad
+    return theta - lr * mu_new, mu_new
+
+
+def layernorm_ref(x, gain, bias):
+    """Oracle for kernels.layernorm.layernorm_pallas."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + EPS)
+    return (y * gain + bias).astype(x.dtype)

@@ -1,0 +1,210 @@
+"""Layer-2 JAX model: decoder-only transformer LM over a flat parameter vector.
+
+The paper trains ResNet-110/CIFAR-10 under Horovod data parallelism; the
+scheduler only sees the job through its per-step time and 1/k loss curve
+(DESIGN.md section 2, substitutions). Here the workload is a small causal
+LM whose *entire* parameter state is a single flat f32 vector ``theta`` —
+that choice is what makes the rust side clean: gradients cross the
+rust ring all-reduce as one contiguous buffer, checkpoints are one tensor,
+and the PJRT call signature is tiny.
+
+Entry points AOT-lowered by ``aot.py`` (one artifact per preset):
+
+    train_step(theta, inputs, targets) -> (loss, grad)     fwd+bwd
+    fwd_loss(theta, inputs, targets)   -> (loss,)          fwd only (Table 1)
+    sgd_update(theta, grad, mu, lr, momentum) -> (theta', mu')
+    init_params(seed2)                 -> (theta,)         threefry init
+
+All heavy matmuls and layernorms route through the Layer-1 Pallas kernels
+(``kernels.autodiff``), so the kernels sit on both the forward and backward
+hot paths of the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import autodiff as k
+from .kernels.fused_update import sgd_update_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Shapes of one model preset. ``batch`` is per-worker (the paper keeps
+    per-GPU minibatch constant at 128; each worker runs the same artifact
+    regardless of the job's worker count)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    batch: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+#: Presets the AOT pipeline emits artifacts for. ``tiny`` keeps unit tests
+#: fast; ``small`` is the default end-to-end training preset; ``base`` is
+#: the scaled workload used for profiling benches.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4,
+                        seq_len=32, batch=8),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=4,
+                         n_heads=4, seq_len=64, batch=16),
+    "base": ModelConfig("base", vocab=1024, d_model=256, n_layers=6,
+                        n_heads=8, seq_len=128, batch=16),
+}
+
+
+# ----------------------------------------------------------------------
+# Flat parameter layout
+# ----------------------------------------------------------------------
+def param_layout(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """Ordered (name, shape, offset) entries of the flat theta vector."""
+    entries: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq_len, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        entries += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.w_qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.w_proj", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w_mlp1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_mlp2", (cfg.d_ff, cfg.d_model)),
+        ]
+    entries += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+
+    out, off = [], 0
+    for name, shape in entries:
+        out.append((name, shape, off))
+        off += math.prod(shape)
+    return out
+
+
+def n_params(cfg: ModelConfig) -> int:
+    name, shape, off = param_layout(cfg)[-1]
+    return off + math.prod(shape)
+
+
+def unflatten(cfg: ModelConfig, theta: jax.Array) -> Dict[str, jax.Array]:
+    """Static-offset slices of the flat vector (free at HLO level)."""
+    params = {}
+    for name, shape, off in param_layout(cfg):
+        size = math.prod(shape)
+        params[name] = theta[off:off + size].reshape(shape)
+    return params
+
+
+def init_params(cfg: ModelConfig, seed2: jax.Array) -> jax.Array:
+    """Scaled-normal init of the flat vector from a (2,) uint32 seed."""
+    key = jax.random.wrap_key_data(seed2.astype(jnp.uint32))
+    parts = []
+    for name, shape, _ in param_layout(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            parts.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith(("_b",)):
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = 1.0 / math.sqrt(fan_in)
+            if name == "pos_embed":
+                scale = 0.01
+            parts.append(
+                (scale * jax.random.normal(sub, shape, jnp.float32)).ravel()
+            )
+    return jnp.concatenate(parts)
+
+
+# ----------------------------------------------------------------------
+# Forward pass
+# ----------------------------------------------------------------------
+def _attention(cfg: ModelConfig, h2d: jax.Array, p: Dict[str, jax.Array],
+               i: int, bsz: int) -> jax.Array:
+    """Multi-head causal self-attention over (B*T, D) rows."""
+    t, d, nh, dh = cfg.seq_len, cfg.d_model, cfg.n_heads, cfg.d_head
+    qkv = k.matmul(h2d, p[f"l{i}.w_qkv"])                   # (B*T, 3D)
+    qkv = qkv.reshape(bsz, t, 3, nh, dh)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3)                  # (B, H, T, dh)
+    kk = qkv[:, :, 1].transpose(0, 2, 1, 3)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)             # (B, H, T, dh)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz * t, d)
+    return k.matmul(out, p[f"l{i}.w_proj"])
+
+
+def forward_logits(cfg: ModelConfig, theta: jax.Array,
+                   inputs: jax.Array) -> jax.Array:
+    """inputs: (B, T) int32 -> logits (B*T, V). LM head tied to tok_embed."""
+    p = unflatten(cfg, theta)
+    bsz = inputs.shape[0]
+    h = p["tok_embed"][inputs] + p["pos_embed"][None, :, :]  # (B, T, D)
+    h2d = h.reshape(bsz * cfg.seq_len, cfg.d_model)
+
+    for i in range(cfg.n_layers):
+        a = k.layernorm(h2d, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        h2d = h2d + _attention(cfg, a, p, i, bsz)
+        a = k.layernorm(h2d, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        ff = jax.nn.gelu(k.matmul(a, p[f"l{i}.w_mlp1"]))
+        h2d = h2d + k.matmul(ff, p[f"l{i}.w_mlp2"])
+
+    h2d = k.layernorm(h2d, p["lnf_g"], p["lnf_b"])
+    return k.matmul(h2d, p["tok_embed"].T)                   # (B*T, V)
+
+
+def loss_fn(cfg: ModelConfig, theta: jax.Array, inputs: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy. targets: (B, T) int32."""
+    logits = forward_logits(cfg, theta, inputs)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = targets.reshape(-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# ----------------------------------------------------------------------
+# AOT entry points
+# ----------------------------------------------------------------------
+def train_step(cfg: ModelConfig, theta, inputs, targets):
+    """One data-parallel worker step: local loss + local gradient.
+
+    The caller (rust trainer) all-reduces ``grad`` across workers before
+    feeding it to ``sgd_update``.
+    """
+    loss, grad = jax.value_and_grad(
+        lambda th: loss_fn(cfg, th, inputs, targets)
+    )(theta)
+    return loss, grad
+
+
+def fwd_loss(cfg: ModelConfig, theta, inputs, targets):
+    """Forward-only loss — Table 1's T_forward profiling artifact."""
+    return (loss_fn(cfg, theta, inputs, targets),)
+
+
+def sgd_update(theta, grad, mu, lr, momentum):
+    """Fused momentum-SGD update (Layer-1 kernel)."""
+    return sgd_update_pallas(theta, grad, mu, lr, momentum)

@@ -1,0 +1,179 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes/seeds; assert_allclose against ref.py is
+the core correctness signal for the kernels that end up inside the AOT'd
+HLO (DESIGN.md section 7).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_update import sgd_update_pallas
+from compile.kernels.layernorm import layernorm_pallas
+from compile.kernels.matmul import (
+    matmul_pallas,
+    vmem_footprint_bytes,
+    mxu_utilization_estimate,
+    _clamp_block,
+)
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ----------------------------------------------------------------------
+# matmul
+# ----------------------------------------------------------------------
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_f32(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = rand(rng, m, k), rand(rng, k, n)
+        out = matmul_pallas(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.matmul_ref(x, w)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_bf16(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k).astype(jnp.bfloat16)
+        w = rand(rng, k, n).astype(jnp.bfloat16)
+        out = matmul_pallas(x, w)
+        assert out.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref.matmul_ref(x, w), np.float32),
+            rtol=5e-2, atol=5e-2,
+        )
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 512)])
+    def test_block_shapes_equivalent(self, bm, bn, bk):
+        rng = np.random.default_rng(0)
+        x, w = rand(rng, 64, 48), rand(rng, 48, 32)
+        out = matmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(x) @ np.asarray(w),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_mxu_aligned_shape(self):
+        """Production tile path: 128-multiples hit the exact MXU tiling."""
+        rng = np.random.default_rng(1)
+        x, w = rand(rng, 256, 512), rand(rng, 512, 128)
+        out = matmul_pallas(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(x) @ np.asarray(w),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_identity(self):
+        x = jnp.eye(32, dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul_pallas(x, x)), np.eye(32), atol=1e-6
+        )
+
+    def test_mismatched_inner_dims_raises(self):
+        with pytest.raises(AssertionError):
+            matmul_pallas(jnp.zeros((4, 5)), jnp.zeros((6, 4)))
+
+    def test_vmem_footprint_default_blocks_under_budget(self):
+        # double-buffered tiles + accumulator must stay well under 16 MiB
+        assert vmem_footprint_bytes(128, 128, 512) < 4 * 2**20
+
+    def test_mxu_utilization_perfect_when_aligned(self):
+        assert mxu_utilization_estimate(256, 256, 512, 128, 128) == 1.0
+        assert mxu_utilization_estimate(100, 100, 512, 100, 100) < 1.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(block=st.integers(1, 512), dim=st.integers(1, 512))
+    def test_clamp_block_divides(self, block, dim):
+        b = _clamp_block(block, dim)
+        assert 1 <= b <= min(block, dim) and dim % b == 0
+
+
+# ----------------------------------------------------------------------
+# fused SGD update
+# ----------------------------------------------------------------------
+class TestFusedUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 5000),
+        lr=st.floats(1e-4, 1.0),
+        momentum=st.floats(0.0, 0.99),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, lr, momentum, seed):
+        rng = np.random.default_rng(seed)
+        theta, g, mu = rand(rng, n), rand(rng, n), rand(rng, n)
+        t2, m2 = sgd_update_pallas(theta, g, mu, lr, momentum)
+        tr, mr = ref.sgd_update_ref(theta, g, mu, lr, momentum)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(tr), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), rtol=1e-5, atol=1e-5)
+
+    def test_zero_lr_keeps_theta(self):
+        rng = np.random.default_rng(0)
+        theta, g, mu = rand(rng, 1000), rand(rng, 1000), rand(rng, 1000)
+        t2, _ = sgd_update_pallas(theta, g, mu, 0.0, 0.9)
+        np.testing.assert_allclose(np.asarray(t2), np.asarray(theta))
+
+    def test_zero_momentum_is_plain_sgd(self):
+        rng = np.random.default_rng(0)
+        theta, g = rand(rng, 1000), rand(rng, 1000)
+        t2, m2 = sgd_update_pallas(theta, g, jnp.zeros(1000), 0.1, 0.0)
+        np.testing.assert_allclose(
+            np.asarray(t2), np.asarray(theta) - 0.1 * np.asarray(g),
+            rtol=1e-6, atol=1e-6,
+        )
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(g))
+
+    def test_momentum_accumulates_across_steps(self):
+        theta = jnp.zeros(16)
+        g = jnp.ones(16)
+        mu = jnp.zeros(16)
+        for _ in range(3):
+            theta, mu = sgd_update_pallas(theta, g, mu, 1.0, 0.5)
+        # mu: 1, 1.5, 1.75 ; theta: -1, -2.5, -4.25
+        np.testing.assert_allclose(np.asarray(mu), 1.75 * np.ones(16))
+        np.testing.assert_allclose(np.asarray(theta), -4.25 * np.ones(16))
+
+
+# ----------------------------------------------------------------------
+# layernorm
+# ----------------------------------------------------------------------
+class TestLayernorm:
+    @settings(max_examples=25, deadline=None)
+    @given(rows=st.integers(1, 200), hidden=st.integers(2, 96),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, rows, hidden, seed):
+        rng = np.random.default_rng(seed)
+        x, g, b = rand(rng, rows, hidden), rand(rng, hidden), rand(rng, hidden)
+        out = layernorm_pallas(x, g, b)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref.layernorm_ref(x, g, b)),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_unit_gain_zero_bias_normalizes(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 64, 32) * 10 + 5
+        out = np.asarray(layernorm_pallas(x, jnp.ones(32), jnp.zeros(32)))
+        np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+    def test_scale_shift_applied(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 8, 16)
+        base = np.asarray(layernorm_pallas(x, jnp.ones(16), jnp.zeros(16)))
+        out = np.asarray(layernorm_pallas(x, 2.0 * jnp.ones(16), 3.0 * jnp.ones(16)))
+        np.testing.assert_allclose(out, 2.0 * base + 3.0, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,212 @@
+//! Hot-path micro-benchmarks (§Perf of EXPERIMENTS.md).
+//!
+//! Each row is one L3 hot path with its practical roofline comparison:
+//!  - all-reduce throughput vs a single-thread memcpy roofline,
+//!  - scheduler allocate() latency at Table-3 scale (206 jobs),
+//!  - DES throughput (events/sec) on the extreme-contention workload,
+//!  - NNLS / eq-1 / eq-5 fit latency (the per-interval modelling cost),
+//!  - jsonx parse throughput on a manifest-shaped document,
+//!  - checkpoint save+load bandwidth.
+//!
+//! `cargo bench --bench hotpath`
+
+use ringmaster::collectives::{self, comm::run_world, Algorithm};
+use ringmaster::linalg::Matrix;
+use ringmaster::metrics::CsvTable;
+use ringmaster::nnls::nnls;
+use ringmaster::perfmodel::{ConvergenceModel, SpeedModel};
+use ringmaster::rngx::Rng;
+use ringmaster::scheduler::{doubling::Doubling, JobInfo, Scheduler, Speed};
+use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::trainer::Checkpoint;
+
+fn median_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    let mut v: Vec<f64> = (0..reps).map(|_| f()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() -> ringmaster::Result<()> {
+    let mut table = CsvTable::new(&["hot path", "metric", "value", "roofline/context"]);
+
+    // ---- all-reduce throughput ------------------------------------------
+    let n = 1_000_000usize;
+    let w = 8;
+    let ar_secs = median_of(5, || {
+        let payloads: Vec<Vec<f32>> = (0..w).map(|r| vec![r as f32; n]).collect();
+        let t = std::time::Instant::now();
+        run_world(w, payloads, |rank, data| {
+            collectives::all_reduce(Algorithm::DoublingHalving, rank, data).unwrap();
+        });
+        t.elapsed().as_secs_f64()
+    });
+    // roofline: per rank moves 2n(1-1/w) elems; memcpy of the same volume
+    let volume = (2.0 * n as f64 * (1.0 - 1.0 / w as f64)) * 4.0;
+    let src = vec![1.0f32; n];
+    let mut dst = vec![0.0f32; n];
+    let memcpy_secs = median_of(5, || {
+        let t = std::time::Instant::now();
+        for _ in 0..2 {
+            dst.copy_from_slice(&src);
+        }
+        std::hint::black_box(&dst);
+        t.elapsed().as_secs_f64()
+    });
+    table.row(&[
+        format!("dh all-reduce w={w} n=1M"),
+        "GiB/s per rank".into(),
+        format!("{:.2}", volume / ar_secs / (1 << 30) as f64),
+        format!("memcpy roofline {:.1} GiB/s", volume / memcpy_secs / (1 << 30) as f64),
+    ]);
+
+    // §Perf optimization: shared-memory transport vs message passing
+    let shm_secs = median_of(5, || {
+        let world = ringmaster::collectives::shmem::ShmemWorld::new(w);
+        let t = std::time::Instant::now();
+        let handles: Vec<_> = (0..w)
+            .map(|r| {
+                let rank = world.rank(r);
+                std::thread::spawn(move || {
+                    let mut data = vec![r as f32; n];
+                    rank.all_reduce(&mut data);
+                    data[0]
+                })
+            })
+            .collect();
+        for h in handles {
+            std::hint::black_box(h.join().unwrap());
+        }
+        t.elapsed().as_secs_f64()
+    });
+    table.row(&[
+        format!("shmem all-reduce w={w} n=1M"),
+        "GiB/s per rank".into(),
+        format!("{:.2}", volume / shm_secs / (1 << 30) as f64),
+        format!("{:.2}x over dh channels (§Perf)", ar_secs / shm_secs),
+    ]);
+
+    // ---- scheduler latency at Table-3 scale -------------------------------
+    let profiles = WorkloadGen::default().generate(206, 250.0, 42);
+    let jobs: Vec<JobInfo> = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| JobInfo {
+            id: i as u64,
+            q: p.total_epochs,
+            speed: Speed::Table(p.speed_table()),
+            max_w: 64,
+        })
+        .collect();
+    let sched_us = median_of(9, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(Doubling.allocate(&jobs, 64));
+        t.elapsed().as_secs_f64() * 1e6
+    });
+    table.row(&[
+        "doubling.allocate 206 jobs".into(),
+        "latency µs".into(),
+        format!("{sched_us:.0}"),
+        "scheduling interval is seconds — must be ≪1s".into(),
+    ]);
+
+    // ---- DES throughput ----------------------------------------------------
+    let des_secs = median_of(3, || {
+        let cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Extreme, 42);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 42);
+        let t = std::time::Instant::now();
+        std::hint::black_box(simulate(&cfg, &jobs));
+        t.elapsed().as_secs_f64()
+    });
+    table.row(&[
+        "DES extreme workload (206 jobs)".into(),
+        "wall ms".into(),
+        format!("{:.1}", des_secs * 1e3),
+        "full Table 3 = 18 sims".into(),
+    ]);
+
+    // ---- model fits ---------------------------------------------------------
+    let mut rng = Rng::new(7);
+    let a = Matrix::from_fn(200, 4, |_, _| rng.uniform_range(0.0, 1.0));
+    let b: Vec<f64> = (0..200).map(|_| rng.uniform_range(0.0, 2.0)).collect();
+    let nnls_us = median_of(9, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(nnls(&a, &b).unwrap());
+        t.elapsed().as_secs_f64() * 1e6
+    });
+    table.row(&[
+        "NNLS 200x4".into(),
+        "latency µs".into(),
+        format!("{nnls_us:.0}"),
+        "per-job per-interval".into(),
+    ]);
+
+    let losses: Vec<(f64, f64)> =
+        (0..200).map(|e| (e as f64, 1.0 / (0.3 * e as f64 + 1.0) + 0.2)).collect();
+    let conv_us = median_of(5, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(ConvergenceModel::fit(&losses).unwrap());
+        t.elapsed().as_secs_f64() * 1e6
+    });
+    table.row(&[
+        "eq-1 fit, 200 samples".into(),
+        "latency µs".into(),
+        format!("{conv_us:.0}"),
+        "2-level grid x NNLS".into(),
+    ]);
+
+    let speed_samples: Vec<(usize, f64)> =
+        [1usize, 2, 4, 8].iter().map(|&w| (w, 0.01 * w as f64)).collect();
+    let eq5_us = median_of(9, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(SpeedModel::fit(&speed_samples, 128.0, 4e6).unwrap());
+        t.elapsed().as_secs_f64() * 1e6
+    });
+    table.row(&["eq-5 fit, 4 samples".into(), "latency µs".into(), format!("{eq5_us:.0}"), "".into()]);
+
+    // ---- jsonx ---------------------------------------------------------------
+    let manifest = std::fs::read_to_string("artifacts/manifest.json")
+        .unwrap_or_else(|_| include_str!("../../artifacts/manifest.json").to_string());
+    let json_mb_s = {
+        let secs = median_of(9, || {
+            let t = std::time::Instant::now();
+            std::hint::black_box(ringmaster::jsonx::parse(&manifest).unwrap());
+            t.elapsed().as_secs_f64()
+        });
+        manifest.len() as f64 / secs / 1e6
+    };
+    table.row(&[
+        "jsonx parse manifest".into(),
+        "MB/s".into(),
+        format!("{json_mb_s:.0}"),
+        "startup-path only".into(),
+    ]);
+
+    // ---- checkpoint I/O ---------------------------------------------------
+    let ck = Checkpoint {
+        preset: "bench".into(),
+        step: 1,
+        epochs: 1.0,
+        workers: 8,
+        lr: 0.1,
+        theta: vec![0.5f32; 1_000_000],
+        mu: vec![0.25f32; 1_000_000],
+    };
+    let path = std::env::temp_dir().join(format!("rmck-hotpath-{}.ckpt", std::process::id()));
+    let ck_secs = median_of(5, || {
+        let t = std::time::Instant::now();
+        ck.save(&path).unwrap();
+        std::hint::black_box(Checkpoint::load(&path).unwrap());
+        t.elapsed().as_secs_f64()
+    });
+    let _ = std::fs::remove_file(&path);
+    table.row(&[
+        "checkpoint 1M params save+load".into(),
+        "MiB/s".into(),
+        format!("{:.0}", 16.0 / ck_secs),
+        "restart path; paper budget ~10s".into(),
+    ]);
+
+    print!("{}", table.render());
+    table.write_csv("hotpath.csv")?;
+    Ok(())
+}

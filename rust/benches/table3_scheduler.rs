@@ -1,0 +1,101 @@
+//! Table 3 reproduction bench: 6 strategies x 3 contention regimes on
+//! the 64-GPU simulated cluster, averaged over seeds, with paper values
+//! side by side and wall-clock cost of the simulation itself.
+//!
+//! `cargo bench --bench table3_scheduler`
+
+use ringmaster::metrics::CsvTable;
+use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+
+const PAPER: [(&str, [f64; 3]); 6] = [
+    ("precompute", [7.63, 2.63, 1.40]),
+    ("exploratory", [20.42, 2.92, 1.47]),
+    ("fixed-8", [22.76, 6.20, 1.40]),
+    ("fixed-4", [12.90, 3.50, 2.21]),
+    ("fixed-2", [11.49, 4.58, 3.78]),
+    ("fixed-1", [10.10, 6.32, 6.37]),
+];
+
+fn main() -> ringmaster::Result<()> {
+    let seeds = [42u64, 1337, 7, 99, 2024];
+    let t0 = std::time::Instant::now();
+    let mut sims = 0u64;
+
+    let mut table = CsvTable::new(&[
+        "strategy", "ext(ours)", "ext(paper)", "mod(ours)", "mod(paper)", "none(ours)", "none(paper)",
+    ]);
+    let mut ours = vec![vec![0.0f64; 3]; 6];
+    for (row, s) in StrategyKind::table3_rows().into_iter().enumerate() {
+        let mut cells = vec![s.name()];
+        for (col, c) in Contention::all().into_iter().enumerate() {
+            let mut sum = 0.0;
+            for &seed in &seeds {
+                let cfg = SimConfig::paper(s, c, seed);
+                let jobs =
+                    WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+                sum += simulate(&cfg, &jobs).avg_completion_hours;
+                sims += 1;
+            }
+            let mean = sum / seeds.len() as f64;
+            ours[row][col] = mean;
+            cells.push(format!("{mean:.2}"));
+            cells.push(format!("{:.2}", PAPER[row].1[col]));
+        }
+        table.row(&cells);
+    }
+    print!("{}", table.render());
+    table.write_csv("table3_bench.csv")?;
+
+    // shape assertions (who wins / direction of every §7 claim)
+    let pre = 0usize;
+    let eight = 2usize;
+    let one = 5usize;
+    assert!(ours[pre][1] * 1.25 < ours[eight][1], "precompute should halve-ish fixed-8 at moderate");
+    assert!(ours[eight][0] > ours[one][0], "fixed-8 should be worse than fixed-1 at extreme");
+    assert!(ours[one][2] > 3.0 * ours[eight][2], "fixed-1 should be worst with no contention");
+    for col in 0..3 {
+        for row in 0..6 {
+            assert!(
+                ours[pre][col] <= ours[row][col] * 1.05,
+                "precompute must win/tie: col {col} row {row}"
+            );
+        }
+    }
+    println!("\nall §7 shape claims hold across {} simulations", sims);
+
+    // ---- restart-cost sensitivity (the §6 feasibility argument) ---------
+    // Dynamic scheduling is only viable because stop/restart is ~10 s. If
+    // it cost minutes, rescaling would burn the gains: sweep it.
+    println!("\nrestart-cost sensitivity (precompute, moderate contention, seed 42):");
+    println!("  restart_s  avg_hours  rescales");
+    for restart in [0.0f64, 10.0, 60.0, 300.0, 1800.0] {
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 42);
+        cfg.restart_cost = restart;
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 42);
+        let r = simulate(&cfg, &jobs);
+        println!("  {restart:>9.0}  {:>9.2}  {:>8}", r.avg_completion_hours, r.total_rescales);
+    }
+    let cheap = {
+        let cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 42);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 42);
+        simulate(&cfg, &jobs).avg_completion_hours
+    };
+    let dear = {
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 42);
+        cfg.restart_cost = 1800.0;
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 42);
+        simulate(&cfg, &jobs).avg_completion_hours
+    };
+    println!(
+        "  -> 30-min restarts cost {:+.0}% avg completion: cheap stop/restart (§6) is what makes \
+         dynamic scheduling pay.",
+        100.0 * (dear - cheap) / cheap
+    );
+    println!(
+        "simulation throughput: {} sims in {:.2}s ({:.0} jobs/s scheduled)",
+        sims,
+        t0.elapsed().as_secs_f64(),
+        sims as f64 * 120.0 / t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,177 @@
+//! Minimal CLI argument parsing (substrate — the vendor snapshot has no
+//! clap). Supports `--flag value`, `--flag=value`, bare `--flag`
+//! booleans, and positional arguments, with typed accessors and a
+//! "did you consume everything" check for typo safety.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                anyhow::ensure!(!stripped.is_empty(), "bare `--` not supported");
+                if let Some((k, v)) = stripped.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { flags, positional, consumed: Default::default() })
+    }
+
+    /// Parse from the process environment, skipping program + subcommand.
+    pub fn from_env(skip: usize) -> Result<Args> {
+        Args::parse(std::env::args().skip(skip))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.raw(key).unwrap_or(default).to_string()
+    }
+
+    /// Required string flag.
+    pub fn str_req(&self, key: &str) -> Result<String> {
+        self.raw(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("--{key} {s:?}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.raw(key), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated typed list.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.raw(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|tok| {
+                    tok.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow::anyhow!("--{key} item {tok:?}: {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any provided flag was never read (typo protection).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(*k)).collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flag_styles() {
+        // positionals go before flags: a bare token after `--verbose`
+        // would be consumed as its value (documented ambiguity).
+        let a = args("pos1 --preset tiny --steps=100 --verbose");
+        assert_eq!(a.str_or("preset", "x"), "tiny");
+        assert_eq!(a.get_or("steps", 0u64).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.str_or("preset", "small"), "small");
+        assert_eq!(a.get_or("workers", 4usize).unwrap(), 4);
+        assert!(!a.flag("all"));
+    }
+
+    #[test]
+    fn required_flag_errors_with_name() {
+        let a = args("");
+        let err = a.str_req("plan").unwrap_err().to_string();
+        assert!(err.contains("--plan"));
+    }
+
+    #[test]
+    fn typed_parse_errors_are_descriptive() {
+        let a = args("--steps banana");
+        let err = a.get_or("steps", 0u64).unwrap_err().to_string();
+        assert!(err.contains("steps") && err.contains("banana"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args("--workers 1,2,4,8");
+        assert_eq!(a.list_or("workers", &[0usize]).unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(a.list_or("missing", &[3usize]).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = args("--stpes 100");
+        let _ = a.get_or("steps", 0u64);
+        assert!(a.reject_unknown().is_err());
+        let b = args("--steps 100");
+        let _ = b.get_or("steps", 0u64);
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("--offset -5");
+        assert_eq!(a.get_or("offset", 0i64).unwrap(), -5);
+    }
+}

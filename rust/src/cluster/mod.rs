@@ -1,0 +1,235 @@
+//! Cluster inventory and task placement (§4.3).
+//!
+//! Ring architectures have no parameter servers, so placement reduces to
+//! picking GPUs for each job while using as few nodes as possible (fewer
+//! nodes → more intra-node NVLink/PCIe hops instead of network hops).
+//! The paper notes this is "solved straightforwardly by standard
+//! algorithms"; we implement best-fit-decreasing over per-node free
+//! counts and track every allocation so invariants (no double-booking,
+//! exact frees) are checkable.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// Static shape of the cluster (the paper simulates 64 GPUs; their
+/// testbed node is 8x K40m).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec { nodes, gpus_per_node }
+    }
+
+    /// The paper's simulated cluster: 8 nodes x 8 GPUs = 64.
+    pub fn paper_sim() -> Self {
+        ClusterSpec::new(8, 8)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+}
+
+/// One allocated GPU: (node index, slot index within node).
+pub type Gpu = (usize, usize);
+
+/// Mutable allocation state of a cluster.
+#[derive(Clone, Debug)]
+pub struct ClusterState {
+    spec: ClusterSpec,
+    /// busy[node][slot] = owning job id (None = free).
+    busy: Vec<Vec<Option<u64>>>,
+    /// job id -> GPUs held.
+    allocations: BTreeMap<u64, Vec<Gpu>>,
+}
+
+impl ClusterState {
+    pub fn new(spec: ClusterSpec) -> Self {
+        ClusterState {
+            spec,
+            busy: vec![vec![None; spec.gpus_per_node]; spec.nodes],
+            allocations: BTreeMap::new(),
+        }
+    }
+
+    pub fn spec(&self) -> ClusterSpec {
+        self.spec
+    }
+
+    pub fn free_gpus(&self) -> usize {
+        self.busy.iter().flatten().filter(|s| s.is_none()).count()
+    }
+
+    pub fn used_gpus(&self) -> usize {
+        self.spec.capacity() - self.free_gpus()
+    }
+
+    /// GPUs currently held by `job`.
+    pub fn allocation_of(&self, job: u64) -> Option<&[Gpu]> {
+        self.allocations.get(&job).map(|v| v.as_slice())
+    }
+
+    /// Number of distinct nodes `job` spans.
+    pub fn nodes_spanned(&self, job: u64) -> usize {
+        let Some(gpus) = self.allocations.get(&job) else { return 0 };
+        let mut nodes: Vec<usize> = gpus.iter().map(|&(n, _)| n).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+
+    /// Allocate `w` GPUs to `job`, minimizing the number of nodes used:
+    /// best-fit (a node whose free count exactly matches the remainder)
+    /// first, otherwise the node with the most free GPUs.
+    pub fn place(&mut self, job: u64, w: usize) -> Result<Vec<Gpu>> {
+        anyhow::ensure!(w > 0, "cannot place zero GPUs");
+        anyhow::ensure!(
+            !self.allocations.contains_key(&job),
+            "job {job} already placed; release first"
+        );
+        anyhow::ensure!(
+            w <= self.free_gpus(),
+            "insufficient capacity: want {w}, free {}",
+            self.free_gpus()
+        );
+
+        let mut picked: Vec<Gpu> = Vec::with_capacity(w);
+        let mut remaining = w;
+        while remaining > 0 {
+            let free_of = |node: &Vec<Option<u64>>| node.iter().filter(|s| s.is_none()).count();
+            // best fit: smallest free count still >= remaining…
+            let exact = (0..self.spec.nodes)
+                .filter(|&n| free_of(&self.busy[n]) >= remaining)
+                .min_by_key(|&n| free_of(&self.busy[n]));
+            // …else the fullest-free node to minimize node count.
+            let node = exact.or_else(|| {
+                (0..self.spec.nodes)
+                    .filter(|&n| free_of(&self.busy[n]) > 0)
+                    .max_by_key(|&n| free_of(&self.busy[n]))
+            });
+            let node = node.expect("capacity checked above");
+            for slot in 0..self.spec.gpus_per_node {
+                if remaining == 0 {
+                    break;
+                }
+                if self.busy[node][slot].is_none() {
+                    self.busy[node][slot] = Some(job);
+                    picked.push((node, slot));
+                    remaining -= 1;
+                }
+            }
+        }
+        self.allocations.insert(job, picked.clone());
+        Ok(picked)
+    }
+
+    /// Release every GPU held by `job`.
+    pub fn release(&mut self, job: u64) -> Result<usize> {
+        let gpus = self
+            .allocations
+            .remove(&job)
+            .ok_or_else(|| anyhow::anyhow!("job {job} holds no allocation"))?;
+        let count = gpus.len();
+        for (n, s) in gpus {
+            debug_assert_eq!(self.busy[n][s], Some(job));
+            self.busy[n][s] = None;
+        }
+        Ok(count)
+    }
+
+    /// Resize in place: release + place (the checkpoint-restart rescale).
+    pub fn rescale(&mut self, job: u64, new_w: usize) -> Result<Vec<Gpu>> {
+        if self.allocations.contains_key(&job) {
+            self.release(job)?;
+        }
+        self.place(job, new_w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_and_free_accounting() {
+        let mut c = ClusterState::new(ClusterSpec::paper_sim());
+        assert_eq!(c.free_gpus(), 64);
+        c.place(1, 10).unwrap();
+        assert_eq!(c.free_gpus(), 54);
+        assert_eq!(c.used_gpus(), 10);
+        assert_eq!(c.release(1).unwrap(), 10);
+        assert_eq!(c.free_gpus(), 64);
+    }
+
+    #[test]
+    fn exact_fit_prefers_single_node() {
+        let mut c = ClusterState::new(ClusterSpec::new(4, 8));
+        c.place(1, 8).unwrap();
+        assert_eq!(c.nodes_spanned(1), 1);
+        c.place(2, 4).unwrap();
+        assert_eq!(c.nodes_spanned(2), 1);
+    }
+
+    #[test]
+    fn small_job_packs_into_fragmented_node() {
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        c.place(1, 3).unwrap(); // node A: 1 free
+        c.place(2, 1).unwrap(); // best fit: the 1-free node
+        assert_eq!(c.nodes_spanned(2), 1);
+        // full node B still untouched
+        c.place(3, 4).unwrap();
+        assert_eq!(c.nodes_spanned(3), 1);
+    }
+
+    #[test]
+    fn spans_minimum_nodes_when_fragmented() {
+        let mut c = ClusterState::new(ClusterSpec::new(3, 4));
+        c.place(1, 2).unwrap();
+        c.place(2, 10).unwrap(); // needs to span all three nodes
+        assert_eq!(c.nodes_spanned(2), 3);
+        assert_eq!(c.free_gpus(), 0);
+    }
+
+    #[test]
+    fn rejects_overcommit_and_double_place() {
+        let mut c = ClusterState::new(ClusterSpec::new(1, 4));
+        assert!(c.place(1, 5).is_err());
+        c.place(1, 2).unwrap();
+        assert!(c.place(1, 1).is_err());
+        assert!(c.place(2, 3).is_err());
+        assert!(c.release(99).is_err());
+    }
+
+    #[test]
+    fn rescale_moves_to_new_size() {
+        let mut c = ClusterState::new(ClusterSpec::new(2, 8));
+        c.place(7, 4).unwrap();
+        let gpus = c.rescale(7, 8).unwrap();
+        assert_eq!(gpus.len(), 8);
+        assert_eq!(c.used_gpus(), 8);
+        assert_eq!(c.nodes_spanned(7), 1);
+    }
+
+    #[test]
+    fn no_double_booking_across_many_ops() {
+        let mut c = ClusterState::new(ClusterSpec::new(4, 4));
+        c.place(1, 3).unwrap();
+        c.place(2, 5).unwrap();
+        c.place(3, 2).unwrap();
+        c.release(2).unwrap();
+        c.place(4, 6).unwrap();
+        // every busy slot owned by exactly one job
+        let mut owned = std::collections::HashSet::new();
+        for job in [1u64, 3, 4] {
+            for g in c.allocation_of(job).unwrap() {
+                assert!(owned.insert(*g), "double booked {g:?}");
+            }
+        }
+        assert_eq!(owned.len(), c.used_gpus());
+    }
+}

@@ -1,0 +1,176 @@
+//! Non-power-of-two all-reduce — the paper's "binary blocks" case (eq 4).
+//!
+//! Rabenseifner's binary-blocks algorithm decomposes `w` into a sum of
+//! powers of two and aggregates the inexact matches with extra steps. We
+//! implement the standard fold variant (MPICH's non-power-of-two
+//! handling, Thakur & Rabenseifner '05): with `r = w - 2^⌊log2 w⌋`,
+//!
+//!  1. *fold*: each of the `r` surplus ranks (odd ranks below `2r`) sends
+//!     its full vector to its even partner, which pre-reduces,
+//!  2. the remaining power-of-two core runs recursive doubling-halving,
+//!  3. *unfold*: results are sent back to the surplus ranks.
+//!
+//! The extra full-vector sends are exactly why eq 4 carries `7nβ + 3nγ`
+//! against doubling-halving's `4nβ + 2.5nγ`, and why the paper's doubling
+//! heuristic keeps allocations at powers of two: eq 4's cost is worst
+//! when `w` is just above a power of two (r large relative to the core),
+//! the "8→9 GPU" cliff of §4.2.
+
+use super::comm::Rank;
+use super::dh;
+use crate::Result;
+
+const FOLD_TAG: u32 = 5 << 16;
+const UNFOLD_TAG: u32 = 6 << 16;
+
+/// In-place sum all-reduce for any world size.
+pub fn all_reduce(rank: &mut Rank, data: &mut [f32]) -> Result<()> {
+    let w = rank.size();
+    if w <= 1 || data.is_empty() {
+        return Ok(());
+    }
+    if w.is_power_of_two() {
+        return dh::all_reduce(rank, data);
+    }
+    let pow = 1usize << (usize::BITS - 1 - w.leading_zeros());
+    let r = w - pow;
+    let me = rank.rank();
+
+    // Fold: odd ranks below 2r hand their vector to the even partner.
+    if me < 2 * r {
+        if me % 2 == 1 {
+            rank.send(me - 1, FOLD_TAG, data.to_vec());
+            let result = rank.recv(me - 1, UNFOLD_TAG);
+            data.copy_from_slice(&result);
+            return Ok(());
+        }
+        let incoming = rank.recv(me + 1, FOLD_TAG);
+        for (dst, src) in data.iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+    }
+
+    // Power-of-two core: evens below 2r plus everyone from 2r up.
+    let group: Vec<usize> = (0..2 * r).step_by(2).chain(2 * r..w).collect();
+    debug_assert!(group.len().is_power_of_two());
+    dh::all_reduce_group(rank, data, &group)?;
+
+    // Unfold: return the result to the folded-out ranks.
+    if me < 2 * r {
+        rank.send(me + 1, UNFOLD_TAG, data.to_vec());
+    }
+    Ok(())
+}
+
+/// Surplus rank count `r = w - 2^⌊log2 w⌋`.
+pub fn surplus(w: usize) -> usize {
+    if w == 0 {
+        return 0;
+    }
+    w - (1usize << (usize::BITS - 1 - w.leading_zeros()))
+}
+
+/// Predicted world-total messages.
+pub fn predicted_messages(w: usize) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    if w.is_power_of_two() {
+        return dh::predicted_messages(w);
+    }
+    let r = surplus(w);
+    let core = w - r;
+    // fold + unfold (2 msgs per surplus pair) + dh among the core
+    2 * r as u64 + dh::predicted_messages(core)
+}
+
+/// Predicted world-total payload bytes (exact for `n % core == 0`).
+pub fn predicted_bytes(w: usize, n: usize) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    if w.is_power_of_two() {
+        return dh::predicted_bytes(w, n);
+    }
+    let r = surplus(w);
+    let core = w - r;
+    (2 * r * n * 4) as u64 + dh::predicted_bytes(core, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::comm::run_world;
+    use super::*;
+
+    fn check_sum(w: usize, n: usize) {
+        let payloads: Vec<Vec<f32>> = (0..w)
+            .map(|r| (0..n).map(|i| ((r * 31 + i * 7) % 17) as f32 - 8.0).collect())
+            .collect();
+        let mut expected = vec![0.0f32; n];
+        for p in &payloads {
+            for (e, v) in expected.iter_mut().zip(p) {
+                *e += v;
+            }
+        }
+        let (out, _) = run_world(w, payloads, |rank, data| {
+            all_reduce(rank, data).unwrap();
+        });
+        for (r, result) in out.iter().enumerate() {
+            for (i, (got, want)) in result.iter().zip(&expected).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "w={w} n={n} rank={r} i={i}: {got} != {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sums_for_all_world_sizes_up_to_17() {
+        for w in 1..=17 {
+            check_sum(w, 48);
+        }
+    }
+
+    #[test]
+    fn handles_odd_lengths_and_non_powers() {
+        check_sum(3, 7);
+        check_sum(5, 13);
+        check_sum(6, 1);
+        check_sum(9, 100);
+    }
+
+    #[test]
+    fn power_of_two_delegates_to_dh() {
+        assert_eq!(predicted_messages(8), dh::predicted_messages(8));
+        assert_eq!(predicted_bytes(8, 64), dh::predicted_bytes(8, 64));
+    }
+
+    #[test]
+    fn surplus_values() {
+        assert_eq!(surplus(8), 0);
+        assert_eq!(surplus(9), 1);
+        assert_eq!(surplus(12), 4);
+        assert_eq!(surplus(15), 7);
+    }
+
+    #[test]
+    fn traffic_matches_prediction() {
+        for (w, n) in [(6usize, 64usize), (9, 64), (12, 96)] {
+            let payloads: Vec<Vec<f32>> = (0..w).map(|_| vec![1.0; n]).collect();
+            let (_, traffic) = run_world(w, payloads, |rank, data| {
+                all_reduce(rank, data).unwrap();
+            });
+            assert_eq!(traffic.messages(), predicted_messages(w), "w={w}");
+            assert_eq!(traffic.bytes(), predicted_bytes(w, n), "w={w}");
+        }
+    }
+
+    #[test]
+    fn nine_costs_more_than_eight_per_rank() {
+        // the 8->9 cliff that motivates the doubling heuristic (§4.2)
+        let per_rank_9 = predicted_bytes(9, 1 << 20) as f64 / 9.0;
+        let per_rank_8 = predicted_bytes(8, 1 << 20) as f64 / 8.0;
+        assert!(per_rank_9 > per_rank_8);
+    }
+}

@@ -1,0 +1,256 @@
+//! Point-to-point message transport between in-process ranks.
+//!
+//! Plays the role OpenMPI plays for Horovod: each rank can `send` to and
+//! `recv` from any other rank, with `(from, tag)` selective receive
+//! semantics (messages arriving out of order are parked in a pending
+//! buffer). Channels are unbounded, so a send never blocks and the
+//! sendrecv pairs inside the all-reduce algorithms cannot deadlock.
+//!
+//! All traffic is metered through a shared [`Traffic`] — the tests in
+//! `cost.rs` verify the analytic models of eqs 2–4 against these counters.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Wire-traffic counters for one world (shared by all its ranks).
+#[derive(Debug, Default)]
+pub struct Traffic {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl Traffic {
+    /// Total point-to-point messages sent (all ranks).
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// Total payload bytes sent (all ranks).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.messages.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+
+    fn record(&self, payload_bytes: u64) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(payload_bytes, Ordering::Relaxed);
+    }
+}
+
+struct Msg {
+    from: usize,
+    tag: u32,
+    data: Vec<f32>,
+}
+
+/// A world of `size` communicating ranks.
+pub struct World {
+    ranks: Vec<Rank>,
+    traffic: Arc<Traffic>,
+}
+
+impl World {
+    /// Create a world; returns the rank handles to move into worker threads.
+    pub fn new(size: usize) -> World {
+        assert!(size > 0, "world must have at least one rank");
+        let traffic = Arc::new(Traffic::default());
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel::<Msg>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let ranks = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(i, rx)| Rank {
+                rank: i,
+                size,
+                senders: senders.clone(),
+                rx,
+                pending: HashMap::new(),
+                traffic: traffic.clone(),
+            })
+            .collect();
+        World { ranks, traffic }
+    }
+
+    /// Take ownership of all rank handles (once).
+    pub fn take_ranks(&mut self) -> Vec<Rank> {
+        std::mem::take(&mut self.ranks)
+    }
+
+    /// The world's shared traffic meter.
+    pub fn traffic(&self) -> Arc<Traffic> {
+        self.traffic.clone()
+    }
+}
+
+/// One rank's endpoint: owned by exactly one thread.
+pub struct Rank {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    pending: HashMap<(usize, u32), Vec<Vec<f32>>>,
+    traffic: Arc<Traffic>,
+}
+
+impl Rank {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn traffic(&self) -> &Traffic {
+        &self.traffic
+    }
+
+    /// Send `data` to rank `to` with a tag identifying the algorithm step.
+    pub fn send(&self, to: usize, tag: u32, data: Vec<f32>) {
+        debug_assert!(to < self.size && to != self.rank);
+        self.traffic.record((data.len() * 4) as u64);
+        // Receiver hung up => its thread panicked; surface as panic here too.
+        self.senders[to]
+            .send(Msg { from: self.rank, tag, data })
+            .expect("peer rank dropped its receiver");
+    }
+
+    /// Blocking selective receive of the next message from `from` with `tag`.
+    pub fn recv(&mut self, from: usize, tag: u32) -> Vec<f32> {
+        if let Some(queue) = self.pending.get_mut(&(from, tag)) {
+            if !queue.is_empty() {
+                return queue.remove(0);
+            }
+        }
+        loop {
+            let msg = self.rx.recv().expect("all senders dropped");
+            if msg.from == from && msg.tag == tag {
+                return msg.data;
+            }
+            self.pending
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push(msg.data);
+        }
+    }
+
+    /// Exchange with a partner: send ours, receive theirs (same tag).
+    pub fn sendrecv(&mut self, peer: usize, tag: u32, data: Vec<f32>) -> Vec<f32> {
+        self.send(peer, tag, data);
+        self.recv(peer, tag)
+    }
+}
+
+/// Test/bench harness: run `f(rank, payload)` on `w` threads over fresh
+/// per-rank payload vectors, returning the final per-rank vectors in rank
+/// order along with the world traffic meter.
+pub fn run_world<F>(w: usize, payloads: Vec<Vec<f32>>, f: F) -> (Vec<Vec<f32>>, Arc<Traffic>)
+where
+    F: Fn(&mut Rank, &mut Vec<f32>) + Send + Sync + 'static,
+{
+    assert_eq!(payloads.len(), w);
+    let mut world = World::new(w);
+    let traffic = world.traffic();
+    let f = Arc::new(f);
+    let handles: Vec<_> = world
+        .take_ranks()
+        .into_iter()
+        .zip(payloads)
+        .map(|(mut rank, mut data)| {
+            let f = f.clone();
+            std::thread::spawn(move || {
+                f(&mut rank, &mut data);
+                (rank.rank(), data)
+            })
+        })
+        .collect();
+    let mut out: Vec<(usize, Vec<f32>)> =
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect();
+    out.sort_by_key(|(r, _)| *r);
+    (out.into_iter().map(|(_, d)| d).collect(), traffic)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let mut world = World::new(2);
+        let mut ranks = world.take_ranks();
+        let mut r1 = ranks.pop().unwrap();
+        let mut r0 = ranks.pop().unwrap();
+        let t0 = std::thread::spawn(move || {
+            r0.send(1, 7, vec![1.0, 2.0]);
+            r0.recv(1, 8)
+        });
+        let t1 = std::thread::spawn(move || {
+            let got = r1.recv(0, 7);
+            r1.send(0, 8, vec![got[0] + 10.0, got[1] + 10.0]);
+        });
+        t1.join().unwrap();
+        assert_eq!(t0.join().unwrap(), vec![11.0, 12.0]);
+    }
+
+    #[test]
+    fn selective_receive_out_of_order() {
+        let mut world = World::new(2);
+        let mut ranks = world.take_ranks();
+        let mut r1 = ranks.pop().unwrap();
+        let r0 = ranks.pop().unwrap();
+        // Send tag 2 then tag 1; receiver asks for tag 1 first.
+        r0.send(1, 2, vec![2.0]);
+        r0.send(1, 1, vec![1.0]);
+        assert_eq!(r1.recv(0, 1), vec![1.0]);
+        assert_eq!(r1.recv(0, 2), vec![2.0]);
+    }
+
+    #[test]
+    fn pending_fifo_per_key() {
+        let mut world = World::new(2);
+        let mut ranks = world.take_ranks();
+        let mut r1 = ranks.pop().unwrap();
+        let r0 = ranks.pop().unwrap();
+        r0.send(1, 5, vec![1.0]);
+        r0.send(1, 5, vec![2.0]);
+        r0.send(1, 9, vec![9.0]);
+        assert_eq!(r1.recv(0, 9), vec![9.0]); // parks the two tag-5 msgs
+        assert_eq!(r1.recv(0, 5), vec![1.0]);
+        assert_eq!(r1.recv(0, 5), vec![2.0]);
+    }
+
+    #[test]
+    fn traffic_counts_messages_and_bytes() {
+        let mut world = World::new(2);
+        let traffic = world.traffic();
+        let mut ranks = world.take_ranks();
+        let mut r1 = ranks.pop().unwrap();
+        let r0 = ranks.pop().unwrap();
+        r0.send(1, 0, vec![0.0; 10]);
+        let _ = r1.recv(0, 0);
+        assert_eq!(traffic.messages(), 1);
+        assert_eq!(traffic.bytes(), 40);
+        traffic.reset();
+        assert_eq!(traffic.messages(), 0);
+    }
+
+    #[test]
+    fn run_world_returns_in_rank_order() {
+        let payloads = vec![vec![0.0f32], vec![1.0], vec![2.0]];
+        let (out, _) = run_world(3, payloads, |rank, data| {
+            data[0] += rank.rank() as f32 * 100.0;
+        });
+        assert_eq!(out, vec![vec![0.0], vec![101.0], vec![202.0]]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Analytic all-reduce cost models — eqs 2–4 of the paper (§3.2).
+//!
+//! `α` is the per-message latency, `β` the transfer time per byte, `γ`
+//! the reduction compute cost per byte, `n` the model size in bytes, `m`
+//! the per-worker minibatch, `w` the worker count. The coefficients come
+//! from the underlying collective primitives (Thakur & Rabenseifner '05):
+//!
+//! - eq 2 (ring):            `(w-1)·4α + (w-1)·(n/w)·4β + (w-1)·(n/w)·2γ`
+//! - eq 3 (doubling-halving):`4·log2(w)·α + 4nβ + (5/2)nγ`
+//! - eq 4 (binary blocks):   `(5 + 4⌈log2 w⌉)α + 7nβ + 3nγ`
+//!
+//! These models drive everything downstream: the resource model f(w)
+//! (eq 5) mirrors their structure, the doubling heuristic exists because
+//! eq 4 > eq 3 at equal w, and the simulator's job speeds derive from
+//! them. Unit tests cross-check the models against the *measured*
+//! message/byte counters of the real implementations.
+
+
+/// Which all-reduce algorithm a job of `w` workers runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Eq 2 — bandwidth-optimal, latency linear in `w`.
+    Ring,
+    /// Eq 3 — power-of-two worlds only.
+    DoublingHalving,
+    /// Eq 4 — any world size; pays fold/unfold overhead.
+    BinaryBlocks,
+}
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Ring => "ring",
+            Algorithm::DoublingHalving => "doubling-halving",
+            Algorithm::BinaryBlocks => "binary-blocks",
+        }
+    }
+}
+
+/// Machine constants of the interconnect + reduction units.
+///
+/// Defaults approximate the paper's testbed: 4xEDR InfiniBand
+/// (100 Gbit/s ≈ 12.5 GB/s → β = 8e-11 s/B), ~5 µs message latency, and
+/// a memory-bandwidth-bound vector sum (~10 GB/s → γ = 1e-10 s/B).
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// Latency per message (seconds).
+    pub alpha: f64,
+    /// Transfer time per byte (seconds).
+    pub beta: f64,
+    /// Reduction compute per byte (seconds).
+    pub gamma: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams { alpha: 5e-6, beta: 8e-11, gamma: 1e-10 }
+    }
+}
+
+fn log2f(w: usize) -> f64 {
+    (w as f64).log2()
+}
+
+fn log2ceil(w: usize) -> f64 {
+    (w as f64).log2().ceil()
+}
+
+/// Communication time of one all-reduce over `n_bytes` with `w` workers
+/// (the α/β/γ terms of eqs 2–4; zero for `w <= 1`).
+pub fn comm_time(alg: Algorithm, w: usize, n_bytes: f64, p: &CostParams) -> f64 {
+    if w <= 1 {
+        return 0.0;
+    }
+    let wf = w as f64;
+    match alg {
+        Algorithm::Ring => {
+            (wf - 1.0) * 4.0 * p.alpha
+                + (wf - 1.0) * (n_bytes / wf) * 4.0 * p.beta
+                + (wf - 1.0) * (n_bytes / wf) * 2.0 * p.gamma
+        }
+        Algorithm::DoublingHalving => {
+            4.0 * log2f(w) * p.alpha + 4.0 * n_bytes * p.beta + 2.5 * n_bytes * p.gamma
+        }
+        Algorithm::BinaryBlocks => {
+            (5.0 + 4.0 * log2ceil(w)) * p.alpha + 7.0 * n_bytes * p.beta + 3.0 * n_bytes * p.gamma
+        }
+    }
+}
+
+/// Full per-minibatch step time — eqs 2–4 complete: compute + all-reduce.
+///
+/// `m` is the per-worker minibatch size, `t_fwd`/`t_back` per-example
+/// forward/backward seconds.
+pub fn step_time(
+    alg: Algorithm,
+    m: f64,
+    t_fwd: f64,
+    t_back: f64,
+    w: usize,
+    n_bytes: f64,
+    p: &CostParams,
+) -> f64 {
+    m * (t_fwd + t_back) + comm_time(alg, w, n_bytes, p)
+}
+
+/// The algorithm the runtime picks for `w` workers (§2.1 policy).
+pub fn algorithm_for(w: usize, n_bytes: f64) -> Algorithm {
+    const RING_BYTES: f64 = 4.0e7; // ~1e7 f32 params
+    if n_bytes > RING_BYTES {
+        Algorithm::Ring
+    } else if w.is_power_of_two() {
+        Algorithm::DoublingHalving
+    } else {
+        Algorithm::BinaryBlocks
+    }
+}
+
+/// Step time with the runtime's own algorithm choice.
+pub fn step_time_auto(m: f64, t_fwd: f64, t_back: f64, w: usize, n_bytes: f64, p: &CostParams) -> f64 {
+    step_time(algorithm_for(w, n_bytes), m, t_fwd, t_back, w, n_bytes, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: CostParams = CostParams { alpha: 5e-6, beta: 8e-11, gamma: 1e-10 };
+
+    #[test]
+    fn single_worker_costs_nothing() {
+        for alg in [Algorithm::Ring, Algorithm::DoublingHalving, Algorithm::BinaryBlocks] {
+            assert_eq!(comm_time(alg, 1, 1e6, &P), 0.0);
+        }
+    }
+
+    #[test]
+    fn dh_beats_ring_for_small_payloads_at_scale() {
+        // §2.1: latency term dominates for small n; dh has log(w) msgs.
+        // (With eq 2/3's coefficient conventions dh's bandwidth term is a
+        // flat 4nβ vs ring's (w-1)/w·4nβ, so dh's win lives where α rules.)
+        let n = 4.0 * 1e4; // 10k params
+        for w in [4usize, 8, 16, 32] {
+            assert!(
+                comm_time(Algorithm::DoublingHalving, w, n, &P)
+                    < comm_time(Algorithm::Ring, w, n, &P),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_wins_for_huge_payloads_at_scale() {
+        // ring moves (w-1)/w * 4n bytes vs dh's flat 4n, and for big n the
+        // bandwidth term dwarfs latency — but the gap only matters once
+        // n/w terms differ; check the crossover direction at large w & n.
+        let n = 4.0 * 5e8; // 500M params
+        let w = 64;
+        assert!(
+            comm_time(Algorithm::Ring, w, n, &P) < comm_time(Algorithm::BinaryBlocks, w, n, &P)
+        );
+    }
+
+    #[test]
+    fn bb_always_costs_more_than_dh_at_same_w() {
+        let n = 4.0 * 1e6;
+        for w in [2usize, 4, 8, 16, 64] {
+            assert!(
+                comm_time(Algorithm::BinaryBlocks, w, n, &P)
+                    > comm_time(Algorithm::DoublingHalving, w, n, &P),
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn eight_to_nine_cliff() {
+        // §4.2: 9 workers forces binary-blocks, costing more than 8 with dh
+        let n = 4.0 * 1e6;
+        let t8 = comm_time(Algorithm::DoublingHalving, 8, n, &P);
+        let t9 = comm_time(Algorithm::BinaryBlocks, 9, n, &P);
+        let t16 = comm_time(Algorithm::DoublingHalving, 16, n, &P);
+        assert!(t9 > t8);
+        // and 16 (power of two) is barely worse than 8 — the heuristic's point
+        assert!(t16 - t8 < t9 - t8);
+    }
+
+    #[test]
+    fn step_time_includes_compute() {
+        let t = step_time(Algorithm::DoublingHalving, 128.0, 1e-3, 2e-3, 4, 4e6, &P);
+        assert!(t > 128.0 * 3e-3);
+    }
+
+    #[test]
+    fn auto_policy_matches_module_selector() {
+        for w in 1..20 {
+            for n in [1000usize, 100_000, 20_000_000] {
+                let got = algorithm_for(w, (n * 4) as f64);
+                let want = super::super::select_algorithm(w, n);
+                assert_eq!(got, want, "w={w} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn models_track_measured_traffic_shape() {
+        // The β terms of eqs 2-4 must rank algorithms the same way the
+        // real implementations' measured bytes do (w=8, latency-bound n).
+        use super::super::{bb, dh, ring};
+        let w = 8;
+        let n = 1 << 14; // elements
+        let nb = (n * 4) as f64;
+        let per_rank = |total: u64| total as f64 / w as f64;
+        let measured_ring = per_rank(ring::predicted_bytes(w, n));
+        let measured_dh = per_rank(dh::predicted_bytes(w, n));
+        // ring per-rank bytes: 2n(w-1)/w*4 ; dh: 2n(1-1/w)*4 — equal here;
+        // the *latency* term separates them, which the model captures:
+        assert!((measured_ring - measured_dh).abs() < 1e-6);
+        let model_ring = comm_time(Algorithm::Ring, w, nb, &P);
+        let model_dh = comm_time(Algorithm::DoublingHalving, w, nb, &P);
+        assert!(model_dh < model_ring);
+    }
+}

@@ -1,0 +1,190 @@
+//! Recursive doubling-halving all-reduce (Rabenseifner '04; §2.1, eq 3).
+//!
+//! Phase 1 (recursive halving reduce-scatter): `log2(w)` steps; at step
+//! with mask `m`, rank `r` exchanges half of its current working range
+//! with `r ^ m` and accumulates the half it keeps. After the phase each
+//! rank owns a fully-reduced `n/w` range. Phase 2 (recursive doubling
+//! all-gather) replays the splits in reverse, doubling the owned range
+//! each step.
+//!
+//! Per rank: `2*log2(w)` messages and `2n(1-1/w)` elements — the
+//! low-latency algorithm the paper's doubling heuristic is built around
+//! (worker counts stay powers of two so this path always applies).
+
+use super::comm::Rank;
+use crate::Result;
+
+const REDUCE_PHASE: u32 = 3 << 16;
+const GATHER_PHASE: u32 = 4 << 16;
+
+/// In-place sum all-reduce across the whole world (requires power-of-two
+/// world size; the scheduler's doubling heuristic guarantees this).
+pub fn all_reduce(rank: &mut Rank, data: &mut [f32]) -> Result<()> {
+    let w = rank.size();
+    anyhow::ensure!(
+        w.is_power_of_two(),
+        "doubling-halving requires a power-of-two world, got {w}"
+    );
+    let group: Vec<usize> = (0..w).collect();
+    all_reduce_group(rank, data, &group)
+}
+
+/// Sum all-reduce among the subset `group` of physical ranks (used by the
+/// binary-blocks fold for the power-of-two core). `group.len()` must be a
+/// power of two and contain `rank.rank()`.
+pub(super) fn all_reduce_group(rank: &mut Rank, data: &mut [f32], group: &[usize]) -> Result<()> {
+    let w = group.len();
+    if w <= 1 || data.is_empty() {
+        return Ok(());
+    }
+    anyhow::ensure!(w.is_power_of_two(), "group size {w} not a power of two");
+    let me = group
+        .iter()
+        .position(|&g| g == rank.rank())
+        .ok_or_else(|| anyhow::anyhow!("rank {} not in group", rank.rank()))?;
+
+    // Phase 1: recursive halving. Partners at matching steps share the
+    // same working range because they agree on every higher mask bit.
+    let (mut lo, mut hi) = (0usize, data.len());
+    let mut parents: Vec<(usize, usize)> = Vec::new();
+    let mut mask = w / 2;
+    let mut step = 0u32;
+    while mask >= 1 {
+        let partner = group[me ^ mask];
+        let mid = lo + (hi - lo) / 2;
+        let (keep, send) = if me & mask == 0 {
+            ((lo, mid), (mid, hi))
+        } else {
+            ((mid, hi), (lo, mid))
+        };
+        let incoming = rank.sendrecv(partner, REDUCE_PHASE | step, data[send.0..send.1].to_vec());
+        debug_assert_eq!(incoming.len(), keep.1 - keep.0);
+        for (dst, src) in data[keep.0..keep.1].iter_mut().zip(&incoming) {
+            *dst += src;
+        }
+        parents.push((lo, hi));
+        lo = keep.0;
+        hi = keep.1;
+        if mask == 1 {
+            break;
+        }
+        mask /= 2;
+        step += 1;
+    }
+
+    // Phase 2: recursive doubling, replaying splits in reverse.
+    let mut mask = 1usize;
+    let mut step = 0u32;
+    while mask < w {
+        let partner = group[me ^ mask];
+        let (plo, phi) = parents.pop().expect("parent stack underflow");
+        let incoming = rank.sendrecv(partner, GATHER_PHASE | step, data[lo..hi].to_vec());
+        if lo == plo {
+            // we own the lower half; sibling fills (hi, phi)
+            debug_assert_eq!(incoming.len(), phi - hi);
+            data[hi..phi].copy_from_slice(&incoming);
+        } else {
+            debug_assert_eq!(incoming.len(), lo - plo);
+            data[plo..lo].copy_from_slice(&incoming);
+        }
+        lo = plo;
+        hi = phi;
+        mask *= 2;
+        step += 1;
+    }
+    debug_assert_eq!((lo, hi), (0, data.len()));
+    Ok(())
+}
+
+/// Predicted world-total messages: `2 log2(w)` per rank.
+pub fn predicted_messages(w: usize) -> u64 {
+    if w <= 1 {
+        0
+    } else {
+        (w * 2 * w.trailing_zeros() as usize) as u64
+    }
+}
+
+/// Predicted world-total payload bytes: `2n(1 - 1/w)` elements per rank
+/// (exact when `n` is divisible by `w`).
+pub fn predicted_bytes(w: usize, n: usize) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    (w as u64) * 2 * ((n - n / w) as u64) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::comm::run_world;
+    use super::*;
+
+    fn check_sum(w: usize, n: usize) {
+        let payloads: Vec<Vec<f32>> = (0..w)
+            .map(|r| (0..n).map(|i| ((r + 1) * (i + 1)) as f32 * 0.125).collect())
+            .collect();
+        let mut expected = vec![0.0f32; n];
+        for p in &payloads {
+            for (e, v) in expected.iter_mut().zip(p) {
+                *e += v;
+            }
+        }
+        let (out, _) = run_world(w, payloads, |rank, data| {
+            all_reduce(rank, data).unwrap();
+        });
+        for (r, result) in out.iter().enumerate() {
+            for (i, (got, want)) in result.iter().zip(&expected).enumerate() {
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "w={w} n={n} rank={r} i={i}: {got} != {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sums_for_powers_of_two() {
+        for w in [1, 2, 4, 8, 16] {
+            check_sum(w, 64);
+        }
+    }
+
+    #[test]
+    fn handles_odd_lengths() {
+        check_sum(4, 7);
+        check_sum(8, 13);
+        check_sum(2, 1);
+    }
+
+    #[test]
+    fn handles_vector_shorter_than_world() {
+        check_sum(8, 3);
+    }
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let payloads: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0; 8]).collect();
+        let mut world = super::super::comm::World::new(3);
+        let mut ranks = world.take_ranks();
+        let mut r = ranks.remove(0);
+        let mut d = payloads[0].clone();
+        assert!(all_reduce(&mut r, &mut d).is_err());
+    }
+
+    #[test]
+    fn traffic_matches_prediction() {
+        let (w, n) = (8, 64);
+        let payloads: Vec<Vec<f32>> = (0..w).map(|_| vec![1.0; n]).collect();
+        let (_, traffic) = run_world(w, payloads, |rank, data| {
+            all_reduce(rank, data).unwrap();
+        });
+        assert_eq!(traffic.messages(), predicted_messages(w));
+        assert_eq!(traffic.bytes(), predicted_bytes(w, n));
+    }
+
+    #[test]
+    fn fewer_messages_than_ring_for_large_worlds() {
+        // the latency advantage the paper's heuristic exploits
+        assert!(predicted_messages(16) < super::super::ring::predicted_messages(16));
+    }
+}

@@ -1,0 +1,128 @@
+//! MPI-like collective communication substrate.
+//!
+//! The paper's training jobs run Horovod over OpenMPI + NCCL; its
+//! scheduling math (§3, eqs 2–4) depends only on the *algorithms* those
+//! libraries run for `allreduce`. This module implements the substrate
+//! from scratch: point-to-point message passing between in-process ranks
+//! ([`comm`]) and the three all-reduce algorithms the paper models —
+//!
+//! - [`ring`] — the bandwidth-optimal ring all-reduce (eq 2),
+//! - [`dh`] — Rabenseifner's recursive doubling-halving for power-of-two
+//!   rank counts (eq 3),
+//! - [`bb`] — the non-power-of-two variant ("binary blocks" in the paper;
+//!   we implement the MPICH-style 2r-fold + halving/doubling elimination,
+//!   whose cost eq 4 upper-bounds — see `bb.rs` docs),
+//!
+//! plus the analytic α/β/γ cost models ([`cost`]) and wire-traffic
+//! accounting used by tests to verify the models against reality.
+
+pub mod bb;
+pub mod comm;
+pub mod shmem;
+pub mod cost;
+pub mod dh;
+pub mod ring;
+
+pub use comm::{Rank, Traffic, World};
+pub use cost::{Algorithm, CostParams};
+
+use crate::Result;
+
+/// Sum-all-reduce `data` in place across all ranks of the world using the
+/// given algorithm. Every rank must call this with the same `n` and
+/// algorithm; on return every rank holds the elementwise sum.
+pub fn all_reduce(alg: Algorithm, rank: &mut Rank, data: &mut [f32]) -> Result<()> {
+    match alg {
+        Algorithm::Ring => ring::all_reduce(rank, data),
+        Algorithm::DoublingHalving => dh::all_reduce(rank, data),
+        Algorithm::BinaryBlocks => bb::all_reduce(rank, data),
+    }
+}
+
+/// Convenience for the trainer: sum-all-reduce then divide by world size
+/// (gradient averaging across data-parallel workers).
+pub fn all_reduce_mean(alg: Algorithm, rank: &mut Rank, data: &mut [f32]) -> Result<()> {
+    all_reduce(alg, rank, data)?;
+    let inv = 1.0 / rank.size() as f32;
+    for v in data.iter_mut() {
+        *v *= inv;
+    }
+    Ok(())
+}
+
+/// Pick the algorithm the runtime would use for a given world size, the
+/// same policy Horovod/MPICH apply (§2.1): doubling-halving for powers of
+/// two, the fold variant otherwise; plain ring for very large payloads
+/// where bandwidth dominates latency.
+pub fn select_algorithm(world: usize, n_elems: usize) -> Algorithm {
+    // §2.1: "For parameter sizes up to 1e7, the doubling-halving algorithm
+    // for powers of 2 has been found to be significantly more efficient."
+    const RING_THRESHOLD: usize = 10_000_000;
+    if n_elems > RING_THRESHOLD {
+        Algorithm::Ring
+    } else if world.is_power_of_two() {
+        Algorithm::DoublingHalving
+    } else {
+        Algorithm::BinaryBlocks
+    }
+}
+
+/// Split `n` elements into `parts` contiguous near-equal ranges; returns
+/// the `[start, end)` of range `i`. The first `n % parts` ranges get one
+/// extra element, matching MPI segment conventions.
+pub fn segment_bounds(n: usize, parts: usize, i: usize) -> (usize, usize) {
+    debug_assert!(i < parts);
+    let base = n / parts;
+    let extra = n % parts;
+    let start = i * base + i.min(extra);
+    let len = base + usize::from(i < extra);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_cover_exactly() {
+        for n in [0usize, 1, 7, 64, 101] {
+            for parts in 1..=9 {
+                let mut total = 0;
+                let mut prev_end = 0;
+                for i in 0..parts {
+                    let (s, e) = segment_bounds(n, parts, i);
+                    assert_eq!(s, prev_end, "n={n} parts={parts} i={i}");
+                    assert!(e >= s);
+                    total += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(total, n);
+            }
+        }
+    }
+
+    #[test]
+    fn segment_sizes_differ_by_at_most_one() {
+        for n in [13usize, 100, 1001] {
+            for parts in 1..=8 {
+                let sizes: Vec<usize> = (0..parts)
+                    .map(|i| {
+                        let (s, e) = segment_bounds(n, parts, i);
+                        e - s
+                    })
+                    .collect();
+                let min = *sizes.iter().min().unwrap();
+                let max = *sizes.iter().max().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn algorithm_selection_policy() {
+        assert_eq!(select_algorithm(8, 1000), Algorithm::DoublingHalving);
+        assert_eq!(select_algorithm(6, 1000), Algorithm::BinaryBlocks);
+        assert_eq!(select_algorithm(8, 20_000_000), Algorithm::Ring);
+        assert_eq!(select_algorithm(1, 10), Algorithm::DoublingHalving);
+    }
+}

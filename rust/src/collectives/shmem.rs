@@ -1,0 +1,221 @@
+//! Shared-memory all-reduce transport (§Perf optimization).
+//!
+//! The ring / doubling-halving / binary-blocks implementations in this
+//! module's siblings are faithful *message-passing* algorithms — each
+//! send allocates and copies, exactly like wire traffic, which is what
+//! makes their byte counters comparable to eqs 2–4. But our ranks are
+//! threads in one address space, so the trainer's hot path can use the
+//! transport NCCL would use intra-node: a shared reduction buffer.
+//!
+//! Protocol (reduce-scatter + broadcast over shared slots):
+//!  1. every rank publishes a read-only view of its vector, barrier;
+//!  2. rank `r` reduces segment `r` (over all published views) into the
+//!     shared accumulator, barrier;
+//!  3. every rank copies the accumulator back into its own vector.
+//!
+//! Three linear passes over the data per rank vs the channel transport's
+//! allocate+copy per message — measured before/after lives in
+//! EXPERIMENTS.md §Perf.
+
+use std::sync::{Arc, Barrier, Mutex};
+
+use super::segment_bounds;
+
+struct Shared {
+    barrier: Barrier,
+    /// Published per-rank input snapshots (slot per rank).
+    slots: Vec<Mutex<Vec<f32>>>,
+    /// The reduced result, written segment-wise by all ranks.
+    result: Mutex<Vec<f32>>,
+}
+
+/// One world's shared-memory reducer; clone a handle per rank.
+pub struct ShmemWorld {
+    inner: Arc<Shared>,
+    size: usize,
+}
+
+impl ShmemWorld {
+    pub fn new(size: usize) -> ShmemWorld {
+        assert!(size > 0);
+        ShmemWorld {
+            inner: Arc::new(Shared {
+                barrier: Barrier::new(size),
+                slots: (0..size).map(|_| Mutex::new(Vec::new())).collect(),
+                result: Mutex::new(Vec::new()),
+            }),
+            size,
+        }
+    }
+
+    /// Handle for one rank (move into its thread).
+    pub fn rank(&self, rank: usize) -> ShmemRank {
+        assert!(rank < self.size);
+        ShmemRank { shared: self.inner.clone(), rank, size: self.size }
+    }
+}
+
+/// Per-rank endpoint of the shared-memory all-reduce.
+pub struct ShmemRank {
+    shared: Arc<Shared>,
+    rank: usize,
+    size: usize,
+}
+
+impl ShmemRank {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// In-place sum all-reduce. Every rank must call with equal lengths.
+    pub fn all_reduce(&self, data: &mut [f32]) {
+        let w = self.size;
+        if w == 1 || data.is_empty() {
+            return;
+        }
+        let n = data.len();
+
+        // 1. publish (one copy; slot buffers are reused across calls)
+        {
+            let mut slot = self.shared.slots[self.rank].lock().unwrap();
+            slot.clear();
+            slot.extend_from_slice(data);
+        }
+        if self.rank == 0 {
+            // length only; every element is overwritten in step 2
+            self.shared.result.lock().unwrap().resize(n, 0.0);
+        }
+        self.shared.barrier.wait();
+
+        // 2. write my fully-reduced segment (copy, not accumulate — no
+        // zeroing pass needed; segments partition [0, n))
+        let (lo, hi) = segment_bounds(n, w, self.rank);
+        if hi > lo {
+            let mut acc = vec![0.0f32; hi - lo];
+            for s in 0..w {
+                let slot = self.shared.slots[s].lock().unwrap();
+                debug_assert_eq!(slot.len(), n, "ranks disagree on length");
+                for (a, v) in acc.iter_mut().zip(&slot[lo..hi]) {
+                    *a += v;
+                }
+            }
+            let mut result = self.shared.result.lock().unwrap();
+            result[lo..hi].copy_from_slice(&acc);
+        }
+        self.shared.barrier.wait();
+
+        // 3. read back, then a final barrier so no rank can start the
+        // next call's mutation while a peer is still reading
+        {
+            let result = self.shared.result.lock().unwrap();
+            data.copy_from_slice(&result);
+        }
+        self.shared.barrier.wait();
+    }
+
+    /// All-reduce then divide by world size (gradient averaging).
+    pub fn all_reduce_mean(&self, data: &mut [f32]) {
+        self.all_reduce(data);
+        let inv = 1.0 / self.size as f32;
+        for v in data.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn run_shmem(payloads: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        let w = payloads.len();
+        let world = ShmemWorld::new(w);
+        let handles: Vec<_> = payloads
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut data)| {
+                let rank = world.rank(r);
+                std::thread::spawn(move || {
+                    rank.all_reduce(&mut data);
+                    (r, data)
+                })
+            })
+            .collect();
+        let mut out: Vec<(usize, Vec<f32>)> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        out.sort_by_key(|(r, _)| *r);
+        out.into_iter().map(|(_, d)| d).collect()
+    }
+
+    #[test]
+    fn matches_serial_sum() {
+        let mut rng = Rng::new(1);
+        for (w, n) in [(2usize, 100usize), (3, 999), (8, 4096), (5, 1)] {
+            let payloads: Vec<Vec<f32>> = (0..w).map(|_| rng.vec_f32(n)).collect();
+            let mut want = vec![0.0f32; n];
+            for p in &payloads {
+                for (a, b) in want.iter_mut().zip(p) {
+                    *a += b;
+                }
+            }
+            for out in run_shmem(payloads) {
+                for (g, t) in out.iter().zip(&want) {
+                    assert!((g - t).abs() <= 1e-3 * t.abs().max(1.0), "w={w} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_channel_dh() {
+        let mut rng = Rng::new(2);
+        let w = 4;
+        let n = 1000;
+        let payloads: Vec<Vec<f32>> = (0..w).map(|_| rng.vec_f32(n)).collect();
+        let shmem = run_shmem(payloads.clone());
+        let (chan, _) = super::super::comm::run_world(w, payloads, |rank, data| {
+            super::super::dh::all_reduce(rank, data).unwrap();
+        });
+        for (a, b) in shmem.iter().zip(&chan) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_calls() {
+        let world = ShmemWorld::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|r| {
+                let rank = world.rank(r);
+                std::thread::spawn(move || {
+                    let mut data = vec![r as f32 + 1.0; 8];
+                    for _ in 0..5 {
+                        rank.all_reduce_mean(&mut data);
+                    }
+                    data
+                })
+            })
+            .collect();
+        for h in handles {
+            for v in h.join().unwrap() {
+                assert!((v - 1.5).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let world = ShmemWorld::new(1);
+        let rank = world.rank(0);
+        let mut data = vec![3.0f32; 4];
+        rank.all_reduce(&mut data);
+        assert_eq!(data, vec![3.0f32; 4]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Job coordinator: drives the real trainer through stop/restart rescales.
+//!
+//! Two entry points:
+//!
+//! - [`run_with_rescales`] — execute an explicit rescale plan (the
+//!   Table 2 experiment: train at 4, checkpoint at step k, restart at 8
+//!   with eq 7 LR scaling) and measure every restart's cost.
+//! - [`train_to_target`] — the paper's full closed loop on real
+//!   hardware: train in segments, fit the convergence (eq 1) and speed
+//!   (eq 5) models online from observed samples, and let the doubling
+//!   heuristic pick the next worker count after every segment.
+
+use std::time::Instant;
+
+use crate::perfmodel::{ConvergenceModel, SpeedModel};
+use crate::scheduler::{doubling::Doubling, JobInfo, Scheduler, Speed};
+use crate::trainer::{train, Checkpoint, TrainConfig, TrainReport};
+use crate::Result;
+
+/// One executed segment of a coordinated run.
+#[derive(Debug)]
+pub struct Segment {
+    pub workers: usize,
+    pub steps: u64,
+    pub report: TrainReport,
+    /// Checkpoint-save + restart (client/compile) seconds charged at the
+    /// boundary *before* this segment (0 for the first).
+    pub restart_secs: f64,
+}
+
+/// Outcome of a multi-segment coordinated run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub segments: Vec<Segment>,
+    pub checkpoint: Checkpoint,
+    /// Wall time including restarts.
+    pub total_secs: f64,
+    /// All loss samples across segments.
+    pub logs: Vec<crate::trainer::StepLog>,
+}
+
+impl RunOutcome {
+    pub fn final_loss(&self) -> Option<f32> {
+        self.logs.last().map(|l| l.loss)
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        self.segments.iter().map(|s| s.steps).sum()
+    }
+}
+
+/// Execute an explicit `(workers, steps)` plan, carrying the checkpoint
+/// across boundaries. Eq 7 is enforced structurally: the LR schedule is
+/// `base · w`, so restarting at 2× workers doubles the LR exactly as §5
+/// prescribes.
+pub fn run_with_rescales(base: &TrainConfig, plan: &[(usize, u64)]) -> Result<RunOutcome> {
+    anyhow::ensure!(!plan.is_empty(), "empty rescale plan");
+    let mut ck: Option<Checkpoint> = None;
+    let mut segments = Vec::new();
+    let mut logs = Vec::new();
+    let total_t = Instant::now();
+
+    for (i, &(w, steps)) in plan.iter().enumerate() {
+        let mut cfg = base.clone();
+        cfg.workers = w;
+        let boundary_t = Instant::now();
+        // Checkpoint save/load across the boundary (disk round trip, like
+        // the paper's TF checkpoint restore).
+        let resume = match ck.take() {
+            Some(prev) => {
+                let path = std::env::temp_dir()
+                    .join(format!("ringmaster-rescale-{}-{i}.ckpt", std::process::id()));
+                prev.save(&path)?;
+                let loaded = Checkpoint::load(&path)?;
+                let _ = std::fs::remove_file(&path);
+                Some(loaded)
+            }
+            None => None,
+        };
+        let io_secs = boundary_t.elapsed().as_secs_f64();
+        let (new_ck, report) = train(&cfg, resume, steps)?;
+        logs.extend(report.logs.iter().copied());
+        let restart_secs = if i == 0 { 0.0 } else { io_secs + report.startup_secs };
+        segments.push(Segment { workers: w, steps, report, restart_secs });
+        ck = Some(new_ck);
+    }
+
+    Ok(RunOutcome {
+        segments,
+        checkpoint: ck.unwrap(),
+        total_secs: total_t.elapsed().as_secs_f64(),
+        logs,
+    })
+}
+
+/// Options for the adaptive closed loop.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOptions {
+    /// Steps per segment between scheduling decisions.
+    pub segment_steps: u64,
+    /// GPU capacity available to this job.
+    pub capacity: usize,
+    /// Stop when the fitted/observed loss reaches this value.
+    pub target_loss: f64,
+    /// Hard cap on segments (safety).
+    pub max_segments: usize,
+    /// Initial worker count (before any model exists).
+    pub initial_workers: usize,
+}
+
+/// The paper's loop on the real trainer: train → fit eq 1 + eq 5 → let
+/// the doubling heuristic choose `w` → rescale → repeat.
+pub fn train_to_target(base: &TrainConfig, opts: &AdaptiveOptions) -> Result<RunOutcome> {
+    let mut ck: Option<Checkpoint> = None;
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut logs: Vec<crate::trainer::StepLog> = Vec::new();
+    let mut speed_samples: Vec<(usize, f64)> = Vec::new();
+    let mut w = opts.initial_workers.max(1);
+    let total_t = Instant::now();
+
+    for seg_idx in 0..opts.max_segments {
+        let mut cfg = base.clone();
+        cfg.workers = w;
+        let (new_ck, report) = train(&cfg, ck.take(), opts.segment_steps)?;
+        // observed speed sample at this w: epochs/sec over the segment
+        let seg_epochs = opts.segment_steps as f64
+            * (preset_batch(base)? * w) as f64
+            / base.dataset_examples as f64;
+        speed_samples.push((w, seg_epochs / report.wall_secs.max(1e-9)));
+        logs.extend(report.logs.iter().copied());
+        let restart = if seg_idx == 0 { 0.0 } else { report.startup_secs };
+        segments.push(Segment { workers: w, steps: opts.segment_steps, report, restart_secs: restart });
+        let cur = segments.last().unwrap();
+        ck = Some(new_ck);
+
+        // converged?
+        if let Some(l) = cur.report.logs.last() {
+            if (l.loss as f64) <= opts.target_loss {
+                break;
+            }
+        }
+
+        // fit models and ask the doubling heuristic for the next w
+        let conv_samples: Vec<(f64, f64)> =
+            logs.iter().map(|l| (l.epoch, l.loss as f64)).collect();
+        let conv = ConvergenceModel::fit(&conv_samples).ok();
+        let epochs_now = ck.as_ref().unwrap().epochs;
+        let q = conv
+            .as_ref()
+            .and_then(|c| c.epochs_to_loss(opts.target_loss))
+            .map(|e| (e - epochs_now).max(0.1))
+            .unwrap_or(10.0);
+        let speed = fit_speed(&speed_samples, base)?;
+        let info = JobInfo { id: 0, q, speed, max_w: opts.capacity };
+        let alloc = Doubling.allocate(std::slice::from_ref(&info), opts.capacity);
+        let next_w = alloc[&0].max(1);
+        w = next_w;
+    }
+
+    Ok(RunOutcome {
+        segments,
+        checkpoint: ck.unwrap(),
+        total_secs: total_t.elapsed().as_secs_f64(),
+        logs,
+    })
+}
+
+/// Eq-5 fit when we have >= 2 distinct worker counts, otherwise a flat
+/// table (no scaling information yet — the heuristic will explore by
+/// doubling because a flat table still shows gain ∝ 1/w ≥ 0… it does
+/// not; a flat table yields zero gain, keeping w until more data. That
+/// conservatism is the precompute-vs-explore tradeoff of §7).
+fn fit_speed(samples: &[(usize, f64)], base: &TrainConfig) -> Result<Speed> {
+    let distinct: std::collections::BTreeSet<usize> = samples.iter().map(|&(w, _)| w).collect();
+    if distinct.len() >= 2 {
+        let m = base.dataset_examples as f64;
+        let artifacts = crate::runtime::Artifacts::load(&base.artifacts_dir)?;
+        let n_bytes = artifacts.preset(&base.preset)?.n_bytes();
+        if let Ok(model) = SpeedModel::fit(samples, m, n_bytes) {
+            return Ok(Speed::Fitted(model));
+        }
+    }
+    // optimistic near-linear prior: assume compute-bound scaling so the
+    // heuristic explores upward; real samples correct it next segment.
+    let (w0, f0) = samples.last().copied().unwrap_or((1, 1.0));
+    let table: Vec<(usize, f64)> = (0..7)
+        .map(|i| {
+            let w = 1usize << i;
+            (w, f0 * w as f64 / w0 as f64 * 0.9f64.powi(i))
+        })
+        .collect();
+    Ok(Speed::Table(table))
+}
+
+fn preset_batch(cfg: &TrainConfig) -> Result<usize> {
+    let artifacts = crate::runtime::Artifacts::load(&cfg.artifacts_dir)?;
+    Ok(artifacts.preset(&cfg.preset)?.batch)
+}

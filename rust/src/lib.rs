@@ -1,0 +1,38 @@
+//! # ringmaster
+//!
+//! Production-quality reproduction of **"Dynamic Scheduling of MPI-based
+//! Distributed Deep Learning Training Jobs"** (Capes, Raheja, Kemertas,
+//! Mohomed — 2019): a dynamic scheduler for ring-architecture (Horovod-style)
+//! data-parallel training, built as a three-layer rust + JAX + Pallas stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)** — the paper's scheduling contribution plus every
+//!   substrate it depends on: MPI-like collectives ([`collectives`]),
+//!   Lawson–Hanson NNLS ([`nnls`]), performance models ([`perfmodel`]),
+//!   scheduling strategies ([`scheduler`]), a discrete-event cluster
+//!   simulator ([`sim`]), and a real data-parallel training runtime
+//!   ([`trainer`], [`coordinator`]) that executes AOT-compiled JAX programs
+//!   through PJRT ([`runtime`]).
+//! - **L2/L1 (python, build-time only)** — the transformer model and Pallas
+//!   kernels lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
+//!
+//! The request path is pure rust: python never runs after artifacts exist.
+
+pub mod cluster;
+pub mod collectives;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod jsonx;
+pub mod linalg;
+pub mod metrics;
+pub mod nnls;
+pub mod perfmodel;
+pub mod rngx;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod trainer;
+
+/// Crate-wide result type (eyre for rich error context).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,269 @@
+//! Dense linear algebra substrate for the NNLS solver and model fitting.
+//!
+//! Small, self-contained f64 matrices (the fitting problems in this paper
+//! are tiny — a handful of coefficients over at most a few thousand
+//! samples), with Householder-QR least squares as the numerical core.
+
+use std::fmt;
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(r, c)])?;
+            }
+            writeln!(f)?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from row-major data.
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m[(r, c)] = f(r, c);
+            }
+        }
+        m
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|r| self.row(r).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Matrix-matrix product.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(r, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for c in 0..other.cols {
+                    out[(r, c)] += a * other[(k, c)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of columns.
+    pub fn select_cols(&self, cols: &[usize]) -> Matrix {
+        Matrix::from_fn(self.rows, cols.len(), |r, j| self[(r, cols[j])])
+    }
+
+    /// Least-squares solve min ||self * x - b||_2 via Householder QR.
+    ///
+    /// Requires rows >= cols and full column rank (returns None when the
+    /// triangular solve hits a (near-)zero pivot).
+    pub fn lstsq(&self, b: &[f64]) -> Option<Vec<f64>> {
+        assert_eq!(b.len(), self.rows);
+        let (m, n) = (self.rows, self.cols);
+        if m < n {
+            return None;
+        }
+        let mut a = self.clone();
+        let mut rhs = b.to_vec();
+
+        // Householder QR, applying reflections to rhs as we go.
+        for k in 0..n {
+            // norm of column k below the diagonal
+            let mut norm = 0.0;
+            for i in k..m {
+                norm += a[(i, k)] * a[(i, k)];
+            }
+            let norm = norm.sqrt();
+            if norm < 1e-300 {
+                return None;
+            }
+            let alpha = if a[(k, k)] > 0.0 { -norm } else { norm };
+            let mut v = vec![0.0; m - k];
+            v[0] = a[(k, k)] - alpha;
+            for i in k + 1..m {
+                v[i - k] = a[(i, k)];
+            }
+            let vtv: f64 = v.iter().map(|x| x * x).sum();
+            if vtv < 1e-300 {
+                continue;
+            }
+            // apply H = I - 2 v v^T / (v^T v) to remaining columns + rhs
+            for c in k..n {
+                let dot: f64 = (k..m).map(|i| v[i - k] * a[(i, c)]).sum();
+                let s = 2.0 * dot / vtv;
+                for i in k..m {
+                    a[(i, c)] -= s * v[i - k];
+                }
+            }
+            let dot: f64 = (k..m).map(|i| v[i - k] * rhs[i]).sum();
+            let s = 2.0 * dot / vtv;
+            for i in k..m {
+                rhs[i] -= s * v[i - k];
+            }
+            a[(k, k)] = alpha;
+        }
+
+        // Back-substitute R x = Q^T b.
+        let mut x = vec![0.0; n];
+        for k in (0..n).rev() {
+            let mut sum = rhs[k];
+            for c in k + 1..n {
+                sum -= a[(k, c)] * x[c];
+            }
+            let pivot = a[(k, k)];
+            if pivot.abs() < 1e-12 {
+                return None;
+            }
+            x[k] = sum / pivot;
+        }
+        Some(x)
+    }
+}
+
+/// Euclidean norm of a vector.
+pub fn norm2(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// a - b elementwise.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matvec() {
+        let i = Matrix::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.matvec(&x), x);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_rows(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.row(0), &[19.0, 22.0]);
+        assert_eq!(c.row(1), &[43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Matrix::from_fn(3, 5, |r, c| (r * 5 + c) as f64);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn lstsq_exact_square() {
+        // x + y = 3 ; x - y = 1 -> x=2, y=1
+        let a = Matrix::from_rows(2, 2, vec![1.0, 1.0, 1.0, -1.0]);
+        let x = a.lstsq(&[3.0, 1.0]).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-10);
+        assert!((x[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_recovers_line() {
+        // y = 2x + 1 with exact data
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let a = Matrix::from_fn(20, 2, |r, c| if c == 0 { xs[r] } else { 1.0 });
+        let b: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        let sol = a.lstsq(&b).unwrap();
+        assert!((sol[0] - 2.0).abs() < 1e-9);
+        assert!((sol[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_residual_orthogonal_to_columns() {
+        let a = Matrix::from_fn(10, 3, |r, c| ((r + 1) * (c + 2)) as f64 % 7.0 + 0.1 * r as f64);
+        let b: Vec<f64> = (0..10).map(|i| (i as f64).sin()).collect();
+        let x = a.lstsq(&b).unwrap();
+        let resid = sub(&b, &a.matvec(&x));
+        let at = a.transpose();
+        for c in 0..3 {
+            assert!(dot(at.row(c), &resid).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lstsq_rank_deficient_returns_none() {
+        // duplicate columns
+        let a = Matrix::from_fn(5, 2, |r, _| r as f64 + 1.0);
+        assert!(a.lstsq(&[1.0, 2.0, 3.0, 4.0, 5.0]).is_none());
+    }
+
+    #[test]
+    fn select_cols_picks() {
+        let a = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f64);
+        let s = a.select_cols(&[2, 0]);
+        assert_eq!(s.row(0), &[2.0, 0.0]);
+        assert_eq!(s.row(1), &[5.0, 3.0]);
+    }
+}

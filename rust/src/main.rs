@@ -1,0 +1,274 @@
+//! `ringmaster` — leader entrypoint.
+//!
+//! Subcommands (each maps to a paper experiment; see DESIGN.md §5):
+//!
+//! ```text
+//! ringmaster train     --preset tiny --workers 2 --steps 100     # E2E training
+//! ringmaster rescale   --preset tiny --plan 4:60,8:60            # Table 2
+//! ringmaster profile   --preset tiny --workers 1,2,4 --steps 10  # Table 1
+//! ringmaster simulate  --contention moderate [--all]             # Table 3
+//! ringmaster collectives --workers 8 --elems 1000000             # eqs 2-4
+//! ringmaster fit       --demo                                    # eq 1 / eq 5
+//! ```
+
+use ringmaster::cli::Args;
+use ringmaster::collectives::{self, cost, Algorithm};
+use ringmaster::coordinator;
+use ringmaster::metrics::CsvTable;
+use ringmaster::perfmodel::{ConvergenceModel, SpeedModel};
+use ringmaster::runtime::manifest::default_dir;
+use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::trainer::{train, Checkpoint, TrainConfig};
+use ringmaster::Result;
+
+fn main() {
+    let sub = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "train" => cmd_train(),
+        "rescale" => cmd_rescale(),
+        "profile" => cmd_profile(),
+        "simulate" => cmd_simulate(),
+        "collectives" => cmd_collectives(),
+        "fit" => cmd_fit(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown subcommand {other:?}\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+ringmaster — dynamic scheduling of MPI-based distributed DL training jobs
+
+USAGE: ringmaster <subcommand> [flags]
+
+  train        run data-parallel training (E2E driver)
+  rescale      run an explicit stop/restart plan (Table 2)
+  profile      per-worker-count step timing (Table 1)
+  simulate     64-GPU scheduler simulation (Table 3)
+  collectives  all-reduce algorithms vs analytic cost models (eqs 2-4)
+  fit          demo of the eq 1 / eq 5 NNLS fits
+
+Run `ringmaster <subcommand> --help-flags` is not needed: flags are
+documented in README.md; unknown flags are rejected with an error.
+";
+
+fn cmd_train() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let preset = a.str_or("preset", "tiny");
+    let workers = a.get_or("workers", 2usize)?;
+    let steps = a.get_or("steps", 50u64)?;
+    let save = a.str_or("save", "");
+    let resume = a.str_or("resume", "");
+    let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
+    let mut cfg = TrainConfig::new(artifacts, &preset, workers);
+    cfg.seed = a.get_or("seed", 42u64)?;
+    cfg.log_every = a.get_or("log-every", 5u64)?;
+    a.reject_unknown()?;
+
+    let resume_ck = if resume.is_empty() { None } else { Some(Checkpoint::load(&resume)?) };
+    let (ck, report) = train(&cfg, resume_ck, steps)?;
+    println!(
+        "preset={preset} workers={workers} alg={} steps={} wall={:.2}s startup={:.2}s steps/s={:.2} tokens/s={:.0}",
+        report.algorithm, report.steps, report.wall_secs, report.startup_secs,
+        report.steps_per_sec, report.tokens_per_sec
+    );
+    for l in &report.logs {
+        println!("step {:>6}  epoch {:>8.3}  loss {:.4}", l.step, l.epoch, l.loss);
+    }
+    if !save.is_empty() {
+        ck.save(&save)?;
+        println!("checkpoint -> {save}");
+    }
+    Ok(())
+}
+
+fn cmd_rescale() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let preset = a.str_or("preset", "tiny");
+    let plan_s = a.str_or("plan", "4:60,8:60");
+    let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
+    let seed = a.get_or("seed", 42u64)?;
+    a.reject_unknown()?;
+
+    let plan: Vec<(usize, u64)> = plan_s
+        .split(',')
+        .map(|seg| {
+            let (w, s) = seg
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("plan segment {seg:?}: want W:STEPS"))?;
+            Ok((w.trim().parse()?, s.trim().parse()?))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut cfg = TrainConfig::new(artifacts, &preset, plan[0].0);
+    cfg.seed = seed;
+    let out = coordinator::run_with_rescales(&cfg, &plan)?;
+    let mut table = CsvTable::new(&["segment", "workers", "steps", "wall_s", "restart_s", "final_loss"]);
+    for (i, seg) in out.segments.iter().enumerate() {
+        table.row(&[
+            i.to_string(),
+            seg.workers.to_string(),
+            seg.steps.to_string(),
+            format!("{:.2}", seg.report.wall_secs),
+            format!("{:.2}", seg.restart_secs),
+            seg.report.logs.last().map(|l| format!("{:.4}", l.loss)).unwrap_or_default(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("total wall: {:.2}s  final loss: {:?}", out.total_secs, out.final_loss());
+    Ok(())
+}
+
+fn cmd_profile() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let preset = a.str_or("preset", "tiny");
+    let worker_counts = a.list_or("workers", &[1usize, 2, 4])?;
+    let steps = a.get_or("steps", 10u64)?;
+    let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
+    a.reject_unknown()?;
+
+    let mut table = CsvTable::new(&[
+        "workers", "alg", "step_ms", "allreduce_ms", "tokens_per_s", "scaling_eff_%",
+    ]);
+    let mut base_tps = None;
+    for &w in &worker_counts {
+        let mut cfg = TrainConfig::new(artifacts.clone(), &preset, w);
+        cfg.log_every = u64::MAX; // quiet
+        let (_, report) = train(&cfg, None, steps)?;
+        let tps = report.tokens_per_sec;
+        let base = *base_tps.get_or_insert(tps / w as f64);
+        table.row(&[
+            w.to_string(),
+            report.algorithm.to_string(),
+            format!("{:.1}", report.mean_step_secs * 1e3),
+            format!("{:.1}", report.mean_allreduce_secs * 1e3),
+            format!("{:.0}", tps),
+            format!("{:.1}", 100.0 * tps / (base * w as f64)),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_simulate() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let seed = a.get_or("seed", 42u64)?;
+    let all = a.flag("all");
+    let contention_s = a.str_or("contention", "moderate");
+    let strategy_s = a.str_or("strategy", "precompute");
+    a.reject_unknown()?;
+
+    let contentions: Vec<Contention> = if all {
+        Contention::all().to_vec()
+    } else {
+        vec![parse_contention(&contention_s)?]
+    };
+    let strategies: Vec<StrategyKind> = if all {
+        StrategyKind::table3_rows()
+    } else {
+        vec![parse_strategy(&strategy_s)?]
+    };
+
+    let mut table = CsvTable::new(&["strategy", "contention", "avg_hours", "jobs", "peak", "rescales"]);
+    for &c in &contentions {
+        for &s in &strategies {
+            let cfg = SimConfig::paper(s, c, seed);
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+            let r = simulate(&cfg, &jobs);
+            table.row(&[
+                r.strategy.clone(),
+                c.name().to_string(),
+                format!("{:.2}", r.avg_completion_hours),
+                r.completed.to_string(),
+                r.peak_concurrent.to_string(),
+                r.total_rescales.to_string(),
+            ]);
+        }
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_collectives() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let w = a.get_or("workers", 8usize)?;
+    let elems = a.get_or("elems", 1_000_000usize)?;
+    a.reject_unknown()?;
+
+    let params = cost::CostParams::default();
+    let mut table = CsvTable::new(&["alg", "wall_ms", "msgs", "bytes", "model_ms"]);
+    for alg in [Algorithm::Ring, Algorithm::DoublingHalving, Algorithm::BinaryBlocks] {
+        if alg == Algorithm::DoublingHalving && !w.is_power_of_two() {
+            continue;
+        }
+        let payloads: Vec<Vec<f32>> = (0..w).map(|r| vec![r as f32; elems]).collect();
+        let t0 = std::time::Instant::now();
+        let (_, traffic) = collectives::comm::run_world(w, payloads, move |rank, data| {
+            collectives::all_reduce(alg, rank, data).unwrap();
+        });
+        table.row(&[
+            alg.name().to_string(),
+            format!("{:.2}", t0.elapsed().as_secs_f64() * 1e3),
+            traffic.messages().to_string(),
+            traffic.bytes().to_string(),
+            format!("{:.3}", cost::comm_time(alg, w, (elems * 4) as f64, &params) * 1e3),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_fit() -> Result<()> {
+    let a = Args::from_env(2)?;
+    a.reject_unknown()?;
+    // eq 1 demo on a synthetic 1/k curve
+    let samples: Vec<(f64, f64)> =
+        (0..60).map(|e| (e as f64, 1.0 / (0.35 * e as f64 + 1.4) + 0.22)).collect();
+    let conv = ConvergenceModel::fit(&samples)?;
+    println!(
+        "eq 1 fit: b0={:.4} b1={:.4} b2={:.4} rms={:.2e}; epochs to loss 0.3: {:.1}",
+        conv.b0,
+        conv.b1,
+        conv.b2,
+        conv.rms,
+        conv.epochs_to_loss(0.3).unwrap_or(f64::NAN)
+    );
+    // eq 5 demo on the paper's Table 2 epoch times
+    let speeds: Vec<(usize, f64)> = ringmaster::sim::workload::PAPER_EPOCH_SECS
+        .iter()
+        .map(|&(w, s)| (w, 1.0 / s))
+        .collect();
+    let model = SpeedModel::fit(&speeds, 50_000.0, 6.9e6)?;
+    println!("eq 5 fit on paper Table 2 data: theta={:?}", model.theta);
+    for w in [1usize, 2, 4, 8, 16] {
+        println!("  f({w:>2}) -> {:>7.1} s/epoch", model.secs_per_epoch(w));
+    }
+    Ok(())
+}
+
+fn parse_contention(s: &str) -> Result<Contention> {
+    Ok(match s {
+        "extreme" => Contention::Extreme,
+        "moderate" => Contention::Moderate,
+        "none" => Contention::None,
+        other => anyhow::bail!("contention {other:?}: want extreme|moderate|none"),
+    })
+}
+
+fn parse_strategy(s: &str) -> Result<StrategyKind> {
+    Ok(match s {
+        "precompute" => StrategyKind::Precompute,
+        "exploratory" => StrategyKind::Exploratory,
+        "fixed-1" | "one" => StrategyKind::Fixed(1),
+        "fixed-2" | "two" => StrategyKind::Fixed(2),
+        "fixed-4" | "four" => StrategyKind::Fixed(4),
+        "fixed-8" | "eight" => StrategyKind::Fixed(8),
+        other => anyhow::bail!("strategy {other:?}"),
+    })
+}

@@ -1,0 +1,207 @@
+//! Lightweight metrics: counters, wall-clock timers, streaming stats, and
+//! CSV emission for the bench harnesses. No external deps — results must
+//! be exactly reproducible and the vendor snapshot has no metrics crates.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Streaming mean/min/max/count (Welford for variance).
+#[derive(Clone, Debug, Default)]
+pub struct Stat {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stat {
+    pub fn new() -> Self {
+        Stat { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Named scope timer collection.
+#[derive(Debug, Default)]
+pub struct Timers {
+    stats: BTreeMap<String, Stat>,
+}
+
+impl Timers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` under `name` (seconds).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.record(name, start.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn record(&mut self, name: &str, secs: f64) {
+        self.stats.entry(name.to_string()).or_insert_with(Stat::new).push(secs);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Stat> {
+        self.stats.get(name)
+    }
+
+    /// Human-readable summary table.
+    pub fn summary(&self) -> String {
+        let mut out = String::from("timer                          n      mean       min       max\n");
+        for (name, s) in &self.stats {
+            out.push_str(&format!(
+                "{:<28} {:>5} {:>9.4} {:>9.4} {:>9.4}\n",
+                name,
+                s.count(),
+                s.mean(),
+                s.min(),
+                s.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Minimal CSV table writer (used by benches to dump paper tables).
+#[derive(Debug)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",") + "\n";
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Aligned plain-text rendering (what the benches print).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> crate::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_moments() {
+        let mut s = Stat::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn timers_record_and_summarize() {
+        let mut t = Timers::new();
+        let out = t.time("op", || 42);
+        assert_eq!(out, 42);
+        t.record("op", 0.5);
+        assert_eq!(t.get("op").unwrap().count(), 2);
+        assert!(t.summary().contains("op"));
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(&["1".into(), "x".into()]);
+        t.row(&["2".into(), "y".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,x\n2,y\n");
+        let rendered = t.render();
+        assert!(rendered.contains('x') && rendered.contains('y'));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn csv_rejects_ragged_rows() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

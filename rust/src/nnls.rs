@@ -1,0 +1,193 @@
+//! Lawson–Hanson non-negative least squares.
+//!
+//! Both of the paper's fits require non-negativity: the convergence model
+//! `l = 1/(b0*k + b1) + b2` needs `b0 > 0` (§3.1), and the resource model
+//! `f(w)` needs all four `theta >= 0` (§3.2). Optimus fits the same way.
+//!
+//! Solves `min ||A x - b||_2  s.t.  x >= 0` by active-set iteration
+//! (Lawson & Hanson 1974, ch. 23), using the QR least squares from
+//! [`crate::linalg`] for the passive-set subproblems.
+
+use crate::linalg::{dot, norm2, sub, Matrix};
+
+/// Outcome of an NNLS solve.
+#[derive(Clone, Debug)]
+pub struct NnlsSolution {
+    /// Coefficients, all >= 0.
+    pub x: Vec<f64>,
+    /// Final residual norm ||Ax - b||.
+    pub residual: f64,
+    /// Outer iterations used.
+    pub iterations: usize,
+}
+
+/// Maximum outer iterations as a multiple of the column count.
+const MAX_ITER_FACTOR: usize = 10;
+/// Dual-feasibility tolerance.
+const TOL: f64 = 1e-10;
+
+/// Solve `min ||A x - b||  s.t.  x >= 0`.
+///
+/// Returns an error if a passive-set subproblem is singular beyond
+/// recovery (degenerate designs — e.g. duplicate all-zero columns).
+pub fn nnls(a: &Matrix, b: &[f64]) -> crate::Result<NnlsSolution> {
+    assert_eq!(b.len(), a.rows, "rhs length must match rows");
+    let n = a.cols;
+    let mut x = vec![0.0; n];
+    let mut passive = vec![false; n];
+    let at = a.transpose();
+    let max_iter = MAX_ITER_FACTOR * n.max(3);
+    let mut iterations = 0;
+
+    loop {
+        iterations += 1;
+        if iterations > max_iter {
+            break; // return best-so-far; callers treat fit quality via residual
+        }
+
+        // Gradient of 1/2||Ax-b||^2 is A^T(Ax - b); w = -grad.
+        let resid = sub(b, &a.matvec(&x));
+        let w: Vec<f64> = (0..n).map(|j| dot(at.row(j), &resid)).collect();
+
+        // Pick the most-violated zero coefficient.
+        let candidate = (0..n)
+            .filter(|&j| !passive[j])
+            .max_by(|&i, &j| w[i].partial_cmp(&w[j]).unwrap());
+        let t = match candidate {
+            Some(t) if w[t] > TOL => t,
+            _ => break, // KKT satisfied
+        };
+        passive[t] = true;
+
+        // Inner loop: solve on the passive set; clip negative entries.
+        loop {
+            let p: Vec<usize> = (0..n).filter(|&j| passive[j]).collect();
+            let ap = a.select_cols(&p);
+            let z = match ap.lstsq(b) {
+                Some(z) => z,
+                None => {
+                    // Singular subproblem: drop the newest column and stop
+                    // considering it this round.
+                    passive[t] = false;
+                    break;
+                }
+            };
+
+            if z.iter().all(|&v| v > TOL) {
+                for (idx, &j) in p.iter().enumerate() {
+                    x[j] = z[idx];
+                }
+                break;
+            }
+
+            // Step toward z only as far as feasibility allows.
+            let mut alpha = f64::INFINITY;
+            for (idx, &j) in p.iter().enumerate() {
+                if z[idx] <= TOL {
+                    let denom = x[j] - z[idx];
+                    if denom > 0.0 {
+                        alpha = alpha.min(x[j] / denom);
+                    }
+                }
+            }
+            if !alpha.is_finite() {
+                alpha = 0.0;
+            }
+            for (idx, &j) in p.iter().enumerate() {
+                x[j] += alpha * (z[idx] - x[j]);
+            }
+            for j in 0..n {
+                if passive[j] && x[j].abs() <= TOL {
+                    passive[j] = false;
+                    x[j] = 0.0;
+                }
+            }
+        }
+    }
+
+    let residual = norm2(&sub(b, &a.matvec(&x)));
+    Ok(NnlsSolution { x, residual, iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Rng;
+
+    fn design(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(rows, cols, |_, _| rng.uniform_range(0.0, 1.0))
+    }
+
+    #[test]
+    fn recovers_nonnegative_truth() {
+        let a = design(50, 3, 1);
+        let truth = vec![2.0, 0.5, 1.5];
+        let b = a.matvec(&truth);
+        let sol = nnls(&a, &b).unwrap();
+        for (got, want) in sol.x.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-6, "{:?}", sol.x);
+        }
+        assert!(sol.residual < 1e-8);
+    }
+
+    #[test]
+    fn clips_negative_truth_to_zero() {
+        // b generated with a negative coefficient: NNLS must zero it.
+        let a = design(60, 2, 2);
+        let b_raw = a.matvec(&vec![3.0, -2.0]);
+        let sol = nnls(&a, &b_raw).unwrap();
+        assert!(sol.x.iter().all(|&v| v >= 0.0));
+        // second coefficient pinned at the boundary
+        assert!(sol.x[1].abs() < 1e-9, "{:?}", sol.x);
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let a = design(20, 4, 3);
+        let sol = nnls(&a, &vec![0.0; 20]).unwrap();
+        assert!(sol.x.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn solution_never_negative_on_noisy_data() {
+        let mut rng = Rng::new(9);
+        for trial in 0..20 {
+            let a = design(40, 4, 100 + trial);
+            let truth: Vec<f64> = (0..4).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+            let mut b = a.matvec(&truth);
+            for v in &mut b {
+                *v += 0.05 * rng.normal();
+            }
+            let sol = nnls(&a, &b).unwrap();
+            assert!(sol.x.iter().all(|&v| v >= 0.0), "trial {trial}: {:?}", sol.x);
+        }
+    }
+
+    #[test]
+    fn residual_no_worse_than_zero_vector() {
+        let a = design(30, 3, 5);
+        let b: Vec<f64> = (0..30).map(|i| (i as f64 * 0.3).sin() + 1.0).collect();
+        let sol = nnls(&a, &b).unwrap();
+        assert!(sol.residual <= norm2(&b) + 1e-12);
+    }
+
+    #[test]
+    fn kkt_dual_feasibility_at_solution() {
+        // For inactive coords (x=0), gradient must be >= -tol;
+        // for active coords, gradient ~ 0.
+        let a = design(50, 4, 7);
+        let b = a.matvec(&vec![1.0, 0.0, 2.0, 0.0]);
+        let sol = nnls(&a, &b).unwrap();
+        let at = a.transpose();
+        let resid = sub(&b, &a.matvec(&sol.x));
+        for j in 0..4 {
+            let w = dot(at.row(j), &resid);
+            if sol.x[j] > 1e-9 {
+                assert!(w.abs() < 1e-6, "active coord {j} grad {w}");
+            } else {
+                assert!(w < 1e-6, "inactive coord {j} grad {w}");
+            }
+        }
+    }
+}

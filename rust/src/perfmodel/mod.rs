@@ -1,0 +1,115 @@
+//! Performance modelling of ring-reduce DL jobs — §3 of the paper.
+//!
+//! Two-step process, exactly as Optimus and this paper do it:
+//!
+//! 1. [`convergence`] — online fit of the loss curve `l = 1/(b0·e + b1) + b2`
+//!    (eq 1, NNLS with `b0 > 0`), giving the remaining epochs `Q_j` to a
+//!    target loss.
+//! 2. [`speed`] — the resource-to-speed model `f(w)` (eq 5), an NNLS fit
+//!    of per-epoch time over the features `[m/w, w-1, (w-1)·n/w, 1]`,
+//!    giving epochs/second at any candidate worker count.
+//!
+//! [`JobModel`] combines both into the quantity the scheduler minimizes:
+//! predicted remaining runtime `t_j = Q_j / f(w_j)` (§4.1).
+
+pub mod convergence;
+pub mod speed;
+
+pub use convergence::ConvergenceModel;
+pub use speed::SpeedModel;
+
+/// Full performance model of one training job.
+#[derive(Clone, Debug)]
+pub struct JobModel {
+    /// Loss-curve fit (eq 1); `None` until enough samples arrive.
+    pub convergence: Option<ConvergenceModel>,
+    /// Resource-to-speed fit (eq 5); `None` until >= 2 distinct w samples.
+    pub speed: Option<SpeedModel>,
+    /// Loss the job is declared converged at.
+    pub target_loss: f64,
+}
+
+impl JobModel {
+    pub fn new(target_loss: f64) -> Self {
+        JobModel { convergence: None, speed: None, target_loss }
+    }
+
+    /// Remaining epochs `Q_j` from the current epoch (§4.1); `None` while
+    /// the loss curve is unfit or the target is unreachable under the fit.
+    pub fn remaining_epochs(&self, current_epoch: f64) -> Option<f64> {
+        let conv = self.convergence.as_ref()?;
+        let target_epoch = conv.epochs_to_loss(self.target_loss)?;
+        Some((target_epoch - current_epoch).max(0.0))
+    }
+
+    /// Predicted remaining runtime at `w` workers: `t = Q / f(w)`.
+    pub fn remaining_time(&self, current_epoch: f64, w: usize) -> Option<f64> {
+        let q = self.remaining_epochs(current_epoch)?;
+        let f = self.speed.as_ref()?.epochs_per_sec(w);
+        if f <= 0.0 {
+            return None;
+        }
+        Some(q / f)
+    }
+
+    /// True once both sub-models are fitted.
+    pub fn ready(&self) -> bool {
+        self.convergence.is_some() && self.speed.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fitted_model() -> JobModel {
+        let mut m = JobModel::new(0.2);
+        // synthetic loss curve: l = 1/(0.5 e + 1) + 0.1
+        let samples: Vec<(f64, f64)> = (0..40)
+            .map(|e| {
+                let e = e as f64;
+                (e, 1.0 / (0.5 * e + 1.0) + 0.1)
+            })
+            .collect();
+        m.convergence = ConvergenceModel::fit(&samples).ok();
+        // speed: 100 s/epoch at w=1, scaling ~1/w with small overhead
+        let speed_samples: Vec<(usize, f64)> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&w| (w, 100.0 / w as f64 + 2.0 * (w - 1) as f64))
+            .map(|(w, t)| (w, 1.0 / t))
+            .collect();
+        m.speed = SpeedModel::fit(&speed_samples, 128.0, 4.0e6).ok();
+        m
+    }
+
+    #[test]
+    fn unfitted_model_returns_none() {
+        let m = JobModel::new(0.1);
+        assert!(!m.ready());
+        assert!(m.remaining_epochs(0.0).is_none());
+        assert!(m.remaining_time(0.0, 4).is_none());
+    }
+
+    #[test]
+    fn remaining_epochs_decreases_with_progress() {
+        let m = fitted_model();
+        let q0 = m.remaining_epochs(0.0).unwrap();
+        let q5 = m.remaining_epochs(5.0).unwrap();
+        assert!(q0 > q5);
+        assert!(q5 > 0.0);
+    }
+
+    #[test]
+    fn remaining_time_decreases_with_more_workers() {
+        let m = fitted_model();
+        let t1 = m.remaining_time(0.0, 1).unwrap();
+        let t4 = m.remaining_time(0.0, 4).unwrap();
+        assert!(t4 < t1);
+    }
+
+    #[test]
+    fn remaining_epochs_clamps_at_zero_past_target() {
+        let m = fitted_model();
+        assert_eq!(m.remaining_epochs(1e6).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Resource-to-speed model — eq 5 of the paper (§3.2).
+//!
+//!   `f(w) = (t0·(m/w) + t1·(w-1) + t2·(w-1)·(n/w) + t3)^-1`
+//!
+//! `f` is epochs/second; the bracket is seconds/epoch, a linear model in
+//! the features `[m/w, w-1, (w-1)·n/w, 1]` whose structure mirrors the
+//! all-reduce cost models (eqs 2–4): per-worker compute, per-step
+//! latency, per-step bandwidth, and a constant. All `t`'s are fitted
+//! with NNLS from observed `(w, f(w))` samples — the data the
+//! *exploratory* strategy spends its first ten minutes collecting and the
+//! *precompute* strategy is assumed to already have (§4).
+
+use crate::linalg::Matrix;
+use crate::nnls::nnls;
+use crate::Result;
+
+/// Fitted eq-5 resource model.
+#[derive(Clone, Debug)]
+pub struct SpeedModel {
+    /// Coefficients `[t0, t1, t2, t3]`, all >= 0.
+    pub theta: [f64; 4],
+    /// Per-epoch examples `m` (job constant baked into feature 0).
+    pub m: f64,
+    /// Model size in bytes `n` (job constant baked into feature 2).
+    pub n_bytes: f64,
+    /// Residual of the NNLS fit in seconds-per-epoch space.
+    pub residual: f64,
+}
+
+impl SpeedModel {
+    /// Feature vector of eq 5 for `w` workers.
+    fn features(m: f64, n_bytes: f64, w: usize) -> [f64; 4] {
+        let wf = w as f64;
+        [m / wf, wf - 1.0, (wf - 1.0) * (n_bytes / wf), 1.0]
+    }
+
+    /// Fit from `(w, epochs_per_sec)` samples. Needs >= 2 distinct worker
+    /// counts; more are better (the exploratory strategy collects 4).
+    pub fn fit(samples: &[(usize, f64)], m: f64, n_bytes: f64) -> Result<SpeedModel> {
+        anyhow::ensure!(samples.len() >= 2, "need >= 2 samples, got {}", samples.len());
+        let mut ws: Vec<usize> = samples.iter().map(|&(w, _)| w).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        anyhow::ensure!(ws.len() >= 2, "need >= 2 distinct worker counts");
+        for &(w, f) in samples {
+            anyhow::ensure!(w >= 1 && f > 0.0, "bad sample (w={w}, f={f})");
+        }
+
+        let design = Matrix::from_fn(samples.len(), 4, |r, c| {
+            Self::features(m, n_bytes, samples[r].0)[c]
+        });
+        // target: seconds per epoch
+        let rhs: Vec<f64> = samples.iter().map(|&(_, f)| 1.0 / f).collect();
+        let sol = nnls(&design, &rhs)?;
+        anyhow::ensure!(
+            sol.x.iter().any(|&t| t > 0.0),
+            "degenerate fit: all coefficients zero"
+        );
+        Ok(SpeedModel {
+            theta: [sol.x[0], sol.x[1], sol.x[2], sol.x[3]],
+            m,
+            n_bytes,
+            residual: sol.residual,
+        })
+    }
+
+    /// Seconds per epoch at `w` workers.
+    pub fn secs_per_epoch(&self, w: usize) -> f64 {
+        let x = Self::features(self.m, self.n_bytes, w);
+        self.theta.iter().zip(&x).map(|(t, f)| t * f).sum()
+    }
+
+    /// Training speed `f(w)` in epochs/second.
+    pub fn epochs_per_sec(&self, w: usize) -> f64 {
+        let t = self.secs_per_epoch(w);
+        if t <= 0.0 {
+            0.0
+        } else {
+            1.0 / t
+        }
+    }
+
+    /// Marginal *per-GPU* gain of doubling from `w` to `2w` for a job with
+    /// `q` remaining epochs — eq 6, the doubling heuristic's score.
+    pub fn doubling_gain(&self, q: f64, w: usize) -> f64 {
+        let t_now = q / self.epochs_per_sec(w);
+        let t_double = q / self.epochs_per_sec(2 * w);
+        (t_now - t_double) / w as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ground-truth epoch time with compute that parallelizes plus a
+    /// per-step overhead growing in w (the eq 2 ring shape).
+    fn epoch_secs(w: usize) -> f64 {
+        200.0 / w as f64 + 3.0 * (w as f64 - 1.0) + 5.0
+    }
+
+    fn fitted() -> SpeedModel {
+        let samples: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&w| (w, 1.0 / epoch_secs(w))).collect();
+        SpeedModel::fit(&samples, 200.0, 1.0e6).unwrap()
+    }
+
+    #[test]
+    fn interpolates_observed_points() {
+        let m = fitted();
+        for &w in &[1usize, 2, 4, 8] {
+            let got = m.secs_per_epoch(w);
+            let want = epoch_secs(w);
+            assert!((got - want).abs() / want < 0.05, "w={w}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn extrapolates_sanely_to_16() {
+        let m = fitted();
+        let got = m.secs_per_epoch(16);
+        let want = epoch_secs(16);
+        assert!((got - want).abs() / want < 0.4, "{got} vs {want}");
+    }
+
+    #[test]
+    fn speed_increases_then_saturates() {
+        // With a strong serial overhead term the model must show
+        // diminishing returns: f(2)/f(1) > f(16)/f(8).
+        let m = fitted();
+        let r_low = m.epochs_per_sec(2) / m.epochs_per_sec(1);
+        let r_high = m.epochs_per_sec(16) / m.epochs_per_sec(8);
+        assert!(r_low > r_high);
+    }
+
+    #[test]
+    fn coefficients_nonnegative() {
+        let m = fitted();
+        assert!(m.theta.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn doubling_gain_positive_when_scaling_helps() {
+        let m = fitted();
+        assert!(m.doubling_gain(100.0, 1) > 0.0);
+    }
+
+    #[test]
+    fn doubling_gain_shrinks_per_gpu() {
+        // per-GPU gain of 1->2 exceeds per-GPU gain of 8->16
+        let m = fitted();
+        assert!(m.doubling_gain(100.0, 1) > m.doubling_gain(100.0, 8));
+    }
+
+    #[test]
+    fn needs_two_distinct_worker_counts() {
+        assert!(SpeedModel::fit(&[(4, 0.1), (4, 0.11)], 100.0, 1e6).is_err());
+        assert!(SpeedModel::fit(&[(4, 0.1)], 100.0, 1e6).is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_speed() {
+        assert!(SpeedModel::fit(&[(1, 0.0), (2, 0.1)], 100.0, 1e6).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) — the contract
+//! between the build-time python pipeline and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonx::{self, Json};
+use crate::Result;
+
+/// One named parameter slice of the flat theta vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Shapes + file names of one model preset.
+#[derive(Clone, Debug)]
+pub struct PresetSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub tokens_per_step: usize,
+    /// entry name -> artifact file name.
+    pub entries: std::collections::BTreeMap<String, String>,
+    pub layout: Vec<ParamEntry>,
+}
+
+impl PresetSpec {
+    /// Model size in bytes (the `n` of eqs 2–5).
+    pub fn n_bytes(&self) -> f64 {
+        (self.n_params * 4) as f64
+    }
+
+    /// Look up a named parameter's slice bounds in theta.
+    pub fn param_range(&self, name: &str) -> Option<(usize, usize)> {
+        self.layout
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| (e.offset, e.offset + e.size()))
+    }
+}
+
+/// The artifacts directory + parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    dir: PathBuf,
+    manifest: Json,
+}
+
+impl Artifacts {
+    /// Load `dir/manifest.json`. Errors tell the user to run
+    /// `make artifacts` when the directory is missing.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        anyhow::ensure!(
+            manifest_path.exists(),
+            "no manifest at {} — run `make artifacts` first",
+            manifest_path.display()
+        );
+        let manifest = jsonx::parse_file(&manifest_path)?;
+        Ok(Artifacts { dir, manifest })
+    }
+
+    /// Names of all presets in the manifest.
+    pub fn preset_names(&self) -> Result<Vec<String>> {
+        Ok(self.manifest.get("presets")?.as_obj()?.keys().cloned().collect())
+    }
+
+    /// Parse one preset's spec.
+    pub fn preset(&self, name: &str) -> Result<PresetSpec> {
+        let p = self.manifest.get("presets")?.get(name).map_err(|_| {
+            anyhow::anyhow!(
+                "preset {name:?} not in manifest (have: {:?}) — re-run `make artifacts`",
+                self.preset_names().unwrap_or_default()
+            )
+        })?;
+        let mut entries = std::collections::BTreeMap::new();
+        for (entry, spec) in p.get("entries")?.as_obj()? {
+            entries.insert(entry.clone(), spec.get("file")?.as_str()?.to_string());
+        }
+        let mut layout = Vec::new();
+        for e in p.get("param_layout")?.as_arr()? {
+            layout.push(ParamEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_>>()?,
+                offset: e.get("offset")?.as_usize()?,
+            });
+        }
+        Ok(PresetSpec {
+            name: name.to_string(),
+            vocab: p.get("vocab")?.as_usize()?,
+            d_model: p.get("d_model")?.as_usize()?,
+            n_layers: p.get("n_layers")?.as_usize()?,
+            n_heads: p.get("n_heads")?.as_usize()?,
+            seq_len: p.get("seq_len")?.as_usize()?,
+            batch: p.get("batch")?.as_usize()?,
+            n_params: p.get("n_params")?.as_usize()?,
+            tokens_per_step: p.get("tokens_per_step")?.as_usize()?,
+            entries,
+            layout,
+        })
+    }
+
+    /// Absolute path of one entry's HLO text file.
+    pub fn entry_path(&self, preset: &PresetSpec, entry: &str) -> Result<PathBuf> {
+        let file = preset
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow::anyhow!("preset {} has no entry {entry:?}", preset.name))?;
+        let path = self.dir.join(file);
+        anyhow::ensure!(path.exists(), "missing artifact {} — run `make artifacts`", path.display());
+        Ok(path)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Default artifacts directory: `$RINGMASTER_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("RINGMASTER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let doc = r#"{
+          "presets": {
+            "tiny": {
+              "vocab": 256, "d_model": 64, "n_layers": 2, "n_heads": 4,
+              "seq_len": 32, "batch": 8, "n_params": 117376,
+              "tokens_per_step": 256,
+              "entries": {
+                "train_step": {"file": "train_step_tiny.hlo.txt", "outputs": ["loss","grad"]}
+              },
+              "param_layout": [
+                {"name": "tok_embed", "shape": [256, 64], "offset": 0},
+                {"name": "pos_embed", "shape": [32, 64], "offset": 16384}
+              ]
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        std::fs::write(dir.join("train_step_tiny.hlo.txt"), "HloModule fake").unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ringmaster-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_preset_spec() {
+        let d = tmpdir("parse");
+        fake_manifest(&d);
+        let a = Artifacts::load(&d).unwrap();
+        let p = a.preset("tiny").unwrap();
+        assert_eq!(p.vocab, 256);
+        assert_eq!(p.n_params, 117376);
+        assert_eq!(p.layout.len(), 2);
+        assert_eq!(p.param_range("pos_embed"), Some((16384, 16384 + 32 * 64)));
+        assert_eq!(p.param_range("nope"), None);
+        assert!((p.n_bytes() - 117376.0 * 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn entry_path_resolves_and_validates() {
+        let d = tmpdir("entry");
+        fake_manifest(&d);
+        let a = Artifacts::load(&d).unwrap();
+        let p = a.preset("tiny").unwrap();
+        assert!(a.entry_path(&p, "train_step").is_ok());
+        assert!(a.entry_path(&p, "missing_entry").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let d = tmpdir("missing");
+        let err = Artifacts::load(&d).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn unknown_preset_lists_available() {
+        let d = tmpdir("unknown");
+        fake_manifest(&d);
+        let a = Artifacts::load(&d).unwrap();
+        let err = a.preset("huge").unwrap_err().to_string();
+        assert!(err.contains("tiny"), "{err}");
+    }
+}

@@ -1,0 +1,139 @@
+//! Exact DP solver for the §4.1 integer program (small instances).
+//!
+//! `dp[c]` after processing jobs `0..j` = minimum Σ t over those jobs
+//! using exactly ≤ c GPUs, with every processed job getting ≥ 1. O(J·C²)
+//! — fine for the test/bench instances (J ≤ 16, C ≤ 64) where we measure
+//! the heuristics' optimality gap.
+
+use super::{Allocation, JobInfo, Scheduler, Speed};
+
+/// Brute-force-optimal allocator (requires capacity >= job count).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExactDp;
+
+impl Scheduler for ExactDp {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+        let mut alloc = Allocation::new();
+        if jobs.is_empty() {
+            return alloc;
+        }
+        if capacity < jobs.len() {
+            // infeasible for the IP (w_j >= 1); FIFO-grant singles like the
+            // heuristics do so the result is still a valid allocation.
+            let mut free = capacity;
+            for j in jobs {
+                alloc.insert(j.id, if free > 0 { 1 } else { 0 });
+                free = free.saturating_sub(1);
+            }
+            return alloc;
+        }
+
+        const INF: f64 = f64::INFINITY;
+        let jn = jobs.len();
+        // dp[j][c]: min cost covering jobs 0..j with c GPUs; choice[j][c]: w_j
+        let mut dp = vec![vec![INF; capacity + 1]; jn + 1];
+        let mut choice = vec![vec![0usize; capacity + 1]; jn + 1];
+        dp[0][0] = 0.0;
+        for j in 0..jn {
+            let wmax = jobs[j].max_w.min(capacity);
+            for c in 0..=capacity {
+                if dp[j][c].is_infinite() {
+                    continue;
+                }
+                for w in 1..=wmax {
+                    if c + w > capacity {
+                        break;
+                    }
+                    let cost = dp[j][c] + jobs[j].time_at(w);
+                    if cost < dp[j + 1][c + w] {
+                        dp[j + 1][c + w] = cost;
+                        choice[j + 1][c + w] = w;
+                    }
+                }
+            }
+        }
+        // best end state over total GPUs used
+        let mut best_c = jn;
+        for c in jn..=capacity {
+            if dp[jn][c] < dp[jn][best_c] {
+                best_c = c;
+            }
+        }
+        // walk back
+        let mut c = best_c;
+        for j in (0..jn).rev() {
+            let w = choice[j + 1][c];
+            alloc.insert(jobs[j].id, w);
+            c -= w;
+        }
+        alloc
+    }
+
+    fn name(&self) -> &'static str {
+        "exact-dp"
+    }
+}
+
+/// A job whose speed is a piecewise truth table — used by tests/benches to
+/// model the eq 3/eq 4 cliff that eq 5's smooth form cannot express.
+pub fn table_job(id: u64, q: f64, samples: &[(usize, f64)], max_w: usize) -> JobInfo {
+    let mut t = samples.to_vec();
+    t.sort_by_key(|&(w, _)| w);
+    JobInfo { id, q, speed: Speed::Table(t), max_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{check_within_capacity, job};
+    use super::super::{objective, Scheduler};
+    use super::*;
+
+    #[test]
+    fn optimal_never_worse_than_heuristics() {
+        let jobs: Vec<_> = (0..4).map(|i| job(i, 50.0 + 40.0 * i as f64, 250.0)).collect();
+        for cap in [4usize, 8, 16, 32] {
+            let exact = ExactDp.allocate(&jobs, cap);
+            let d = super::super::doubling::Doubling.allocate(&jobs, cap);
+            let g = super::super::optimus::OptimusGreedy.allocate(&jobs, cap);
+            check_within_capacity(&exact, cap);
+            let oe = objective(&jobs, &exact);
+            assert!(oe <= objective(&jobs, &d) + 1e-9, "cap={cap}");
+            assert!(oe <= objective(&jobs, &g) + 1e-9, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn every_job_gets_at_least_one_when_feasible() {
+        let jobs: Vec<_> = (0..5).map(|i| job(i, 100.0, 300.0)).collect();
+        let alloc = ExactDp.allocate(&jobs, 8);
+        assert!(alloc.values().all(|&w| w >= 1));
+    }
+
+    #[test]
+    fn infeasible_capacity_degrades_to_fifo_singles() {
+        let jobs: Vec<_> = (0..5).map(|i| job(i, 100.0, 300.0)).collect();
+        let alloc = ExactDp.allocate(&jobs, 3);
+        assert_eq!(alloc.values().filter(|&&w| w == 1).count(), 3);
+        assert_eq!(alloc.values().filter(|&&w| w == 0).count(), 2);
+    }
+
+    #[test]
+    fn single_job_takes_its_optimum() {
+        let jobs = vec![job(1, 100.0, 400.0)];
+        let alloc = ExactDp.allocate(&jobs, 32);
+        // optimum = argmin over w of time_at(w)
+        let best_w = (1..=32).min_by(|&a, &b| {
+            jobs[0].time_at(a).partial_cmp(&jobs[0].time_at(b)).unwrap()
+        });
+        assert_eq!(alloc[&1], best_w.unwrap());
+    }
+
+    #[test]
+    fn table_job_interpolates() {
+        let tj = table_job(1, 10.0, &[(1, 0.1), (4, 0.4)], 8);
+        let f2 = tj.speed.epochs_per_sec(2);
+        assert!(f2 > 0.1 && f2 < 0.4);
+        assert_eq!(tj.speed.epochs_per_sec(8), 0.4); // flat extrapolation
+        assert_eq!(tj.speed.epochs_per_sec(1), 0.1);
+    }
+}

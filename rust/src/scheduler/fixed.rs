@@ -1,0 +1,85 @@
+//! Fixed-request strategies — the One/Two/Four/Eight baselines of Table 3.
+//!
+//! Every job requests exactly `k` GPUs and is granted all-or-nothing in
+//! FIFO order; jobs that don't fit queue at 0 until capacity frees up.
+//! No performance model is consulted (which is the point of the
+//! comparison: these are what users do by hand today).
+
+use super::{Allocation, JobInfo, Scheduler};
+
+/// Fixed `k`-GPU allocator.
+#[derive(Clone, Copy, Debug)]
+pub struct Fixed(pub usize);
+
+impl Scheduler for Fixed {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+        let k = self.0;
+        let mut alloc = Allocation::new();
+        let mut free = capacity;
+        for j in jobs {
+            let want = k.min(j.max_w).max(1);
+            if want <= free {
+                alloc.insert(j.id, want);
+                free -= want;
+            } else {
+                alloc.insert(j.id, 0);
+            }
+        }
+        alloc
+    }
+
+    fn name(&self) -> &'static str {
+        match self.0 {
+            1 => "fixed-1",
+            2 => "fixed-2",
+            4 => "fixed-4",
+            8 => "fixed-8",
+            _ => "fixed-k",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::{check_within_capacity, job};
+    use super::super::{total_allocated, Scheduler};
+    use super::*;
+
+    #[test]
+    fn grants_k_in_fifo_order() {
+        let jobs: Vec<_> = (0..5).map(|i| job(i, 100.0, 300.0)).collect();
+        let alloc = Fixed(4).allocate(&jobs, 10);
+        assert_eq!(alloc[&0], 4);
+        assert_eq!(alloc[&1], 4);
+        assert_eq!(alloc[&2], 0); // only 2 left, all-or-nothing
+        assert_eq!(alloc[&3], 0);
+        check_within_capacity(&alloc, 10);
+    }
+
+    #[test]
+    fn later_small_jobs_do_not_jump_queue() {
+        // all-or-nothing FIFO: remaining capacity stays idle rather than
+        // being handed to later jobs out of order (simple FIFO semantics;
+        // the simulator retries every interval).
+        let jobs: Vec<_> = (0..3).map(|i| job(i, 100.0, 300.0)).collect();
+        let alloc = Fixed(8).allocate(&jobs, 12);
+        assert_eq!(alloc[&0], 8);
+        assert_eq!(alloc[&1], 0);
+        assert_eq!(alloc[&2], 0);
+        assert_eq!(total_allocated(&alloc), 8);
+    }
+
+    #[test]
+    fn respects_job_max_w() {
+        let mut j = job(1, 100.0, 300.0);
+        j.max_w = 2;
+        let alloc = Fixed(8).allocate(&[j], 64);
+        assert_eq!(alloc[&1], 2);
+    }
+
+    #[test]
+    fn names_match_table3_rows() {
+        assert_eq!(Fixed(1).name(), "fixed-1");
+        assert_eq!(Fixed(8).name(), "fixed-8");
+    }
+}

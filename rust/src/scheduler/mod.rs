@@ -1,0 +1,177 @@
+//! Dynamic scheduling — §4 of the paper.
+//!
+//! The resource-allocation problem (§4.1):
+//!
+//! ```text
+//!   minimize    Σ_j t_j
+//!   subject to  t_j = Q_j / f(w_j)          ∀ j ∈ J
+//!               Σ_j w_j ≤ C
+//!               w_j ∈ Z+                    ∀ j ∈ J
+//! ```
+//!
+//! non-convex, non-linear, NP-hard integer program. Solvers:
+//!
+//! - [`doubling`] — the paper's contribution: power-of-two allocations
+//!   chosen by max marginal gain per GPU (eq 6). Escapes the 8→9 local
+//!   optimum that traps the greedy heuristic and keeps every job on the
+//!   latency-optimal doubling-halving all-reduce.
+//! - [`optimus`] — the Optimus baseline: +1 worker greedy.
+//! - [`fixed`] — static request sizes (the One/Two/Four/Eight rows of
+//!   Table 3) with FIFO queueing.
+//! - [`exact`] — brute-force DP for small instances; used by tests to
+//!   measure heuristic optimality gaps.
+
+pub mod doubling;
+pub mod exact;
+pub mod fixed;
+pub mod optimus;
+
+use std::collections::BTreeMap;
+
+use crate::perfmodel::SpeedModel;
+
+/// Training speed f(w) as the scheduler sees it: either the smooth eq-5
+/// fit, or a piecewise table (ground truth in simulations — eqs 2–4 are
+/// piecewise across the dh/bb boundary, which eq 5 cannot represent).
+#[derive(Clone, Debug)]
+pub enum Speed {
+    /// Eq-5 NNLS fit.
+    Fitted(SpeedModel),
+    /// `(w, epochs_per_sec)` samples, w ascending; linear interpolation
+    /// between entries, flat extrapolation outside.
+    Table(Vec<(usize, f64)>),
+}
+
+impl Speed {
+    pub fn epochs_per_sec(&self, w: usize) -> f64 {
+        match self {
+            Speed::Fitted(m) => m.epochs_per_sec(w),
+            Speed::Table(t) => {
+                debug_assert!(!t.is_empty());
+                if w <= t[0].0 {
+                    return t[0].1;
+                }
+                for pair in t.windows(2) {
+                    let (w0, f0) = pair[0];
+                    let (w1, f1) = pair[1];
+                    if w == w0 {
+                        return f0;
+                    }
+                    if w < w1 {
+                        let frac = (w - w0) as f64 / (w1 - w0) as f64;
+                        return f0 + frac * (f1 - f0);
+                    }
+                }
+                t.last().unwrap().1
+            }
+        }
+    }
+}
+
+/// What the scheduler knows about one schedulable job.
+#[derive(Clone, Debug)]
+pub struct JobInfo {
+    pub id: u64,
+    /// Remaining epochs Q_j (from the convergence model).
+    pub q: f64,
+    /// Resource-to-speed model f(w) (eq 5 fit or truth table).
+    pub speed: Speed,
+    /// Hard cap on workers for this job (e.g. 8 in the paper's runs).
+    pub max_w: usize,
+}
+
+impl JobInfo {
+    /// Predicted remaining runtime at `w` workers.
+    pub fn time_at(&self, w: usize) -> f64 {
+        if w == 0 {
+            return f64::INFINITY;
+        }
+        self.q / self.speed.epochs_per_sec(w)
+    }
+}
+
+/// Allocation: job id -> worker count (0 = queued this interval).
+pub type Allocation = BTreeMap<u64, usize>;
+
+/// Total predicted remaining time of an allocation (the IP objective).
+/// Jobs allocated 0 workers contribute nothing here — queueing cost is
+/// the simulator's concern (they make no progress, so their completion
+/// time grows, which Table 3 measures).
+pub fn objective(jobs: &[JobInfo], alloc: &Allocation) -> f64 {
+    jobs.iter()
+        .map(|j| match alloc.get(&j.id) {
+            Some(&w) if w > 0 => j.time_at(w),
+            _ => 0.0,
+        })
+        .sum()
+}
+
+/// Total workers granted.
+pub fn total_allocated(alloc: &Allocation) -> usize {
+    alloc.values().sum()
+}
+
+/// A scheduling strategy: map job demands + capacity to an allocation.
+pub trait Scheduler {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation;
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// A job whose epoch time follows the ring cost shape; `scale`
+    /// controls how compute-heavy (parallelizable) it is.
+    pub fn job(id: u64, q: f64, scale: f64) -> JobInfo {
+        let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&w| {
+                let t = scale / w as f64 + 1.5 * (w as f64 - 1.0) + 2.0;
+                (w, 1.0 / t)
+            })
+            .collect();
+        JobInfo {
+            id,
+            q,
+            speed: Speed::Fitted(SpeedModel::fit(&samples, 128.0, 4.0e6).unwrap()),
+            max_w: 64,
+        }
+    }
+
+    pub fn check_within_capacity(alloc: &Allocation, capacity: usize) {
+        assert!(
+            total_allocated(alloc) <= capacity,
+            "allocation {:?} exceeds capacity {capacity}",
+            alloc
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::job;
+    use super::*;
+
+    #[test]
+    fn objective_sums_remaining_times() {
+        let jobs = vec![job(1, 10.0, 100.0), job(2, 20.0, 100.0)];
+        let mut alloc = Allocation::new();
+        alloc.insert(1, 2);
+        alloc.insert(2, 4);
+        let want = jobs[0].time_at(2) + jobs[1].time_at(4);
+        assert!((objective(&jobs, &alloc) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_at_zero_workers_is_infinite() {
+        assert!(job(1, 10.0, 100.0).time_at(0).is_infinite());
+    }
+
+    #[test]
+    fn time_at_decreases_with_workers_for_compute_bound_jobs() {
+        let j = job(1, 10.0, 400.0);
+        assert!(j.time_at(8) < j.time_at(4));
+        assert!(j.time_at(4) < j.time_at(1));
+    }
+}

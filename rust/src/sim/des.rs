@@ -1,0 +1,326 @@
+//! The discrete-event simulation engine behind Table 3.
+//!
+//! Time advances event-to-event (arrival, exploration end, completion);
+//! between events every running job progresses linearly at its true
+//! `secs_per_epoch(w)`. Every event triggers a full reallocation under
+//! the configured strategy, and any job whose worker count changes pays
+//! the stop/restart cost (§6) as a busy period with no progress.
+
+use super::workload::JobProfile;
+use super::{SimConfig, StrategyKind};
+use crate::scheduler::{doubling::Doubling, fixed::Fixed, Allocation, JobInfo, Scheduler, Speed};
+
+const EPS: f64 = 1e-6;
+
+#[derive(Clone, Debug, PartialEq)]
+enum State {
+    NotArrived,
+    /// Exploratory strategy only: queued until 8 GPUs free up.
+    WaitingExplore,
+    /// Holding the probe reservation until `end`.
+    Exploring { end: f64 },
+    /// Schedulable (fixed pool or adaptive pool).
+    Ready,
+    Done { finish: f64 },
+}
+
+struct SimJob {
+    profile: JobProfile,
+    state: State,
+    w: usize,
+    remaining_epochs: f64,
+    /// No progress before this time (restart penalty).
+    busy_until: f64,
+}
+
+/// Outcome of one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub strategy: String,
+    /// Table 3's statistic.
+    pub avg_completion_hours: f64,
+    pub completed: usize,
+    pub makespan_hours: f64,
+    pub peak_concurrent: usize,
+    pub total_rescales: u64,
+    /// Per-job completion seconds (arrival -> finish).
+    pub completion_secs: Vec<f64>,
+}
+
+/// Run one strategy over one generated workload.
+pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
+    let explore_reserve = cfg.explore_sizes.iter().copied().max().unwrap_or(8);
+    let explore_duration = cfg.explore_secs_per_size * cfg.explore_sizes.len() as f64;
+
+    let mut jobs: Vec<SimJob> = profiles
+        .iter()
+        .map(|p| SimJob {
+            profile: p.clone(),
+            state: State::NotArrived,
+            w: 0,
+            remaining_epochs: p.total_epochs,
+            busy_until: 0.0,
+        })
+        .collect();
+
+    let mut now = 0.0f64;
+    let mut peak_concurrent = 0usize;
+    let mut total_rescales = 0u64;
+    let mut guard = 0usize;
+
+    loop {
+        guard += 1;
+        assert!(guard < 10_000_000, "simulation failed to converge");
+
+        // ---- 1. fire due events -----------------------------------------
+        for j in jobs.iter_mut() {
+            if j.state == State::NotArrived && j.profile.arrival <= now + EPS {
+                j.state = match cfg.strategy {
+                    StrategyKind::Exploratory => State::WaitingExplore,
+                    _ => State::Ready,
+                };
+            }
+        }
+        for j in jobs.iter_mut() {
+            if let State::Exploring { end } = j.state {
+                if end <= now + EPS {
+                    // lump-sum progress of the probe runs (2.5 min each size)
+                    let gained: f64 = cfg
+                        .explore_sizes
+                        .iter()
+                        .map(|&s| cfg.explore_secs_per_size / j.profile.secs_per_epoch(s))
+                        .sum();
+                    j.remaining_epochs = (j.remaining_epochs - gained).max(0.0);
+                    j.state = State::Ready;
+                    j.w = 0;
+                }
+            }
+        }
+        for j in jobs.iter_mut() {
+            if j.state == State::Ready && j.remaining_epochs <= EPS {
+                j.state = State::Done { finish: now };
+                j.w = 0;
+            }
+        }
+
+        // ---- 2. reallocate ----------------------------------------------
+        let mut capacity = cfg.capacity;
+        // exploration reservations are sticky
+        for j in jobs.iter() {
+            if matches!(j.state, State::Exploring { .. }) {
+                capacity = capacity.saturating_sub(explore_reserve);
+            }
+        }
+        // admit waiting explorers FIFO
+        let mut waiting: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].state == State::WaitingExplore)
+            .collect();
+        waiting.sort_by(|&a, &b| jobs[a].profile.arrival.partial_cmp(&jobs[b].profile.arrival).unwrap());
+        for i in waiting {
+            if capacity >= explore_reserve {
+                capacity -= explore_reserve;
+                jobs[i].state = State::Exploring { end: now + explore_duration };
+                jobs[i].busy_until = now; // probes include their own startup
+            }
+        }
+
+        // schedulable pool, FIFO order
+        let mut ready: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].state == State::Ready)
+            .collect();
+        ready.sort_by(|&a, &b| jobs[a].profile.arrival.partial_cmp(&jobs[b].profile.arrival).unwrap());
+
+        let alloc: Allocation = match cfg.strategy {
+            StrategyKind::Fixed(k) => {
+                let infos: Vec<JobInfo> = ready
+                    .iter()
+                    .map(|&i| JobInfo {
+                        id: i as u64,
+                        q: jobs[i].remaining_epochs,
+                        speed: Speed::Table(jobs[i].profile.speed_table()),
+                        max_w: cfg.capacity,
+                    })
+                    .collect();
+                Fixed(k).allocate(&infos, capacity)
+            }
+            StrategyKind::Precompute | StrategyKind::Exploratory => {
+                let infos: Vec<JobInfo> = ready
+                    .iter()
+                    .map(|&i| JobInfo {
+                        id: i as u64,
+                        q: jobs[i].remaining_epochs,
+                        speed: Speed::Table(jobs[i].profile.speed_table()),
+                        max_w: cfg.capacity,
+                    })
+                    .collect();
+                Doubling.allocate(&infos, capacity)
+            }
+        };
+        for (&id, &w_new) in &alloc {
+            let j = &mut jobs[id as usize];
+            if j.w != w_new {
+                if w_new > 0 {
+                    // stop/checkpoint/restart (or cold start) penalty
+                    j.busy_until = now + cfg.restart_cost;
+                    total_rescales += 1;
+                }
+                j.w = w_new;
+            }
+        }
+
+        let concurrent = jobs
+            .iter()
+            .filter(|j| {
+                matches!(j.state, State::Ready | State::Exploring { .. } | State::WaitingExplore)
+            })
+            .count();
+        peak_concurrent = peak_concurrent.max(concurrent);
+
+        // ---- 3. find the next event --------------------------------------
+        let mut next = f64::INFINITY;
+        for j in jobs.iter() {
+            match j.state {
+                State::NotArrived => next = next.min(j.profile.arrival),
+                State::Exploring { end } => next = next.min(end),
+                State::Ready if j.w > 0 => {
+                    let start = now.max(j.busy_until);
+                    let finish = start + j.remaining_epochs * j.profile.secs_per_epoch(j.w);
+                    next = next.min(finish);
+                }
+                _ => {}
+            }
+        }
+        if !next.is_finite() {
+            break; // nothing left to happen
+        }
+        let next = next.max(now + EPS);
+
+        // ---- 4. progress running jobs to `next` ---------------------------
+        for j in jobs.iter_mut() {
+            if j.state == State::Ready && j.w > 0 {
+                let start = now.max(j.busy_until);
+                let dt = (next - start).max(0.0);
+                j.remaining_epochs =
+                    (j.remaining_epochs - dt / j.profile.secs_per_epoch(j.w)).max(0.0);
+            }
+        }
+        now = next;
+    }
+
+    let completion_secs: Vec<f64> = jobs
+        .iter()
+        .map(|j| match j.state {
+            State::Done { finish } => finish - j.profile.arrival,
+            _ => f64::NAN,
+        })
+        .collect();
+    let completed = completion_secs.iter().filter(|v| v.is_finite()).count();
+    let avg = completion_secs.iter().filter(|v| v.is_finite()).sum::<f64>()
+        / completed.max(1) as f64;
+
+    SimResult {
+        strategy: cfg.strategy.name(),
+        avg_completion_hours: avg / 3600.0,
+        completed,
+        makespan_hours: now / 3600.0,
+        peak_concurrent,
+        total_rescales,
+        completion_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::workload::WorkloadGen;
+    use super::super::{Contention, SimConfig, StrategyKind};
+    use super::*;
+
+    fn run(strategy: StrategyKind, contention: Contention, seed: u64) -> SimResult {
+        let cfg = SimConfig::paper(strategy, contention, seed);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+        simulate(&cfg, &jobs)
+    }
+
+    #[test]
+    fn all_jobs_complete() {
+        for s in StrategyKind::table3_rows() {
+            let r = run(s, Contention::None, 42);
+            assert_eq!(r.completed, 44, "{}", r.strategy);
+        }
+    }
+
+    #[test]
+    fn single_job_no_contention_matches_serial_time() {
+        let cfg = SimConfig::paper(StrategyKind::Fixed(4), Contention::None, 1);
+        let mut cfg = cfg;
+        cfg.n_jobs = 1;
+        let jobs = WorkloadGen::default().generate(1, 1000.0, 1);
+        let r = simulate(&cfg, &jobs);
+        let want = jobs[0].serial_secs(4) + cfg.restart_cost;
+        assert!(
+            (r.completion_secs[0] - want).abs() < 1.0,
+            "{} vs {}",
+            r.completion_secs[0],
+            want
+        );
+    }
+
+    #[test]
+    fn fixed8_fast_without_contention() {
+        let r8 = run(StrategyKind::Fixed(8), Contention::None, 7);
+        let r1 = run(StrategyKind::Fixed(1), Contention::None, 7);
+        assert!(r8.avg_completion_hours < r1.avg_completion_hours / 2.0);
+    }
+
+    #[test]
+    fn fixed8_poor_under_extreme_contention() {
+        // Table 3: fixed-8 is the *worst* strategy at extreme contention
+        let r8 = run(StrategyKind::Fixed(8), Contention::Extreme, 11);
+        let r1 = run(StrategyKind::Fixed(1), Contention::Extreme, 11);
+        assert!(r8.avg_completion_hours > r1.avg_completion_hours);
+    }
+
+    #[test]
+    fn precompute_beats_or_ties_everything_moderate() {
+        // §7: "the precompute algorithm always outperforms or ties"
+        let pre = run(StrategyKind::Precompute, Contention::Moderate, 13);
+        for s in [
+            StrategyKind::Exploratory,
+            StrategyKind::Fixed(8),
+            StrategyKind::Fixed(4),
+            StrategyKind::Fixed(2),
+            StrategyKind::Fixed(1),
+        ] {
+            let r = run(s, Contention::Moderate, 13);
+            assert!(
+                pre.avg_completion_hours <= r.avg_completion_hours * 1.02,
+                "precompute {:.2}h vs {} {:.2}h",
+                pre.avg_completion_hours,
+                r.strategy,
+                r.avg_completion_hours
+            );
+        }
+    }
+
+    #[test]
+    fn exploratory_pays_under_extreme_contention() {
+        // §7: explore-optimize tradeoff works poorly under extreme load
+        let exp = run(StrategyKind::Exploratory, Contention::Extreme, 17);
+        let pre = run(StrategyKind::Precompute, Contention::Extreme, 17);
+        assert!(exp.avg_completion_hours > pre.avg_completion_hours);
+    }
+
+    #[test]
+    fn rescales_happen_for_adaptive_strategies() {
+        let r = run(StrategyKind::Precompute, Contention::Moderate, 19);
+        assert!(r.total_rescales > r.completed as u64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run(StrategyKind::Precompute, Contention::Moderate, 23);
+        let b = run(StrategyKind::Precompute, Contention::Moderate, 23);
+        assert_eq!(a.avg_completion_hours, b.avg_completion_hours);
+        assert_eq!(a.total_rescales, b.total_rescales);
+    }
+}

@@ -1,0 +1,116 @@
+//! Scheduler simulation — §7 / Table 3 of the paper.
+//!
+//! A discrete-event simulator of a shared GPU cluster: jobs arrive as a
+//! Poisson process (exponential inter-arrival, mean 250/500/1000 s for
+//! extreme/moderate/no contention), each with a hidden *true* speed
+//! profile ([`workload`]) calibrated from the paper's Table 1/2 numbers.
+//! Six strategies are simulated:
+//!
+//! - **precompute** — eq-5/eq-1 models known at arrival; doubling
+//!   heuristic reallocation at every event.
+//! - **exploratory** — each new job first holds 8 GPUs for 10 minutes,
+//!   running 2.5 min at each of 1/2/4/8 workers to collect `(w, f(w))`
+//!   samples, then joins the adaptive pool.
+//! - **fixed-1/2/4/8** — every job requests that many GPUs, FIFO.
+//!
+//! Every worker-count change charges the measured stop/restart cost
+//! (~10 s, §6). The headline output is the Table 3 statistic: average
+//! job completion time in hours.
+
+pub mod des;
+pub mod workload;
+
+pub use des::{simulate, SimResult};
+pub use workload::{JobProfile, WorkloadGen};
+
+/// Which Table 3 strategy a simulation runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    Precompute,
+    Exploratory,
+    Fixed(usize),
+}
+
+impl StrategyKind {
+    pub fn name(self) -> String {
+        match self {
+            StrategyKind::Precompute => "precompute".into(),
+            StrategyKind::Exploratory => "exploratory".into(),
+            StrategyKind::Fixed(k) => format!("fixed-{k}"),
+        }
+    }
+
+    /// The six rows of Table 3.
+    pub fn table3_rows() -> Vec<StrategyKind> {
+        vec![
+            StrategyKind::Precompute,
+            StrategyKind::Exploratory,
+            StrategyKind::Fixed(8),
+            StrategyKind::Fixed(4),
+            StrategyKind::Fixed(2),
+            StrategyKind::Fixed(1),
+        ]
+    }
+}
+
+/// Simulation parameters (defaults = the paper's §7 setup).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Cluster GPU capacity (paper: 64).
+    pub capacity: usize,
+    /// Mean exponential inter-arrival seconds (250 / 500 / 1000).
+    pub mean_interarrival: f64,
+    /// Total jobs in the workload (206 / 114 / 44).
+    pub n_jobs: usize,
+    pub strategy: StrategyKind,
+    /// Stop/checkpoint/restart cost charged on every rescale (§6: ~10 s).
+    pub restart_cost: f64,
+    /// Exploration: seconds at each probe size (§7: 2.5 min each).
+    pub explore_secs_per_size: f64,
+    /// Exploration probe sizes (§7: 1, 2, 4, 8 — reserving max while probing).
+    pub explore_sizes: Vec<usize>,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// The paper's three contention regimes.
+    pub fn paper(strategy: StrategyKind, contention: Contention, seed: u64) -> SimConfig {
+        let (mean, n_jobs) = match contention {
+            Contention::Extreme => (250.0, 206),
+            Contention::Moderate => (500.0, 114),
+            Contention::None => (1000.0, 44),
+        };
+        SimConfig {
+            capacity: 64,
+            mean_interarrival: mean,
+            n_jobs,
+            strategy,
+            restart_cost: 10.0,
+            explore_secs_per_size: 150.0,
+            explore_sizes: vec![1, 2, 4, 8],
+            seed,
+        }
+    }
+}
+
+/// Table 3's three columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Contention {
+    Extreme,
+    Moderate,
+    None,
+}
+
+impl Contention {
+    pub fn name(self) -> &'static str {
+        match self {
+            Contention::Extreme => "extreme",
+            Contention::Moderate => "moderate",
+            Contention::None => "none",
+        }
+    }
+
+    pub fn all() -> [Contention; 3] {
+        [Contention::Extreme, Contention::Moderate, Contention::None]
+    }
+}

@@ -1,0 +1,198 @@
+//! Workload generation: job profiles calibrated from the paper's runs.
+//!
+//! The paper seeds its simulator with "data from the experimental runs";
+//! we do the same, anchored on Tables 1–2 (ResNet-110 / CIFAR-10 on
+//! K40m):
+//!
+//! | w | total min | epochs | secs/epoch |
+//! |---|-----------|--------|------------|
+//! | 1 | 368       | 160    | 138.0      |
+//! | 2 | 232       | 170    | 81.9       |
+//! | 4 | 126       | 160    | 47.3       |
+//! | 8 | 84        | 170    | 29.6       |
+//!
+//! Jobs are heterogeneous: a log-normal size multiplier scales the whole
+//! profile, a scaling-efficiency jitter perturbs how well large w pays
+//! off, and total epochs vary around the paper's 160–170. Speeds beyond
+//! w=8 flat-extrapolate (profiles were only measured to 8), which
+//! naturally caps useful allocations at 8 GPUs per job, as in the paper.
+
+use crate::rngx::Rng;
+
+/// Hidden truth about one job.
+#[derive(Clone, Debug)]
+pub struct JobProfile {
+    /// Arrival time (seconds since sim start).
+    pub arrival: f64,
+    /// True seconds/epoch at w = 1, 2, 4, 8 (power-of-two index).
+    pub epoch_secs: Vec<(usize, f64)>,
+    /// Epochs to converge.
+    pub total_epochs: f64,
+}
+
+/// Paper-anchored seconds/epoch at the measured worker counts.
+pub const PAPER_EPOCH_SECS: [(usize, f64); 4] =
+    [(1, 138.0), (2, 81.9), (4, 47.3), (8, 29.6)];
+
+impl JobProfile {
+    /// True seconds/epoch at any w (linear interpolation on the table,
+    /// flat beyond both ends — matching `scheduler::Speed::Table`).
+    pub fn secs_per_epoch(&self, w: usize) -> f64 {
+        let t = &self.epoch_secs;
+        if w <= t[0].0 {
+            return t[0].1;
+        }
+        for pair in t.windows(2) {
+            let (w0, s0) = pair[0];
+            let (w1, s1) = pair[1];
+            if w == w0 {
+                return s0;
+            }
+            if w < w1 {
+                let frac = (w - w0) as f64 / (w1 - w0) as f64;
+                return s0 + frac * (s1 - s0);
+            }
+        }
+        t.last().unwrap().1
+    }
+
+    /// Epochs/sec table for the scheduler (`Speed::Table`).
+    pub fn speed_table(&self) -> Vec<(usize, f64)> {
+        self.epoch_secs.iter().map(|&(w, s)| (w, 1.0 / s)).collect()
+    }
+
+    /// Serial completion time at fixed w (no queueing), seconds.
+    pub fn serial_secs(&self, w: usize) -> f64 {
+        self.total_epochs * self.secs_per_epoch(w)
+    }
+}
+
+/// Deterministic workload generator.
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    /// Log-normal σ of the per-job size multiplier.
+    pub size_sigma: f64,
+    /// Jitter σ on scaling efficiency at each doubling.
+    pub efficiency_sigma: f64,
+}
+
+impl Default for WorkloadGen {
+    fn default() -> Self {
+        WorkloadGen { size_sigma: 0.45, efficiency_sigma: 0.08 }
+    }
+}
+
+impl WorkloadGen {
+    /// Generate `n_jobs` arrivals with exponential inter-arrival times.
+    pub fn generate(&self, n_jobs: usize, mean_interarrival: f64, seed: u64) -> Vec<JobProfile> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..n_jobs)
+            .map(|_| {
+                t += rng.exponential(mean_interarrival);
+                self.one_job(&mut rng, t)
+            })
+            .collect()
+    }
+
+    fn one_job(&self, rng: &mut Rng, arrival: f64) -> JobProfile {
+        let size = rng.jitter(self.size_sigma); // log-normal multiplier
+        let mut epoch_secs = Vec::with_capacity(4);
+        let mut prev = PAPER_EPOCH_SECS[0].1 * size;
+        epoch_secs.push((1, prev));
+        for i in 1..PAPER_EPOCH_SECS.len() {
+            let (w, base) = PAPER_EPOCH_SECS[i];
+            let (_, base_prev) = PAPER_EPOCH_SECS[i - 1];
+            // paper-anchored speedup ratio for this doubling, jittered
+            let ratio = (base / base_prev) * rng.jitter(self.efficiency_sigma);
+            // never faster than perfect halving, never slower than flat
+            let ratio = ratio.clamp(0.5, 1.0);
+            prev *= ratio;
+            epoch_secs.push((w, prev));
+        }
+        let total_epochs = rng.normal_scaled(165.0, 5.0).max(120.0);
+        JobProfile { arrival, epoch_secs, total_epochs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(n: usize, seed: u64) -> Vec<JobProfile> {
+        WorkloadGen::default().generate(n, 500.0, seed)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gen(20, 1);
+        let b = gen(20, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.epoch_secs, y.epoch_secs);
+        }
+    }
+
+    #[test]
+    fn arrivals_increasing_with_right_mean() {
+        let jobs = gen(2000, 3);
+        let mut prev = 0.0;
+        for j in &jobs {
+            assert!(j.arrival > prev);
+            prev = j.arrival;
+        }
+        let mean = jobs.last().unwrap().arrival / 2000.0;
+        assert!((mean - 500.0).abs() < 30.0, "mean={mean}");
+    }
+
+    #[test]
+    fn more_workers_never_slower_per_epoch() {
+        for j in gen(100, 7) {
+            for pair in j.epoch_secs.windows(2) {
+                assert!(pair[1].1 <= pair[0].1 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn speedup_bounded_by_perfect_scaling() {
+        for j in gen(100, 11) {
+            for pair in j.epoch_secs.windows(2) {
+                let ratio = pair[1].1 / pair[0].1;
+                assert!(ratio >= 0.5 - 1e-9, "superlinear: {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_and_extrapolation() {
+        let j = &gen(1, 5)[0];
+        let s3 = j.secs_per_epoch(3);
+        assert!(s3 < j.secs_per_epoch(2) && s3 > j.secs_per_epoch(4));
+        assert_eq!(j.secs_per_epoch(16), j.secs_per_epoch(8));
+        assert_eq!(j.secs_per_epoch(64), j.secs_per_epoch(8));
+    }
+
+    #[test]
+    fn profiles_anchor_near_paper_scale() {
+        // population median secs/epoch at w=1 should sit near 138 s
+        let jobs = gen(500, 13);
+        let mut v: Vec<f64> = jobs.iter().map(|j| j.secs_per_epoch(1)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = v[v.len() / 2];
+        assert!((median - 138.0).abs() < 25.0, "median={median}");
+    }
+
+    #[test]
+    fn serial_secs_matches_paper_table2_shape() {
+        // paper: 1-GPU run 368 min, 8-GPU run 84 min -> ratio ~4.4
+        let jobs = gen(500, 17);
+        let mean_ratio: f64 = jobs
+            .iter()
+            .map(|j| j.serial_secs(1) / j.serial_secs(8))
+            .sum::<f64>()
+            / jobs.len() as f64;
+        assert!((3.0..6.0).contains(&mean_ratio), "ratio={mean_ratio}");
+    }
+}

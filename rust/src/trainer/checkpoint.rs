@@ -1,0 +1,155 @@
+//! Checkpoint format: the stop/restart substrate (§6 of the paper).
+//!
+//! One file: `RMCK` magic + version, a JSON metadata header, then raw
+//! little-endian f32 payloads for theta and the momentum buffer. Save +
+//! load must be fast — the paper's whole argument rests on stop/restart
+//! being ~10 s; ours is dominated by PJRT recompilation, not this I/O.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::jsonx::Json;
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"RMCK";
+const VERSION: u32 = 1;
+
+/// Everything needed to resume a job, possibly at a different scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub preset: String,
+    /// Global steps completed so far.
+    pub step: u64,
+    /// Epochs completed so far (batch·w aware).
+    pub epochs: f64,
+    /// Worker count the checkpoint was written at (eq 7 input).
+    pub workers: usize,
+    /// Effective LR at save time (eq 7 input).
+    pub lr: f32,
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let meta = Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("epochs", Json::num(self.epochs)),
+            ("workers", Json::num(self.workers as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("n_params", Json::num(self.theta.len() as f64)),
+        ])
+        .dump();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(meta.len() as u32).to_le_bytes())?;
+        f.write_all(meta.as_bytes())?;
+        for v in self.theta.iter().chain(self.mu.iter()) {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a ringmaster checkpoint");
+        let mut word = [0u8; 4];
+        f.read_exact(&mut word)?;
+        let version = u32::from_le_bytes(word);
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        f.read_exact(&mut word)?;
+        let meta_len = u32::from_le_bytes(word) as usize;
+        let mut meta_bytes = vec![0u8; meta_len];
+        f.read_exact(&mut meta_bytes)?;
+        let meta = crate::jsonx::parse(std::str::from_utf8(&meta_bytes)?)?;
+
+        let n = meta.get("n_params")?.as_usize()?;
+        let mut payload = vec![0u8; n * 4 * 2];
+        f.read_exact(&mut payload)?;
+        let mut floats = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        let theta: Vec<f32> = floats.by_ref().take(n).collect();
+        let mu: Vec<f32> = floats.collect();
+
+        Ok(Checkpoint {
+            preset: meta.get("preset")?.as_str()?.to_string(),
+            step: meta.get("step")?.as_f64()? as u64,
+            epochs: meta.get("epochs")?.as_f64()?,
+            workers: meta.get("workers")?.as_usize()?,
+            lr: meta.get("lr")?.as_f64()? as f32,
+            theta,
+            mu,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            preset: "tiny".into(),
+            step: 5000,
+            epochs: 51.2,
+            workers: 4,
+            lr: 0.4,
+            theta: (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect(),
+            mu: (0..1000).map(|i| -(i as f32) * 0.25).collect(),
+        }
+    }
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rmck-test-{tag}-{}.ckpt", std::process::id()))
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let p = tmpfile("rt");
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let p = tmpfile("bad");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn save_load_is_fast() {
+        // the §6 argument: checkpoint I/O is negligible. 1M params round
+        // trip must be well under a second on any disk.
+        let p = tmpfile("fast");
+        let mut ck = sample();
+        ck.theta = vec![0.5; 1_000_000];
+        ck.mu = vec![0.25; 1_000_000];
+        let t0 = std::time::Instant::now();
+        ck.save(&p).unwrap();
+        let _ = Checkpoint::load(&p).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 1.0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn preserves_rescale_inputs() {
+        let p = tmpfile("meta");
+        sample().save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        // the two fields eq 7 needs at restart:
+        assert_eq!(back.workers, 4);
+        assert!((back.lr - 0.4).abs() < 1e-7);
+        let _ = std::fs::remove_file(&p);
+    }
+}

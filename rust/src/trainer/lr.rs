@@ -1,0 +1,73 @@
+//! Learning-rate policy — eq 7 plus the paper's step decay (§5).
+//!
+//! The paper keeps per-GPU minibatch constant (128) so global batch grows
+//! with the worker count, and scales LR linearly with it (Goyal et al.'s
+//! rule, eq 7): `lr_new = (#GPUs_new / #GPUs_last) * lr_last`. With a
+//! per-1-worker base LR this is simply `lr(w) = base * w`. Decay divides
+//! by `factor` at fixed epoch marks (paper: /10 at epochs 100 and 150).
+
+/// LR schedule parameters.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    /// LR at one worker (paper: 0.1 for batch 128).
+    pub base: f32,
+    /// Epochs at which LR is divided by `factor` (paper: [100, 150]).
+    pub decay_epochs: Vec<f64>,
+    /// Division factor at each mark (paper: 10).
+    pub decay_factor: f32,
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule { base: 0.1, decay_epochs: vec![100.0, 150.0], decay_factor: 10.0 }
+    }
+}
+
+impl LrSchedule {
+    /// Effective LR at `w` workers and training progress `epoch`.
+    pub fn lr(&self, workers: usize, epoch: f64) -> f32 {
+        let passed = self.decay_epochs.iter().filter(|&&e| epoch >= e).count() as i32;
+        self.base * workers as f32 / self.decay_factor.powi(passed)
+    }
+}
+
+/// Eq 7 verbatim: rescale an LR across a worker-count change.
+pub fn rescale_lr(lr_last: f32, w_last: usize, w_new: usize) -> f32 {
+    lr_last * w_new as f32 / w_last as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_values() {
+        // §5: "initial learning rates for 4 GPUs as 0.4 and 8 GPUs as 0.8"
+        let s = LrSchedule::default();
+        assert!((s.lr(1, 0.0) - 0.1).abs() < 1e-7);
+        assert!((s.lr(4, 0.0) - 0.4).abs() < 1e-7);
+        assert!((s.lr(8, 0.0) - 0.8).abs() < 1e-7);
+    }
+
+    #[test]
+    fn decays_at_marks() {
+        let s = LrSchedule::default();
+        assert!((s.lr(1, 99.9) - 0.1).abs() < 1e-7);
+        assert!((s.lr(1, 100.0) - 0.01).abs() < 1e-8);
+        assert!((s.lr(1, 150.0) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq7_consistency_with_schedule() {
+        // schedule lr at w=8 == eq 7 rescale of schedule lr at w=4
+        let s = LrSchedule::default();
+        let via_eq7 = rescale_lr(s.lr(4, 51.0), 4, 8);
+        assert!((s.lr(8, 51.0) - via_eq7).abs() < 1e-7);
+    }
+
+    #[test]
+    fn eq7_doubles_on_4_to_8() {
+        assert!((rescale_lr(0.4, 4, 8) - 0.8).abs() < 1e-7);
+        assert!((rescale_lr(0.8, 8, 4) - 0.4).abs() < 1e-7);
+    }
+}

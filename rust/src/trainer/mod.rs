@@ -1,0 +1,293 @@
+//! Data-parallel training runtime: the Horovod analogue of this repo.
+//!
+//! `w` worker threads each own a full PJRT [`Engine`] (client + compiled
+//! artifacts — `PjRtClient` is `!Send`), train on disjoint shards of the
+//! synthetic corpus, and exchange gradients through the rust
+//! [`collectives`](crate::collectives) ring/dh/bb all-reduce — python is
+//! nowhere on this path. Every worker applies the identical averaged
+//! update, so parameters stay bit-identical across ranks (asserted in
+//! tests) and rank 0's state is the checkpoint.
+//!
+//! Rescaling (§6): the coordinator trains in segments — each [`train`]
+//! call runs `run_steps` steps from a [`Checkpoint`] and returns a new
+//! one. Restarting with a different `w` applies eq 7 LR scaling through
+//! the [`lr::LrSchedule`] (base·w) and pays the client+compile startup
+//! cost, which [`TrainReport::startup_secs`] measures — the stop/restart
+//! overhead of Table 2.
+
+pub mod checkpoint;
+pub mod lr;
+
+pub use checkpoint::Checkpoint;
+pub use lr::LrSchedule;
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use crate::collectives::{self, Algorithm, World};
+use crate::data::Corpus;
+use crate::runtime::{Artifacts, Engine};
+use crate::Result;
+
+/// Configuration of one training job.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifacts_dir: PathBuf,
+    pub preset: String,
+    /// Data-parallel worker count (the `w` the scheduler assigns).
+    pub workers: usize,
+    pub momentum: f32,
+    pub schedule: LrSchedule,
+    /// Windows per epoch — defines the epoch length (CIFAR-10: 50k).
+    pub dataset_examples: usize,
+    /// Bigram-noise of the synthetic corpus (controls the loss floor).
+    pub corpus_noise: f64,
+    pub seed: u64,
+    /// Record a loss sample every this many steps.
+    pub log_every: u64,
+    /// Force an all-reduce algorithm (None = §2.1 auto policy).
+    pub algorithm: Option<Algorithm>,
+    /// Use the shared-memory transport instead of the message-passing
+    /// algorithms on the gradient hot path (§Perf; traffic counters then
+    /// read zero since nothing crosses the "wire").
+    pub shared_mem: bool,
+}
+
+impl TrainConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, preset: &str, workers: usize) -> Self {
+        TrainConfig {
+            artifacts_dir: artifacts_dir.into(),
+            preset: preset.to_string(),
+            workers,
+            momentum: 0.9,
+            schedule: LrSchedule { base: 0.05, decay_epochs: vec![100.0, 150.0], decay_factor: 10.0 },
+            dataset_examples: 2048,
+            corpus_noise: 0.08,
+            seed: 42,
+            log_every: 5,
+            algorithm: None,
+            shared_mem: false,
+        }
+    }
+}
+
+/// One logged loss sample.
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    pub step: u64,
+    pub epoch: f64,
+    /// Cross-worker mean loss.
+    pub loss: f32,
+    /// Wall seconds of this step (rank 0).
+    pub secs: f64,
+}
+
+/// Measurements of one training segment.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub logs: Vec<StepLog>,
+    pub steps: u64,
+    pub epochs_done: f64,
+    /// Wall time of the training loop (excluding startup).
+    pub wall_secs: f64,
+    /// Client + compile time, max across workers — the restart cost.
+    pub startup_secs: f64,
+    pub steps_per_sec: f64,
+    pub tokens_per_sec: f64,
+    /// All-reduce traffic across the segment (world totals).
+    pub allreduce_msgs: u64,
+    pub allreduce_bytes: u64,
+    pub algorithm: &'static str,
+    /// Mean per-step phase times on rank 0 (Table 1 decomposition).
+    pub mean_step_secs: f64,
+    pub mean_allreduce_secs: f64,
+}
+
+/// Train `run_steps` steps at `cfg.workers` workers, resuming from
+/// `resume` if given (the checkpoint may come from a different worker
+/// count — that's the rescale path). Returns rank 0's final state.
+pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> Result<(Checkpoint, TrainReport)> {
+    anyhow::ensure!(cfg.workers >= 1, "need >= 1 worker");
+    let w = cfg.workers;
+
+    // Resolve the initial state once (rank 0 semantics), clone per worker.
+    let (start_step, start_epochs, theta0, mu0) = match resume {
+        Some(ck) => {
+            anyhow::ensure!(
+                ck.preset == cfg.preset,
+                "checkpoint preset {:?} != config preset {:?}",
+                ck.preset,
+                cfg.preset
+            );
+            (ck.step, ck.epochs, Some(ck.theta), Some(ck.mu))
+        }
+        None => (0, 0.0, None, None),
+    };
+
+    let mut world = World::new(w);
+    let traffic = world.traffic();
+    let corpus = Corpus::new(
+        preset_vocab(cfg)?,
+        cfg.corpus_noise,
+        cfg.seed,
+    );
+
+    let shmem_world = crate::collectives::shmem::ShmemWorld::new(w);
+    let (log_tx, log_rx) = channel::<StepLog>();
+    let handles: Vec<_> = world
+        .take_ranks()
+        .into_iter()
+        .map(|mut rank| {
+            let cfg = cfg.clone();
+            let corpus = corpus.clone();
+            let theta0 = theta0.clone();
+            let mu0 = mu0.clone();
+            let log_tx = log_tx.clone();
+            let shmem = shmem_world.rank(rank.rank());
+            std::thread::spawn(move || -> Result<WorkerOut> {
+                let startup_t = Instant::now();
+                let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+                let engine = Engine::load(&artifacts, &cfg.preset)?;
+                // compile only what the training path needs — this is the
+                // dominant share of the stop/restart cost (§6)
+                engine.warmup(theta0.is_none())?;
+                let preset = engine.preset().clone();
+                let alg = cfg
+                    .algorithm
+                    .unwrap_or_else(|| collectives::select_algorithm(w, preset.n_params));
+                let startup_secs = startup_t.elapsed().as_secs_f64();
+
+                let mut theta = match &theta0 {
+                    Some(t) => t.clone(),
+                    None => engine.init(cfg.seed)?,
+                };
+                let mut mu = match &mu0 {
+                    Some(m) => m.clone(),
+                    None => vec![0.0; theta.len()],
+                };
+
+                let epochs_per_step = (preset.batch * w) as f64 / cfg.dataset_examples as f64;
+                let mut epoch = start_epochs;
+                let mut step_time_sum = 0.0;
+                let mut ar_time_sum = 0.0;
+                let loop_t = Instant::now();
+
+                for s in start_step..start_step + run_steps {
+                    let step_t = Instant::now();
+                    let (inputs, targets) =
+                        corpus.batch(rank.rank(), s, preset.batch, preset.seq_len);
+                    let (loss, mut grad) = engine.train_step(&theta, &inputs, &targets)?;
+
+                    let ar_t = Instant::now();
+                    let mut loss_buf = [loss];
+                    if cfg.shared_mem {
+                        shmem.all_reduce_mean(&mut grad);
+                        shmem.all_reduce_mean(&mut loss_buf);
+                    } else {
+                        collectives::all_reduce_mean(alg, &mut rank, &mut grad)?;
+                        collectives::all_reduce_mean(alg, &mut rank, &mut loss_buf)?;
+                    }
+                    let ar_secs = ar_t.elapsed().as_secs_f64();
+
+                    let lr = cfg.schedule.lr(w, epoch);
+                    let (t2, m2) = engine.sgd_update(&theta, &grad, &mu, lr, cfg.momentum)?;
+                    theta = t2;
+                    mu = m2;
+                    epoch += epochs_per_step;
+
+                    if rank.rank() == 0 {
+                        let secs = step_t.elapsed().as_secs_f64();
+                        step_time_sum += secs;
+                        ar_time_sum += ar_secs;
+                        if s % cfg.log_every == 0 || s + 1 == start_step + run_steps {
+                            let _ = log_tx.send(StepLog { step: s, epoch, loss: loss_buf[0], secs });
+                        }
+                    }
+                }
+
+                Ok(WorkerOut {
+                    rank: rank.rank(),
+                    theta,
+                    mu,
+                    epoch,
+                    startup_secs,
+                    loop_secs: loop_t.elapsed().as_secs_f64(),
+                    step_time_sum,
+                    ar_time_sum,
+                    algorithm: alg.name(),
+                })
+            })
+        })
+        .collect();
+    drop(log_tx);
+
+    let mut logs: Vec<StepLog> = log_rx.iter().collect();
+    logs.sort_by_key(|l| l.step);
+
+    let mut outs = Vec::with_capacity(w);
+    for h in handles {
+        outs.push(h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??);
+    }
+    outs.sort_by_key(|o| o.rank);
+    let rank0 = &outs[0];
+
+    // data-parallel invariant: all ranks hold identical parameters
+    for o in &outs[1..] {
+        anyhow::ensure!(
+            o.theta == rank0.theta,
+            "rank {} diverged from rank 0 — all-reduce broke determinism",
+            o.rank
+        );
+    }
+
+    let end_step = start_step + run_steps;
+    let preset_tokens = {
+        let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+        artifacts.preset(&cfg.preset)?.tokens_per_step
+    };
+    let wall = rank0.loop_secs;
+    let report = TrainReport {
+        logs,
+        steps: run_steps,
+        epochs_done: rank0.epoch,
+        wall_secs: wall,
+        startup_secs: outs.iter().map(|o| o.startup_secs).fold(0.0, f64::max),
+        steps_per_sec: run_steps as f64 / wall.max(1e-9),
+        tokens_per_sec: (run_steps as usize * preset_tokens * w) as f64 / wall.max(1e-9),
+        allreduce_msgs: traffic.messages(),
+        allreduce_bytes: traffic.bytes(),
+        algorithm: rank0.algorithm,
+        mean_step_secs: rank0.step_time_sum / run_steps.max(1) as f64,
+        mean_allreduce_secs: rank0.ar_time_sum / run_steps.max(1) as f64,
+    };
+
+    let lr_now = cfg.schedule.lr(w, rank0.epoch);
+    let ck = Checkpoint {
+        preset: cfg.preset.clone(),
+        step: end_step,
+        epochs: rank0.epoch,
+        workers: w,
+        lr: lr_now,
+        theta: rank0.theta.clone(),
+        mu: rank0.mu.clone(),
+    };
+    Ok((ck, report))
+}
+
+struct WorkerOut {
+    rank: usize,
+    theta: Vec<f32>,
+    mu: Vec<f32>,
+    epoch: f64,
+    startup_secs: f64,
+    loop_secs: f64,
+    step_time_sum: f64,
+    ar_time_sum: f64,
+    algorithm: &'static str,
+}
+
+fn preset_vocab(cfg: &TrainConfig) -> Result<usize> {
+    let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+    Ok(artifacts.preset(&cfg.preset)?.vocab)
+}

@@ -1,0 +1,129 @@
+//! Cross-algorithm integration tests of the collectives substrate:
+//! all three all-reduce implementations must agree with each other and
+//! with a serial reduction, at scale, under concurrent worlds.
+
+use ringmaster::collectives::{self, comm::run_world, Algorithm};
+use ringmaster::rngx::Rng;
+
+fn serial_sum(payloads: &[Vec<f32>]) -> Vec<f32> {
+    let n = payloads[0].len();
+    let mut out = vec![0.0f32; n];
+    for p in payloads {
+        for (o, v) in out.iter_mut().zip(p) {
+            *o += v;
+        }
+    }
+    out
+}
+
+fn payloads(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..w).map(|_| rng.vec_f32(n)).collect()
+}
+
+fn run(alg: Algorithm, payloads: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let w = payloads.len();
+    let (out, _) = run_world(w, payloads, move |rank, data| {
+        collectives::all_reduce(alg, rank, data).unwrap();
+    });
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+            "{tag}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn all_algorithms_agree_with_serial_sum() {
+    for (w, n) in [(2usize, 1000usize), (4, 999), (8, 4096), (16, 257)] {
+        let ps = payloads(w, n, w as u64 * 31 + n as u64);
+        let want = serial_sum(&ps);
+        for alg in [Algorithm::Ring, Algorithm::BinaryBlocks, Algorithm::DoublingHalving] {
+            if alg == Algorithm::DoublingHalving && !w.is_power_of_two() {
+                continue;
+            }
+            for out in run(alg, ps.clone()) {
+                assert_close(&out, &want, alg.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_worlds() {
+    for w in [3usize, 5, 6, 7, 9, 11, 12, 13, 15] {
+        let ps = payloads(w, 500, w as u64);
+        let want = serial_sum(&ps);
+        for alg in [Algorithm::Ring, Algorithm::BinaryBlocks] {
+            for out in run(alg, ps.clone()) {
+                assert_close(&out, &want, &format!("{}@w={w}", alg.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn large_vector_stress() {
+    // gradient-sized payload (1M f32 = 4 MiB) across 8 ranks
+    let w = 8;
+    let n = 1_000_000;
+    let ps = payloads(w, n, 99);
+    let want = serial_sum(&ps);
+    for out in run(Algorithm::DoublingHalving, ps.clone()) {
+        assert_close(&out, &want, "dh-large");
+    }
+    for out in run(Algorithm::Ring, ps) {
+        assert_close(&out, &want, "ring-large");
+    }
+}
+
+#[test]
+fn all_reduce_mean_divides_by_world() {
+    let w = 4;
+    let ps: Vec<Vec<f32>> = (0..w).map(|_| vec![1.0f32; 64]).collect();
+    let (out, _) = run_world(w, ps, |rank, data| {
+        collectives::all_reduce_mean(Algorithm::Ring, rank, data).unwrap();
+    });
+    for o in out {
+        for v in o {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn repeated_allreduces_on_same_world() {
+    // collective calls must be serializable back-to-back on one world
+    // (the trainer does grad + loss all-reduce every step)
+    let w = 4;
+    let ps: Vec<Vec<f32>> = (0..w).map(|r| vec![r as f32; 128]).collect();
+    let (out, _) = run_world(w, ps, |rank, data| {
+        for _ in 0..10 {
+            collectives::all_reduce_mean(Algorithm::DoublingHalving, rank, data).unwrap();
+        }
+    });
+    // mean of 0..3 = 1.5, then mean of means stays 1.5
+    for o in out {
+        for v in o {
+            assert!((v - 1.5).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn auto_selection_runs_everywhere() {
+    for w in 1..=9 {
+        let alg = collectives::select_algorithm(w, 117_376);
+        let ps = payloads(w, 64, w as u64 + 1000);
+        let want = serial_sum(&ps);
+        for out in run(alg, ps) {
+            assert_close(&out, &want, &format!("auto@w={w}"));
+        }
+    }
+}

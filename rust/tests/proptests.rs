@@ -1,0 +1,383 @@
+//! Property-based tests over the L3 invariants (DESIGN.md §7).
+//!
+//! The vendor snapshot carries no proptest, so this file implements the
+//! same discipline by hand: a deterministic RNG drives many randomized
+//! cases per property, and every assertion message carries the case seed
+//! so failures reproduce exactly.
+
+use ringmaster::cluster::{ClusterSpec, ClusterState};
+use ringmaster::collectives::{self, comm::run_world, segment_bounds, Algorithm};
+use ringmaster::jsonx::{self, Json};
+use ringmaster::linalg::Matrix;
+use ringmaster::nnls::nnls;
+use ringmaster::rngx::Rng;
+use ringmaster::scheduler::{
+    doubling::Doubling, optimus::OptimusGreedy, total_allocated, JobInfo, Scheduler, Speed,
+};
+use ringmaster::trainer::Checkpoint;
+
+const CASES: usize = 60;
+
+// ----------------------------------------------------------------------
+// collectives
+// ----------------------------------------------------------------------
+#[test]
+fn prop_allreduce_equals_serial_sum() {
+    let mut rng = Rng::new(0xA11);
+    for case in 0..CASES {
+        let w = 1 + rng.below(12);
+        let n = rng.below(400);
+        let payloads: Vec<Vec<f32>> = (0..w).map(|_| rng.vec_f32(n)).collect();
+        let mut want = vec![0.0f32; n];
+        for p in &payloads {
+            for (a, b) in want.iter_mut().zip(p) {
+                *a += b;
+            }
+        }
+        let alg = match rng.below(3) {
+            0 => Algorithm::Ring,
+            1 => Algorithm::BinaryBlocks,
+            _ if w.is_power_of_two() => Algorithm::DoublingHalving,
+            _ => Algorithm::BinaryBlocks,
+        };
+        let (out, _) = run_world(w, payloads, move |rank, data| {
+            collectives::all_reduce(alg, rank, data).unwrap();
+        });
+        for o in out {
+            for (i, (g, t)) in o.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - t).abs() <= 1e-3 * t.abs().max(1.0),
+                    "case {case}: {} w={w} n={n} i={i}: {g} vs {t}",
+                    alg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_segment_bounds_partition() {
+    let mut rng = Rng::new(0x5E6);
+    for case in 0..500 {
+        let n = rng.below(10_000);
+        let parts = 1 + rng.below(64);
+        let mut prev_end = 0;
+        let mut min_len = usize::MAX;
+        let mut max_len = 0;
+        for i in 0..parts {
+            let (s, e) = segment_bounds(n, parts, i);
+            assert_eq!(s, prev_end, "case {case}: gap at part {i}");
+            assert!(e >= s, "case {case}");
+            min_len = min_len.min(e - s);
+            max_len = max_len.max(e - s);
+            prev_end = e;
+        }
+        assert_eq!(prev_end, n, "case {case}: doesn't cover");
+        assert!(max_len - min_len <= 1, "case {case}: unbalanced");
+    }
+}
+
+// ----------------------------------------------------------------------
+// scheduler
+// ----------------------------------------------------------------------
+fn random_jobs(rng: &mut Rng, n: usize) -> Vec<JobInfo> {
+    (0..n)
+        .map(|i| {
+            // random monotone speed table over powers of two
+            let mut f = rng.uniform_range(0.001, 0.02);
+            let mut table = vec![(1usize, f)];
+            for p in 1..=6 {
+                f *= rng.uniform_range(1.0, 2.0); // never slower with more GPUs
+                table.push((1usize << p, f));
+            }
+            JobInfo {
+                id: i as u64,
+                q: rng.uniform_range(10.0, 300.0),
+                speed: Speed::Table(table),
+                max_w: 1 << rng.below(7),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_schedulers_respect_capacity_and_max_w() {
+    let mut rng = Rng::new(0x5C4E);
+    for case in 0..CASES {
+        let n = 1 + rng.below(20);
+        let jobs = random_jobs(&mut rng, n);
+        let cap = rng.below(100);
+        for s in [&Doubling as &dyn Scheduler, &OptimusGreedy] {
+            let alloc = s.allocate(&jobs, cap);
+            assert!(
+                total_allocated(&alloc) <= cap,
+                "case {case}: {} over capacity",
+                s.name()
+            );
+            for j in &jobs {
+                assert!(alloc[&j.id] <= j.max_w, "case {case}: {} exceeded max_w", s.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_doubling_allocations_are_powers_of_two() {
+    let mut rng = Rng::new(0xD0B);
+    for case in 0..CASES {
+        let n = 1 + rng.below(16);
+        let jobs = random_jobs(&mut rng, n);
+        let cap = rng.below(128);
+        let alloc = Doubling.allocate(&jobs, cap);
+        for (&id, &w) in &alloc {
+            assert!(w == 0 || w.is_power_of_two(), "case {case}: job {id} got {w}");
+        }
+    }
+}
+
+#[test]
+fn prop_no_job_starves_when_capacity_suffices() {
+    let mut rng = Rng::new(0x57A);
+    for case in 0..CASES {
+        let n = 1 + rng.below(16);
+        let jobs = random_jobs(&mut rng, n);
+        for s in [&Doubling as &dyn Scheduler, &OptimusGreedy] {
+            let alloc = s.allocate(&jobs, n + rng.below(64));
+            for j in &jobs {
+                assert!(alloc[&j.id] >= 1, "case {case}: {} starved job {}", s.name(), j.id);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// placement
+// ----------------------------------------------------------------------
+#[test]
+fn prop_placement_never_double_books() {
+    let mut rng = Rng::new(0x91AA17);
+    for case in 0..CASES {
+        let spec = ClusterSpec::new(1 + rng.below(8), 1 + rng.below(8));
+        let mut state = ClusterState::new(spec);
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..40 {
+            if !live.is_empty() && rng.uniform() < 0.4 {
+                let idx = rng.below(live.len());
+                let job = live.swap_remove(idx);
+                state.release(job).unwrap();
+            } else {
+                let job = (case * 1000 + op) as u64;
+                let w = 1 + rng.below(spec.capacity());
+                if w <= state.free_gpus() {
+                    let gpus = state.place(job, w).unwrap();
+                    assert_eq!(gpus.len(), w, "case {case}");
+                    live.push(job);
+                }
+            }
+            // invariant: sum of allocations == used
+            let held: usize = live
+                .iter()
+                .map(|&j| state.allocation_of(j).unwrap().len())
+                .sum();
+            assert_eq!(held, state.used_gpus(), "case {case} op {op}");
+        }
+    }
+}
+
+#[test]
+fn prop_placement_minimizes_nodes_for_node_sized_jobs() {
+    let mut rng = Rng::new(0xBE5);
+    for case in 0..CASES {
+        let gpn = 2 + rng.below(7);
+        let spec = ClusterSpec::new(4, gpn);
+        let mut state = ClusterState::new(spec);
+        // a job exactly one node big must land on one node when any is free
+        state.place(1, gpn).unwrap();
+        assert_eq!(state.nodes_spanned(1), 1, "case {case}");
+    }
+}
+
+// ----------------------------------------------------------------------
+// NNLS
+// ----------------------------------------------------------------------
+#[test]
+fn prop_nnls_nonnegative_and_bounded_residual() {
+    let mut rng = Rng::new(0x4415);
+    for case in 0..CASES {
+        let rows = 5 + rng.below(40);
+        let cols = 1 + rng.below(5.min(rows));
+        let a = Matrix::from_fn(rows, cols, |_, _| rng.uniform_range(0.0, 2.0));
+        let b: Vec<f64> = (0..rows).map(|_| rng.uniform_range(-1.0, 3.0)).collect();
+        let sol = nnls(&a, &b).unwrap();
+        assert!(sol.x.iter().all(|&v| v >= 0.0), "case {case}: negative coef");
+        let zero_resid = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(
+            sol.residual <= zero_resid + 1e-9,
+            "case {case}: residual {} worse than zero vector {}",
+            sol.residual,
+            zero_resid
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// performance models
+// ----------------------------------------------------------------------
+#[test]
+fn prop_convergence_fit_recovers_random_curves() {
+    use ringmaster::perfmodel::ConvergenceModel;
+    let mut rng = Rng::new(0xC04);
+    for case in 0..40 {
+        let b0 = rng.uniform_range(0.05, 1.0);
+        let b1 = rng.uniform_range(0.5, 3.0);
+        let b2 = rng.uniform_range(0.0, 0.5);
+        let samples: Vec<(f64, f64)> = (0..50)
+            .map(|e| (e as f64, 1.0 / (b0 * e as f64 + b1) + b2))
+            .collect();
+        let m = ConvergenceModel::fit(&samples).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for &(e, l) in samples.iter().step_by(7) {
+            let err = (m.predict(e) - l).abs() / l.max(1e-6);
+            assert!(err < 0.03, "case {case} (b0={b0:.2} b1={b1:.2} b2={b2:.2}): {err}");
+        }
+    }
+}
+
+#[test]
+fn prop_speed_fit_interpolates_ring_shaped_curves() {
+    use ringmaster::perfmodel::SpeedModel;
+    let mut rng = Rng::new(0x5F17);
+    for case in 0..40 {
+        let compute = rng.uniform_range(20.0, 400.0);
+        let overhead = rng.uniform_range(0.1, 5.0);
+        let constant = rng.uniform_range(0.5, 10.0);
+        let epoch = |w: usize| compute / w as f64 + overhead * (w as f64 - 1.0) + constant;
+        let samples: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&w| (w, 1.0 / epoch(w))).collect();
+        let m = SpeedModel::fit(&samples, compute, 1e6).unwrap();
+        for &w in &[1usize, 2, 4, 8] {
+            let err = (m.secs_per_epoch(w) - epoch(w)).abs() / epoch(w);
+            assert!(err < 0.1, "case {case} w={w}: err {err}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// simulator
+// ----------------------------------------------------------------------
+#[test]
+fn prop_sim_completion_bounded_below_by_serial_time() {
+    use ringmaster::sim::{simulate, SimConfig, StrategyKind, WorkloadGen};
+    let mut rng = Rng::new(0x51B);
+    for case in 0..10 {
+        let seed = rng.next_u64();
+        let strategy = match case % 3 {
+            0 => StrategyKind::Precompute,
+            1 => StrategyKind::Fixed(4),
+            _ => StrategyKind::Exploratory,
+        };
+        let mut cfg = SimConfig::paper(strategy, ringmaster::sim::Contention::Moderate, seed);
+        cfg.n_jobs = 20;
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+        let r = simulate(&cfg, &jobs);
+        for (j, &secs) in r.completion_secs.iter().enumerate() {
+            // no job can finish faster than running flat-out at max speed
+            // (speeds flat-extrapolate past w=8, so serial_secs(64) is the
+            // true lower bound; exploration can only add time)
+            let bound = jobs[j].serial_secs(64) * 0.999;
+            assert!(
+                secs >= bound,
+                "case {case} job {j}: completed in {secs:.0}s < bound {bound:.0}s"
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// cost models
+// ----------------------------------------------------------------------
+#[test]
+fn prop_cost_models_monotone_in_payload() {
+    use ringmaster::collectives::cost::{comm_time, Algorithm, CostParams};
+    let mut rng = Rng::new(0xC057);
+    for case in 0..100 {
+        let p = CostParams {
+            alpha: rng.uniform_range(1e-7, 1e-3),
+            beta: rng.uniform_range(1e-12, 1e-9),
+            gamma: rng.uniform_range(1e-12, 1e-9),
+        };
+        let w = 2 + rng.below(63);
+        let n1 = rng.uniform_range(1e3, 1e8);
+        let n2 = n1 * rng.uniform_range(1.0, 10.0);
+        for alg in [Algorithm::Ring, Algorithm::DoublingHalving, Algorithm::BinaryBlocks] {
+            assert!(
+                comm_time(alg, w, n2, &p) >= comm_time(alg, w, n1, &p) - 1e-15,
+                "case {case}: {} not monotone in n",
+                alg.name()
+            );
+        }
+        // and bb >= dh at identical w (the fold overhead never helps)
+        assert!(
+            comm_time(Algorithm::BinaryBlocks, w, n1, &p)
+                >= comm_time(Algorithm::DoublingHalving, w, n1, &p),
+            "case {case}"
+        );
+    }
+}
+
+// ----------------------------------------------------------------------
+// jsonx
+// ----------------------------------------------------------------------
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.uniform() < 0.5),
+        2 => Json::Num((rng.uniform_range(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => Json::Str(format!("s{}-\"q\"\n\\", rng.below(1000))),
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_jsonx_round_trips() {
+    let mut rng = Rng::new(0x150);
+    for case in 0..200 {
+        let doc = random_json(&mut rng, 3);
+        for text in [doc.dump(), doc.pretty()] {
+            let back = jsonx::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+            assert_eq!(back, doc, "case {case}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// checkpoint
+// ----------------------------------------------------------------------
+#[test]
+fn prop_checkpoint_round_trips() {
+    let mut rng = Rng::new(0xCC);
+    for case in 0..30 {
+        let n = 1 + rng.below(5000);
+        let ck = Checkpoint {
+            preset: format!("p{case}"),
+            step: rng.next_u64() % 1_000_000,
+            epochs: rng.uniform_range(0.0, 500.0),
+            workers: 1 + rng.below(64),
+            lr: rng.uniform_range(0.0, 1.0) as f32,
+            theta: (0..n).map(|_| rng.uniform_range(-10.0, 10.0) as f32).collect(),
+            mu: (0..n).map(|_| rng.uniform_range(-10.0, 10.0) as f32).collect(),
+        };
+        let path = std::env::temp_dir().join(format!(
+            "rmck-prop-{case}-{}.ckpt",
+            std::process::id()
+        ));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck, "case {case}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

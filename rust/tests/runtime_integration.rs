@@ -1,0 +1,116 @@
+//! PJRT runtime over the real AOT artifacts: load, compile, execute,
+//! and verify the numerics end to end (rust side of the L2/L3 contract).
+//!
+//! Requires `make artifacts` to have produced `artifacts/` with the
+//! `tiny` preset; tests fail with a pointer to that command otherwise.
+
+use ringmaster::data::Corpus;
+use ringmaster::runtime::{Artifacts, Engine};
+
+fn artifacts() -> Artifacts {
+    Artifacts::load(env!("CARGO_MANIFEST_DIR").to_string() + "/artifacts")
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn engine() -> Engine {
+    Engine::load(&artifacts(), "tiny").expect("compile tiny preset")
+}
+
+fn batch(engine: &Engine, seed_step: u64) -> (Vec<i32>, Vec<i32>) {
+    let p = engine.preset();
+    Corpus::new(p.vocab, 0.1, 7).batch(0, seed_step, p.batch, p.seq_len)
+}
+
+#[test]
+fn manifest_matches_model_presets() {
+    let a = artifacts();
+    let p = a.preset("tiny").unwrap();
+    assert_eq!(p.vocab, 256);
+    assert_eq!(p.d_model, 64);
+    assert_eq!(p.n_params, 117_376);
+    assert_eq!(p.tokens_per_step, p.batch * p.seq_len);
+    // layout covers theta exactly
+    let last = p.layout.last().unwrap();
+    assert_eq!(last.offset + last.size(), p.n_params);
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let e = engine();
+    let a = e.init(42).unwrap();
+    let b = e.init(42).unwrap();
+    let c = e.init(43).unwrap();
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    assert_eq!(a.len(), e.preset().n_params);
+    assert!(a.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn initial_loss_near_uniform_entropy() {
+    let e = engine();
+    let theta = e.init(42).unwrap();
+    let (inputs, targets) = batch(&e, 0);
+    let (loss, grad) = e.train_step(&theta, &inputs, &targets).unwrap();
+    let uniform = (e.preset().vocab as f32).ln();
+    assert!((loss - uniform).abs() < 0.7, "loss {loss} vs ln(V) {uniform}");
+    assert_eq!(grad.len(), theta.len());
+    assert!(grad.iter().all(|v| v.is_finite()));
+    let norm: f32 = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(norm > 1e-3, "gradient vanished: {norm}");
+}
+
+#[test]
+fn fwd_loss_agrees_with_train_step() {
+    let e = engine();
+    let theta = e.init(1).unwrap();
+    let (inputs, targets) = batch(&e, 3);
+    let (l1, _) = e.train_step(&theta, &inputs, &targets).unwrap();
+    let l2 = e.fwd_loss(&theta, &inputs, &targets).unwrap();
+    assert!((l1 - l2).abs() < 1e-4, "{l1} vs {l2}");
+}
+
+#[test]
+fn sgd_update_matches_reference_formula() {
+    let e = engine();
+    let n = e.preset().n_params;
+    let theta: Vec<f32> = (0..n).map(|i| (i % 13) as f32 * 0.1).collect();
+    let grad: Vec<f32> = (0..n).map(|i| ((i % 7) as f32 - 3.0) * 0.01).collect();
+    let mu: Vec<f32> = (0..n).map(|i| (i % 5) as f32 * 0.02).collect();
+    let (lr, m) = (0.1f32, 0.9f32);
+    let (t2, mu2) = e.sgd_update(&theta, &grad, &mu, lr, m).unwrap();
+    for i in (0..n).step_by(9173) {
+        let want_mu = m * mu[i] + grad[i];
+        let want_t = theta[i] - lr * want_mu;
+        assert!((mu2[i] - want_mu).abs() < 1e-5, "mu[{i}]");
+        assert!((t2[i] - want_t).abs() < 1e-5, "theta[{i}]");
+    }
+}
+
+#[test]
+fn sgd_steps_reduce_loss() {
+    let e = engine();
+    let mut theta = e.init(42).unwrap();
+    let mut mu = vec![0.0; theta.len()];
+    let (inputs, targets) = batch(&e, 0);
+    let (first, _) = e.train_step(&theta, &inputs, &targets).unwrap();
+    let mut last = first;
+    for _ in 0..8 {
+        let (loss, grad) = e.train_step(&theta, &inputs, &targets).unwrap();
+        last = loss;
+        let (t2, m2) = e.sgd_update(&theta, &grad, &mu, 0.05, 0.9).unwrap();
+        theta = t2;
+        mu = m2;
+    }
+    assert!(last < first - 0.2, "no progress: {first} -> {last}");
+}
+
+#[test]
+fn shape_errors_are_caught() {
+    let e = engine();
+    let theta = vec![0.0f32; 10]; // wrong size
+    let (inputs, targets) = batch(&e, 0);
+    assert!(e.train_step(&theta, &inputs, &targets).is_err());
+    let theta = e.init(0).unwrap();
+    assert!(e.train_step(&theta, &inputs[..5], &targets).is_err());
+}

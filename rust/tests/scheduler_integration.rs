@@ -1,0 +1,146 @@
+//! Scheduler strategies on paper-calibrated job profiles: optimality
+//! gaps against the exact DP, and the §4.2 doubling-vs-greedy story on
+//! realistic workloads.
+
+use ringmaster::scheduler::{
+    doubling::Doubling, exact::ExactDp, fixed::Fixed, objective, optimus::OptimusGreedy,
+    total_allocated, Allocation, JobInfo, Scheduler, Speed,
+};
+use ringmaster::sim::workload::WorkloadGen;
+
+/// Jobs drawn from the paper-calibrated workload generator.
+fn paper_jobs(n: usize, seed: u64) -> Vec<JobInfo> {
+    WorkloadGen::default()
+        .generate(n, 500.0, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| JobInfo {
+            id: i as u64,
+            q: p.total_epochs,
+            speed: Speed::Table(p.speed_table()),
+            max_w: 64,
+        })
+        .collect()
+}
+
+fn check_valid(jobs: &[JobInfo], alloc: &Allocation, capacity: usize) {
+    assert!(total_allocated(alloc) <= capacity);
+    assert_eq!(alloc.len(), jobs.len());
+}
+
+#[test]
+fn doubling_close_to_exact_on_paper_workloads() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let jobs = paper_jobs(6, seed);
+        let cap = 32;
+        let d = Doubling.allocate(&jobs, cap);
+        let e = ExactDp.allocate(&jobs, cap);
+        check_valid(&jobs, &d, cap);
+        let gap = objective(&jobs, &d) / objective(&jobs, &e);
+        assert!(gap < 1.35, "seed {seed}: doubling {gap:.3}x of optimal");
+    }
+}
+
+#[test]
+fn doubling_beats_or_matches_greedy_on_cliffy_profiles() {
+    // profiles whose table has a dip at non-powers of two (the dh/bb
+    // boundary), built from the paper's own cost models
+    use ringmaster::collectives::cost::{comm_time, Algorithm, CostParams};
+    let p = CostParams { alpha: 1e-2, beta: 8e-11, gamma: 1e-10 };
+    let table: Vec<(usize, f64)> = (1usize..=16)
+        .map(|w| {
+            let alg = if w == 1 {
+                Algorithm::DoublingHalving
+            } else if w.is_power_of_two() {
+                Algorithm::DoublingHalving
+            } else {
+                Algorithm::BinaryBlocks
+            };
+            let steps = 500.0 / w as f64;
+            let epoch = steps * (0.3 + comm_time(alg, w, 4.0e6, &p));
+            (w, 1.0 / epoch)
+        })
+        .collect();
+    let jobs: Vec<JobInfo> = (0..4)
+        .map(|i| JobInfo {
+            id: i,
+            q: 150.0,
+            speed: Speed::Table(table.clone()),
+            max_w: 64,
+        })
+        .collect();
+    let cap = 64;
+    let d = Doubling.allocate(&jobs, cap);
+    let g = OptimusGreedy.allocate(&jobs, cap);
+    assert!(
+        objective(&jobs, &d) <= objective(&jobs, &g) + 1e-9,
+        "doubling {:.1} vs greedy {:.1}",
+        objective(&jobs, &d),
+        objective(&jobs, &g)
+    );
+    // and doubling lands only on powers of two
+    for &w in d.values() {
+        assert!(w == 0 || w.is_power_of_two());
+    }
+}
+
+#[test]
+fn all_strategies_valid_under_pressure() {
+    let jobs = paper_jobs(30, 9);
+    for cap in [8usize, 16, 64, 100] {
+        for s in [
+            &Doubling as &dyn Scheduler,
+            &OptimusGreedy,
+            &Fixed(1),
+            &Fixed(2),
+            &Fixed(4),
+            &Fixed(8),
+            &ExactDp,
+        ] {
+            let alloc = s.allocate(&jobs, cap);
+            check_valid(&jobs, &alloc, cap);
+        }
+    }
+}
+
+#[test]
+fn fixed_strategies_match_their_k_when_roomy() {
+    let jobs = paper_jobs(4, 11);
+    for k in [1usize, 2, 4, 8] {
+        let alloc = Fixed(k).allocate(&jobs, 64);
+        assert!(alloc.values().all(|&w| w == k), "k={k}: {alloc:?}");
+    }
+}
+
+#[test]
+fn doubling_prioritizes_scalable_jobs() {
+    // one job scales perfectly, one is already comm-bound at w=2
+    let scalable = JobInfo {
+        id: 0,
+        q: 160.0,
+        speed: Speed::Table(vec![(1, 0.01), (2, 0.02), (4, 0.04), (8, 0.078)]),
+        max_w: 64,
+    };
+    let saturated = JobInfo {
+        id: 1,
+        q: 160.0,
+        // fully saturated at w=1: zero marginal gain anywhere
+        speed: Speed::Table(vec![(1, 0.01), (2, 0.01), (4, 0.01), (8, 0.01)]),
+        max_w: 64,
+    };
+    let alloc = Doubling.allocate(&[scalable, saturated], 10);
+    assert!(alloc[&0] >= 8, "{alloc:?}");
+    assert_eq!(alloc[&1], 1, "{alloc:?}");
+}
+
+#[test]
+fn objective_improves_with_capacity() {
+    let jobs = paper_jobs(8, 13);
+    let mut prev = f64::INFINITY;
+    for cap in [8usize, 16, 32, 64] {
+        let alloc = Doubling.allocate(&jobs, cap);
+        let obj = objective(&jobs, &alloc);
+        assert!(obj <= prev + 1e-9, "cap={cap}: {obj} > {prev}");
+        prev = obj;
+    }
+}

@@ -1,0 +1,129 @@
+//! Table 3 reproduction invariants across seeds — the claims of §7 must
+//! hold on *shape* (who wins, where the crossovers are), not just on one
+//! lucky workload.
+
+use ringmaster::sim::{simulate, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen};
+
+fn run(strategy: StrategyKind, contention: Contention, seed: u64) -> SimResult {
+    let cfg = SimConfig::paper(strategy, contention, seed);
+    let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+    simulate(&cfg, &jobs)
+}
+
+const SEEDS: [u64; 3] = [42, 1337, 7];
+
+#[test]
+fn everyone_finishes_every_workload() {
+    for &seed in &SEEDS {
+        for c in Contention::all() {
+            for s in StrategyKind::table3_rows() {
+                let r = run(s, c, seed);
+                let want = SimConfig::paper(s, c, seed).n_jobs;
+                assert_eq!(r.completed, want, "{} {} seed {seed}", r.strategy, c.name());
+                assert!(r.avg_completion_hours.is_finite() && r.avg_completion_hours > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn precompute_wins_or_ties_at_every_contention() {
+    // §7: "the precompute algorithm always outperforms or ties"
+    for &seed in &SEEDS {
+        for c in Contention::all() {
+            let pre = run(StrategyKind::Precompute, c, seed);
+            for s in StrategyKind::table3_rows() {
+                let r = run(s, c, seed);
+                assert!(
+                    pre.avg_completion_hours <= r.avg_completion_hours * 1.05,
+                    "seed {seed} {}: precompute {:.2} vs {} {:.2}",
+                    c.name(),
+                    pre.avg_completion_hours,
+                    r.strategy,
+                    r.avg_completion_hours
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn moderate_contention_precompute_halves_fixed8() {
+    // the paper's headline: >2x at moderate contention vs Eight (6.20 vs
+    // 2.63). Our simulator reproduces the direction with factor >= 1.25.
+    for &seed in &SEEDS {
+        let pre = run(StrategyKind::Precompute, Contention::Moderate, seed);
+        let eight = run(StrategyKind::Fixed(8), Contention::Moderate, seed);
+        assert!(
+            eight.avg_completion_hours > pre.avg_completion_hours * 1.25,
+            "seed {seed}: {:.2} vs {:.2}",
+            eight.avg_completion_hours,
+            pre.avg_completion_hours
+        );
+    }
+}
+
+#[test]
+fn fixed1_worst_at_no_contention() {
+    // Table 3 column None: One = 6.37 vs Eight/precompute = 1.40
+    for &seed in &SEEDS {
+        let one = run(StrategyKind::Fixed(1), Contention::None, seed);
+        let eight = run(StrategyKind::Fixed(8), Contention::None, seed);
+        assert!(one.avg_completion_hours > 3.0 * eight.avg_completion_hours);
+    }
+}
+
+#[test]
+fn fixed8_degrades_fastest_with_contention() {
+    // Eight: 1.40 -> 22.76 across columns (16x); One: 6.37 -> 10.10 (1.6x)
+    for &seed in &SEEDS {
+        let e_none = run(StrategyKind::Fixed(8), Contention::None, seed);
+        let e_ext = run(StrategyKind::Fixed(8), Contention::Extreme, seed);
+        let o_none = run(StrategyKind::Fixed(1), Contention::None, seed);
+        let o_ext = run(StrategyKind::Fixed(1), Contention::Extreme, seed);
+        let eight_blowup = e_ext.avg_completion_hours / e_none.avg_completion_hours;
+        let one_blowup = o_ext.avg_completion_hours / o_none.avg_completion_hours;
+        assert!(
+            eight_blowup > 2.0 * one_blowup,
+            "seed {seed}: eight {eight_blowup:.1}x vs one {one_blowup:.1}x"
+        );
+    }
+}
+
+#[test]
+fn exploration_overhead_visible_without_contention() {
+    // §7: at zero contention exploration underperforms fixed-8 because of
+    // the 7.5 min spent below 8 GPUs per job
+    for &seed in &SEEDS {
+        let exp = run(StrategyKind::Exploratory, Contention::None, seed);
+        let eight = run(StrategyKind::Fixed(8), Contention::None, seed);
+        assert!(exp.avg_completion_hours >= eight.avg_completion_hours * 0.99);
+    }
+}
+
+#[test]
+fn peak_concurrency_scales_with_contention() {
+    // paper: peaks 125 / 59 / 20 across the three workloads
+    for &seed in &SEEDS {
+        let ext = run(StrategyKind::Precompute, Contention::Extreme, seed);
+        let mode = run(StrategyKind::Precompute, Contention::Moderate, seed);
+        let none = run(StrategyKind::Precompute, Contention::None, seed);
+        assert!(ext.peak_concurrent > mode.peak_concurrent);
+        assert!(mode.peak_concurrent > none.peak_concurrent);
+        assert!(
+            (60..=160).contains(&ext.peak_concurrent),
+            "extreme peak {}",
+            ext.peak_concurrent
+        );
+    }
+}
+
+#[test]
+fn seed42_regression_snapshot() {
+    // loose regression pin so accidental simulator changes are caught;
+    // values from the initial calibrated run (cf. EXPERIMENTS.md)
+    let pre = run(StrategyKind::Precompute, Contention::Moderate, 42);
+    assert!((2.0..3.6).contains(&pre.avg_completion_hours), "{}", pre.avg_completion_hours);
+    let none_pre = run(StrategyKind::Precompute, Contention::None, 42);
+    assert!((1.1..1.8).contains(&none_pre.avg_completion_hours), "{}", none_pre.avg_completion_hours);
+}
