@@ -1,0 +1,29 @@
+# ringmaster build entry points.
+#
+# `make artifacts` needs python3 + jax (build-time only; see DESIGN.md §1).
+# Everything else is pure cargo and runs on a bare toolchain.
+
+.PHONY: all artifacts test bench lint clean
+
+all:
+	cargo build --release
+
+# Lower the L2/L1 model to artifacts/*.hlo.txt + manifest.json.
+# The manifest is checked in (and embedded in the binary); this re-emits
+# it alongside the HLO files the PJRT backend executes.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts --presets tiny,small,base
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench hotpath
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --all-targets -- -D warnings
+
+clean:
+	cargo clean
+	rm -f artifacts/*.hlo.txt

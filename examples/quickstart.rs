@@ -1,12 +1,14 @@
 //! Quickstart: train the tiny LM data-parallel on 2 workers.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 //!
-//! This exercises the full three-layer stack end to end: the AOT-compiled
-//! JAX/Pallas train step runs under PJRT in two rust worker threads whose
-//! gradients meet in the rust doubling-halving all-reduce.
+//! Runs on a bare checkout (builtin manifest + pure-rust reference
+//! backend). With `make artifacts` and a `--features pjrt` build, the
+//! same train step instead executes the AOT-compiled JAX/Pallas
+//! artifacts under PJRT — either way two rust worker threads exchange
+//! gradients in the rust doubling-halving all-reduce.
 
 use ringmaster::trainer::{train, TrainConfig};
 
@@ -19,7 +21,8 @@ fn main() -> ringmaster::Result<()> {
     let (ck, report) = train(&cfg, None, 60)?;
 
     println!(
-        "\nalgorithm={}  startup={:.1}s  wall={:.2}s  steps/s={:.1}  tokens/s={:.0}",
+        "\nbackend={}  algorithm={}  startup={:.1}s  wall={:.2}s  steps/s={:.1}  tokens/s={:.0}",
+        report.backend,
         report.algorithm,
         report.startup_secs,
         report.wall_secs,

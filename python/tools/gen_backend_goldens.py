@@ -1,0 +1,526 @@
+"""Golden-value generator + oracle for the rust reference backend.
+
+The rust crate's default execution backend (`rust/src/runtime/reference.rs`)
+is a dependency-free transcription of the Layer-2 model semantics
+(`python/compile/model.py` + the `ref.py` kernel oracles). This script is
+the bridge between the two worlds:
+
+1. **Mirror** — a numpy implementation of the reference backend's exact
+   forward/backward math, written op-for-op the way the rust code is.
+2. **Oracle check** — the mirror's loss and gradients are verified against
+   ``jax.value_and_grad`` of a pure-jnp restatement of ``model.py`` (built
+   from the ``ref.py`` oracles, no Pallas), so a mirror bug cannot become
+   a golden value.
+3. **Convergence check** — replays the trainer integration tests
+   (`rust/tests/trainer_integration.rs`) through the mirror with exact
+   ports of ``rngx.rs`` and ``data.rs``, confirming the loss-drop
+   assertions hold for the reference backend's numerics.
+4. **Goldens** — prints the constants pasted into
+   ``rust/tests/backend_parity.rs``: loss, grad norm, and spot gradient
+   entries for a formula-initialised theta (no RNG coupling).
+
+Run from the repo root:  python3 python/tools/gen_backend_goldens.py
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+EPS = 1e-5  # layernorm epsilon, matches kernels/ref.py
+
+
+# ----------------------------------------------------------------------
+# Exact port of rust/src/rngx.rs (SplitMix64 + xoshiro256++)
+# ----------------------------------------------------------------------
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n: int) -> int:
+        return int(self.uniform() * n) % n
+
+    def normal(self) -> float:
+        while True:
+            u1 = self.uniform()
+            if u1 > 0.0:
+                break
+        u2 = self.uniform()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def fork(self) -> "Rng":
+        return Rng(self.next_u64())
+
+
+# ----------------------------------------------------------------------
+# Exact port of rust/src/data.rs (noisy-bigram corpus)
+# ----------------------------------------------------------------------
+class Corpus:
+    def __init__(self, vocab: int, noise: float, seed: int):
+        self.vocab, self.noise, self.seed = vocab, noise, seed
+        perm = list(range(vocab))
+        rng = Rng(seed ^ 0xC0FFEE)
+        for i in range(vocab - 1, 0, -1):
+            j = rng.below(i + 1)
+            perm[i], perm[j] = perm[j], perm[i]
+        self.perm = perm
+
+    def window(self, worker: int, step: int, row: int, t: int):
+        rng = Rng(
+            self.seed
+            ^ (worker * 0x9E3779B97F4A7C15) & MASK64
+            ^ (step * 0xD1B54A32D192ED03) & MASK64
+            ^ (row * 0x2545F4914F6CDD1D) & MASK64
+        )
+        cur = rng.below(self.vocab)
+        seq = [cur]
+        for _ in range(t):
+            if rng.uniform() < self.noise:
+                cur = rng.below(self.vocab)
+            else:
+                cur = self.perm[cur]
+            seq.append(cur)
+        return seq[:t], seq[1:]
+
+    def batch(self, worker: int, step: int, batch: int, t: int):
+        inputs, targets = [], []
+        for row in range(batch):
+            i, tg = self.window(worker, step, row, t)
+            inputs.extend(i)
+            targets.extend(tg)
+        return np.array(inputs, np.int32), np.array(targets, np.int32)
+
+
+# ----------------------------------------------------------------------
+# Model layout (mirror of model.py::param_layout)
+# ----------------------------------------------------------------------
+class Cfg:
+    def __init__(self, vocab, d_model, n_layers, n_heads, seq_len, batch):
+        self.vocab, self.d_model = vocab, d_model
+        self.n_layers, self.n_heads = n_layers, n_heads
+        self.seq_len, self.batch = seq_len, batch
+        self.d_ff = 4 * d_model
+        self.d_head = d_model // n_heads
+
+
+TINY = Cfg(256, 64, 2, 4, 32, 8)
+
+
+def param_layout(cfg: Cfg):
+    entries = [("tok_embed", (cfg.vocab, cfg.d_model)),
+               ("pos_embed", (cfg.seq_len, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        entries += [
+            (f"l{i}.ln1_g", (cfg.d_model,)),
+            (f"l{i}.ln1_b", (cfg.d_model,)),
+            (f"l{i}.w_qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.w_proj", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_g", (cfg.d_model,)),
+            (f"l{i}.ln2_b", (cfg.d_model,)),
+            (f"l{i}.w_mlp1", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_mlp2", (cfg.d_ff, cfg.d_model)),
+        ]
+    entries += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    out, off = [], 0
+    for name, shape in entries:
+        out.append((name, shape, off))
+        off += int(np.prod(shape))
+    return out, off
+
+
+def unflatten(cfg, theta):
+    layout, _ = param_layout(cfg)
+    return {name: theta[off:off + int(np.prod(shape))].reshape(shape)
+            for name, shape, off in layout}
+
+
+def init_theta(cfg: Cfg, seed: int) -> np.ndarray:
+    """Mirror of ReferenceBackend::init (rust): one forked rngx stream per
+    layout entry; gains=1, biases=0, pos_embed scale 0.01, else
+    normal / sqrt(fan_in)."""
+    layout, n = param_layout(cfg)
+    root = Rng(seed)
+    parts = []
+    for name, shape, _ in layout:
+        r = root.fork()
+        size = int(np.prod(shape))
+        if name.endswith("_g"):
+            parts.append(np.ones(size, np.float32))
+        elif name.endswith("_b"):
+            parts.append(np.zeros(size, np.float32))
+        else:
+            scale = 0.01 if name == "pos_embed" else 1.0 / math.sqrt(shape[0])
+            vals = np.array([r.normal() for _ in range(size)], np.float64)
+            parts.append((scale * vals).astype(np.float32))
+    theta = np.concatenate(parts)
+    assert theta.shape == (n,)
+    return theta
+
+
+# ----------------------------------------------------------------------
+# Numpy mirror of the rust reference backend (f32 end to end)
+# ----------------------------------------------------------------------
+def gelu(x):
+    c = np.float32(math.sqrt(2.0 / math.pi))
+    u = c * (x + np.float32(0.044715) * x * x * x)
+    return np.float32(0.5) * x * (np.float32(1.0) + np.tanh(u))
+
+
+def gelu_grad(x):
+    c = np.float32(math.sqrt(2.0 / math.pi))
+    u = c * (x + np.float32(0.044715) * x * x * x)
+    th = np.tanh(u)
+    du = c * (np.float32(1.0) + np.float32(3.0 * 0.044715) * x * x)
+    return np.float32(0.5) * (np.float32(1.0) + th) \
+        + np.float32(0.5) * x * (np.float32(1.0) - th * th) * du
+
+
+def layernorm_fwd(x, g, b):
+    mean = x.mean(axis=-1, keepdims=True, dtype=np.float32)
+    d = x - mean
+    var = (d * d).mean(axis=-1, keepdims=True, dtype=np.float32)
+    rstd = np.float32(1.0) / np.sqrt(var + np.float32(EPS))
+    xhat = d * rstd
+    return xhat * g + b, (xhat, rstd)
+
+
+def layernorm_bwd(dy, g, cache):
+    xhat, rstd = cache
+    dyg = dy * g
+    m1 = dyg.mean(axis=-1, keepdims=True, dtype=np.float32)
+    m2 = (dyg * xhat).mean(axis=-1, keepdims=True, dtype=np.float32)
+    dx = rstd * (dyg - m1 - xhat * m2)
+    dg = (dy * xhat).sum(axis=0, dtype=np.float32)
+    db = dy.sum(axis=0, dtype=np.float32)
+    return dx.astype(np.float32), dg.astype(np.float32), db.astype(np.float32)
+
+
+def softmax_rows(s):
+    m = s.max(axis=-1, keepdims=True)
+    e = np.exp(s - m)
+    return e / e.sum(axis=-1, keepdims=True, dtype=np.float32)
+
+
+def forward(cfg: Cfg, theta, inputs):
+    """Forward pass; returns (logits, caches) for the backward pass."""
+    p = unflatten(cfg, theta)
+    B, T, D = cfg.batch, cfg.seq_len, cfg.d_model
+    ids = inputs.reshape(B, T)
+    h = p["tok_embed"][ids] + p["pos_embed"][None, :, :]
+    h = h.reshape(B * T, D).astype(np.float32)
+    caches = []
+    for i in range(cfg.n_layers):
+        c = {}
+        c["h_in"] = h
+        a, c["ln1"] = layernorm_fwd(h, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        c["a1"] = a
+        qkv = a @ p[f"l{i}.w_qkv"]                       # (B*T, 3D)
+        c["qkv"] = qkv
+        q, k, v = (qkv.reshape(B, T, 3, cfg.n_heads, cfg.d_head)
+                       .transpose(2, 0, 3, 1, 4))        # each (B, H, T, dh)
+        s = q @ k.transpose(0, 1, 3, 2) / np.float32(math.sqrt(cfg.d_head))
+        mask = np.tril(np.ones((T, T), bool))
+        s = np.where(mask, s, np.float32(-1e9))
+        att = softmax_rows(s.astype(np.float32))
+        c["att"], c["q"], c["k"], c["v"] = att, q, k, v
+        o = att @ v                                      # (B, H, T, dh)
+        o = o.transpose(0, 2, 1, 3).reshape(B * T, D)
+        c["o"] = o
+        h = h + o @ p[f"l{i}.w_proj"]
+        c["h_mid"] = h
+        a2, c["ln2"] = layernorm_fwd(h, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        c["a2"] = a2
+        pre = a2 @ p[f"l{i}.w_mlp1"]
+        c["pre"] = pre
+        ff = gelu(pre)
+        c["ff"] = ff
+        h = h + ff @ p[f"l{i}.w_mlp2"]
+        caches.append(c)
+    hf, lnf_cache = layernorm_fwd(h, p["lnf_g"], p["lnf_b"])
+    logits = hf @ p["tok_embed"].T
+    return logits.astype(np.float32), (caches, h, hf, lnf_cache)
+
+
+def loss_and_grad(cfg: Cfg, theta, inputs, targets):
+    p = unflatten(cfg, theta)
+    B, T, D = cfg.batch, cfg.seq_len, cfg.d_model
+    N = B * T
+    logits, (caches, h_last, hf, lnf_cache) = forward(cfg, theta, inputs)
+    # mean cross-entropy via log-softmax
+    m = logits.max(axis=-1, keepdims=True)
+    z = logits - m
+    lse = np.log(np.exp(z).sum(axis=-1, keepdims=True, dtype=np.float32))
+    logp = z - lse
+    tgt = targets.reshape(-1)
+    loss = np.float32(-logp[np.arange(N), tgt].mean(dtype=np.float32))
+
+    grads = {name: np.zeros_like(p[name]) for name in p}
+    # d logits
+    probs = np.exp(logp).astype(np.float32)
+    dlogits = probs / np.float32(N)
+    dlogits[np.arange(N), tgt] -= np.float32(1.0 / N)
+    # tied head: logits = hf @ We^T
+    grads["tok_embed"] += (dlogits.T @ hf).astype(np.float32)
+    dh = (dlogits @ p["tok_embed"]).astype(np.float32)
+    # final layernorm
+    dh, dg, db = layernorm_bwd(dh, p["lnf_g"], lnf_cache)
+    grads["lnf_g"] += dg
+    grads["lnf_b"] += db
+    for i in reversed(range(cfg.n_layers)):
+        c = caches[i]
+        # h = h_mid + gelu(a2 @ w1) @ w2
+        grads[f"l{i}.w_mlp2"] += (c["ff"].T @ dh).astype(np.float32)
+        dff = (dh @ p[f"l{i}.w_mlp2"].T).astype(np.float32)
+        dpre = dff * gelu_grad(c["pre"])
+        grads[f"l{i}.w_mlp1"] += (c["a2"].T @ dpre).astype(np.float32)
+        da2 = (dpre @ p[f"l{i}.w_mlp1"].T).astype(np.float32)
+        dx, dg, db = layernorm_bwd(da2, p[f"l{i}.ln2_g"], c["ln2"])
+        grads[f"l{i}.ln2_g"] += dg
+        grads[f"l{i}.ln2_b"] += db
+        dh = dh + dx
+        # h_mid = h_in + (att-output) @ w_proj
+        grads[f"l{i}.w_proj"] += (c["o"].T @ dh).astype(np.float32)
+        do = (dh @ p[f"l{i}.w_proj"].T).astype(np.float32)
+        do4 = do.reshape(B, T, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        att, q, k, v = c["att"], c["q"], c["k"], c["v"]
+        dv = att.transpose(0, 1, 3, 2) @ do4
+        datt = do4 @ v.transpose(0, 1, 3, 2)
+        # softmax backward (masked cols have att==0 -> ds==0)
+        ds = att * (datt - (datt * att).sum(axis=-1, keepdims=True,
+                                            dtype=np.float32))
+        ds = ds / np.float32(math.sqrt(cfg.d_head))
+        dq = ds @ k
+        dk = ds.transpose(0, 1, 3, 2) @ q
+        dqkv = np.stack([dq, dk, dv], axis=2)            # (B, H, 3, T, dh)
+        dqkv = dqkv.transpose(0, 3, 2, 1, 4).reshape(B * T, 3 * D)
+        grads[f"l{i}.w_qkv"] += (c["a1"].T @ dqkv).astype(np.float32)
+        da1 = (dqkv @ p[f"l{i}.w_qkv"].T).astype(np.float32)
+        dx, dg, db = layernorm_bwd(da1, p[f"l{i}.ln1_g"], c["ln1"])
+        grads[f"l{i}.ln1_g"] += dg
+        grads[f"l{i}.ln1_b"] += db
+        dh = dh + dx
+    # embeddings
+    ids = inputs.reshape(B, T)
+    dh3 = dh.reshape(B, T, D)
+    np.add.at(grads["tok_embed"], ids, dh3)
+    grads["pos_embed"] += dh3.sum(axis=0, dtype=np.float32)
+
+    layout, n = param_layout(cfg)
+    flat = np.zeros(n, np.float32)
+    for name, shape, off in layout:
+        flat[off:off + int(np.prod(shape))] = grads[name].ravel()
+    return loss, flat
+
+
+def sgd_update(theta, grad, mu, lr, momentum):
+    mu2 = np.float32(momentum) * mu + grad
+    return theta - np.float32(lr) * mu2, mu2
+
+
+# ----------------------------------------------------------------------
+# JAX oracle: pure-jnp restatement of model.py (via ref.py semantics)
+# ----------------------------------------------------------------------
+def jax_loss_fn(cfg: Cfg):
+    import jax
+    import jax.numpy as jnp
+
+    layout, _ = param_layout(cfg)
+
+    def unflat(theta):
+        return {name: jax.lax.dynamic_slice(theta, (off,),
+                                            (int(np.prod(shape)),)).reshape(shape)
+                for name, shape, off in layout}
+
+    def layernorm(x, g, b):
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return (xf - mean) * jax.lax.rsqrt(var + EPS) * g + b
+
+    def loss_fn(theta, inputs, targets):
+        p = unflat(theta)
+        B, T, D = cfg.batch, cfg.seq_len, cfg.d_model
+        ids = inputs.reshape(B, T)
+        h = p["tok_embed"][ids] + p["pos_embed"][None, :, :]
+        h2d = h.reshape(B * T, D)
+        for i in range(cfg.n_layers):
+            a = layernorm(h2d, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+            qkv = (a @ p[f"l{i}.w_qkv"]).reshape(B, T, 3, cfg.n_heads,
+                                                 cfg.d_head)
+            q = qkv[:, :, 0].transpose(0, 2, 1, 3)
+            kk = qkv[:, :, 1].transpose(0, 2, 1, 3)
+            v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / math.sqrt(cfg.d_head)
+            mask = jnp.tril(jnp.ones((T, T), bool))
+            s = jnp.where(mask, s, -1e9)
+            att = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+            o = o.transpose(0, 2, 1, 3).reshape(B * T, D)
+            h2d = h2d + o @ p[f"l{i}.w_proj"]
+            a = layernorm(h2d, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+            ff = jax.nn.gelu(a @ p[f"l{i}.w_mlp1"])
+            h2d = h2d + ff @ p[f"l{i}.w_mlp2"]
+        h2d = layernorm(h2d, p["lnf_g"], p["lnf_b"])
+        logits = h2d @ p["tok_embed"].T
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets.reshape(-1)[:, None],
+                                   axis=-1)[:, 0]
+        return jnp.mean(nll)
+
+    return loss_fn
+
+
+def formula_theta(cfg: Cfg) -> np.ndarray:
+    """RNG-free deterministic theta shared with backend_parity.rs: per
+    layout entry, element j gets hash(off + j) in [-1, 1) times the init
+    scale (gains 1 + 0.1*u, biases 0.1*u so LN grads are exercised)."""
+    layout, n = param_layout(cfg)
+    theta = np.zeros(n, np.float32)
+    for name, shape, off in layout:
+        size = int(np.prod(shape))
+        idx = np.arange(off, off + size, dtype=np.uint64)
+        h = (idx * np.uint64(0x9E3779B97F4A7C15)) & np.uint64(MASK64)
+        u = (h >> np.uint64(11)).astype(np.float64) * (2.0 / (1 << 53)) - 1.0
+        if name.endswith("_g"):
+            vals = 1.0 + 0.1 * u
+        elif name.endswith("_b"):
+            vals = 0.1 * u
+        else:
+            scale = 0.01 if name == "pos_embed" else 1.0 / math.sqrt(shape[0])
+            vals = scale * u
+        theta[off:off + size] = vals.astype(np.float32)
+    return theta
+
+
+def formula_tokens(cfg: Cfg):
+    n = cfg.batch * cfg.seq_len
+    j = np.arange(n)
+    inputs = ((j * 17 + 5) % cfg.vocab).astype(np.int32)
+    targets = ((j * 31 + 3) % cfg.vocab).astype(np.int32)
+    return inputs, targets
+
+
+def main():
+    cfg = TINY
+    layout, n = param_layout(cfg)
+    assert n == 117_376, n
+
+    # ---- 1. mirror vs JAX oracle ---------------------------------------
+    import jax
+    jax.config.update("jax_enable_x64", False)
+    theta = formula_theta(cfg)
+    inputs, targets = formula_tokens(cfg)
+    loss_np, grad_np = loss_and_grad(cfg, theta, inputs, targets)
+    loss_fn = jax_loss_fn(cfg)
+    loss_j, grad_j = jax.value_and_grad(loss_fn)(theta, inputs, targets)
+    loss_j = float(loss_j)
+    grad_j = np.asarray(grad_j)
+    print(f"loss  mirror={loss_np:.6f}  jax={loss_j:.6f}  "
+          f"diff={abs(loss_np - loss_j):.2e}")
+    gn_np, gn_j = np.linalg.norm(grad_np), np.linalg.norm(grad_j)
+    print(f"|grad| mirror={gn_np:.6f}  jax={gn_j:.6f}")
+    rel = np.abs(grad_np - grad_j) / (np.abs(grad_j) + 1e-4)
+    print(f"grad rel err: max={rel.max():.2e} mean={rel.mean():.2e}")
+    assert abs(loss_np - loss_j) < 2e-4, "mirror loss != jax loss"
+    assert rel.max() < 2e-2 and rel.mean() < 1e-4, "mirror grads != jax"
+
+    # ---- 2. convergence: trainer_integration assertions ----------------
+    corpus = Corpus(cfg.vocab, 0.08, 42)
+
+    def run(workers, steps, lr_base=0.05, momentum=0.9, seed=42,
+            theta0=None, mu0=None, start=0):
+        th = init_theta(cfg, seed) if theta0 is None else theta0.copy()
+        mu = np.zeros_like(th) if mu0 is None else mu0.copy()
+        lr = lr_base * workers
+        losses = []
+        for s in range(start, start + steps):
+            gs, ls = [], []
+            for wk in range(workers):
+                i, t = corpus.batch(wk, s, cfg.batch, cfg.seq_len)
+                l, g = loss_and_grad(cfg, th, i, t)
+                gs.append(g)
+                ls.append(l)
+            g = np.mean(gs, axis=0, dtype=np.float32).astype(np.float32)
+            losses.append(float(np.mean(ls)))
+            th, mu = sgd_update(th, g, mu, lr, momentum)
+        return th, mu, losses
+
+    _, _, losses = run(2, 40)
+    print(f"w=2 40 steps: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(need drop > 0.5)")
+    assert losses[-1] < losses[0] - 0.5, "trainer loss-drop assertion fails"
+
+    # repeated-batch check (runtime_integration::sgd_steps_reduce_loss)
+    th = init_theta(cfg, 42)
+    mu = np.zeros_like(th)
+    i0, t0 = corpus.batch(0, 0, cfg.batch, cfg.seq_len)
+    first, _ = loss_and_grad(cfg, th, i0, t0)
+    last = first
+    for _ in range(8):
+        last, g = loss_and_grad(cfg, th, i0, t0)
+        th, mu = sgd_update(th, g, mu, 0.05, 0.9)
+    print(f"repeated batch 8 steps lr=0.05: {first:.4f} -> {last:.4f} "
+          f"(need drop > 0.2)")
+    assert last < first - 0.2
+
+    # initial loss near ln(V) (runtime_integration::initial_loss...)
+    th = init_theta(cfg, 42)
+    l0, g0 = loss_and_grad(cfg, th, i0, t0)
+    print(f"init loss {l0:.4f} vs ln(V) {math.log(cfg.vocab):.4f} "
+          f"(need |diff| < 0.7); |grad|={np.linalg.norm(g0):.4f}")
+    assert abs(l0 - math.log(cfg.vocab)) < 0.7
+    assert np.linalg.norm(g0) > 1e-3
+
+    # ---- 3. emit goldens (from the JAX oracle, f32) --------------------
+    print("\n// ---- paste into rust/tests/backend_parity.rs ----")
+    print(f"const GOLD_LOSS: f32 = {loss_j:.6}f32;")
+    print(f"const GOLD_GRAD_NORM: f32 = {gn_j:.6}f32;")
+    picks = []
+    for name, shape, off in layout:
+        size = int(np.prod(shape))
+        k = off + int(np.argmax(np.abs(grad_j[off:off + size])))
+        picks.append((name, k, grad_j[k]))
+    print("const GOLD_GRAD: &[(usize, f32)] = &[  // largest |grad| per param")
+    for name, k, v in picks:
+        print(f"    ({k}, {v:.6e}f32), // {name}")
+    print("];")
+    print("\nall checks passed")
+
+
+if __name__ == "__main__":
+    main()

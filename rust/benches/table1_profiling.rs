@@ -30,7 +30,7 @@ fn main() -> ringmaster::Result<()> {
     let steps = 12u64;
 
     // ---- single-engine phase decomposition (T_forward / T_back) --------
-    let artifacts = Artifacts::load(&artifacts_dir)?;
+    let artifacts = Artifacts::resolve(&artifacts_dir)?;
     let engine = Engine::load(&artifacts, &preset)?;
     let p = engine.preset().clone();
     let corpus = Corpus::new(p.vocab, 0.08, 7);

@@ -174,7 +174,7 @@ fn fit_speed(samples: &[(usize, f64)], base: &TrainConfig) -> Result<Speed> {
     let distinct: std::collections::BTreeSet<usize> = samples.iter().map(|&(w, _)| w).collect();
     if distinct.len() >= 2 {
         let m = base.dataset_examples as f64;
-        let artifacts = crate::runtime::Artifacts::load(&base.artifacts_dir)?;
+        let artifacts = crate::runtime::Artifacts::resolve(&base.artifacts_dir)?;
         let n_bytes = artifacts.preset(&base.preset)?.n_bytes();
         if let Ok(model) = SpeedModel::fit(samples, m, n_bytes) {
             return Ok(Speed::Fitted(model));
@@ -193,6 +193,6 @@ fn fit_speed(samples: &[(usize, f64)], base: &TrainConfig) -> Result<Speed> {
 }
 
 fn preset_batch(cfg: &TrainConfig) -> Result<usize> {
-    let artifacts = crate::runtime::Artifacts::load(&cfg.artifacts_dir)?;
+    let artifacts = crate::runtime::Artifacts::resolve(&cfg.artifacts_dir)?;
     Ok(artifacts.preset(&cfg.preset)?.batch)
 }

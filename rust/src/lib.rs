@@ -11,12 +11,15 @@
 //!   Lawson–Hanson NNLS ([`nnls`]), performance models ([`perfmodel`]),
 //!   scheduling strategies ([`scheduler`]), a discrete-event cluster
 //!   simulator ([`sim`]), and a real data-parallel training runtime
-//!   ([`trainer`], [`coordinator`]) that executes AOT-compiled JAX programs
-//!   through PJRT ([`runtime`]).
+//!   ([`trainer`], [`coordinator`]) that executes the model through a
+//!   pluggable backend ([`runtime`]): a pure-rust reference
+//!   implementation by default, or PJRT execution of the AOT artifacts
+//!   behind the `pjrt` cargo feature.
 //! - **L2/L1 (python, build-time only)** — the transformer model and Pallas
 //!   kernels lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!
-//! The request path is pure rust: python never runs after artifacts exist.
+//! The request path is pure rust: python never runs after artifacts exist,
+//! and with the reference backend python never needs to run at all.
 
 pub mod cluster;
 pub mod collectives;
@@ -34,5 +37,6 @@ pub mod scheduler;
 pub mod sim;
 pub mod trainer;
 
-/// Crate-wide result type (eyre for rich error context).
+/// Crate-wide result type (`anyhow::Result` — the offline shim in
+/// `vendor/anyhow` by default; API-compatible with the registry crate).
 pub type Result<T> = anyhow::Result<T>;

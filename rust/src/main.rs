@@ -23,7 +23,12 @@ use ringmaster::Result;
 
 fn main() {
     let sub = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
+    let wants_help = std::env::args().skip(2).any(|a| a == "--help" || a == "-h");
     let result = match sub.as_str() {
+        "train" | "rescale" | "profile" | "simulate" | "collectives" | "fit" if wants_help => {
+            print!("{}", subcommand_help(&sub));
+            Ok(())
+        }
         "train" => cmd_train(),
         "rescale" => cmd_rescale(),
         "profile" => cmd_profile(),
@@ -42,6 +47,61 @@ fn main() {
     }
 }
 
+/// Per-subcommand flag documentation (`ringmaster <sub> --help`); the same
+/// tables appear in README.md.
+fn subcommand_help(sub: &str) -> &'static str {
+    match sub {
+        "train" => {
+            "ringmaster train — run data-parallel training (E2E driver)\n\n\
+             flags:\n\
+             \x20 --preset NAME      model preset: tiny|small|base (default tiny)\n\
+             \x20 --workers W        data-parallel worker count (default 2)\n\
+             \x20 --steps N          steps to run (default 50)\n\
+             \x20 --save PATH        write the final checkpoint here\n\
+             \x20 --resume PATH      resume from a checkpoint file\n\
+             \x20 --artifacts DIR    artifacts dir (default $RINGMASTER_ARTIFACTS or ./artifacts)\n\
+             \x20 --seed S           corpus/init seed (default 42)\n\
+             \x20 --log-every K      record a loss sample every K steps (default 5)\n"
+        }
+        "rescale" => {
+            "ringmaster rescale — run an explicit stop/restart plan (Table 2)\n\n\
+             flags:\n\
+             \x20 --preset NAME      model preset (default tiny)\n\
+             \x20 --plan W:S,W:S     segments as workers:steps (default 4:60,8:60)\n\
+             \x20 --artifacts DIR    artifacts dir\n\
+             \x20 --seed S           corpus/init seed (default 42)\n"
+        }
+        "profile" => {
+            "ringmaster profile — per-worker-count step timing (Table 1)\n\n\
+             flags:\n\
+             \x20 --preset NAME      model preset (default tiny)\n\
+             \x20 --workers LIST     comma-separated worker counts (default 1,2,4)\n\
+             \x20 --steps N          steps per configuration (default 10)\n\
+             \x20 --artifacts DIR    artifacts dir\n"
+        }
+        "simulate" => {
+            "ringmaster simulate — 64-GPU scheduler simulation (Table 3)\n\n\
+             flags:\n\
+             \x20 --contention C     extreme|moderate|none (default moderate)\n\
+             \x20 --strategy S       precompute|exploratory|fixed-1|fixed-2|fixed-4|fixed-8\n\
+             \x20 --all              run all strategies x all contentions\n\
+             \x20 --seed S           workload seed (default 42)\n"
+        }
+        "collectives" => {
+            "ringmaster collectives — all-reduce algorithms vs cost models (eqs 2-4)\n\n\
+             flags:\n\
+             \x20 --workers W        world size (default 8)\n\
+             \x20 --elems N          elements per rank (default 1000000)\n"
+        }
+        "fit" => {
+            "ringmaster fit — demo of the eq 1 / eq 5 NNLS fits\n\n\
+             flags:\n\
+             \x20 --demo             accepted (demo is the only mode)\n"
+        }
+        _ => HELP,
+    }
+}
+
 const HELP: &str = "\
 ringmaster — dynamic scheduling of MPI-based distributed DL training jobs
 
@@ -54,8 +114,8 @@ USAGE: ringmaster <subcommand> [flags]
   collectives  all-reduce algorithms vs analytic cost models (eqs 2-4)
   fit          demo of the eq 1 / eq 5 NNLS fits
 
-Run `ringmaster <subcommand> --help-flags` is not needed: flags are
-documented in README.md; unknown flags are rejected with an error.
+Run `ringmaster <subcommand> --help` for that subcommand's flags (also
+documented in README.md); unknown flags are rejected with an error.
 ";
 
 fn cmd_train() -> Result<()> {
@@ -74,9 +134,10 @@ fn cmd_train() -> Result<()> {
     let resume_ck = if resume.is_empty() { None } else { Some(Checkpoint::load(&resume)?) };
     let (ck, report) = train(&cfg, resume_ck, steps)?;
     println!(
-        "preset={preset} workers={workers} alg={} steps={} wall={:.2}s startup={:.2}s steps/s={:.2} tokens/s={:.0}",
-        report.algorithm, report.steps, report.wall_secs, report.startup_secs,
-        report.steps_per_sec, report.tokens_per_sec
+        "preset={preset} workers={workers} backend={} alg={} steps={} wall={:.2}s \
+         startup={:.2}s steps/s={:.2} tokens/s={:.0}",
+        report.backend, report.algorithm, report.steps, report.wall_secs,
+        report.startup_secs, report.steps_per_sec, report.tokens_per_sec
     );
     for l in &report.logs {
         println!("step {:>6}  epoch {:>8.3}  loss {:.4}", l.step, l.epoch, l.loss);
@@ -137,10 +198,12 @@ fn cmd_profile() -> Result<()> {
         "workers", "alg", "step_ms", "allreduce_ms", "tokens_per_s", "scaling_eff_%",
     ]);
     let mut base_tps = None;
+    let mut backend = String::new();
     for &w in &worker_counts {
         let mut cfg = TrainConfig::new(artifacts.clone(), &preset, w);
         cfg.log_every = u64::MAX; // quiet
         let (_, report) = train(&cfg, None, steps)?;
+        backend = report.backend.clone();
         let tps = report.tokens_per_sec;
         let base = *base_tps.get_or_insert(tps / w as f64);
         table.row(&[
@@ -153,6 +216,7 @@ fn cmd_profile() -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    println!("backend: {backend}");
     Ok(())
 }
 
@@ -226,6 +290,9 @@ fn cmd_collectives() -> Result<()> {
 
 fn cmd_fit() -> Result<()> {
     let a = Args::from_env(2)?;
+    // `--demo` is accepted for compatibility with the usage string; the
+    // subcommand is demo-only either way.
+    let _ = a.flag("demo");
     a.reject_unknown()?;
     // eq 1 demo on a synthetic 1/k curve
     let samples: Vec<(f64, f64)> =

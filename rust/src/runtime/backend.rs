@@ -1,0 +1,106 @@
+//! Execution-backend abstraction (DESIGN.md §6.1).
+//!
+//! The trainer only ever talks to an [`Engine`](super::Engine); the engine
+//! dispatches through this trait. Two implementations exist:
+//!
+//! - [`ReferenceBackend`](super::reference::ReferenceBackend) — pure rust,
+//!   zero native dependencies, the default everywhere;
+//! - `PjrtBackend` (`pjrt` cargo feature) — compiles and executes the AOT
+//!   HLO artifacts through the PJRT C API.
+//!
+//! Selection: `RINGMASTER_BACKEND=reference|pjrt` forces a backend;
+//! otherwise PJRT is chosen only when it was compiled in *and* every
+//! artifact of the preset is on disk, so a bare checkout always runs.
+
+use crate::runtime::manifest::{Artifacts, PresetSpec};
+use crate::Result;
+
+/// One execution substrate for a compiled model preset.
+///
+/// Inputs are pre-validated by [`Engine`](super::Engine) (theta length,
+/// token-buffer shapes), so implementations own only the math. All methods
+/// take `&self`: a backend is used by exactly one worker thread, and any
+/// lazy state (e.g. PJRT executable compilation) is interior.
+pub trait Backend {
+    /// Short platform label (e.g. `"reference-cpu"`), for reports.
+    fn name(&self) -> &'static str;
+
+    /// Pay ahead-of-time costs (compilation) for the training path. The
+    /// wall time of `load + warmup` is the paper's stop/restart cost (§6).
+    fn warmup(&self, fresh_start: bool) -> Result<()>;
+
+    /// Deterministic parameter init from a 64-bit seed.
+    fn init(&self, seed: u64) -> Result<Vec<f32>>;
+
+    /// One local fwd+bwd step: `(loss, grad)` for this worker's shard.
+    fn train_step(
+        &self,
+        theta: &[f32],
+        inputs: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)>;
+
+    /// Forward-only loss (eval / Table 1 `T_forward` profiling).
+    fn fwd_loss(&self, theta: &[f32], inputs: &[i32], targets: &[i32]) -> Result<f32>;
+
+    /// Fused momentum-SGD update: `(theta', mu')`.
+    fn sgd_update(
+        &self,
+        theta: &[f32],
+        grad: &[f32],
+        mu: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+}
+
+/// Which backend an [`Engine`](super::Engine) should construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust reference implementation (always available).
+    Reference,
+    /// PJRT execution of the AOT artifacts (`pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Default policy: PJRT when compiled in and every artifact of the
+    /// preset exists on disk; the reference backend otherwise. The env
+    /// override and the fall-back-on-construction-failure logic live in
+    /// [`Engine::load`](super::Engine::load).
+    #[cfg(feature = "pjrt")]
+    pub fn auto(artifacts: &Artifacts, preset: &PresetSpec) -> BackendKind {
+        let entries = crate::runtime::manifest::ENTRY_POINTS;
+        if entries.iter().all(|e| artifacts.entry_path(preset, e).is_ok()) {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Reference
+        }
+    }
+
+    /// Default policy without the `pjrt` feature: always the reference
+    /// backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn auto(_artifacts: &Artifacts, _preset: &PresetSpec) -> BackendKind {
+        BackendKind::Reference
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_without_artifacts_is_reference() {
+        // a known-empty dir, so the test is independent of the process
+        // env ($RINGMASTER_ARTIFACTS) and of cwd-relative artifacts/
+        let d = std::env::temp_dir()
+            .join(format!("ringmaster-backend-auto-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        let a = Artifacts::resolve(&d).unwrap();
+        let p = a.preset("tiny").unwrap();
+        assert_eq!(BackendKind::auto(&a, &p), BackendKind::Reference);
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -1,10 +1,26 @@
 //! AOT artifact manifest (`artifacts/manifest.json`) — the contract
 //! between the build-time python pipeline and the rust runtime.
+//!
+//! The manifest (preset shapes, flat-theta layout, entry-point files) is
+//! also compiled into the binary ([`Artifacts::builtin`]), so the
+//! reference backend runs on a bare checkout; `make artifacts` only adds
+//! the `.hlo.txt` files the PJRT backend executes. [`Artifacts::resolve`]
+//! picks whichever is available.
 
 use std::path::{Path, PathBuf};
 
 use crate::jsonx::{self, Json};
 use crate::Result;
+
+/// The repo's checked-in manifest, embedded at compile time. Kept in sync
+/// with `python/compile/model.py::PRESETS` by `aot.py` (which rewrites the
+/// same file) and asserted by `runtime_integration` tests.
+const BUILTIN_MANIFEST: &str = include_str!("../../../artifacts/manifest.json");
+
+/// The AOT entry points every preset provides (the names `aot.py` emits);
+/// shared by backend auto-selection and the PJRT loader so the list can't
+/// drift between them.
+pub const ENTRY_POINTS: [&str; 4] = ["train_step", "fwd_loss", "sgd_update", "init_params"];
 
 /// One named parameter slice of the flat theta vector.
 #[derive(Clone, Debug, PartialEq)]
@@ -74,6 +90,35 @@ impl Artifacts {
         Ok(Artifacts { dir, manifest })
     }
 
+    /// Load `dir/manifest.json` when present, otherwise fall back to the
+    /// compiled-in manifest (keeping `dir` for artifact-file lookups).
+    /// This is what the trainer uses: presets always resolve; only the
+    /// PJRT backend additionally needs the `.hlo.txt` files on disk.
+    pub fn resolve(dir: impl AsRef<Path>) -> Result<Artifacts> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            Artifacts::load(dir)
+        } else {
+            // Note the fallback once per process: a typo'd --artifacts
+            // should not silently measure the wrong engine.
+            static FALLBACK_NOTED: std::sync::Once = std::sync::Once::new();
+            let dir_buf = dir.to_path_buf();
+            FALLBACK_NOTED.call_once(|| {
+                eprintln!(
+                    "note: {} has no manifest.json; using the builtin manifest \
+                     (reference backend only — run `make artifacts` for PJRT)",
+                    dir_buf.display()
+                );
+            });
+            Ok(Artifacts { dir: dir_buf, manifest: builtin_manifest() })
+        }
+    }
+
+    /// The compiled-in manifest rooted at [`default_dir`].
+    pub fn builtin() -> Artifacts {
+        Artifacts { dir: default_dir(), manifest: builtin_manifest() }
+    }
+
     /// Names of all presets in the manifest.
     pub fn preset_names(&self) -> Result<Vec<String>> {
         Ok(self.manifest.get("presets")?.as_obj()?.keys().cloned().collect())
@@ -140,6 +185,10 @@ pub fn default_dir() -> PathBuf {
     std::env::var_os("RINGMASTER_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn builtin_manifest() -> Json {
+    jsonx::parse(BUILTIN_MANIFEST).expect("embedded artifacts/manifest.json is valid JSON")
 }
 
 #[cfg(test)]
@@ -212,5 +261,41 @@ mod tests {
         let a = Artifacts::load(&d).unwrap();
         let err = a.preset("huge").unwrap_err().to_string();
         assert!(err.contains("tiny"), "{err}");
+    }
+
+    #[test]
+    fn builtin_manifest_has_all_presets() {
+        let a = Artifacts::builtin();
+        let mut names = a.preset_names().unwrap();
+        names.sort();
+        assert_eq!(names, vec!["base", "small", "tiny"]);
+        for name in ["tiny", "small", "base"] {
+            let p = a.preset(name).unwrap();
+            assert_eq!(p.tokens_per_step, p.batch * p.seq_len, "{name}");
+            let last = p.layout.last().unwrap();
+            assert_eq!(last.offset + last.size(), p.n_params, "{name} layout");
+        }
+    }
+
+    #[test]
+    fn resolve_prefers_on_disk_manifest() {
+        let d = tmpdir("resolve-disk");
+        fake_manifest(&d);
+        let a = Artifacts::resolve(&d).unwrap();
+        // the fake on-disk manifest has a single truncated tiny preset
+        assert_eq!(a.preset("tiny").unwrap().layout.len(), 2);
+        assert!(a.preset("small").is_err());
+    }
+
+    #[test]
+    fn resolve_falls_back_to_builtin() {
+        let d = tmpdir("resolve-builtin");
+        let a = Artifacts::resolve(&d).unwrap();
+        assert_eq!(a.preset("tiny").unwrap().n_params, 117_376);
+        // entry files still resolve against the requested dir (and are
+        // absent, which is what steers backend auto-selection)
+        let p = a.preset("tiny").unwrap();
+        assert!(a.entry_path(&p, "train_step").is_err());
+        assert_eq!(a.dir(), d.as_path());
     }
 }

@@ -1,168 +1,188 @@
-//! PJRT runtime: load AOT artifacts and execute them from rust.
+//! Execution runtime: pluggable backends behind one [`Engine`] facade
+//! (DESIGN.md §6).
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! The interchange format is HLO **text** (see DESIGN.md / aot.py — the
-//! 64-bit-proto-id gotcha).
+//! The trainer asks an `Engine` for exactly four operations — `init`,
+//! `train_step`, `fwd_loss`, `sgd_update` — and the engine dispatches to
+//! an execution [`Backend`]:
 //!
-//! Thread model: `PjRtClient` is `Rc`-backed (`!Send`), so every trainer
-//! worker thread builds its *own* [`Engine`] — own client, own compiled
-//! executables. Compilation cost is paid per (re)start, which is exactly
+//! - [`reference`] — pure-rust forward/backward of the Layer-2 model,
+//!   zero native dependencies; the default, and what CI runs;
+//! - [`pjrt`] (`pjrt` cargo feature) — compiles the AOT HLO-text
+//!   artifacts through the PJRT C API (see DESIGN.md §6.2 / aot.py — the
+//!   64-bit-proto-id gotcha).
+//!
+//! Every trainer worker thread builds its *own* `Engine` (the PJRT client
+//! is `Rc`-backed and `!Send`); per-(re)start construction cost is exactly
 //! the stop/restart overhead the paper measures (~10 s on their testbed;
 //! Table 2 experiment — ours reports the same quantity for our stack).
+//! Backend choice: `RINGMASTER_BACKEND=reference|pjrt`, else automatic
+//! (PJRT only when compiled in and its artifacts exist on disk).
 
+pub mod backend;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
+pub use backend::{Backend, BackendKind};
 pub use manifest::{Artifacts, ParamEntry, PresetSpec};
-
-use std::cell::OnceCell;
-
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+pub use reference::ReferenceBackend;
 
 use crate::Result;
 
-/// A compiled model: the AOT entry points of one preset, on one client.
-///
-/// Entry points compile lazily on first use — a training worker only ever
-/// pays for `train_step` + `sgd_update` (plus `init_params` on a cold
-/// start), which roughly halves the restart cost the paper's rescale math
-/// cares about. `warmup()` forces what a worker will need.
+/// A loaded model preset bound to one execution backend.
 pub struct Engine {
-    client: PjRtClient,
+    backend: Box<dyn Backend>,
     preset: PresetSpec,
-    paths: std::collections::BTreeMap<String, std::path::PathBuf>,
-    train_step: OnceCell<PjRtLoadedExecutable>,
-    fwd_loss: OnceCell<PjRtLoadedExecutable>,
-    sgd_update: OnceCell<PjRtLoadedExecutable>,
-    init_params: OnceCell<PjRtLoadedExecutable>,
 }
 
 impl Engine {
-    /// Create a CPU PJRT client; entries compile on first use.
+    /// Load a preset on the backend selected for this process:
+    /// `RINGMASTER_BACKEND=reference|pjrt` forces one (and failures are
+    /// fatal); otherwise [`BackendKind::auto`] proposes PJRT only when it
+    /// was compiled in and the artifacts exist, and if that construction
+    /// fails (e.g. the offline `xla` API stub is linked, or the native
+    /// libs are absent) the engine falls back to the reference backend
+    /// with a single warning. The auto decision is memoized process-wide:
+    /// every worker thread of a data-parallel job gets the *same* backend
+    /// (mixed backends would break the bit-identical-parameters
+    /// invariant), and a transient PJRT failure after another rank
+    /// succeeded is a hard error, not a silent divergence.
     pub fn load(artifacts: &Artifacts, preset_name: &str) -> Result<Engine> {
+        static AUTO_KIND: std::sync::OnceLock<BackendKind> = std::sync::OnceLock::new();
         let preset = artifacts.preset(preset_name)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        let mut paths = std::collections::BTreeMap::new();
-        for entry in ["train_step", "fwd_loss", "sgd_update", "init_params"] {
-            paths.insert(entry.to_string(), artifacts.entry_path(&preset, entry)?);
+        match std::env::var("RINGMASTER_BACKEND") {
+            Ok(v) if v == "reference" => {
+                Engine::from_preset(artifacts, preset, BackendKind::Reference)
+            }
+            Ok(v) if v == "pjrt" => Engine::from_preset(artifacts, preset, BackendKind::Pjrt),
+            Ok(v) => anyhow::bail!("RINGMASTER_BACKEND={v:?}: want `reference` or `pjrt`"),
+            Err(_) => {
+                if let Some(&kind) = AUTO_KIND.get() {
+                    return Engine::from_preset(artifacts, preset, kind);
+                }
+                match BackendKind::auto(artifacts, &preset) {
+                    BackendKind::Reference => {
+                        let _ = AUTO_KIND.set(BackendKind::Reference);
+                        Engine::from_preset(artifacts, preset, BackendKind::Reference)
+                    }
+                    BackendKind::Pjrt => {
+                        match Engine::from_preset(artifacts, preset.clone(), BackendKind::Pjrt) {
+                            Ok(engine) => match *AUTO_KIND.get_or_init(|| BackendKind::Pjrt) {
+                                BackendKind::Pjrt => Ok(engine),
+                                // another thread already settled on the
+                                // reference backend — stay consistent
+                                BackendKind::Reference => {
+                                    Engine::from_preset(artifacts, preset, BackendKind::Reference)
+                                }
+                            },
+                            Err(e) => {
+                                let decided = *AUTO_KIND.get_or_init(|| {
+                                    eprintln!(
+                                        "warning: PJRT backend unavailable ({e:#}); \
+                                         falling back to the reference backend"
+                                    );
+                                    BackendKind::Reference
+                                });
+                                match decided {
+                                    BackendKind::Reference => Engine::from_preset(
+                                        artifacts,
+                                        preset,
+                                        BackendKind::Reference,
+                                    ),
+                                    // a sibling rank already proved PJRT
+                                    // works — failing here must be fatal
+                                    BackendKind::Pjrt => Err(e),
+                                }
+                            }
+                        }
+                    }
+                }
+            }
         }
-        Ok(Engine {
-            client,
-            preset,
-            paths,
-            train_step: OnceCell::new(),
-            fwd_loss: OnceCell::new(),
-            sgd_update: OnceCell::new(),
-            init_params: OnceCell::new(),
-        })
     }
 
-    fn compile(&self, entry: &str) -> Result<PjRtLoadedExecutable> {
-        let path = &self.paths[entry];
-        let proto = HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {entry}: {e}"))
+    /// Load a preset on an explicit backend (failures are fatal).
+    pub fn load_with(
+        artifacts: &Artifacts,
+        preset_name: &str,
+        kind: BackendKind,
+    ) -> Result<Engine> {
+        let preset = artifacts.preset(preset_name)?;
+        Engine::from_preset(artifacts, preset, kind)
     }
 
-    fn entry<'c>(&self, cell: &'c OnceCell<PjRtLoadedExecutable>, name: &str) -> Result<&'c PjRtLoadedExecutable> {
-        if cell.get().is_none() {
-            let exe = self.compile(name)?;
-            let _ = cell.set(exe);
-        }
-        Ok(cell.get().unwrap())
+    #[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
+    fn from_preset(artifacts: &Artifacts, preset: PresetSpec, kind: BackendKind) -> Result<Engine> {
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Reference => Box::new(ReferenceBackend::new(preset.clone())?),
+            BackendKind::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Box::new(pjrt::PjrtBackend::load(artifacts, &preset)?)
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    anyhow::bail!(
+                        "backend `pjrt` requested but this binary was built without the \
+                         `pjrt` cargo feature — rebuild with `--features pjrt`"
+                    )
+                }
+            }
+        };
+        Ok(Engine { backend, preset })
     }
 
-    /// Compile the training-path entries up front (so the first step's
-    /// latency is not polluted by compilation).
+    /// Pay ahead-of-time costs for the training path (compilation on the
+    /// PJRT backend; a no-op on the reference backend).
     pub fn warmup(&self, fresh_start: bool) -> Result<()> {
-        self.entry(&self.train_step, "train_step")?;
-        self.entry(&self.sgd_update, "sgd_update")?;
-        if fresh_start {
-            self.entry(&self.init_params, "init_params")?;
-        }
-        Ok(())
+        self.backend.warmup(fresh_start)
     }
 
     pub fn preset(&self) -> &PresetSpec {
         &self.preset
     }
 
+    /// Platform label of the active backend (e.g. `"reference-cpu"`).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name().to_string()
     }
 
-    fn run(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
-        let result = exe
-            .execute::<Literal>(args)
-            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
-        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
-    }
-
-    fn tokens_literal(&self, data: &[i32]) -> Result<Literal> {
-        let (b, t) = (self.preset.batch as i64, self.preset.seq_len as i64);
-        anyhow::ensure!(
-            data.len() == (b * t) as usize,
-            "token buffer: want {}x{}, got {}",
-            b,
-            t,
-            data.len()
-        );
-        Literal::vec1(data)
-            .reshape(&[b, t])
-            .map_err(|e| anyhow::anyhow!("reshape tokens: {e}"))
-    }
-
-    /// Deterministic parameter init from a 64-bit seed (threefry inside).
+    /// Deterministic parameter init from a 64-bit seed.
     pub fn init(&self, seed: u64) -> Result<Vec<f32>> {
-        let seed2 = [(seed >> 32) as u32, seed as u32];
-        let out = self.run(self.entry(&self.init_params, "init_params")?, &[Literal::vec1(&seed2[..])])?;
-        let theta = out
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("init returned empty tuple"))?;
-        theta.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
+        let theta = self.backend.init(seed)?;
+        anyhow::ensure!(
+            theta.len() == self.preset.n_params,
+            "backend {} returned {} params, preset wants {}",
+            self.backend.name(),
+            theta.len(),
+            self.preset.n_params
+        );
+        Ok(theta)
     }
 
     /// One local fwd+bwd step: `(loss, grad)` for this worker's shard.
-    pub fn train_step(&self, theta: &[f32], inputs: &[i32], targets: &[i32]) -> Result<(f32, Vec<f32>)> {
+    pub fn train_step(
+        &self,
+        theta: &[f32],
+        inputs: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
         self.check_theta(theta)?;
-        let out = self.run(
-            self.entry(&self.train_step, "train_step")?,
-            &[
-                Literal::vec1(theta),
-                self.tokens_literal(inputs)?,
-                self.tokens_literal(targets)?,
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "train_step: want (loss, grad), got {}", out.len());
-        let mut it = out.into_iter();
-        let loss = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-        let grad = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok((loss[0], grad))
+        self.check_tokens(inputs)?;
+        self.check_tokens(targets)?;
+        self.backend.train_step(theta, inputs, targets)
     }
 
     /// Forward-only loss (eval / Table 1 T_forward profiling).
     pub fn fwd_loss(&self, theta: &[f32], inputs: &[i32], targets: &[i32]) -> Result<f32> {
         self.check_theta(theta)?;
-        let out = self.run(
-            self.entry(&self.fwd_loss, "fwd_loss")?,
-            &[
-                Literal::vec1(theta),
-                self.tokens_literal(inputs)?,
-                self.tokens_literal(targets)?,
-            ],
-        )?;
-        let loss = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok(loss[0])
+        self.check_tokens(inputs)?;
+        self.check_tokens(targets)?;
+        self.backend.fwd_loss(theta, inputs, targets)
     }
 
-    /// Fused SGD+momentum update (Layer-1 Pallas kernel inside).
+    /// Fused SGD+momentum update.
     pub fn sgd_update(
         &self,
         theta: &[f32],
@@ -172,22 +192,14 @@ impl Engine {
         momentum: f32,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         self.check_theta(theta)?;
-        anyhow::ensure!(grad.len() == theta.len() && mu.len() == theta.len(), "shape mismatch");
-        let out = self.run(
-            self.entry(&self.sgd_update, "sgd_update")?,
-            &[
-                Literal::vec1(theta),
-                Literal::vec1(grad),
-                Literal::vec1(mu),
-                Literal::scalar(lr),
-                Literal::scalar(momentum),
-            ],
-        )?;
-        anyhow::ensure!(out.len() == 2, "sgd_update: want (theta, mu)");
-        let mut it = out.into_iter();
-        let theta2 = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-        let mu2 = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
-        Ok((theta2, mu2))
+        anyhow::ensure!(
+            grad.len() == theta.len() && mu.len() == theta.len(),
+            "sgd_update shape mismatch: theta {}, grad {}, mu {}",
+            theta.len(),
+            grad.len(),
+            mu.len()
+        );
+        self.backend.sgd_update(theta, grad, mu, lr, momentum)
     }
 
     fn check_theta(&self, theta: &[f32]) -> Result<()> {
@@ -197,6 +209,27 @@ impl Engine {
             self.preset.n_params,
             theta.len()
         );
+        Ok(())
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        let want = self.preset.batch * self.preset.seq_len;
+        anyhow::ensure!(
+            tokens.len() == want,
+            "token buffer: want {}x{} = {want}, got {}",
+            self.preset.batch,
+            self.preset.seq_len,
+            tokens.len()
+        );
+        // range-check here so every backend rejects bad ids identically
+        // (XLA gather would otherwise silently clamp out-of-range tokens)
+        let vocab = self.preset.vocab as i32;
+        for &tok in tokens {
+            anyhow::ensure!(
+                (0..vocab).contains(&tok),
+                "token {tok} outside vocab [0, {vocab})"
+            );
+        }
         Ok(())
     }
 }

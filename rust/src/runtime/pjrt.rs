@@ -1,0 +1,192 @@
+//! PJRT execution backend (`pjrt` cargo feature): load AOT artifacts and
+//! execute them from rust (DESIGN.md §6.2).
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! The interchange format is HLO **text** (see DESIGN.md §6.2 / aot.py —
+//! the 64-bit-proto-id gotcha). In offline builds the `xla` dependency is
+//! the API stub under `vendor/xla`, which compiles this whole path but
+//! errors at runtime; swap in the registry crate to execute for real.
+//!
+//! Thread model: `PjRtClient` is `Rc`-backed (`!Send`), so every trainer
+//! worker thread builds its *own* backend — own client, own compiled
+//! executables. Compilation cost is paid per (re)start, which is exactly
+//! the stop/restart overhead the paper measures (~10 s on their testbed;
+//! Table 2 experiment — ours reports the same quantity for our stack).
+
+use std::cell::OnceCell;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::backend::Backend;
+use crate::runtime::manifest::{Artifacts, PresetSpec};
+use crate::Result;
+
+/// A compiled model: the AOT entry points of one preset, on one client.
+///
+/// Entry points compile lazily on first use — a training worker only ever
+/// pays for `train_step` + `sgd_update` (plus `init_params` on a cold
+/// start), which roughly halves the restart cost the paper's rescale math
+/// cares about. `warmup()` forces what a worker will need.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    preset: PresetSpec,
+    paths: std::collections::BTreeMap<String, std::path::PathBuf>,
+    train_step: OnceCell<PjRtLoadedExecutable>,
+    fwd_loss: OnceCell<PjRtLoadedExecutable>,
+    sgd_update: OnceCell<PjRtLoadedExecutable>,
+    init_params: OnceCell<PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client; entries compile on first use.
+    pub fn load(artifacts: &Artifacts, preset: &PresetSpec) -> Result<PjrtBackend> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let mut paths = std::collections::BTreeMap::new();
+        for entry in crate::runtime::manifest::ENTRY_POINTS {
+            paths.insert(entry.to_string(), artifacts.entry_path(preset, entry)?);
+        }
+        Ok(PjrtBackend {
+            client,
+            preset: preset.clone(),
+            paths,
+            train_step: OnceCell::new(),
+            fwd_loss: OnceCell::new(),
+            sgd_update: OnceCell::new(),
+            init_params: OnceCell::new(),
+        })
+    }
+
+    fn compile(&self, entry: &str) -> Result<PjRtLoadedExecutable> {
+        let path = &self.paths[entry];
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {entry}: {e}"))
+    }
+
+    fn entry<'c>(
+        &self,
+        cell: &'c OnceCell<PjRtLoadedExecutable>,
+        name: &str,
+    ) -> Result<&'c PjRtLoadedExecutable> {
+        if cell.get().is_none() {
+            let exe = self.compile(name)?;
+            let _ = cell.set(exe);
+        }
+        Ok(cell.get().unwrap())
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[Literal]) -> Result<Vec<Literal>> {
+        let result = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e}"))
+    }
+
+    /// Shape a pre-validated token buffer (the [`Engine`](super::Engine)
+    /// facade owns input validation — see the [`Backend`] contract).
+    fn tokens_literal(&self, data: &[i32]) -> Result<Literal> {
+        let (b, t) = (self.preset.batch as i64, self.preset.seq_len as i64);
+        debug_assert_eq!(data.len(), (b * t) as usize);
+        Literal::vec1(data)
+            .reshape(&[b, t])
+            .map_err(|e| anyhow::anyhow!("reshape tokens: {e}"))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// Compile the training-path entries up front (so the first step's
+    /// latency is not polluted by compilation).
+    fn warmup(&self, fresh_start: bool) -> Result<()> {
+        self.entry(&self.train_step, "train_step")?;
+        self.entry(&self.sgd_update, "sgd_update")?;
+        if fresh_start {
+            self.entry(&self.init_params, "init_params")?;
+        }
+        Ok(())
+    }
+
+    /// Deterministic parameter init from a 64-bit seed (threefry inside).
+    fn init(&self, seed: u64) -> Result<Vec<f32>> {
+        let seed2 = [(seed >> 32) as u32, seed as u32];
+        let out = self.run(
+            self.entry(&self.init_params, "init_params")?,
+            &[Literal::vec1(&seed2[..])],
+        )?;
+        let theta = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("init returned empty tuple"))?;
+        theta.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    fn train_step(
+        &self,
+        theta: &[f32],
+        inputs: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let out = self.run(
+            self.entry(&self.train_step, "train_step")?,
+            &[
+                Literal::vec1(theta),
+                self.tokens_literal(inputs)?,
+                self.tokens_literal(targets)?,
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "train_step: want (loss, grad), got {}", out.len());
+        let mut it = out.into_iter();
+        let loss = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let grad = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok((loss[0], grad))
+    }
+
+    fn fwd_loss(&self, theta: &[f32], inputs: &[i32], targets: &[i32]) -> Result<f32> {
+        let out = self.run(
+            self.entry(&self.fwd_loss, "fwd_loss")?,
+            &[
+                Literal::vec1(theta),
+                self.tokens_literal(inputs)?,
+                self.tokens_literal(targets)?,
+            ],
+        )?;
+        let loss = out[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(loss[0])
+    }
+
+    /// Fused SGD+momentum update (Layer-1 Pallas kernel inside).
+    fn sgd_update(
+        &self,
+        theta: &[f32],
+        grad: &[f32],
+        mu: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.run(
+            self.entry(&self.sgd_update, "sgd_update")?,
+            &[
+                Literal::vec1(theta),
+                Literal::vec1(grad),
+                Literal::vec1(mu),
+                Literal::scalar(lr),
+                Literal::scalar(momentum),
+            ],
+        )?;
+        anyhow::ensure!(out.len() == 2, "sgd_update: want (theta, mu)");
+        let mut it = out.into_iter();
+        let theta2 = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mu2 = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok((theta2, mu2))
+    }
+}

@@ -1,0 +1,739 @@
+//! Pure-rust reference execution backend (DESIGN.md §6.1).
+//!
+//! Implements the Layer-2 model semantics — the decoder-only transformer
+//! of `python/compile/model.py` with the `ref.py` kernel oracles
+//! (layernorm eps 1e-5, tanh-approximate GELU, tied LM head) — directly
+//! over `f32` slices, forward *and* backward, with zero native
+//! dependencies. This is the default [`Backend`]: it makes `train`,
+//! `rescale`, `profile`, every example, and the whole test suite run on a
+//! bare toolchain, while the PJRT backend (`pjrt` feature) executes the
+//! AOT artifacts when its native libs are present.
+//!
+//! Numerics are pinned by `rust/tests/backend_parity.rs` against golden
+//! values produced from `jax.value_and_grad` of the Layer-2 model
+//! (generator: `python/tools/gen_backend_goldens.py`), plus a
+//! finite-difference probe that is independent of any transcription.
+//!
+//! The backward pass is hand-derived (no tape): each op caches exactly
+//! what its gradient needs — layernorm keeps `(x̂, 1/σ)`, attention keeps
+//! the post-softmax weights, the MLP keeps its pre-activation. Shapes
+//! follow the flat-theta layout of `PresetSpec::layout`, so the same
+//! parameter vector moves between this backend, PJRT, checkpoints, and
+//! the all-reduce ring without translation.
+#![allow(clippy::needless_range_loop)]
+
+use crate::runtime::backend::Backend;
+use crate::runtime::manifest::PresetSpec;
+use crate::rngx::Rng;
+use crate::Result;
+
+/// Layernorm epsilon — matches `python/compile/kernels/ref.py::EPS`.
+const EPS: f32 = 1e-5;
+
+/// Offsets of one transformer block's parameters in flat theta.
+struct LayerOffsets {
+    ln1_g: usize,
+    ln1_b: usize,
+    w_qkv: usize,
+    w_proj: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w_mlp1: usize,
+    w_mlp2: usize,
+}
+
+/// Offsets of every parameter in flat theta, resolved once at load.
+struct Offsets {
+    tok_embed: usize,
+    pos_embed: usize,
+    layers: Vec<LayerOffsets>,
+    lnf_g: usize,
+    lnf_b: usize,
+}
+
+/// The default, dependency-free execution backend.
+pub struct ReferenceBackend {
+    spec: PresetSpec,
+    off: Offsets,
+}
+
+impl ReferenceBackend {
+    pub fn new(spec: PresetSpec) -> Result<ReferenceBackend> {
+        let d = spec.d_model;
+        anyhow::ensure!(
+            spec.n_heads > 0 && d % spec.n_heads == 0,
+            "preset {}: d_model {} not divisible by n_heads {}",
+            spec.name,
+            d,
+            spec.n_heads
+        );
+        let need = |name: &str, size: usize| -> Result<usize> {
+            match spec.param_range(name) {
+                Some((s, e)) if e - s == size => Ok(s),
+                Some((s, e)) => anyhow::bail!(
+                    "preset {}: param {name:?} has {} elements in the manifest layout, expected {size}",
+                    spec.name,
+                    e - s
+                ),
+                None => anyhow::bail!(
+                    "preset {}: param {name:?} missing from the manifest layout",
+                    spec.name
+                ),
+            }
+        };
+        let mut layers = Vec::with_capacity(spec.n_layers);
+        for i in 0..spec.n_layers {
+            layers.push(LayerOffsets {
+                ln1_g: need(&format!("l{i}.ln1_g"), d)?,
+                ln1_b: need(&format!("l{i}.ln1_b"), d)?,
+                w_qkv: need(&format!("l{i}.w_qkv"), d * 3 * d)?,
+                w_proj: need(&format!("l{i}.w_proj"), d * d)?,
+                ln2_g: need(&format!("l{i}.ln2_g"), d)?,
+                ln2_b: need(&format!("l{i}.ln2_b"), d)?,
+                w_mlp1: need(&format!("l{i}.w_mlp1"), d * 4 * d)?,
+                w_mlp2: need(&format!("l{i}.w_mlp2"), 4 * d * d)?,
+            });
+        }
+        let off = Offsets {
+            tok_embed: need("tok_embed", spec.vocab * d)?,
+            pos_embed: need("pos_embed", spec.seq_len * d)?,
+            layers,
+            lnf_g: need("lnf_g", d)?,
+            lnf_b: need("lnf_b", d)?,
+        };
+        Ok(ReferenceBackend { spec, off })
+    }
+
+    /// Forward pass over the whole minibatch; caches everything the
+    /// backward pass reads. Tokens are pre-validated (shape and vocab
+    /// range) by the [`Engine`](super::Engine) facade.
+    fn forward(&self, theta: &[f32], inputs: &[i32]) -> Fwd {
+        let (b, t, d, v, heads) = self.dims();
+        let n = b * t;
+        let dh = d / heads;
+        let tok = &theta[self.off.tok_embed..self.off.tok_embed + v * d];
+        let pos = &theta[self.off.pos_embed..self.off.pos_embed + t * d];
+
+        // h = tok_embed[ids] + pos_embed
+        let mut h = vec![0f32; n * d];
+        for r in 0..n {
+            let id = inputs[r] as usize;
+            let ti = r % t;
+            let row = &mut h[r * d..(r + 1) * d];
+            for (c, hv) in row.iter_mut().enumerate() {
+                *hv = tok[id * d + c] + pos[ti * d + c];
+            }
+        }
+
+        let sqrt_dh = (dh as f64).sqrt() as f32;
+        let mut layers = Vec::with_capacity(self.spec.n_layers);
+        for lo in &self.off.layers {
+            let h_in = h;
+            let (a1, xhat1, rstd1) =
+                layernorm_fwd(&h_in, self.p(theta, lo.ln1_g, d), self.p(theta, lo.ln1_b, d), n, d);
+            let qkv = matmul(&a1, self.p(theta, lo.w_qkv, d * 3 * d), n, d, 3 * d);
+
+            // causal multi-head self-attention
+            let mut att = vec![0f32; b * heads * t * t];
+            let mut o = vec![0f32; n * d];
+            for bi in 0..b {
+                for hi in 0..heads {
+                    let q_off = hi * dh;
+                    let k_off = d + hi * dh;
+                    let v_off = 2 * d + hi * dh;
+                    let att_base = ((bi * heads) + hi) * t * t;
+                    for ti in 0..t {
+                        let qrow = &qkv[(bi * t + ti) * 3 * d + q_off..][..dh];
+                        let arow = &mut att[att_base + ti * t..att_base + (ti + 1) * t];
+                        // scores over allowed keys j <= ti
+                        let mut max = f32::NEG_INFINITY;
+                        for (j, av) in arow.iter_mut().enumerate().take(ti + 1) {
+                            let krow = &qkv[(bi * t + j) * 3 * d + k_off..][..dh];
+                            let mut s = 0f32;
+                            for (qv, kv) in qrow.iter().zip(krow) {
+                                s += qv * kv;
+                            }
+                            let s = s / sqrt_dh;
+                            *av = s;
+                            if s > max {
+                                max = s;
+                            }
+                        }
+                        let mut sum = 0f32;
+                        for av in arow.iter_mut().take(ti + 1) {
+                            *av = (*av - max).exp();
+                            sum += *av;
+                        }
+                        let inv = 1.0 / sum;
+                        for av in arow.iter_mut().take(ti + 1) {
+                            *av *= inv;
+                        }
+                        // o[ti] = sum_j att[ti, j] * v[j]
+                        let orow = &mut o[(bi * t + ti) * d + hi * dh..][..dh];
+                        for j in 0..=ti {
+                            let w = arow[j];
+                            let vrow = &qkv[(bi * t + j) * 3 * d + v_off..][..dh];
+                            for (ov, vv) in orow.iter_mut().zip(vrow) {
+                                *ov += w * vv;
+                            }
+                        }
+                    }
+                }
+            }
+
+            let proj = matmul(&o, self.p(theta, lo.w_proj, d * d), n, d, d);
+            let mut h_mid = h_in.clone();
+            add_assign(&mut h_mid, &proj);
+
+            let (a2, xhat2, rstd2) =
+                layernorm_fwd(&h_mid, self.p(theta, lo.ln2_g, d), self.p(theta, lo.ln2_b, d), n, d);
+            let pre = matmul(&a2, self.p(theta, lo.w_mlp1, d * 4 * d), n, d, 4 * d);
+            let ff: Vec<f32> = pre.iter().map(|&x| gelu(x)).collect();
+            let mlp = matmul(&ff, self.p(theta, lo.w_mlp2, 4 * d * d), n, 4 * d, d);
+            let mut h_out = h_mid.clone();
+            add_assign(&mut h_out, &mlp);
+
+            layers.push(LayerCache {
+                xhat1,
+                rstd1,
+                a1,
+                qkv,
+                att,
+                o,
+                xhat2,
+                rstd2,
+                a2,
+                pre,
+                ff,
+            });
+            h = h_out;
+        }
+
+        let lnf_g = self.p(theta, self.off.lnf_g, d);
+        let lnf_b = self.p(theta, self.off.lnf_b, d);
+        let (hf, xhat_f, rstd_f) = layernorm_fwd(&h, lnf_g, lnf_b, n, d);
+        // tied LM head: logits = hf @ tok_embed^T
+        let logits = matmul_nt(&hf, tok, n, d, v);
+        Fwd { layers, xhat_f, rstd_f, hf, logits }
+    }
+
+    /// Mean cross-entropy + d(loss)/d(logits).
+    fn loss_and_dlogits(&self, logits: &[f32], targets: &[i32]) -> (f32, Vec<f32>) {
+        let (b, t, _, v, _) = self.dims();
+        let n = b * t;
+        let inv_n = 1.0 / n as f32;
+        let mut loss_acc = 0f64;
+        let mut dlogits = vec![0f32; n * v];
+        for r in 0..n {
+            let row = &logits[r * v..(r + 1) * v];
+            let mut max = f32::NEG_INFINITY;
+            for &x in row {
+                if x > max {
+                    max = x;
+                }
+            }
+            let mut sum = 0f32;
+            for &x in row {
+                sum += (x - max).exp();
+            }
+            let lse = sum.ln();
+            let tgt = targets[r] as usize;
+            loss_acc += -f64::from(row[tgt] - max - lse);
+            let drow = &mut dlogits[r * v..(r + 1) * v];
+            let inv_sum = 1.0 / sum;
+            for (dv, &x) in drow.iter_mut().zip(row) {
+                *dv = (x - max).exp() * inv_sum * inv_n;
+            }
+            drow[tgt] -= inv_n;
+        }
+        ((loss_acc / n as f64) as f32, dlogits)
+    }
+
+    /// Backward pass: full gradient of the mean loss w.r.t. flat theta.
+    fn backward(&self, theta: &[f32], inputs: &[i32], fwd: &Fwd, dlogits: &[f32]) -> Vec<f32> {
+        let (b, t, d, v, heads) = self.dims();
+        let n = b * t;
+        let dh = d / heads;
+        let sqrt_dh = (dh as f64).sqrt() as f32;
+        let tok = &theta[self.off.tok_embed..self.off.tok_embed + v * d];
+        let mut grad = vec![0f32; self.spec.n_params];
+
+        // tied head: logits = hf @ tok^T
+        // d tok += dlogits^T @ hf ; d hf = dlogits @ tok
+        {
+            let dtok = matmul_tn(dlogits, &fwd.hf, n, v, d);
+            add_assign(&mut grad[self.off.tok_embed..self.off.tok_embed + v * d], &dtok);
+        }
+        let dhf = matmul(dlogits, tok, n, v, d);
+
+        // final layernorm
+        let (mut dhead, dg, db) = layernorm_bwd(
+            &dhf,
+            &fwd.xhat_f,
+            &fwd.rstd_f,
+            self.p(theta, self.off.lnf_g, d),
+            n,
+            d,
+        );
+        add_assign(&mut grad[self.off.lnf_g..self.off.lnf_g + d], &dg);
+        add_assign(&mut grad[self.off.lnf_b..self.off.lnf_b + d], &db);
+
+        for (lo, c) in self.off.layers.iter().zip(&fwd.layers).rev() {
+            // ---- MLP: h_out = h_mid + gelu(a2 @ w1) @ w2 ----------------
+            {
+                let dw2 = matmul_tn(&c.ff, &dhead, n, 4 * d, d);
+                add_assign(&mut grad[lo.w_mlp2..lo.w_mlp2 + 4 * d * d], &dw2);
+            }
+            let dff = matmul_nt(&dhead, self.p(theta, lo.w_mlp2, 4 * d * d), n, d, 4 * d);
+            let dpre: Vec<f32> = dff
+                .iter()
+                .zip(&c.pre)
+                .map(|(&dy, &x)| dy * gelu_grad(x))
+                .collect();
+            {
+                let dw1 = matmul_tn(&c.a2, &dpre, n, d, 4 * d);
+                add_assign(&mut grad[lo.w_mlp1..lo.w_mlp1 + d * 4 * d], &dw1);
+            }
+            let da2 = matmul_nt(&dpre, self.p(theta, lo.w_mlp1, d * 4 * d), n, 4 * d, d);
+            let (dx, dg, db) =
+                layernorm_bwd(&da2, &c.xhat2, &c.rstd2, self.p(theta, lo.ln2_g, d), n, d);
+            add_assign(&mut grad[lo.ln2_g..lo.ln2_g + d], &dg);
+            add_assign(&mut grad[lo.ln2_b..lo.ln2_b + d], &db);
+            add_assign(&mut dhead, &dx);
+
+            // ---- attention: h_mid = h_in + (att · v | heads) @ w_proj ---
+            {
+                let dwp = matmul_tn(&c.o, &dhead, n, d, d);
+                add_assign(&mut grad[lo.w_proj..lo.w_proj + d * d], &dwp);
+            }
+            let do_ = matmul_nt(&dhead, self.p(theta, lo.w_proj, d * d), n, d, d);
+
+            let mut dqkv = vec![0f32; n * 3 * d];
+            let mut ds = vec![0f32; t * t]; // per (batch, head) scratch
+            for bi in 0..b {
+                for hi in 0..heads {
+                    let q_off = hi * dh;
+                    let k_off = d + hi * dh;
+                    let v_off = 2 * d + hi * dh;
+                    let att_base = ((bi * heads) + hi) * t * t;
+                    // ds = att * (datt - rowdot) / sqrt(dh); masked entries
+                    // have att == 0 and stay zero.
+                    for ti in 0..t {
+                        let dorow = &do_[(bi * t + ti) * d + hi * dh..][..dh];
+                        let arow = &c.att[att_base + ti * t..att_base + (ti + 1) * t];
+                        let dsrow = &mut ds[ti * t..(ti + 1) * t];
+                        let mut rowdot = 0f32;
+                        for j in 0..=ti {
+                            let vrow = &c.qkv[(bi * t + j) * 3 * d + v_off..][..dh];
+                            let mut datt = 0f32;
+                            for (ov, vv) in dorow.iter().zip(vrow) {
+                                datt += ov * vv;
+                            }
+                            dsrow[j] = datt;
+                            rowdot += arow[j] * datt;
+                        }
+                        for j in 0..=ti {
+                            dsrow[j] = arow[j] * (dsrow[j] - rowdot) / sqrt_dh;
+                        }
+                    }
+                    for ti in 0..t {
+                        let arow = &c.att[att_base + ti * t..att_base + (ti + 1) * t];
+                        let dorow = &do_[(bi * t + ti) * d + hi * dh..][..dh];
+                        let dsrow = &ds[ti * t..(ti + 1) * t];
+                        // dq[ti] = sum_j ds[ti, j] * k[j]
+                        {
+                            let dqrow_start = (bi * t + ti) * 3 * d + q_off;
+                            for j in 0..=ti {
+                                let w = dsrow[j];
+                                let krow = &c.qkv[(bi * t + j) * 3 * d + k_off..][..dh];
+                                let dqrow = &mut dqkv[dqrow_start..dqrow_start + dh];
+                                for (dv, kv) in dqrow.iter_mut().zip(krow) {
+                                    *dv += w * kv;
+                                }
+                            }
+                        }
+                        // dk[j] += ds[ti, j] * q[ti]; dv[j] += att[ti, j] * do[ti]
+                        let qrow = &c.qkv[(bi * t + ti) * 3 * d + q_off..][..dh];
+                        for j in 0..=ti {
+                            let dsw = dsrow[j];
+                            let aw = arow[j];
+                            let base = (bi * t + j) * 3 * d;
+                            {
+                                let dkrow = &mut dqkv[base + k_off..base + k_off + dh];
+                                for (dv, qv) in dkrow.iter_mut().zip(qrow) {
+                                    *dv += dsw * qv;
+                                }
+                            }
+                            let dvrow = &mut dqkv[base + v_off..base + v_off + dh];
+                            for (dv, ov) in dvrow.iter_mut().zip(dorow) {
+                                *dv += aw * ov;
+                            }
+                        }
+                    }
+                }
+            }
+
+            {
+                let dwq = matmul_tn(&c.a1, &dqkv, n, d, 3 * d);
+                add_assign(&mut grad[lo.w_qkv..lo.w_qkv + d * 3 * d], &dwq);
+            }
+            let da1 = matmul_nt(&dqkv, self.p(theta, lo.w_qkv, d * 3 * d), n, 3 * d, d);
+            let (dx, dg, db) =
+                layernorm_bwd(&da1, &c.xhat1, &c.rstd1, self.p(theta, lo.ln1_g, d), n, d);
+            add_assign(&mut grad[lo.ln1_g..lo.ln1_g + d], &dg);
+            add_assign(&mut grad[lo.ln1_b..lo.ln1_b + d], &db);
+            add_assign(&mut dhead, &dx);
+        }
+
+        // embeddings: h0 = tok_embed[ids] + pos_embed
+        for r in 0..n {
+            let id = inputs[r] as usize;
+            let ti = r % t;
+            let drow = &dhead[r * d..(r + 1) * d];
+            {
+                let start = self.off.tok_embed + id * d;
+                let gtok = &mut grad[start..start + d];
+                for (g, dv) in gtok.iter_mut().zip(drow) {
+                    *g += dv;
+                }
+            }
+            let gpos = &mut grad[self.off.pos_embed + ti * d..self.off.pos_embed + (ti + 1) * d];
+            for (g, dv) in gpos.iter_mut().zip(drow) {
+                *g += dv;
+            }
+        }
+        grad
+    }
+
+    #[inline]
+    fn p<'t>(&self, theta: &'t [f32], off: usize, len: usize) -> &'t [f32] {
+        &theta[off..off + len]
+    }
+
+    fn dims(&self) -> (usize, usize, usize, usize, usize) {
+        let s = &self.spec;
+        (s.batch, s.seq_len, s.d_model, s.vocab, s.n_heads)
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference-cpu"
+    }
+
+    fn warmup(&self, _fresh_start: bool) -> Result<()> {
+        // nothing to compile — that absence *is* this backend's startup
+        // story (the PJRT backend pays per-entry compilation here)
+        Ok(())
+    }
+
+    /// Deterministic scaled-normal init: one forked `rngx` stream per
+    /// layout entry; gains 1, biases 0, `pos_embed` scale 0.01, matrices
+    /// scale 1/sqrt(fan_in) — the shape of `model.py::init_params` under
+    /// the crate's own RNG.
+    fn init(&self, seed: u64) -> Result<Vec<f32>> {
+        let mut theta = vec![0f32; self.spec.n_params];
+        let mut root = Rng::new(seed);
+        for e in &self.spec.layout {
+            let mut r = root.fork();
+            let slice = &mut theta[e.offset..e.offset + e.size()];
+            if e.name.ends_with("_g") {
+                slice.fill(1.0);
+            } else if e.name.ends_with("_b") {
+                slice.fill(0.0);
+            } else {
+                let scale = if e.name == "pos_embed" {
+                    0.01
+                } else {
+                    1.0 / (e.shape[0] as f64).sqrt()
+                };
+                for v in slice.iter_mut() {
+                    *v = (scale * r.normal()) as f32;
+                }
+            }
+        }
+        Ok(theta)
+    }
+
+    fn train_step(
+        &self,
+        theta: &[f32],
+        inputs: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let fwd = self.forward(theta, inputs);
+        let (loss, dlogits) = self.loss_and_dlogits(&fwd.logits, targets);
+        let grad = self.backward(theta, inputs, &fwd, &dlogits);
+        Ok((loss, grad))
+    }
+
+    fn fwd_loss(&self, theta: &[f32], inputs: &[i32], targets: &[i32]) -> Result<f32> {
+        let fwd = self.forward(theta, inputs);
+        let (loss, _) = self.loss_and_dlogits(&fwd.logits, targets);
+        Ok(loss)
+    }
+
+    /// Momentum SGD, the `ref.py::sgd_update_ref` formula exactly:
+    /// `mu' = momentum * mu + grad; theta' = theta - lr * mu'`.
+    fn sgd_update(
+        &self,
+        theta: &[f32],
+        grad: &[f32],
+        mu: &[f32],
+        lr: f32,
+        momentum: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut theta2 = Vec::with_capacity(theta.len());
+        let mut mu2 = Vec::with_capacity(theta.len());
+        for i in 0..theta.len() {
+            let m = momentum * mu[i] + grad[i];
+            mu2.push(m);
+            theta2.push(theta[i] - lr * m);
+        }
+        Ok((theta2, mu2))
+    }
+}
+
+/// Per-layer forward cache (everything the backward pass reads; the
+/// residual-stream values themselves are not needed — their gradient is
+/// the pass-through term of each `h + f(h)` block).
+struct LayerCache {
+    xhat1: Vec<f32>,
+    rstd1: Vec<f32>,
+    a1: Vec<f32>,
+    qkv: Vec<f32>,
+    att: Vec<f32>,
+    o: Vec<f32>,
+    xhat2: Vec<f32>,
+    rstd2: Vec<f32>,
+    a2: Vec<f32>,
+    pre: Vec<f32>,
+    ff: Vec<f32>,
+}
+
+struct Fwd {
+    layers: Vec<LayerCache>,
+    xhat_f: Vec<f32>,
+    rstd_f: Vec<f32>,
+    hf: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+// ---------------------------------------------------------------------
+// f32 tensor helpers (row-major flat slices)
+// ---------------------------------------------------------------------
+
+/// out(m,n) = a(m,k) @ b(k,n)
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                *ov += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out(k,n) = a(m,k)^T @ b(m,n) — weight gradients.
+fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    let mut out = vec![0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (ov, &bv) in orow.iter_mut().zip(brow) {
+                *ov += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out(m,k) = c(m,n) @ b(k,n)^T — activation gradients / tied head.
+fn matmul_nt(c: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0f32; m * k];
+    for i in 0..m {
+        let crow = &c[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (p, ov) in orow.iter_mut().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            let mut s = 0f32;
+            for (&cv, &bv) in crow.iter().zip(brow) {
+                s += cv * bv;
+            }
+            *ov = s;
+        }
+    }
+    out
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Row-wise layernorm; returns `(y, xhat, rstd)`.
+fn layernorm_fwd(
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0f32; rows * d];
+    let mut xhat = vec![0f32; rows * d];
+    let mut rstd = vec![0f32; rows];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xrow = &x[r * d..(r + 1) * d];
+        let mut mean = 0f32;
+        for &v in xrow {
+            mean += v;
+        }
+        mean *= inv_d;
+        let mut var = 0f32;
+        for &v in xrow {
+            let dv = v - mean;
+            var += dv * dv;
+        }
+        var *= inv_d;
+        let rs = 1.0 / (var + EPS).sqrt();
+        rstd[r] = rs;
+        let hrow = &mut xhat[r * d..(r + 1) * d];
+        let yrow = &mut y[r * d..(r + 1) * d];
+        for c in 0..d {
+            let xh = (xrow[c] - mean) * rs;
+            hrow[c] = xh;
+            yrow[c] = xh * g[c] + b[c];
+        }
+    }
+    (y, xhat, rstd)
+}
+
+/// Layernorm backward; returns `(dx, dgain, dbias)`.
+fn layernorm_bwd(
+    dy: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0f32; rows * d];
+    let mut dg = vec![0f32; d];
+    let mut db = vec![0f32; d];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let dyrow = &dy[r * d..(r + 1) * d];
+        let hrow = &xhat[r * d..(r + 1) * d];
+        let mut m1 = 0f32;
+        let mut m2 = 0f32;
+        for c in 0..d {
+            let dyg = dyrow[c] * g[c];
+            m1 += dyg;
+            m2 += dyg * hrow[c];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        let rs = rstd[r];
+        let dxrow = &mut dx[r * d..(r + 1) * d];
+        for c in 0..d {
+            let dyg = dyrow[c] * g[c];
+            dxrow[c] = rs * (dyg - m1 - hrow[c] * m2);
+            dg[c] += dyrow[c] * hrow[c];
+            db[c] += dyrow[c];
+        }
+    }
+    (dx, dg, db)
+}
+
+/// Tanh-approximate GELU (the `jax.nn.gelu` default the model lowers).
+fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    let th = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * du
+}
+
+/// sqrt(2/pi), rounded from the f64 value (matches the numpy mirror).
+const GELU_C: f32 = 0.797_884_560_802_865_4_f64 as f32;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = matmul(&[1., 2., 3., 4.], &[5., 6., 7., 8.], 2, 2, 2);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_transposes_agree() {
+        // A^T @ B via matmul_tn == manual transpose + matmul
+        let a = [1., 2., 3., 4., 5., 6.]; // 3x2
+        let b = [1., 0., 2., 1., 0., 3.]; // 3x2
+        let tn = matmul_tn(&a, &b, 3, 2, 2);
+        let at = [1., 3., 5., 2., 4., 6.]; // 2x3
+        assert_eq!(tn, matmul(&at, &b, 2, 3, 2));
+        // C @ B^T via matmul_nt == matmul against transposed b
+        let c = [1., 2., 3., 4.]; // 2x2
+        let bt = [1., 2., 0., 1.]; // b2 = [[1,0],[2,1]] (2x2), transposed
+        let nt = matmul_nt(&c, &[1., 0., 2., 1.], 2, 2, 2);
+        assert_eq!(nt, matmul(&c, &bt, 2, 2, 2));
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = [1., 2., 3., 4., -2., 0., 2., 4.];
+        let g = [1., 1., 1., 1.];
+        let b = [0., 0., 0., 0.];
+        let (y, _, _) = layernorm_fwd(&x, &g, &b, 2, 4);
+        for r in 0..2 {
+            let row = &y[r * 4..(r + 1) * 4];
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-6, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // gelu(0) = 0; gelu is ~identity for large x, ~0 for very negative
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        // tanh approximation at x = 1: 0.8411919906082768
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -1.0, -0.1, 0.0, 0.5, 2.0] {
+            let h = 1e-3f32;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+}

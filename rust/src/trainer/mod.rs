@@ -1,12 +1,13 @@
 //! Data-parallel training runtime: the Horovod analogue of this repo.
 //!
-//! `w` worker threads each own a full PJRT [`Engine`] (client + compiled
-//! artifacts — `PjRtClient` is `!Send`), train on disjoint shards of the
-//! synthetic corpus, and exchange gradients through the rust
-//! [`collectives`](crate::collectives) ring/dh/bb all-reduce — python is
-//! nowhere on this path. Every worker applies the identical averaged
-//! update, so parameters stay bit-identical across ranks (asserted in
-//! tests) and rank 0's state is the checkpoint.
+//! `w` worker threads each own a full [`Engine`] (execution backend +
+//! preset — the PJRT client is `!Send`, so engines never cross threads),
+//! train on disjoint shards of the synthetic corpus, and exchange
+//! gradients through the rust [`collectives`](crate::collectives)
+//! ring/dh/bb all-reduce — python is nowhere on this path. Every worker
+//! applies the identical averaged update, so parameters stay
+//! bit-identical across ranks (asserted in tests) and rank 0's state is
+//! the checkpoint.
 //!
 //! Rescaling (§6): the coordinator trains in segments — each [`train`]
 //! call runs `run_steps` steps from a [`Checkpoint`] and returns a new
@@ -99,6 +100,9 @@ pub struct TrainReport {
     pub allreduce_msgs: u64,
     pub allreduce_bytes: u64,
     pub algorithm: &'static str,
+    /// Execution-backend label (`Engine::platform`), so reports always
+    /// say which engine produced the numbers (reference vs pjrt).
+    pub backend: String,
     /// Mean per-step phase times on rank 0 (Table 1 decomposition).
     pub mean_step_secs: f64,
     pub mean_allreduce_secs: f64,
@@ -147,12 +151,13 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
             let shmem = shmem_world.rank(rank.rank());
             std::thread::spawn(move || -> Result<WorkerOut> {
                 let startup_t = Instant::now();
-                let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+                let artifacts = Artifacts::resolve(&cfg.artifacts_dir)?;
                 let engine = Engine::load(&artifacts, &cfg.preset)?;
                 // compile only what the training path needs — this is the
                 // dominant share of the stop/restart cost (§6)
                 engine.warmup(theta0.is_none())?;
                 let preset = engine.preset().clone();
+                let backend = engine.platform();
                 let alg = cfg
                     .algorithm
                     .unwrap_or_else(|| collectives::select_algorithm(w, preset.n_params));
@@ -216,6 +221,7 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
                     step_time_sum,
                     ar_time_sum,
                     algorithm: alg.name(),
+                    backend,
                 })
             })
         })
@@ -243,7 +249,7 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
 
     let end_step = start_step + run_steps;
     let preset_tokens = {
-        let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+        let artifacts = Artifacts::resolve(&cfg.artifacts_dir)?;
         artifacts.preset(&cfg.preset)?.tokens_per_step
     };
     let wall = rank0.loop_secs;
@@ -258,6 +264,7 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
         allreduce_msgs: traffic.messages(),
         allreduce_bytes: traffic.bytes(),
         algorithm: rank0.algorithm,
+        backend: rank0.backend.clone(),
         mean_step_secs: rank0.step_time_sum / run_steps.max(1) as f64,
         mean_allreduce_secs: rank0.ar_time_sum / run_steps.max(1) as f64,
     };
@@ -285,9 +292,10 @@ struct WorkerOut {
     step_time_sum: f64,
     ar_time_sum: f64,
     algorithm: &'static str,
+    backend: String,
 }
 
 fn preset_vocab(cfg: &TrainConfig) -> Result<usize> {
-    let artifacts = Artifacts::load(&cfg.artifacts_dir)?;
+    let artifacts = Artifacts::resolve(&cfg.artifacts_dir)?;
     Ok(artifacts.preset(&cfg.preset)?.vocab)
 }

@@ -1,0 +1,102 @@
+//! CLI smoke tests: every subcommand's help path exits 0 and the fast
+//! subcommands actually run on a bare checkout (builtin manifest, no
+//! artifacts, reference backend).
+
+use std::process::Command;
+
+const SUBCOMMANDS: [&str; 6] = ["train", "rescale", "profile", "simulate", "collectives", "fit"];
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_ringmaster"));
+    // pin the backend-selection env so the smoke tests exercise the
+    // bare-checkout path regardless of the invoking shell's exports
+    c.env_remove("RINGMASTER_BACKEND");
+    c.env_remove("RINGMASTER_ARTIFACTS");
+    c
+}
+
+#[test]
+fn global_help_exits_zero_and_lists_subcommands() {
+    for flag in ["help", "--help", "-h"] {
+        let out = bin().arg(flag).output().expect("run binary");
+        assert!(out.status.success(), "`ringmaster {flag}` failed: {out:?}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        for sub in SUBCOMMANDS {
+            assert!(text.contains(sub), "help is missing {sub:?}:\n{text}");
+        }
+    }
+}
+
+#[test]
+fn no_args_prints_help_and_exits_zero() {
+    let out = bin().output().expect("run binary");
+    assert!(out.status.success(), "bare `ringmaster` failed: {out:?}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+}
+
+#[test]
+fn every_subcommand_help_exits_zero() {
+    for sub in SUBCOMMANDS {
+        for flag in ["--help", "-h"] {
+            let out = bin().args([sub, flag]).output().expect("run binary");
+            assert!(out.status.success(), "`ringmaster {sub} {flag}` failed: {out:?}");
+            let text = String::from_utf8_lossy(&out.stdout);
+            assert!(text.contains(sub), "{sub} help doesn't name itself:\n{text}");
+            assert!(text.contains("flags:"), "{sub} help lists no flags:\n{text}");
+        }
+    }
+}
+
+#[test]
+fn unknown_subcommand_exits_nonzero() {
+    let out = bin().arg("frobnicate").output().expect("run binary");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("frobnicate"));
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let out = bin().args(["fit", "--bogus-flag", "1"]).output().expect("run binary");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bogus-flag"));
+}
+
+#[test]
+fn fit_runs_on_bare_checkout() {
+    let out = bin().args(["fit", "--demo"]).output().expect("run binary");
+    assert!(out.status.success(), "fit failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("eq 1 fit") && text.contains("eq 5 fit"), "{text}");
+}
+
+#[test]
+fn collectives_runs_on_bare_checkout() {
+    let out = bin()
+        .args(["collectives", "--workers", "4", "--elems", "1000"])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "collectives failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ring"), "{text}");
+}
+
+#[test]
+fn train_runs_on_bare_checkout_with_reference_backend() {
+    // the full E2E path through the builtin manifest + reference backend:
+    // tiny preset, 1 worker, a handful of steps
+    let out = bin()
+        .args(["train", "--preset", "tiny", "--workers", "1", "--steps", "6", "--log-every", "2"])
+        .output()
+        .expect("run binary");
+    assert!(out.status.success(), "train failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("steps/s"), "{text}");
+    assert!(
+        text.contains("backend=reference-cpu"),
+        "expected the reference backend on a bare checkout:\n{text}"
+    );
+}

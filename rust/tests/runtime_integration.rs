@@ -1,15 +1,20 @@
-//! PJRT runtime over the real AOT artifacts: load, compile, execute,
-//! and verify the numerics end to end (rust side of the L2/L3 contract).
+//! Runtime engine over the tiny preset: load, execute, and verify the
+//! numerics end to end (rust side of the L2/L3 contract).
 //!
-//! Requires `make artifacts` to have produced `artifacts/` with the
-//! `tiny` preset; tests fail with a pointer to that command otherwise.
+//! On a bare checkout this exercises the default reference backend via
+//! the builtin manifest; after `make artifacts` (plus a `pjrt`-featured
+//! build and `RINGMASTER_BACKEND=pjrt`) the same assertions run against
+//! the PJRT execution of the AOT artifacts — the tests are the contract
+//! both backends must meet.
 
 use ringmaster::data::Corpus;
 use ringmaster::runtime::{Artifacts, Engine};
 
 fn artifacts() -> Artifacts {
-    Artifacts::load(env!("CARGO_MANIFEST_DIR").to_string() + "/artifacts")
-        .expect("run `make artifacts` before cargo test")
+    // the repo-root artifacts dir — where `make artifacts` writes the
+    // .hlo.txt files, so a pjrt-featured test run can actually find them
+    Artifacts::resolve(env!("CARGO_MANIFEST_DIR").to_string() + "/../artifacts")
+        .expect("builtin manifest resolves")
 }
 
 fn engine() -> Engine {

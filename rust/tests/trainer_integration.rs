@@ -10,8 +10,10 @@ use ringmaster::coordinator::run_with_rescales;
 use ringmaster::trainer::{train, TrainConfig};
 
 fn cfg(workers: usize) -> TrainConfig {
+    // repo-root artifacts dir (where `make artifacts` writes), so a
+    // pjrt-featured run picks up real artifacts when they exist
     let mut c = TrainConfig::new(
-        env!("CARGO_MANIFEST_DIR").to_string() + "/artifacts",
+        env!("CARGO_MANIFEST_DIR").to_string() + "/../artifacts",
         "tiny",
         workers,
     );

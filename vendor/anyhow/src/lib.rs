@@ -1,0 +1,131 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This workspace must build with no network and no crates.io registry
+//! (DESIGN.md §6.3), so the subset of the `anyhow` API the codebase uses
+//! is reimplemented here as a path dependency: [`Error`], [`Result`], and
+//! the [`anyhow!`], [`bail!`], [`ensure!`] macros. The real crate can be
+//! swapped back in by pointing the `anyhow` dependency at the registry —
+//! no source changes required.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`; that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (the `?` operator) coherent.
+
+use std::fmt;
+
+/// A type-erased error: a message plus an optional source chain, already
+/// rendered to strings.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on real anyhow prints the whole cause chain; our messages
+        // are pre-rendered, so plain and alternate forms coincide.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible result.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing at 7");
+        assert_eq!(format!("{e:#}"), "bad thing at 7");
+        assert_eq!(format!("{e:?}"), "bad thing at 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        assert!(check(-1).unwrap_err().to_string().contains("positive"));
+        assert!(check(200).unwrap_err().to_string().contains("too big"));
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn check() -> Result<()> {
+            let flag = false;
+            ensure!(flag);
+            Ok(())
+        }
+        assert!(check().unwrap_err().to_string().contains("flag"));
+    }
+}

@@ -1,0 +1,129 @@
+//! API stub of the `xla` crate (PJRT C-API bindings).
+//!
+//! The PJRT execution backend (`ringmaster::runtime::pjrt`, behind the
+//! `pjrt` cargo feature) is written against the published `xla` crate,
+//! whose native libraries are not present in the offline build image.
+//! This stub declares the exact API surface that backend uses so the
+//! feature keeps compiling; every runtime entry point returns a clear
+//! error instead of executing. To run real PJRT, point the `xla`
+//! dependency in `rust/Cargo.toml` at the registry crate — the signatures
+//! here match it, so no source changes are needed (DESIGN.md §6.3).
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` (Display-able, carried by results).
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the offline `xla` API stub — native PJRT \
+         is unavailable; depend on the real `xla` crate (and its libs) to \
+         execute AOT artifacts, or use the default reference backend"
+    )))
+}
+
+/// Element types `Literal` buffers can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// Host-side tensor handle.
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        stub_err("Literal::reshape")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        stub_err("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        stub_err("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        stub_err("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation ready to hand to a client for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle (`Rc`-backed in the real crate, hence `!Send`).
+pub struct PjRtClient {
+    // mirror the real crate's !Send so threading bugs surface in CI even
+    // against the stub
+    _not_send: std::rc::Rc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("PjRtClient::compile")
+    }
+}
