@@ -57,6 +57,12 @@ impl Args {
         self.raw(key).unwrap_or(default).to_string()
     }
 
+    /// Optional string flag (`None` when absent) — for flags where the
+    /// empty string is not a usable sentinel, e.g. file paths.
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.raw(key).map(|s| s.to_string())
+    }
+
     /// Required string flag.
     pub fn str_req(&self, key: &str) -> Result<String> {
         self.raw(key)
@@ -136,6 +142,14 @@ mod tests {
         assert_eq!(a.str_or("preset", "small"), "small");
         assert_eq!(a.get_or("workers", 4usize).unwrap(), 4);
         assert!(!a.flag("all"));
+    }
+
+    #[test]
+    fn str_opt_distinguishes_absent_from_present() {
+        let a = args("--trace jobs.jsonl");
+        assert_eq!(a.str_opt("trace").as_deref(), Some("jobs.jsonl"));
+        assert_eq!(a.str_opt("emit-trace"), None);
+        assert!(a.reject_unknown().is_ok()); // both lookups count as consumed
     }
 
     #[test]

@@ -10,12 +10,26 @@
 //!   (eq 5) models online from observed samples, and let the doubling
 //!   heuristic pick the next worker count after every segment.
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::perfmodel::{ConvergenceModel, SpeedModel};
 use crate::scheduler::{doubling::Doubling, JobInfo, Scheduler, Speed};
 use crate::trainer::{train, Checkpoint, TrainConfig, TrainReport};
 use crate::Result;
+
+/// Round-trip a checkpoint through disk — the stop→restart boundary of
+/// §6, shared by [`run_with_rescales`] and the orchestrator's executor.
+/// Uses the atomic save path, removes the file afterwards, and returns
+/// the reloaded checkpoint plus the measured I/O seconds (part of the
+/// restart cost the paper budgets ~10 s for).
+pub fn checkpoint_roundtrip(ck: &Checkpoint, path: &Path) -> Result<(Checkpoint, f64)> {
+    let t = Instant::now();
+    ck.save(path)?;
+    let loaded = Checkpoint::load(path)?;
+    let _ = std::fs::remove_file(path);
+    Ok((loaded, t.elapsed().as_secs_f64()))
+}
 
 /// One executed segment of a coordinated run.
 #[derive(Debug)]
@@ -70,9 +84,7 @@ pub fn run_with_rescales(base: &TrainConfig, plan: &[(usize, u64)]) -> Result<Ru
             Some(prev) => {
                 let path = std::env::temp_dir()
                     .join(format!("ringmaster-rescale-{}-{i}.ckpt", std::process::id()));
-                prev.save(&path)?;
-                let loaded = Checkpoint::load(&path)?;
-                let _ = std::fs::remove_file(&path);
+                let (loaded, _) = checkpoint_roundtrip(&prev, &path)?;
                 Some(loaded)
             }
             None => None,

@@ -10,8 +10,10 @@
 //!   substrate it depends on: MPI-like collectives ([`collectives`]),
 //!   Lawson–Hanson NNLS ([`nnls`]), performance models ([`perfmodel`]),
 //!   scheduling strategies ([`scheduler`]), a discrete-event cluster
-//!   simulator ([`sim`]), and a real data-parallel training runtime
-//!   ([`trainer`], [`coordinator`]) that executes the model through a
+//!   simulator ([`sim`]), a real data-parallel training runtime
+//!   ([`trainer`], [`coordinator`]), and a live multi-job orchestrator
+//!   ([`orchestrator`]) that runs any scheduling strategy as an online
+//!   service over concurrent real trainers; the model executes through a
 //!   pluggable backend ([`runtime`]): a pure-rust reference
 //!   implementation by default, or PJRT execution of the AOT artifacts
 //!   behind the `pjrt` cargo feature.
@@ -30,6 +32,7 @@ pub mod jsonx;
 pub mod linalg;
 pub mod metrics;
 pub mod nnls;
+pub mod orchestrator;
 pub mod perfmodel;
 pub mod rngx;
 pub mod runtime;

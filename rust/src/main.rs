@@ -7,6 +7,7 @@
 //! ringmaster rescale   --preset tiny --plan 4:60,8:60            # Table 2
 //! ringmaster profile   --preset tiny --workers 1,2,4 --steps 10  # Table 1
 //! ringmaster simulate  --contention moderate [--all]             # Table 3
+//! ringmaster orchestrate --strategy doubling --capacity 8        # live multi-job
 //! ringmaster collectives --workers 8 --elems 1000000             # eqs 2-4
 //! ringmaster fit       --demo                                    # eq 1 / eq 5
 //! ```
@@ -15,6 +16,7 @@ use ringmaster::cli::Args;
 use ringmaster::collectives::{self, cost, Algorithm};
 use ringmaster::coordinator;
 use ringmaster::metrics::CsvTable;
+use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
 use ringmaster::perfmodel::{ConvergenceModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
 use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
@@ -25,7 +27,9 @@ fn main() {
     let sub = std::env::args().nth(1).unwrap_or_else(|| "help".to_string());
     let wants_help = std::env::args().skip(2).any(|a| a == "--help" || a == "-h");
     let result = match sub.as_str() {
-        "train" | "rescale" | "profile" | "simulate" | "collectives" | "fit" if wants_help => {
+        "train" | "rescale" | "profile" | "simulate" | "orchestrate" | "collectives" | "fit"
+            if wants_help =>
+        {
             print!("{}", subcommand_help(&sub));
             Ok(())
         }
@@ -33,6 +37,7 @@ fn main() {
         "rescale" => cmd_rescale(),
         "profile" => cmd_profile(),
         "simulate" => cmd_simulate(),
+        "orchestrate" => cmd_orchestrate(),
         "collectives" => cmd_collectives(),
         "fit" => cmd_fit(),
         "help" | "--help" | "-h" => {
@@ -87,6 +92,24 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --all              run all strategies x all contentions\n\
              \x20 --seed S           workload seed (default 42)\n"
         }
+        "orchestrate" => {
+            "ringmaster orchestrate — live multi-job scheduling over real trainers\n\n\
+             flags:\n\
+             \x20 --strategy S       doubling|optimus|exact|fixed-K (default doubling)\n\
+             \x20 --capacity C       cluster worker capacity (default 8)\n\
+             \x20 --trace FILE       JSONL job trace; omit to generate a workload\n\
+             \x20 --jobs N           generated workload size (default 6)\n\
+             \x20 --mean-interarrival S  generated arrival mean secs (default 30; small = burst)\n\
+             \x20 --epochs E         generated per-job epochs (default 1.0)\n\
+             \x20 --max-w W          generated per-job worker cap (default 8)\n\
+             \x20 --emit-trace FILE  write the trace that was run as JSONL\n\
+             \x20 --preset NAME      trainer preset (default tiny)\n\
+             \x20 --segment-steps N  real steps between scheduling decisions (default 16)\n\
+             \x20 --dataset-examples M  windows per epoch (default 256)\n\
+             \x20 --restart-cost S   virtual stop/restart charge (default 10)\n\
+             \x20 --artifacts DIR    artifacts dir\n\
+             \x20 --seed S           workload + trainer seed (default 42)\n"
+        }
         "collectives" => {
             "ringmaster collectives — all-reduce algorithms vs cost models (eqs 2-4)\n\n\
              flags:\n\
@@ -111,6 +134,7 @@ USAGE: ringmaster <subcommand> [flags]
   rescale      run an explicit stop/restart plan (Table 2)
   profile      per-worker-count step timing (Table 1)
   simulate     64-GPU scheduler simulation (Table 3)
+  orchestrate  live multi-job scheduling over real concurrent trainers
   collectives  all-reduce algorithms vs analytic cost models (eqs 2-4)
   fit          demo of the eq 1 / eq 5 NNLS fits
 
@@ -256,6 +280,56 @@ fn cmd_simulate() -> Result<()> {
         }
     }
     print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_orchestrate() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let strategy = a.str_or("strategy", "doubling");
+    let capacity = a.get_or("capacity", 8usize)?;
+    let trace_path = a.str_opt("trace");
+    let n_jobs = a.get_or("jobs", 6usize)?;
+    let mean_interarrival = a.get_or("mean-interarrival", 30.0f64)?;
+    let epochs = a.get_or("epochs", 1.0f64)?;
+    let max_w = a.get_or("max-w", 8usize)?;
+    let emit = a.str_opt("emit-trace");
+    let preset = a.str_or("preset", "tiny");
+    let segment_steps = a.get_or("segment-steps", 16u64)?;
+    let dataset_examples = a.get_or("dataset-examples", 256usize)?;
+    let restart_cost = a.get_or("restart-cost", 10.0f64)?;
+    let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
+    let seed = a.get_or("seed", 42u64)?;
+    a.reject_unknown()?;
+
+    let specs = match &trace_path {
+        Some(path) => orchestrator::load_trace(path)?,
+        None => orchestrator::generate_trace(
+            &TraceGen { n_jobs, mean_interarrival, total_epochs: epochs, max_w },
+            seed,
+        ),
+    };
+    if let Some(emit) = &emit {
+        orchestrator::save_trace(emit, &specs)?;
+        println!("trace ({} jobs) -> {emit}", specs.len());
+    }
+
+    let mut tcfg = TrainConfig::new(artifacts, &preset, 1);
+    tcfg.seed = seed;
+    tcfg.dataset_examples = dataset_examples;
+    tcfg.log_every = u64::MAX; // quiet workers; final losses still recorded
+    let mut cfg = OrchestratorConfig::new(tcfg, capacity);
+    cfg.restart_cost = restart_cost;
+    cfg.segment_steps = segment_steps;
+
+    let scheduler = orchestrator::scheduler_by_name(&strategy)?;
+    println!(
+        "orchestrating {} jobs on {capacity} workers under {} (preset {preset}, seed {seed})...",
+        specs.len(),
+        scheduler.name()
+    );
+    let report = orchestrator::orchestrate(&cfg, scheduler.as_ref(), &specs)?;
+    print!("{}", report.per_job_table().render());
+    println!("{}", report.summary());
     Ok(())
 }
 

@@ -1,0 +1,165 @@
+//! Deterministic event queue over the orchestrator's virtual clock.
+//!
+//! Events are totally ordered by `(time, kind, job)` — arrivals before
+//! segment ends at equal times, ties broken by job id — so an
+//! orchestrated run processes the same event sequence on every execution
+//! with the same inputs, which is what makes the whole run
+//! seed-deterministic even though real trainer threads run concurrently
+//! underneath.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// What happened at an event's virtual time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A job's submission time was reached.
+    Arrival,
+    /// A running segment's virtual end (the real thread is joined when
+    /// this event is processed).
+    SegmentEnd,
+}
+
+/// One scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub kind: EventKind,
+    pub job: u64,
+}
+
+impl Eq for Event {}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| (self.kind as u8).cmp(&(other.kind as u8)))
+            .then_with(|| self.job.cmp(&other.job))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-queue of events; `pop_batch` drains every event sharing the
+/// earliest time so the scheduler reallocates once per distinct instant
+/// (all capacity freed at that instant is pooled before any decision).
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        debug_assert!(ev.time.is_finite(), "non-finite event time");
+        self.heap.push(Reverse(ev));
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Pop all events at the earliest queued time, in deterministic
+    /// order; `None` when the queue is empty.
+    pub fn pop_batch(&mut self) -> Option<(f64, Vec<Event>)> {
+        let Reverse(first) = self.heap.pop()?;
+        let mut batch = vec![first];
+        while let Some(&Reverse(next)) = self.heap.peek() {
+            if next.time.total_cmp(&first.time) == Ordering::Equal {
+                let Reverse(ev) = self.heap.pop().unwrap();
+                batch.push(ev);
+            } else {
+                break;
+            }
+        }
+        Some((first.time, batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, kind: EventKind, job: u64) -> Event {
+        Event { time, kind, job }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(5.0, EventKind::SegmentEnd, 1));
+        q.push(ev(1.0, EventKind::Arrival, 2));
+        q.push(ev(3.0, EventKind::Arrival, 3));
+        let (t1, b1) = q.pop_batch().unwrap();
+        assert_eq!((t1, b1[0].job), (1.0, 2));
+        let (t2, _) = q.pop_batch().unwrap();
+        assert_eq!(t2, 3.0);
+        let (t3, _) = q.pop_batch().unwrap();
+        assert_eq!(t3, 5.0);
+        assert!(q.pop_batch().is_none());
+    }
+
+    #[test]
+    fn equal_times_batch_together_arrivals_first() {
+        let mut q = EventQueue::new();
+        q.push(ev(2.0, EventKind::SegmentEnd, 9));
+        q.push(ev(2.0, EventKind::Arrival, 4));
+        q.push(ev(2.0, EventKind::SegmentEnd, 3));
+        q.push(ev(2.0, EventKind::Arrival, 7));
+        let (t, batch) = q.pop_batch().unwrap();
+        assert_eq!(t, 2.0);
+        let shape: Vec<(EventKind, u64)> = batch.iter().map(|e| (e.kind, e.job)).collect();
+        assert_eq!(
+            shape,
+            vec![
+                (EventKind::Arrival, 4),
+                (EventKind::Arrival, 7),
+                (EventKind::SegmentEnd, 3),
+                (EventKind::SegmentEnd, 9),
+            ]
+        );
+    }
+
+    #[test]
+    fn deterministic_across_insertion_orders() {
+        let evs = [
+            ev(1.0, EventKind::Arrival, 1),
+            ev(1.0, EventKind::SegmentEnd, 2),
+            ev(2.0, EventKind::Arrival, 3),
+            ev(1.0, EventKind::Arrival, 0),
+        ];
+        let drain = |order: &[usize]| -> Vec<(u64, f64)> {
+            let mut q = EventQueue::new();
+            for &i in order {
+                q.push(evs[i]);
+            }
+            let mut out = Vec::new();
+            while let Some((t, batch)) = q.pop_batch() {
+                for e in batch {
+                    out.push((e.job, t));
+                }
+            }
+            out
+        };
+        assert_eq!(drain(&[0, 1, 2, 3]), drain(&[3, 2, 1, 0]));
+        assert_eq!(drain(&[0, 1, 2, 3]), drain(&[2, 0, 3, 1]));
+    }
+}

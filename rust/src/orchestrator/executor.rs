@@ -1,0 +1,171 @@
+//! Segment execution: one real `trainer::train` call per segment, run on
+//! a detached runner thread so many jobs' segments train concurrently
+//! while the event loop stays single-threaded and deterministic.
+//!
+//! Reallocation boundaries take the paper's stop→checkpoint→restart path
+//! for real: the checkpoint is round-tripped through disk (atomic save +
+//! load) before the trainer restarts at the new worker count, and eq 7's
+//! LR rescaling happens structurally inside the trainer (`base·w`
+//! schedule). Same-width boundaries resume from the in-memory checkpoint
+//! — the job was not stopped, only observed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::time::Instant;
+
+use crate::coordinator::checkpoint_roundtrip;
+use crate::trainer::{train, Checkpoint, TrainConfig};
+use crate::Result;
+
+/// Everything a runner thread needs to execute one training segment.
+pub struct SegmentPlan {
+    pub job: u64,
+    pub workers: usize,
+    pub steps: u64,
+    /// Checkpoint to resume from (None = cold start).
+    pub resume: Option<Checkpoint>,
+    /// Round-trip the checkpoint through disk before training — the
+    /// stop→restart path, taken when the worker count changed.
+    pub restart_from_disk: bool,
+    /// Trainer config with `workers` already set for this segment.
+    pub config: TrainConfig,
+}
+
+/// What a finished segment reports back to the event loop.
+pub struct SegmentOutcome {
+    pub job: u64,
+    pub workers: usize,
+    pub steps: u64,
+    /// Rank 0 state after the segment (cumulative step/epoch counters).
+    pub checkpoint: Checkpoint,
+    pub final_loss: Option<f32>,
+    /// Measured wall seconds of the `train` call.
+    pub train_secs: f64,
+    /// Measured engine client+compile seconds (max across workers).
+    pub startup_secs: f64,
+    /// Measured checkpoint save+load seconds (0 unless restarted).
+    pub ckpt_io_secs: f64,
+}
+
+/// Launch the segment on a detached thread. The returned receiver yields
+/// exactly one message when the segment's real training completes; the
+/// event loop joins it when the segment's *virtual* end event fires.
+pub fn spawn_segment(plan: SegmentPlan) -> Receiver<Result<SegmentOutcome>> {
+    let (tx, rx) = channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(run_segment(plan));
+    });
+    rx
+}
+
+fn run_segment(plan: SegmentPlan) -> Result<SegmentOutcome> {
+    let SegmentPlan { job, workers, steps, resume, restart_from_disk, config } = plan;
+    anyhow::ensure!(config.workers == workers, "segment plan worker mismatch");
+
+    // Process-unique nonce: concurrent orchestrations in one process
+    // (e.g. parallel tests) must never share a round-trip path.
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+
+    let mut ckpt_io_secs = 0.0;
+    let resume = match resume {
+        Some(ck) if restart_from_disk => {
+            let path = std::env::temp_dir().join(format!(
+                "ringmaster-orch-{}-{}-job{job}.ckpt",
+                std::process::id(),
+                NONCE.fetch_add(1, Ordering::Relaxed)
+            ));
+            let (loaded, io_secs) = checkpoint_roundtrip(&ck, &path)?;
+            ckpt_io_secs = io_secs;
+            Some(loaded)
+        }
+        other => other,
+    };
+
+    let t = Instant::now();
+    let (checkpoint, report) = train(&config, resume, steps)?;
+    Ok(SegmentOutcome {
+        job,
+        workers,
+        steps,
+        checkpoint,
+        final_loss: report.logs.last().map(|l| l.loss),
+        train_secs: t.elapsed().as_secs_f64(),
+        startup_secs: report.startup_secs,
+        ckpt_io_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(workers: usize) -> TrainConfig {
+        let mut c = TrainConfig::new(
+            env!("CARGO_MANIFEST_DIR").to_string() + "/../artifacts",
+            "tiny",
+            workers,
+        );
+        c.dataset_examples = 128;
+        c.log_every = u64::MAX;
+        c
+    }
+
+    #[test]
+    fn runs_a_cold_segment_and_reports() {
+        let rx = spawn_segment(SegmentPlan {
+            job: 7,
+            workers: 1,
+            steps: 4,
+            resume: None,
+            restart_from_disk: false,
+            config: cfg(1),
+        });
+        let out = rx.recv().expect("runner alive").expect("segment ok");
+        assert_eq!(out.job, 7);
+        assert_eq!(out.steps, 4);
+        assert_eq!(out.checkpoint.step, 4);
+        assert!(out.checkpoint.epochs > 0.0);
+        assert!(out.final_loss.is_some());
+        assert_eq!(out.ckpt_io_secs, 0.0);
+    }
+
+    #[test]
+    fn rescale_segment_roundtrips_checkpoint_through_disk() {
+        let rx = spawn_segment(SegmentPlan {
+            job: 8,
+            workers: 1,
+            steps: 3,
+            resume: None,
+            restart_from_disk: false,
+            config: cfg(1),
+        });
+        let first = rx.recv().unwrap().unwrap();
+        let rx = spawn_segment(SegmentPlan {
+            job: 8,
+            workers: 2,
+            steps: 3,
+            resume: Some(first.checkpoint.clone()),
+            restart_from_disk: true,
+            config: cfg(2),
+        });
+        let second = rx.recv().unwrap().unwrap();
+        assert_eq!(second.checkpoint.step, 6);
+        assert!(second.ckpt_io_secs > 0.0, "disk round trip not measured");
+        assert_eq!(second.checkpoint.workers, 2);
+        // eq 7 structurally: LR at the new width is base * w
+        assert!(second.checkpoint.lr > first.checkpoint.lr);
+    }
+
+    #[test]
+    fn mismatched_worker_plan_is_rejected() {
+        let rx = spawn_segment(SegmentPlan {
+            job: 9,
+            workers: 2,
+            steps: 1,
+            resume: None,
+            restart_from_disk: false,
+            config: cfg(1), // says 1 worker
+        });
+        assert!(rx.recv().unwrap().is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! Job registry substrate: specs, the lifecycle state machine, and the
+//! per-job accounting the orchestrator keeps while jobs move through it.
+//!
+//! States follow the paper's operational story: a job is submitted
+//! (`Pending` until its arrival time), waits for workers (`Queued`),
+//! trains a segment on real worker threads (`Running`), is stopped at a
+//! segment boundary holding a checkpoint (`Preempted`), and eventually
+//! completes (`Done`). Every transition is validated — an illegal edge is
+//! an orchestrator bug, not a recoverable condition, so it surfaces as an
+//! error immediately.
+
+use std::sync::mpsc::Receiver;
+
+use super::executor::SegmentOutcome;
+use crate::sim::workload::JobProfile;
+use crate::trainer::Checkpoint;
+use crate::Result;
+
+/// What the orchestrator is told about one submitted job — one row of a
+/// JSONL trace, or one draw from the workload generator. The profile's
+/// `epoch_secs` table is the precompute-strategy assumption of §4: the
+/// resource-to-speed model is known at submission.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    /// Arrival time, speed table, and epochs-to-converge.
+    pub profile: JobProfile,
+    /// Hard cap on workers for this job (paper: 8).
+    pub max_w: usize,
+}
+
+impl JobSpec {
+    pub fn from_profile(id: u64, profile: JobProfile, max_w: usize) -> JobSpec {
+        JobSpec { id, profile, max_w }
+    }
+}
+
+/// Lifecycle of one job inside the orchestrator.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    /// Submitted but the virtual clock is before its arrival time.
+    Pending,
+    /// Arrived and waiting for its first allocation.
+    Queued,
+    /// A training segment is in flight on real worker threads.
+    Running { workers: usize },
+    /// Stopped at a segment boundary (checkpoint held), awaiting workers.
+    Preempted,
+    /// Finished; `finish` is the virtual completion time.
+    Done { finish: f64 },
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Pending => "pending",
+            JobState::Queued => "queued",
+            JobState::Running { .. } => "running",
+            JobState::Preempted => "preempted",
+            JobState::Done { .. } => "done",
+        }
+    }
+}
+
+/// One registered job: spec, lifecycle state, the in-memory checkpoint
+/// between segments, and metric accumulators.
+pub struct Job {
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Worker count of the most recently finished segment (0 = never ran).
+    pub last_w: usize,
+    /// Cumulative training progress (trainer accounting: steps·batch·w/M).
+    pub epochs_done: f64,
+    pub steps_done: u64,
+    /// Checkpoint held between segments (rank 0 state).
+    pub checkpoint: Option<Checkpoint>,
+    /// Receiver for the in-flight segment's outcome.
+    pub inflight: Option<Receiver<Result<SegmentOutcome>>>,
+    /// Virtual time of the most recent segment end; a relaunch at the
+    /// same width at exactly this instant is a continuation (the job was
+    /// never stopped), anything else is a real stop→restart.
+    pub boundary_time: Option<f64>,
+    /// Whether the in-flight segment took the restart path (its measured
+    /// startup counts as restart overhead; continuations' startup is an
+    /// artifact of segment-wise execution and is excluded).
+    pub last_segment_restarted: bool,
+    // ---- metrics ----
+    pub first_start: Option<f64>,
+    pub segments: u64,
+    /// Cold starts + worker-count changes (each pays the restart cost).
+    pub restarts: u64,
+    /// Virtual seconds charged for restarts.
+    pub virtual_restart_secs: f64,
+    /// Measured seconds: checkpoint disk round-trips + engine startup.
+    pub measured_restart_secs: f64,
+    /// Measured wall seconds spent inside `trainer::train`.
+    pub measured_train_secs: f64,
+    pub final_loss: Option<f32>,
+    pub max_w_granted: usize,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec) -> Job {
+        Job {
+            spec,
+            state: JobState::Pending,
+            last_w: 0,
+            epochs_done: 0.0,
+            steps_done: 0,
+            checkpoint: None,
+            inflight: None,
+            boundary_time: None,
+            last_segment_restarted: false,
+            first_start: None,
+            segments: 0,
+            restarts: 0,
+            virtual_restart_secs: 0.0,
+            measured_restart_secs: 0.0,
+            measured_train_secs: 0.0,
+            final_loss: None,
+            max_w_granted: 0,
+        }
+    }
+
+    /// Epochs left until this job's convergence target.
+    pub fn remaining_epochs(&self) -> f64 {
+        (self.spec.profile.total_epochs - self.epochs_done).max(0.0)
+    }
+
+    /// True for states the scheduler may hand workers to.
+    pub fn is_schedulable(&self) -> bool {
+        matches!(self.state, JobState::Queued | JobState::Preempted)
+    }
+
+    /// Validated state-machine edge. Legal edges:
+    /// `Pending→Queued`, `Queued→Running`, `Preempted→Running`,
+    /// `Running→Preempted`, `Running→Done`.
+    pub fn transition(&mut self, to: JobState) -> Result<()> {
+        let legal = matches!(
+            (&self.state, &to),
+            (JobState::Pending, JobState::Queued)
+                | (JobState::Queued, JobState::Running { .. })
+                | (JobState::Preempted, JobState::Running { .. })
+                | (JobState::Running { .. }, JobState::Preempted)
+                | (JobState::Running { .. }, JobState::Done { .. })
+        );
+        anyhow::ensure!(
+            legal,
+            "job {}: illegal lifecycle transition {} -> {}",
+            self.spec.id,
+            self.state.name(),
+            to.name()
+        );
+        self.state = to;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u64) -> JobSpec {
+        JobSpec {
+            id,
+            profile: JobProfile {
+                arrival: 0.0,
+                epoch_secs: vec![(1, 138.0), (2, 81.9), (4, 47.3), (8, 29.6)],
+                total_epochs: 2.0,
+            },
+            max_w: 8,
+        }
+    }
+
+    #[test]
+    fn full_lifecycle_is_legal() {
+        let mut j = Job::new(spec(1));
+        assert_eq!(j.state, JobState::Pending);
+        j.transition(JobState::Queued).unwrap();
+        assert!(j.is_schedulable());
+        j.transition(JobState::Running { workers: 2 }).unwrap();
+        assert!(!j.is_schedulable());
+        j.transition(JobState::Preempted).unwrap();
+        assert!(j.is_schedulable());
+        j.transition(JobState::Running { workers: 4 }).unwrap();
+        j.transition(JobState::Done { finish: 10.0 }).unwrap();
+    }
+
+    #[test]
+    fn illegal_edges_error() {
+        let mut j = Job::new(spec(1));
+        assert!(j.transition(JobState::Running { workers: 1 }).is_err());
+        assert!(j.transition(JobState::Done { finish: 0.0 }).is_err());
+        j.transition(JobState::Queued).unwrap();
+        assert!(j.transition(JobState::Preempted).is_err());
+        j.transition(JobState::Running { workers: 1 }).unwrap();
+        assert!(j.transition(JobState::Queued).is_err());
+        j.transition(JobState::Done { finish: 1.0 }).unwrap();
+        assert!(j.transition(JobState::Running { workers: 1 }).is_err());
+    }
+
+    #[test]
+    fn remaining_epochs_clamps_at_zero() {
+        let mut j = Job::new(spec(1));
+        assert!((j.remaining_epochs() - 2.0).abs() < 1e-12);
+        j.epochs_done = 1.5;
+        assert!((j.remaining_epochs() - 0.5).abs() < 1e-12);
+        j.epochs_done = 2.5; // overshoot from discrete steps
+        assert_eq!(j.remaining_epochs(), 0.0);
+    }
+}

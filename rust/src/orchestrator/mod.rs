@@ -1,0 +1,479 @@
+//! Live multi-job orchestrator: the doubling scheduler as an *online
+//! service* over a stream of arriving jobs, executed against real
+//! concurrent trainers.
+//!
+//! This is the piece that closes the gap between the two halves of the
+//! repo: the DES ([`crate::sim`]) reaches the paper's Table-3 result but
+//! never trains anything, while the coordinator
+//! ([`crate::coordinator`]) drives the real trainer but only one job at
+//! a time. The orchestrator owns a shared worker pool, admits jobs from
+//! a JSONL trace ([`trace`]) or the paper-calibrated generators, and
+//! runs every admitted job as a real in-process trainer
+//! ([`crate::trainer`]) — many jobs training concurrently on real
+//! worker threads, gradients moving through the real all-reduce.
+//!
+//! **Two clocks.** Real training wall time on a shared CPU says nothing
+//! about a 64-GPU cluster, so the orchestrator separates execution from
+//! accounting: segments *execute* for real (real parameters, real
+//! checkpoints, real eq-7 LR rescaling), while scheduling and metrics
+//! advance on a *virtual* clock where a segment of `e` epochs at `w`
+//! workers costs `e · secs_per_epoch(w)` from the job's profile, plus
+//! the §6 restart charge whenever the worker count changes. Every
+//! decision is a pure function of trace + seed, so an orchestrated run
+//! is deterministic end to end (asserted in tests) even though runner
+//! threads race underneath — the event loop orders segment completions
+//! by virtual time and joins each real thread only when its virtual end
+//! event fires.
+//!
+//! **Decision points.** The configured [`Scheduler`] (doubling, optimus,
+//! exact, fixed-k) runs after every event batch — arrival, finish, or
+//! segment boundary — over the jobs that are actually stoppable: queued
+//! jobs and jobs parked at a boundary. Workers committed to in-flight
+//! segments are not available (a real cluster cannot preempt a Horovod
+//! job mid-step; it stops it at the next boundary), which is the honest
+//! live version of the DES's instant global reallocation — the measured
+//! gap between the two is the boundary-granularity cost, and the
+//! sim-vs-real experiment in EXPERIMENTS.md quantifies it.
+//!
+//! Reallocation executes the paper's mechanism for real: stop, atomic
+//! checkpoint to disk, reload, restart the trainer at the new width with
+//! eq 7's LR rescaling applied structurally by the `base·w` schedule.
+
+pub mod event;
+pub mod executor;
+pub mod job;
+pub mod report;
+pub mod trace;
+
+pub use job::{Job, JobSpec, JobState};
+pub use report::{JobReport, OrchestratorReport};
+pub use trace::{generate as generate_trace, load_trace, save_trace, TraceGen};
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use event::{Event, EventKind, EventQueue};
+use executor::{spawn_segment, SegmentPlan};
+
+use crate::cluster::{ClusterSpec, ClusterState};
+use crate::runtime::Artifacts;
+use crate::scheduler::{total_allocated, JobInfo, Scheduler, Speed};
+use crate::trainer::TrainConfig;
+use crate::Result;
+
+/// Progress below this epoch remainder counts as converged.
+const EPOCH_EPS: f64 = 1e-9;
+
+/// Configuration of one orchestrated run.
+#[derive(Clone, Debug)]
+pub struct OrchestratorConfig {
+    /// Cluster worker capacity shared by all jobs.
+    pub capacity: usize,
+    /// Virtual seconds charged whenever a job (re)starts with a new
+    /// worker count (§6: stop/checkpoint/restart ≈ 10 s).
+    pub restart_cost: f64,
+    /// Real trainer steps per segment between scheduling decisions.
+    pub segment_steps: u64,
+    /// Trainer template; per-segment copies get `workers` set and the
+    /// seed mixed with the job id (distinct corpora per job).
+    pub train: TrainConfig,
+}
+
+impl OrchestratorConfig {
+    pub fn new(train: TrainConfig, capacity: usize) -> OrchestratorConfig {
+        OrchestratorConfig { capacity, restart_cost: 10.0, segment_steps: 16, train }
+    }
+}
+
+/// Resolve a strategy name to a scheduler:
+/// `doubling | optimus | exact | fixed-K`.
+pub fn scheduler_by_name(name: &str) -> Result<Box<dyn Scheduler>> {
+    use crate::scheduler::{doubling::Doubling, exact::ExactDp, fixed::Fixed, optimus::OptimusGreedy};
+    Ok(match name {
+        "doubling" | "precompute" => Box::new(Doubling),
+        "optimus" | "greedy" => Box::new(OptimusGreedy),
+        "exact" => Box::new(ExactDp),
+        other => match other.strip_prefix("fixed-") {
+            Some(k) => {
+                let k: usize =
+                    k.parse().map_err(|e| anyhow::anyhow!("strategy {other:?}: {e}"))?;
+                anyhow::ensure!(k >= 1, "strategy {other:?}: k must be >= 1");
+                Box::new(Fixed(k))
+            }
+            None => anyhow::bail!(
+                "unknown strategy {other:?}: want doubling|optimus|exact|fixed-K"
+            ),
+        },
+    })
+}
+
+/// Run the full workload to completion under `scheduler`; returns the
+/// per-job and cluster metrics. Errors if any job can never be placed.
+pub fn orchestrate(
+    cfg: &OrchestratorConfig,
+    scheduler: &dyn Scheduler,
+    specs: &[JobSpec],
+) -> Result<OrchestratorReport> {
+    Orchestrator::new(cfg, specs)?.run(scheduler)
+}
+
+struct Orchestrator {
+    cfg: OrchestratorConfig,
+    /// Preset batch size (the epochs-per-step arithmetic shared with the
+    /// trainer: one step advances `batch·w / dataset_examples` epochs).
+    batch: usize,
+    jobs: Vec<Job>,
+    /// Spec id -> index into `jobs`.
+    index: BTreeMap<u64, usize>,
+    queue: EventQueue,
+    /// Placement ledger (second line of defense against double-booking).
+    cluster: ClusterState,
+    /// Workers committed to in-flight segments.
+    committed: usize,
+    now: f64,
+    busy_gpu_secs: f64,
+    peak_allocated: usize,
+    total_restarts: u64,
+    events: u64,
+}
+
+impl Orchestrator {
+    fn new(cfg: &OrchestratorConfig, specs: &[JobSpec]) -> Result<Orchestrator> {
+        anyhow::ensure!(cfg.capacity >= 1, "capacity must be >= 1");
+        anyhow::ensure!(cfg.segment_steps >= 1, "segment_steps must be >= 1");
+        anyhow::ensure!(cfg.restart_cost >= 0.0, "restart_cost must be >= 0");
+        anyhow::ensure!(cfg.train.dataset_examples >= 1, "dataset_examples must be >= 1");
+        anyhow::ensure!(!specs.is_empty(), "no jobs to orchestrate");
+
+        let batch = Artifacts::resolve(&cfg.train.artifacts_dir)?
+            .preset(&cfg.train.preset)?
+            .batch;
+
+        let mut jobs = Vec::with_capacity(specs.len());
+        let mut index = BTreeMap::new();
+        let mut queue = EventQueue::new();
+        for spec in specs {
+            anyhow::ensure!(spec.max_w >= 1, "job {}: max_w must be >= 1", spec.id);
+            anyhow::ensure!(
+                spec.profile.arrival.is_finite() && spec.profile.arrival >= 0.0,
+                "job {}: bad arrival",
+                spec.id
+            );
+            anyhow::ensure!(
+                index.insert(spec.id, jobs.len()).is_none(),
+                "duplicate job id {}",
+                spec.id
+            );
+            queue.push(Event {
+                time: spec.profile.arrival,
+                kind: EventKind::Arrival,
+                job: spec.id,
+            });
+            jobs.push(Job::new(spec.clone()));
+        }
+
+        Ok(Orchestrator {
+            cfg: cfg.clone(),
+            batch,
+            jobs,
+            index,
+            queue,
+            cluster: ClusterState::new(ClusterSpec::new(1, cfg.capacity)),
+            committed: 0,
+            now: 0.0,
+            busy_gpu_secs: 0.0,
+            peak_allocated: 0,
+            total_restarts: 0,
+            events: 0,
+        })
+    }
+
+    fn run(mut self, scheduler: &dyn Scheduler) -> Result<OrchestratorReport> {
+        let wall = Instant::now();
+        while let Some((t, batch)) = self.queue.pop_batch() {
+            self.now = t;
+            for ev in batch {
+                self.events += 1;
+                match ev.kind {
+                    EventKind::Arrival => self.on_arrival(ev.job)?,
+                    EventKind::SegmentEnd => self.on_segment_end(ev.job)?,
+                }
+            }
+            self.reallocate(scheduler)?;
+        }
+
+        let stuck: Vec<u64> = self
+            .jobs
+            .iter()
+            .filter(|j| !matches!(j.state, JobState::Done { .. }))
+            .map(|j| j.spec.id)
+            .collect();
+        anyhow::ensure!(
+            stuck.is_empty(),
+            "orchestration stalled with jobs {stuck:?} unfinished (strategy {:?} can never \
+             place them within capacity {})",
+            scheduler.name(),
+            self.cfg.capacity
+        );
+
+        let mut job_reports = Vec::with_capacity(self.jobs.len());
+        for j in &self.jobs {
+            let finish = match j.state {
+                JobState::Done { finish } => finish,
+                _ => unreachable!("checked above"),
+            };
+            let first_start = j.first_start.expect("done job must have started");
+            job_reports.push(JobReport {
+                id: j.spec.id,
+                arrival: j.spec.profile.arrival,
+                first_start,
+                finish,
+                queue_secs: first_start - j.spec.profile.arrival,
+                jct_secs: finish - j.spec.profile.arrival,
+                segments: j.segments,
+                restarts: j.restarts,
+                virtual_restart_secs: j.virtual_restart_secs,
+                measured_restart_secs: j.measured_restart_secs,
+                measured_train_secs: j.measured_train_secs,
+                steps: j.steps_done,
+                epochs: j.epochs_done,
+                max_w: j.max_w_granted,
+                final_loss: j.final_loss,
+            });
+        }
+
+        let makespan = self.now;
+        Ok(OrchestratorReport {
+            strategy: scheduler.name().to_string(),
+            capacity: self.cfg.capacity,
+            jobs: job_reports,
+            makespan_secs: makespan,
+            utilization: self.busy_gpu_secs / (self.cfg.capacity as f64 * makespan).max(1e-9),
+            peak_allocated: self.peak_allocated,
+            total_restarts: self.total_restarts,
+            events: self.events,
+            wall_secs: wall.elapsed().as_secs_f64(),
+        })
+    }
+
+    fn on_arrival(&mut self, id: u64) -> Result<()> {
+        let idx = self.idx(id)?;
+        self.jobs[idx].transition(JobState::Queued)
+    }
+
+    /// Join the real runner thread for this job's segment (it finished at
+    /// this virtual instant), fold its outcome into the registry, and
+    /// park the job at the boundary (or complete it).
+    fn on_segment_end(&mut self, id: u64) -> Result<()> {
+        let idx = self.idx(id)?;
+        let now = self.now;
+        let job = &mut self.jobs[idx];
+        let workers = match job.state {
+            JobState::Running { workers } => workers,
+            ref other => {
+                anyhow::bail!("job {id}: segment end while {}", other.name())
+            }
+        };
+        let rx = job
+            .inflight
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("job {id}: no in-flight segment"))?;
+        let outcome = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("job {id}: segment runner thread vanished"))??;
+
+        job.epochs_done = outcome.checkpoint.epochs;
+        job.steps_done = outcome.checkpoint.step;
+        job.checkpoint = Some(outcome.checkpoint);
+        job.last_w = workers;
+        job.boundary_time = Some(now);
+        job.measured_train_secs += outcome.train_secs;
+        // Startup is paid on every segment (each is a fresh `train` call)
+        // but only counts as *restart* overhead when the job was actually
+        // stopped — continuations' startup is an execution artifact.
+        if job.last_segment_restarted {
+            job.measured_restart_secs += outcome.ckpt_io_secs + outcome.startup_secs;
+        }
+        if let Some(l) = outcome.final_loss {
+            job.final_loss = Some(l);
+        }
+
+        if job.remaining_epochs() <= EPOCH_EPS {
+            job.transition(JobState::Done { finish: now })?;
+        } else {
+            job.transition(JobState::Preempted)?;
+        }
+        self.committed -= workers;
+        self.cluster.release(id)?;
+        Ok(())
+    }
+
+    /// Invoke the strategy over every stoppable job, then launch the
+    /// granted segments. Workers held by in-flight segments are off the
+    /// table; the hard capacity invariant is re-checked on every launch.
+    fn reallocate(&mut self, scheduler: &dyn Scheduler) -> Result<()> {
+        let mut schedulable: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| self.jobs[i].is_schedulable())
+            .collect();
+        if schedulable.is_empty() {
+            return Ok(());
+        }
+        // FIFO by (arrival, id) — the order every strategy sees.
+        schedulable.sort_by(|&a, &b| {
+            let ja = &self.jobs[a].spec;
+            let jb = &self.jobs[b].spec;
+            ja.profile
+                .arrival
+                .total_cmp(&jb.profile.arrival)
+                .then_with(|| ja.id.cmp(&jb.id))
+        });
+
+        let free = self.cfg.capacity - self.committed;
+        let infos: Vec<JobInfo> = schedulable
+            .iter()
+            .map(|&i| {
+                let j = &self.jobs[i];
+                JobInfo {
+                    id: j.spec.id,
+                    q: j.remaining_epochs().max(1e-6),
+                    speed: Speed::Table(j.spec.profile.speed_table()),
+                    max_w: j.spec.max_w.min(self.cfg.capacity),
+                }
+            })
+            .collect();
+        let alloc = scheduler.allocate(&infos, free);
+        anyhow::ensure!(
+            total_allocated(&alloc) <= free,
+            "scheduler {:?} over-allocated: {} granted, {free} free",
+            scheduler.name(),
+            total_allocated(&alloc)
+        );
+
+        for info in &infos {
+            let w = alloc.get(&info.id).copied().unwrap_or(0);
+            if w > 0 {
+                self.launch(info.id, w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Start one training segment for `id` at `w` workers: charge the §6
+    /// restart cost if the width changed (or cold start), size the
+    /// segment, spawn the real runner thread, and enqueue the segment's
+    /// virtual end event.
+    fn launch(&mut self, id: u64, w: usize) -> Result<()> {
+        anyhow::ensure!(
+            self.committed + w <= self.cfg.capacity,
+            "capacity invariant violated launching job {id}: {} committed + {w} > {}",
+            self.committed,
+            self.cfg.capacity
+        );
+        let idx = self.idx(id)?;
+        self.cluster.place(id, w)?;
+
+        let now = self.now;
+        let restart_cost = self.cfg.restart_cost;
+        let segment_steps = self.cfg.segment_steps;
+        let dataset = self.cfg.train.dataset_examples;
+        let batch = self.batch;
+
+        let mut tcfg = self.cfg.train.clone();
+        tcfg.workers = w;
+        tcfg.seed = self.cfg.train.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+
+        let job = &mut self.jobs[idx];
+        // A segment is a *continuation* (the job was never stopped) only
+        // when it resumes at the same width at the very instant its last
+        // segment ended. Everything else — cold start, width change, or
+        // sitting parked while its workers ran other jobs — is a real
+        // stop→restart and pays the §6 cost, exactly like the DES
+        // (sim/des.rs charges on every `w` transition, including 0→w).
+        let continued = job.last_w == w
+            && job
+                .boundary_time
+                .map(|t| t.to_bits() == now.to_bits())
+                .unwrap_or(false);
+        let pay_restart = !continued;
+
+        // One step advances batch·w/M epochs — identical to the trainer's
+        // own accounting, so virtual progress and real checkpoints agree.
+        let epochs_per_step = (batch * w) as f64 / dataset as f64;
+        let needed = (job.remaining_epochs() / epochs_per_step).ceil().max(1.0) as u64;
+        let steps = needed.min(segment_steps);
+        let seg_epochs = steps as f64 * epochs_per_step;
+        let restart_pay = if pay_restart { restart_cost } else { 0.0 };
+        let duration = restart_pay + seg_epochs * job.spec.profile.secs_per_epoch(w);
+
+        let restart_from_disk = pay_restart && job.checkpoint.is_some();
+        let plan = SegmentPlan {
+            job: id,
+            workers: w,
+            steps,
+            resume: job.checkpoint.take(),
+            restart_from_disk,
+            config: tcfg,
+        };
+        job.transition(JobState::Running { workers: w })?;
+        job.inflight = Some(spawn_segment(plan));
+        job.last_segment_restarted = pay_restart;
+        job.segments += 1;
+        job.max_w_granted = job.max_w_granted.max(w);
+        if job.first_start.is_none() {
+            job.first_start = Some(now);
+        }
+        if pay_restart {
+            job.restarts += 1;
+            job.virtual_restart_secs += restart_pay;
+            self.total_restarts += 1;
+        }
+
+        self.committed += w;
+        self.peak_allocated = self.peak_allocated.max(self.committed);
+        self.busy_gpu_secs += w as f64 * duration;
+        self.queue.push(Event { time: now + duration, kind: EventKind::SegmentEnd, job: id });
+        Ok(())
+    }
+
+    fn idx(&self, id: u64) -> Result<usize> {
+        self.index
+            .get(&id)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheduler_names_resolve() {
+        for (name, want) in [
+            ("doubling", "doubling"),
+            ("precompute", "doubling"),
+            ("optimus", "optimus-greedy"),
+            ("exact", "exact-dp"),
+            ("fixed-4", "fixed-4"),
+            ("fixed-1", "fixed-1"),
+        ] {
+            assert_eq!(scheduler_by_name(name).unwrap().name(), want, "{name}");
+        }
+        assert!(scheduler_by_name("fixed-0").is_err());
+        assert!(scheduler_by_name("fixed-x").is_err());
+        assert!(scheduler_by_name("annealing").is_err());
+    }
+
+    #[test]
+    fn config_validation_catches_nonsense() {
+        let train = TrainConfig::new("artifacts", "tiny", 1);
+        let specs = generate_trace(&TraceGen::default(), 1);
+        let mut cfg = OrchestratorConfig::new(train.clone(), 0);
+        assert!(Orchestrator::new(&cfg, &specs).is_err());
+        cfg.capacity = 4;
+        cfg.segment_steps = 0;
+        assert!(Orchestrator::new(&cfg, &specs).is_err());
+        cfg.segment_steps = 8;
+        assert!(Orchestrator::new(&cfg, &[]).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Per-job and cluster-level metrics of an orchestrated run.
+//!
+//! The per-job table carries the Table-3 statistic (job completion time)
+//! plus the orchestrator-only quantities the DES cannot measure: real
+//! seconds spent in `trainer::train`, measured restart overhead
+//! (checkpoint I/O + engine startup), and the final training loss. The
+//! cluster summary reports average/median JCT, queueing delay,
+//! utilization (busy GPU-seconds over capacity × makespan), and restart
+//! counts — everything the sim-vs-real experiment compares.
+
+use crate::metrics::{quantile, CsvTable};
+
+/// Completed-job metrics (all times in virtual seconds unless noted).
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub id: u64,
+    pub arrival: f64,
+    pub first_start: f64,
+    pub finish: f64,
+    /// Arrival → first workers granted.
+    pub queue_secs: f64,
+    /// Arrival → finish (the Table-3 statistic).
+    pub jct_secs: f64,
+    pub segments: u64,
+    /// Cold start + every worker-count change.
+    pub restarts: u64,
+    pub virtual_restart_secs: f64,
+    /// Real measured checkpoint I/O + engine startup seconds.
+    pub measured_restart_secs: f64,
+    /// Real measured seconds inside `trainer::train`.
+    pub measured_train_secs: f64,
+    pub steps: u64,
+    pub epochs: f64,
+    /// Largest worker count the job ever held.
+    pub max_w: usize,
+    pub final_loss: Option<f32>,
+}
+
+/// Whole-run outcome.
+#[derive(Clone, Debug)]
+pub struct OrchestratorReport {
+    pub strategy: String,
+    pub capacity: usize,
+    pub jobs: Vec<JobReport>,
+    /// Virtual time of the last completion.
+    pub makespan_secs: f64,
+    /// Busy GPU-seconds / (capacity × makespan), in [0, 1].
+    pub utilization: f64,
+    /// Largest number of workers ever simultaneously allocated.
+    pub peak_allocated: usize,
+    pub total_restarts: u64,
+    /// Events processed by the loop (arrivals + segment ends).
+    pub events: u64,
+    /// Real wall seconds of the whole orchestration.
+    pub wall_secs: f64,
+}
+
+impl OrchestratorReport {
+    fn jcts_sorted(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.jobs.iter().map(|j| j.jct_secs).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        v
+    }
+
+    /// Average job completion time in virtual seconds (Table 3's metric).
+    pub fn avg_jct_secs(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.jct_secs).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    pub fn p50_jct_secs(&self) -> f64 {
+        let v = self.jcts_sorted();
+        if v.is_empty() {
+            0.0
+        } else {
+            quantile(&v, 0.5)
+        }
+    }
+
+    pub fn avg_queue_secs(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.queue_secs).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    /// Aligned per-job table (rendered by `ringmaster orchestrate`).
+    pub fn per_job_table(&self) -> CsvTable {
+        let mut t = CsvTable::new(&[
+            "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "steps",
+            "epochs", "train_s(real)", "restart_s(real)", "final_loss",
+        ]);
+        for j in &self.jobs {
+            t.row(&[
+                j.id.to_string(),
+                format!("{:.1}", j.arrival),
+                format!("{:.1}", j.queue_secs),
+                format!("{:.1}", j.jct_secs),
+                j.segments.to_string(),
+                j.restarts.to_string(),
+                j.max_w.to_string(),
+                j.steps.to_string(),
+                format!("{:.2}", j.epochs),
+                format!("{:.2}", j.measured_train_secs),
+                format!("{:.2}", j.measured_restart_secs),
+                j.final_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Multi-line cluster summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "strategy={} capacity={} jobs={} events={}\n\
+             avg JCT {:.1}s  p50 JCT {:.1}s  avg queue {:.1}s  makespan {:.1}s (virtual)\n\
+             utilization {:.1}%  peak workers {}  restarts {}  orchestration wall {:.2}s (real)",
+            self.strategy,
+            self.capacity,
+            self.jobs.len(),
+            self.events,
+            self.avg_jct_secs(),
+            self.p50_jct_secs(),
+            self.avg_queue_secs(),
+            self.makespan_secs,
+            100.0 * self.utilization,
+            self.peak_allocated,
+            self.total_restarts,
+            self.wall_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, arrival: f64, start: f64, finish: f64) -> JobReport {
+        JobReport {
+            id,
+            arrival,
+            first_start: start,
+            finish,
+            queue_secs: start - arrival,
+            jct_secs: finish - arrival,
+            segments: 2,
+            restarts: 1,
+            virtual_restart_secs: 10.0,
+            measured_restart_secs: 0.01,
+            measured_train_secs: 0.5,
+            steps: 32,
+            epochs: 1.0,
+            max_w: 4,
+            final_loss: Some(1.25),
+        }
+    }
+
+    fn report() -> OrchestratorReport {
+        OrchestratorReport {
+            strategy: "doubling".into(),
+            capacity: 8,
+            jobs: vec![job(0, 0.0, 0.0, 100.0), job(1, 0.0, 50.0, 200.0), job(2, 10.0, 60.0, 310.0)],
+            makespan_secs: 310.0,
+            utilization: 0.8,
+            peak_allocated: 8,
+            total_restarts: 3,
+            events: 9,
+            wall_secs: 1.5,
+        }
+    }
+
+    #[test]
+    fn aggregates_are_right() {
+        let r = report();
+        assert!((r.avg_jct_secs() - 200.0).abs() < 1e-9);
+        assert!((r.p50_jct_secs() - 200.0).abs() < 1e-9);
+        assert!((r.avg_queue_secs() - (0.0 + 50.0 + 50.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tables_render_every_job_and_summary_names_the_metrics() {
+        let r = report();
+        let rendered = r.per_job_table().render();
+        for id in ["0", "1", "2"] {
+            assert!(rendered.contains(id));
+        }
+        let s = r.summary();
+        assert!(s.contains("avg JCT") && s.contains("utilization") && s.contains("doubling"));
+    }
+
+    #[test]
+    fn empty_report_does_not_divide_by_zero() {
+        let mut r = report();
+        r.jobs.clear();
+        assert_eq!(r.avg_jct_secs(), 0.0);
+        assert_eq!(r.p50_jct_secs(), 0.0);
+        assert_eq!(r.avg_queue_secs(), 0.0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Job-trace I/O: JSONL submission streams for the orchestrator, plus a
+//! paper-calibrated generator so `ringmaster orchestrate` runs without a
+//! trace file.
+//!
+//! One JSON object per line:
+//!
+//! ```text
+//! {"id":0,"arrival":0.0,"total_epochs":2.0,
+//!  "epoch_secs":[[1,138.0],[2,81.9],[4,47.3],[8,29.6]],"max_w":8}
+//! ```
+//!
+//! `epoch_secs` is the job's true seconds/epoch at each measured worker
+//! count (the precompute-strategy knowledge of §4); `id` and `max_w` are
+//! optional (smallest unclaimed id, and 8, by default). Blank lines and
+//! `#` comments are ignored, so traces can be annotated by hand.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::job::JobSpec;
+use crate::jsonx::{self, Json};
+use crate::rngx::Rng;
+use crate::sim::workload::{JobProfile, WorkloadGen};
+use crate::Result;
+
+/// Serialize a trace as JSONL.
+pub fn save_trace(path: impl AsRef<Path>, specs: &[JobSpec]) -> Result<()> {
+    let mut out = String::new();
+    for s in specs {
+        out.push_str(&spec_to_json(s).dump());
+        out.push('\n');
+    }
+    let path = path.as_ref();
+    std::fs::write(path, out)
+        .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Parse a JSONL trace; jobs come back sorted by `(arrival, id)`.
+/// Lines without an explicit `id` get the smallest ids not claimed by
+/// any explicit one (assigned in line order), so mixing explicit and
+/// defaulted ids never collides.
+pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
+    let mut parsed: Vec<(Option<u64>, JobProfile, usize)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = jsonx::parse(line)
+            .map_err(|e| anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1))?;
+        let row = parse_line(&v)
+            .map_err(|e| anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1))?;
+        parsed.push(row);
+    }
+    anyhow::ensure!(!parsed.is_empty(), "trace {} contains no jobs", path.display());
+
+    let mut taken = BTreeSet::new();
+    for (id, _, _) in &parsed {
+        if let Some(id) = id {
+            anyhow::ensure!(taken.insert(*id), "trace {}: duplicate job id {id}", path.display());
+        }
+    }
+    let mut next_free = 0u64;
+    let mut specs: Vec<JobSpec> = parsed
+        .into_iter()
+        .map(|(id, profile, max_w)| {
+            let id = id.unwrap_or_else(|| {
+                while taken.contains(&next_free) {
+                    next_free += 1;
+                }
+                taken.insert(next_free);
+                next_free
+            });
+            JobSpec { id, profile, max_w }
+        })
+        .collect();
+    specs.sort_by(|a, b| {
+        a.profile
+            .arrival
+            .total_cmp(&b.profile.arrival)
+            .then_with(|| a.id.cmp(&b.id))
+    });
+    Ok(specs)
+}
+
+fn spec_to_json(s: &JobSpec) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(s.id as f64)),
+        ("arrival", Json::num(s.profile.arrival)),
+        ("total_epochs", Json::num(s.profile.total_epochs)),
+        (
+            "epoch_secs",
+            Json::arr(
+                s.profile
+                    .epoch_secs
+                    .iter()
+                    .map(|&(w, secs)| Json::arr(vec![Json::num(w as f64), Json::num(secs)]))
+                    .collect(),
+            ),
+        ),
+        ("max_w", Json::num(s.max_w as f64)),
+    ])
+}
+
+fn parse_line(v: &Json) -> Result<(Option<u64>, JobProfile, usize)> {
+    let id = match v.opt("id") {
+        Some(j) => Some(j.as_usize()? as u64),
+        None => None,
+    };
+    let arrival = v.get("arrival")?.as_f64()?;
+    anyhow::ensure!(arrival.is_finite() && arrival >= 0.0, "bad arrival {arrival}");
+    let total_epochs = v.get("total_epochs")?.as_f64()?;
+    anyhow::ensure!(
+        total_epochs.is_finite() && total_epochs > 0.0,
+        "bad total_epochs {total_epochs}"
+    );
+    let mut epoch_secs = Vec::new();
+    for pair in v.get("epoch_secs")?.as_arr()? {
+        let pair = pair.as_arr()?;
+        anyhow::ensure!(pair.len() == 2, "epoch_secs entries must be [w, secs]");
+        let w = pair[0].as_usize()?;
+        let secs = pair[1].as_f64()?;
+        anyhow::ensure!(w >= 1 && secs.is_finite() && secs > 0.0, "bad epoch_secs entry");
+        epoch_secs.push((w, secs));
+    }
+    anyhow::ensure!(!epoch_secs.is_empty(), "epoch_secs is empty");
+    epoch_secs.sort_by_key(|&(w, _)| w);
+    for pair in epoch_secs.windows(2) {
+        anyhow::ensure!(pair[0].0 != pair[1].0, "duplicate w={} in epoch_secs", pair[0].0);
+    }
+    let max_w = match v.opt("max_w") {
+        Some(j) => j.as_usize()?,
+        None => 8,
+    };
+    anyhow::ensure!(max_w >= 1, "max_w must be >= 1");
+    Ok((id, JobProfile { arrival, epoch_secs, total_epochs }, max_w))
+}
+
+/// Parameters for generated orchestrator workloads — the same
+/// paper-calibrated profiles the simulator uses, with epochs scaled down
+/// so live runs of real trainers finish quickly.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    pub n_jobs: usize,
+    /// Mean exponential inter-arrival seconds; small values = a burst.
+    pub mean_interarrival: f64,
+    /// Per-job total epochs, jittered ±20% (the paper's ~165 epochs would
+    /// mean hours of real training; live runs use a miniature target).
+    pub total_epochs: f64,
+    pub max_w: usize,
+}
+
+impl Default for TraceGen {
+    fn default() -> Self {
+        TraceGen { n_jobs: 6, mean_interarrival: 30.0, total_epochs: 1.0, max_w: 8 }
+    }
+}
+
+/// Deterministically generate a trace from the paper-calibrated workload
+/// generator.
+pub fn generate(gen: &TraceGen, seed: u64) -> Vec<JobSpec> {
+    let profiles = WorkloadGen::default().generate(gen.n_jobs, gen.mean_interarrival, seed);
+    let mut rng = Rng::new(seed ^ 0x0C4E_57A7);
+    profiles
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut p)| {
+            p.total_epochs = (gen.total_epochs * rng.uniform_range(0.8, 1.2)).max(0.05);
+            JobSpec { id: i as u64, profile: p, max_w: gen.max_w }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rm-trace-{tag}-{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let specs = generate(&TraceGen::default(), 7);
+        let p = tmpfile("rt");
+        save_trace(&p, &specs).unwrap();
+        let back = load_trace(&p).unwrap();
+        assert_eq!(back, specs);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn parses_hand_written_lines_with_comments() {
+        let p = tmpfile("hand");
+        std::fs::write(
+            &p,
+            "# two-job burst\n\
+             {\"arrival\": 0.0, \"total_epochs\": 1.5, \"epoch_secs\": [[1, 100.0], [2, 60.0]]}\n\
+             \n\
+             {\"id\": 9, \"arrival\": 5.0, \"total_epochs\": 2.0, \
+              \"epoch_secs\": [[2, 50.0], [1, 90.0]], \"max_w\": 4}\n",
+        )
+        .unwrap();
+        let specs = load_trace(&p).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].id, 0); // default id = smallest unclaimed
+        assert_eq!(specs[0].max_w, 8); // default
+        assert_eq!(specs[1].id, 9);
+        assert_eq!(specs[1].max_w, 4);
+        // epoch_secs sorted by w regardless of file order
+        assert_eq!(specs[1].profile.epoch_secs, vec![(1, 90.0), (2, 50.0)]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn defaulted_ids_skip_explicit_ones() {
+        // explicit id 1 on the first line; the two id-less lines must get
+        // 0 and 2, not collide with 1
+        let p = tmpfile("mixed-ids");
+        std::fs::write(
+            &p,
+            "{\"id\": 1, \"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n\
+             {\"arrival\": 1.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n\
+             {\"arrival\": 2.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n",
+        )
+        .unwrap();
+        let specs = load_trace(&p).unwrap();
+        let ids: Vec<u64> = specs.iter().map(|s| s.id).collect();
+        assert_eq!(ids, vec![1, 0, 2]); // sorted by arrival; ids unique
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_traces() {
+        let cases = [
+            ("", "empty"),
+            ("{\"arrival\": -1.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}", "arrival"),
+            ("{\"arrival\": 0.0, \"total_epochs\": 0.0, \"epoch_secs\": [[1, 10.0]]}", "epochs"),
+            ("{\"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": []}", "no speeds"),
+            ("{\"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0], [1, 9.0]]}", "dup w"),
+            ("not json\n", "garbage"),
+        ];
+        for (i, (doc, tag)) in cases.iter().enumerate() {
+            let p = tmpfile(&format!("bad{i}"));
+            std::fs::write(&p, doc).unwrap();
+            assert!(load_trace(&p).is_err(), "{tag} should fail");
+            let _ = std::fs::remove_file(&p);
+        }
+        // duplicate ids across lines
+        let p = tmpfile("dupid");
+        std::fs::write(
+            &p,
+            "{\"id\": 1, \"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n\
+             {\"id\": 1, \"arrival\": 1.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n",
+        )
+        .unwrap();
+        assert!(load_trace(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_burst_compresses_arrivals() {
+        let gen = TraceGen { n_jobs: 10, mean_interarrival: 1.0, total_epochs: 1.0, max_w: 8 };
+        let a = generate(&gen, 42);
+        let b = generate(&gen, 42);
+        assert_eq!(a, b);
+        assert_ne!(a, generate(&gen, 43));
+        // a 1s-mean process packs 10 arrivals into tens of seconds
+        assert!(a.last().unwrap().profile.arrival < 60.0);
+        for s in &a {
+            assert!(s.profile.total_epochs >= 0.05);
+            assert_eq!(s.max_w, 8);
+        }
+    }
+}

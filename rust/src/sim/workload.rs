@@ -19,8 +19,9 @@
 
 use crate::rngx::Rng;
 
-/// Hidden truth about one job.
-#[derive(Clone, Debug)]
+/// Hidden truth about one job. (`PartialEq` so orchestrator job specs —
+/// which embed a profile — support trace round-trip equality checks.)
+#[derive(Clone, Debug, PartialEq)]
 pub struct JobProfile {
     /// Arrival time (seconds since sim start).
     pub arrival: f64,

@@ -31,25 +31,47 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Atomic save: the payload is written to a sibling `.tmp` file and
+    /// renamed over `path` only after a successful flush+fsync, so a
+    /// preemption mid-save can never leave a torn checkpoint at `path` —
+    /// either the previous complete checkpoint survives or the new one
+    /// does. (The orchestrator preempts jobs exactly around this call.)
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let meta = Json::obj(vec![
-            ("preset", Json::str(self.preset.clone())),
-            ("step", Json::num(self.step as f64)),
-            ("epochs", Json::num(self.epochs)),
-            ("workers", Json::num(self.workers as f64)),
-            ("lr", Json::num(self.lr as f64)),
-            ("n_params", Json::num(self.theta.len() as f64)),
-        ])
-        .dump();
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&(meta.len() as u32).to_le_bytes())?;
-        f.write_all(meta.as_bytes())?;
-        for v in self.theta.iter().chain(self.mu.iter()) {
-            f.write_all(&v.to_le_bytes())?;
+        let path = path.as_ref();
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("checkpoint path {} has no file name", path.display()))?;
+        let mut tmp_name = file_name.to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = path.with_file_name(tmp_name);
+
+        let write = || -> Result<()> {
+            let meta = Json::obj(vec![
+                ("preset", Json::str(self.preset.clone())),
+                ("step", Json::num(self.step as f64)),
+                ("epochs", Json::num(self.epochs)),
+                ("workers", Json::num(self.workers as f64)),
+                ("lr", Json::num(self.lr as f64)),
+                ("n_params", Json::num(self.theta.len() as f64)),
+            ])
+            .dump();
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(meta.len() as u32).to_le_bytes())?;
+            f.write_all(meta.as_bytes())?;
+            for v in self.theta.iter().chain(self.mu.iter()) {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            f.flush()?;
+            f.get_ref().sync_all()?;
+            Ok(())
+        };
+        if let Err(e) = write() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
         }
-        f.flush()?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -140,6 +162,38 @@ mod tests {
         let _ = Checkpoint::load(&p).unwrap();
         assert!(t0.elapsed().as_secs_f64() < 1.0);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn save_is_atomic_leaves_no_tmp_and_survives_overwrite() {
+        let p = tmpfile("atomic");
+        let first = sample();
+        first.save(&p).unwrap();
+        // no temp residue after a successful save
+        let tmp = p.with_file_name(format!(
+            "{}.tmp",
+            p.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!tmp.exists(), "tmp file left behind");
+        // overwriting an existing checkpoint goes through the same
+        // rename, so the destination is never a partial file
+        let mut second = sample();
+        second.step = 9999;
+        second.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap().step, 9999);
+        // a stale/garbage .tmp from a torn earlier save must not break
+        // either saving or loading the real path
+        std::fs::write(&tmp, b"torn partial write").unwrap();
+        first.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), first);
+        assert!(!tmp.exists(), "save must clobber the stale tmp");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn save_rejects_pathless_target() {
+        // a bare root (no file name) cannot be renamed into
+        assert!(sample().save("/").is_err());
     }
 
     #[test]

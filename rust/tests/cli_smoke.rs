@@ -4,7 +4,8 @@
 
 use std::process::Command;
 
-const SUBCOMMANDS: [&str; 6] = ["train", "rescale", "profile", "simulate", "collectives", "fit"];
+const SUBCOMMANDS: [&str; 7] =
+    ["train", "rescale", "profile", "simulate", "orchestrate", "collectives", "fit"];
 
 fn bin() -> Command {
     let mut c = Command::new(env!("CARGO_BIN_EXE_ringmaster"));
@@ -82,6 +83,83 @@ fn collectives_runs_on_bare_checkout() {
     );
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("ring"), "{text}");
+}
+
+#[test]
+fn orchestrate_runs_a_generated_workload_on_bare_checkout() {
+    // miniature live run: 2 jobs, tiny epochs, reference backend
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--capacity",
+            "2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "orchestrate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("jct_s"), "per-job JCT column missing:\n{text}");
+    assert!(text.contains("avg JCT"), "summary missing avg JCT:\n{text}");
+    assert!(text.contains("utilization"), "summary missing utilization:\n{text}");
+}
+
+#[test]
+fn orchestrate_round_trips_a_trace_file() {
+    let dir = std::env::temp_dir();
+    let trace = dir.join(format!("rm-cli-trace-{}.jsonl", std::process::id()));
+    // emit a generated trace, then re-run it from the file
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--dataset-examples",
+            "128",
+            "--capacity",
+            "2",
+            "--emit-trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run binary");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "fixed-2",
+            "--capacity",
+            "2",
+            "--dataset-examples",
+            "128",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run binary");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("fixed-2"));
+    let _ = std::fs::remove_file(&trace);
 }
 
 #[test]
