@@ -1,0 +1,138 @@
+//! A3 — gang placement ablation: flat vs topology-aware JCT on the
+//! bursty trace.
+//!
+//! Three worlds, same 10-job burst, same doubling strategy, same total
+//! GPU count (16):
+//!
+//! - **flat(16)** — the pre-placement idealization: no ring ever pays an
+//!   inter-node cost;
+//! - **2x8 pack** — locality-aware best-fit-decreasing placement on a
+//!   two-node grid: gangs of w ≤ 8 stay on one node whenever the grid
+//!   allows, so only genuine overflow pays the eq-2 inter-node delta;
+//! - **2x8 scatter** — the locality-blind strawman: one GPU at a time
+//!   across the emptiest nodes, so even small gangs span both nodes.
+//!
+//! Jobs carry a communication-bound payload (VGG-class, 1e8 bytes) on a
+//! 10 GbE-class inter-node network — the regime GADGET (arXiv
+//! 2202.01158) shows makes placement first-order for ring all-reduce.
+//! Asserted: `pack < scatter` on average JCT (the value of
+//! locality-aware placement) and that only grid worlds cross nodes.
+//! The flat world is printed as the idealized reference; it is *not*
+//! asserted as a lower bound, because eq-6 doubling ignores the §6
+//! restart charge and the flat world can over-double 8→16 at a net
+//! loss the placement-penalized world refuses.
+//!
+//! `cargo bench --bench ablation_placement`
+
+use ringmaster::cluster::PlacePolicy;
+use ringmaster::metrics::CsvTable;
+use ringmaster::orchestrator::{
+    orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport,
+};
+use ringmaster::sim::workload::JobProfile;
+use ringmaster::trainer::TrainConfig;
+
+/// Communication-bound payload: locality matters at this size.
+const MODEL_BYTES: f64 = 1.0e8;
+
+/// Paper-profile job (Table 1/2 epoch times scaled by `size`), with the
+/// profile extended to w=16 by near-flat extrapolation so the scheduler
+/// may be tempted to span nodes.
+fn paper_job(id: u64, arrival: f64, total_epochs: f64, size: f64) -> JobSpec {
+    let epoch_secs = vec![
+        (1, 138.0 * size),
+        (2, 81.9 * size),
+        (4, 47.3 * size),
+        (8, 29.6 * size),
+        (16, 26.0 * size),
+    ];
+    let mut spec = JobSpec::from_profile(
+        id,
+        JobProfile { arrival, epoch_secs, total_epochs },
+        16,
+    );
+    spec.model_bytes = MODEL_BYTES;
+    spec
+}
+
+/// The 10-job burst of the orchestrator integration suite (arrivals 1 s
+/// apart), heavy enough that the grid has to make placement choices.
+fn bursty_trace() -> Vec<JobSpec> {
+    let sizes = [1.0, 1.1, 0.9, 1.2, 0.8, 1.05, 0.95, 1.15, 0.85, 0.7];
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| paper_job(i as u64, i as f64, 1.0, s))
+        .collect()
+}
+
+fn run(cfg: OrchestratorConfig, specs: &[JobSpec]) -> ringmaster::Result<OrchestratorReport> {
+    let sched = scheduler_by_name("doubling")?;
+    orchestrate(&cfg, sched.as_ref(), specs)
+}
+
+fn main() -> ringmaster::Result<()> {
+    let mut train = TrainConfig::new(
+        std::env::var("RINGMASTER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        "tiny",
+        1,
+    );
+    train.dataset_examples = 256;
+    train.log_every = u64::MAX;
+    train.seed = 42;
+
+    let specs = bursty_trace();
+    let base = OrchestratorConfig::new(train, 16);
+
+    let flat = run(base.clone(), &specs)?;
+    let pack = run(base.clone().with_topology(2, 8), &specs)?;
+    let mut scatter_cfg = base.with_topology(2, 8);
+    scatter_cfg.place_policy = PlacePolicy::Scatter;
+    let scatter = run(scatter_cfg, &specs)?;
+
+    let mut table = CsvTable::new(&[
+        "world", "avg_jct_s", "p50_jct_s", "makespan_s", "xnode_segs", "restarts", "util_%",
+    ]);
+    for (name, r) in [("flat(16)", &flat), ("2x8 pack", &pack), ("2x8 scatter", &scatter)] {
+        table.row(&[
+            name.to_string(),
+            format!("{:.1}", r.avg_jct_secs()),
+            format!("{:.1}", r.p50_jct_secs()),
+            format!("{:.1}", r.makespan_secs),
+            r.cross_node_segments.to_string(),
+            r.total_restarts.to_string(),
+            format!("{:.1}", 100.0 * r.utilization),
+        ]);
+    }
+    print!("{}", table.render());
+    table.write_csv("ablation_placement.csv")?;
+
+    // The ablation's claim, asserted: locality-aware placement beats
+    // locality-blind on the same grid. (flat is printed as the
+    // idealized reference but NOT asserted as a lower bound — doubling
+    // ignores the §6 restart cost, so the flat world can over-double
+    // 8→16 at a net loss that the placement-penalized world refuses,
+    // occasionally letting pack edge out flat.)
+    assert!(
+        pack.avg_jct_secs() < scatter.avg_jct_secs(),
+        "locality-aware {:.1}s must beat locality-blind {:.1}s",
+        pack.avg_jct_secs(),
+        scatter.avg_jct_secs()
+    );
+    assert!(
+        pack.cross_node_segments < scatter.cross_node_segments,
+        "pack crossed nodes {} times vs scatter {} — packing isn't packing",
+        pack.cross_node_segments,
+        scatter.cross_node_segments
+    );
+    assert_eq!(flat.cross_node_segments, 0, "flat pools have no node boundaries");
+
+    println!(
+        "\npack<scatter on avg JCT: the gap ({:.0}s) is what locality-aware gang \
+         placement buys;\nflat is the no-topology idealization ({:+.0}s vs pack) — \
+         the cost the flat capacity model was hiding.",
+        scatter.avg_jct_secs() - pack.avg_jct_secs(),
+        pack.avg_jct_secs() - flat.avg_jct_secs(),
+    );
+    Ok(())
+}

@@ -38,6 +38,9 @@ fn main() -> ringmaster::Result<()> {
         explore_secs_per_size: 150.0,
         explore_sizes: vec![1, 2, 4, 8],
         seed,
+        topology: ringmaster::cluster::Topology::flat(capacity),
+        placement: ringmaster::perfmodel::PlacementModel::paper(),
+        place_policy: ringmaster::cluster::PlacePolicy::Pack,
     };
 
     let mut train = TrainConfig::new(

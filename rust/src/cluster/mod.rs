@@ -7,6 +7,12 @@
 //! algorithms"; we implement best-fit-decreasing over per-node free
 //! counts and track every allocation so invariants (no double-booking,
 //! exact frees) are checkable.
+//!
+//! [`Topology`] is how the rest of the system names the pool shape: the
+//! degenerate [`Topology::Flat`] case (every GPU one hop from every
+//! other — the pre-placement behavior, preserved bit-for-bit) or a real
+//! `nodes × gpus_per_node` grid where a ring spanning more than one node
+//! pays the eq-2 inter-node α/β (see `perfmodel::placement`).
 
 use std::collections::BTreeMap;
 
@@ -35,6 +41,108 @@ impl ClusterSpec {
     }
 }
 
+/// Pool shape as seen by the scheduler, the DES, and the orchestrator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Undifferentiated pool: placement can never affect speed. This is
+    /// the degenerate case every pre-topology code path maps onto.
+    Flat { capacity: usize },
+    /// Real `nodes × gpus_per_node` grid; rings spanning >1 node pay the
+    /// inter-node all-reduce cost.
+    Cluster(ClusterSpec),
+}
+
+impl Topology {
+    pub fn flat(capacity: usize) -> Topology {
+        Topology::Flat { capacity }
+    }
+
+    pub fn cluster(nodes: usize, gpus_per_node: usize) -> Topology {
+        Topology::Cluster(ClusterSpec::new(nodes, gpus_per_node))
+    }
+
+    pub fn capacity(&self) -> usize {
+        match *self {
+            Topology::Flat { capacity } => capacity,
+            Topology::Cluster(spec) => spec.capacity(),
+        }
+    }
+
+    pub fn is_flat(&self) -> bool {
+        matches!(self, Topology::Flat { .. })
+    }
+
+    /// Spec backing the placement ledger (Flat = one giant node, so
+    /// every gang trivially spans 1 node and no penalty ever applies).
+    pub fn spec(&self) -> ClusterSpec {
+        match *self {
+            Topology::Flat { capacity } => ClusterSpec::new(1, capacity),
+            Topology::Cluster(spec) => spec,
+        }
+    }
+
+    /// Reconcile with a caller-set capacity: Flat follows `capacity`
+    /// (it carries no information beyond the pool size), a grid must
+    /// already agree. Shared by every execution layer so the
+    /// "capacity was mutated directly" case behaves the same way
+    /// everywhere.
+    pub fn reconciled(self, capacity: usize) -> Result<Topology> {
+        match self {
+            Topology::Flat { .. } => Ok(Topology::flat(capacity)),
+            t => {
+                anyhow::ensure!(
+                    t.capacity() == capacity,
+                    "topology capacity {} != capacity {capacity} (use with_topology)",
+                    t.capacity()
+                );
+                Ok(t)
+            }
+        }
+    }
+
+    /// Human-readable shape for reports: `flat(8)` or `2x8`.
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Flat { capacity } => format!("flat({capacity})"),
+            Topology::Cluster(spec) => format!("{}x{}", spec.nodes, spec.gpus_per_node),
+        }
+    }
+
+    /// Fewest nodes a gang of `w` can span (the contiguous best case the
+    /// scheduler assumes when scoring candidate widths).
+    pub fn min_span(&self, w: usize) -> usize {
+        match *self {
+            Topology::Flat { .. } => 1,
+            Topology::Cluster(spec) => contiguous_span(w, spec.gpus_per_node),
+        }
+    }
+}
+
+/// Nodes a contiguous gang of `w` spans on `gpus_per_node`-wide nodes —
+/// the best-case span both [`Topology::min_span`] and the scheduler's
+/// placement-adjusted speed score against.
+pub fn contiguous_span(w: usize, gpus_per_node: usize) -> usize {
+    w.div_ceil(gpus_per_node.max(1)).max(1)
+}
+
+/// How `place` picks slots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Best-fit-decreasing: minimize nodes spanned (locality-aware).
+    #[default]
+    Pack,
+    /// Round-robin across the emptiest nodes: maximize span — the
+    /// locality-blind strawman the placement ablation measures against.
+    Scatter,
+}
+
+/// Compact placement summary a speed lookup needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub gpus: usize,
+    pub nodes: usize,
+}
+
 /// One allocated GPU: (node index, slot index within node).
 pub type Gpu = (usize, usize);
 
@@ -42,6 +150,7 @@ pub type Gpu = (usize, usize);
 #[derive(Clone, Debug)]
 pub struct ClusterState {
     spec: ClusterSpec,
+    policy: PlacePolicy,
     /// busy[node][slot] = owning job id (None = free).
     busy: Vec<Vec<Option<u64>>>,
     /// job id -> GPUs held.
@@ -50,8 +159,13 @@ pub struct ClusterState {
 
 impl ClusterState {
     pub fn new(spec: ClusterSpec) -> Self {
+        ClusterState::with_policy(spec, PlacePolicy::Pack)
+    }
+
+    pub fn with_policy(spec: ClusterSpec, policy: PlacePolicy) -> Self {
         ClusterState {
             spec,
+            policy,
             busy: vec![vec![None; spec.gpus_per_node]; spec.nodes],
             allocations: BTreeMap::new(),
         }
@@ -59,6 +173,10 @@ impl ClusterState {
 
     pub fn spec(&self) -> ClusterSpec {
         self.spec
+    }
+
+    pub fn policy(&self) -> PlacePolicy {
+        self.policy
     }
 
     pub fn free_gpus(&self) -> usize {
@@ -74,19 +192,58 @@ impl ClusterState {
         self.allocations.get(&job).map(|v| v.as_slice())
     }
 
+    /// Every `(job, width)` currently placed, ascending by job id.
+    pub fn placed_jobs(&self) -> Vec<(u64, usize)> {
+        self.allocations.iter().map(|(&j, g)| (j, g.len())).collect()
+    }
+
     /// Number of distinct nodes `job` spans.
     pub fn nodes_spanned(&self, job: u64) -> usize {
-        let Some(gpus) = self.allocations.get(&job) else { return 0 };
+        self.node_set(job).len()
+    }
+
+    /// Sorted distinct nodes `job` occupies (empty if unplaced). Two
+    /// placements with the same node set run the same ring topology, so
+    /// this is what restart/continuation logic compares.
+    pub fn node_set(&self, job: u64) -> Vec<usize> {
+        let Some(gpus) = self.allocations.get(&job) else { return Vec::new() };
         let mut nodes: Vec<usize> = gpus.iter().map(|&(n, _)| n).collect();
         nodes.sort_unstable();
         nodes.dedup();
-        nodes.len()
+        nodes
     }
 
-    /// Allocate `w` GPUs to `job`, minimizing the number of nodes used:
+    /// Placement summary for speed lookups.
+    pub fn span_of(&self, job: u64) -> Span {
+        Span {
+            gpus: self.allocations.get(&job).map_or(0, |g| g.len()),
+            nodes: self.nodes_spanned(job),
+        }
+    }
+
+    /// Allocate `w` GPUs to `job` under the state's placement policy:
+    /// [`PlacePolicy::Pack`] minimizes the number of nodes used —
     /// best-fit (a node whose free count exactly matches the remainder)
-    /// first, otherwise the node with the most free GPUs.
+    /// first, otherwise the node with the most free GPUs;
+    /// [`PlacePolicy::Scatter`] spreads one GPU at a time across the
+    /// emptiest nodes (the locality-blind baseline).
     pub fn place(&mut self, job: u64, w: usize) -> Result<Vec<Gpu>> {
+        self.place_with_affinity(job, w, &[])
+    }
+
+    /// [`Self::place`] with slot affinity: the exact `preferred` GPUs
+    /// that are still free are taken first, the policy places any
+    /// remainder. Used to hand a job resuming at an unchanged width its
+    /// previous ring back, so a segment boundary is not a migration —
+    /// and, because each job prefers only its *own* former slots,
+    /// sibling continuations at the same instant can never steal from
+    /// one another.
+    pub fn place_with_affinity(
+        &mut self,
+        job: u64,
+        w: usize,
+        preferred: &[Gpu],
+    ) -> Result<Vec<Gpu>> {
         anyhow::ensure!(w > 0, "cannot place zero GPUs");
         anyhow::ensure!(
             !self.allocations.contains_key(&job),
@@ -100,32 +257,78 @@ impl ClusterState {
 
         let mut picked: Vec<Gpu> = Vec::with_capacity(w);
         let mut remaining = w;
+        for &(node, slot) in preferred {
+            if remaining == 0 {
+                break;
+            }
+            if node < self.spec.nodes
+                && slot < self.spec.gpus_per_node
+                && self.busy[node][slot].is_none()
+            {
+                self.busy[node][slot] = Some(job);
+                picked.push((node, slot));
+                remaining -= 1;
+            }
+        }
         while remaining > 0 {
             let free_of = |node: &Vec<Option<u64>>| node.iter().filter(|s| s.is_none()).count();
-            // best fit: smallest free count still >= remaining…
-            let exact = (0..self.spec.nodes)
-                .filter(|&n| free_of(&self.busy[n]) >= remaining)
-                .min_by_key(|&n| free_of(&self.busy[n]));
-            // …else the fullest-free node to minimize node count.
-            let node = exact.or_else(|| {
-                (0..self.spec.nodes)
+            let node = match self.policy {
+                PlacePolicy::Pack => {
+                    // best fit: smallest free count still >= remaining…
+                    let exact = (0..self.spec.nodes)
+                        .filter(|&n| free_of(&self.busy[n]) >= remaining)
+                        .min_by_key(|&n| free_of(&self.busy[n]));
+                    // …else the fullest-free node to minimize node count.
+                    exact.or_else(|| {
+                        (0..self.spec.nodes)
+                            .filter(|&n| free_of(&self.busy[n]) > 0)
+                            .max_by_key(|&n| free_of(&self.busy[n]))
+                    })
+                }
+                // emptiest node first, one GPU per visit (ties -> lowest
+                // index, so scatter is deterministic too)
+                PlacePolicy::Scatter => (0..self.spec.nodes)
                     .filter(|&n| free_of(&self.busy[n]) > 0)
-                    .max_by_key(|&n| free_of(&self.busy[n]))
-            });
+                    .max_by(|&a, &b| {
+                        free_of(&self.busy[a])
+                            .cmp(&free_of(&self.busy[b]))
+                            .then(b.cmp(&a))
+                    }),
+            };
             let node = node.expect("capacity checked above");
+            let mut take = match self.policy {
+                PlacePolicy::Pack => remaining,
+                PlacePolicy::Scatter => 1,
+            };
             for slot in 0..self.spec.gpus_per_node {
-                if remaining == 0 {
+                if take == 0 {
                     break;
                 }
                 if self.busy[node][slot].is_none() {
                     self.busy[node][slot] = Some(job);
                     picked.push((node, slot));
                     remaining -= 1;
+                    take -= 1;
                 }
             }
         }
         self.allocations.insert(job, picked.clone());
         Ok(picked)
+    }
+
+    /// Place a batch of `(job, w)` gangs largest-first — the
+    /// defragmenting re-pack used at reallocation points: every job that
+    /// is being (re)placed at this instant has already been released, so
+    /// best-fit-decreasing over the whole movable set minimizes the
+    /// fragmentation a one-at-a-time FIFO placement accumulates.
+    pub fn place_batch(&mut self, gangs: &[(u64, usize)]) -> Result<()> {
+        let mut order: Vec<(u64, usize)> = gangs.to_vec();
+        // decreasing width; FIFO (input order) inside a width class
+        order.sort_by(|a, b| b.1.cmp(&a.1));
+        for (job, w) in order {
+            self.place(job, w)?;
+        }
+        Ok(())
     }
 
     /// Release every GPU held by `job`.
@@ -231,5 +434,154 @@ mod tests {
             }
         }
         assert_eq!(owned.len(), c.used_gpus());
+    }
+
+    #[test]
+    fn topology_flat_and_cluster_shapes() {
+        let flat = Topology::flat(8);
+        assert!(flat.is_flat());
+        assert_eq!(flat.capacity(), 8);
+        assert_eq!(flat.spec(), ClusterSpec::new(1, 8));
+        for w in [1usize, 5, 8] {
+            assert_eq!(flat.min_span(w), 1);
+        }
+        let grid = Topology::cluster(4, 8);
+        assert!(!grid.is_flat());
+        assert_eq!(grid.capacity(), 32);
+        assert_eq!(grid.min_span(1), 1);
+        assert_eq!(grid.min_span(8), 1);
+        assert_eq!(grid.min_span(9), 2);
+        assert_eq!(grid.min_span(32), 4);
+    }
+
+    #[test]
+    fn scatter_policy_maximizes_span() {
+        let mut c = ClusterState::with_policy(ClusterSpec::new(4, 4), PlacePolicy::Scatter);
+        c.place(1, 4).unwrap();
+        assert_eq!(c.nodes_spanned(1), 4, "scatter should touch every node");
+        // pack would have kept the same gang on one node
+        let mut p = ClusterState::new(ClusterSpec::new(4, 4));
+        p.place(1, 4).unwrap();
+        assert_eq!(p.nodes_spanned(1), 1);
+    }
+
+    #[test]
+    fn span_and_node_set_report_placements() {
+        let mut c = ClusterState::new(ClusterSpec::new(3, 4));
+        c.place(1, 6).unwrap();
+        let s = c.span_of(1);
+        assert_eq!(s.gpus, 6);
+        assert_eq!(s.nodes, 2);
+        assert_eq!(c.node_set(1).len(), 2);
+        assert_eq!(c.span_of(99), Span { gpus: 0, nodes: 0 });
+        assert!(c.node_set(99).is_empty());
+    }
+
+    /// Full ledger consistency: every allocation's slots are owned by
+    /// that job, busy/free counts reconcile, no slot has two owners.
+    fn assert_consistent(c: &ClusterState) {
+        let mut owned = std::collections::HashSet::new();
+        let mut total = 0usize;
+        for (&job, gpus) in &c.allocations {
+            for &(n, s) in gpus {
+                assert_eq!(c.busy[n][s], Some(job), "slot ({n},{s}) owner mismatch");
+                assert!(owned.insert((n, s)), "double booked ({n},{s})");
+            }
+            total += gpus.len();
+        }
+        assert_eq!(total, c.used_gpus());
+        assert_eq!(c.free_gpus() + c.used_gpus(), c.spec().capacity());
+        // no orphaned busy slots
+        let busy_count = c.busy.iter().flatten().filter(|s| s.is_some()).count();
+        assert_eq!(busy_count, total);
+    }
+
+    #[test]
+    fn churn_sequence_preserves_invariants() {
+        // alloc/free/rescale/re-pack churn over a 4x4 grid; the ledger
+        // must stay exact at every step under both policies.
+        for policy in [PlacePolicy::Pack, PlacePolicy::Scatter] {
+            let mut c = ClusterState::with_policy(ClusterSpec::new(4, 4), policy);
+            c.place(1, 5).unwrap();
+            c.place(2, 3).unwrap();
+            c.place(3, 4).unwrap();
+            assert_consistent(&c);
+            assert_eq!(c.release(2).unwrap(), 3);
+            c.rescale(1, 7).unwrap();
+            assert_consistent(&c);
+            c.place(4, 2).unwrap();
+            c.rescale(3, 1).unwrap();
+            assert_consistent(&c);
+            c.release(4).unwrap();
+            c.rescale(1, 2).unwrap();
+            c.place_batch(&[(5, 6), (6, 4), (7, 1)]).unwrap();
+            assert_consistent(&c);
+            // exact frees: releasing everything restores full capacity
+            for job in [1u64, 3, 5, 6, 7] {
+                c.release(job).unwrap();
+            }
+            assert_consistent(&c);
+            assert_eq!(c.free_gpus(), 16, "policy {policy:?}");
+        }
+    }
+
+    #[test]
+    fn repack_bounds_fragmentation() {
+        // FIFO one-at-a-time placement of (3,3,2) on 2x4 leaves the
+        // 2-gang straddling; the decreasing re-pack keeps every gang
+        // that fits a node on a single node.
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        c.place_batch(&[(1, 3), (2, 3), (3, 2)]).unwrap();
+        // largest-first: 3 -> node A, 3 -> node B, 2 -> a 1-free... must
+        // split; release 3 and re-pack the movable set to verify BFD
+        // heals the fragmentation it can.
+        c.release(3).unwrap();
+        c.release(2).unwrap();
+        c.place_batch(&[(2, 3), (3, 2)]).unwrap();
+        // after re-pack: no gang of w <= 4 spans more nodes than the
+        // minimal possible given what was pinned (job 1 holds 3 slots)
+        assert_eq!(c.nodes_spanned(2), 1, "3-gang must fit the empty node");
+        assert!(c.nodes_spanned(3) <= 2);
+        assert_consistent(&c);
+    }
+
+    #[test]
+    fn affinity_reclaims_exact_previous_slots() {
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        let prev = c.place(1, 2).unwrap();
+        c.release(1).unwrap();
+        // without affinity a bigger gang would best-fit onto job 1's
+        // old node; with affinity job 1 reclaims its exact slots first
+        let again = c.place_with_affinity(1, 2, &prev).unwrap();
+        assert_eq!(again, prev);
+        // sibling continuations cannot steal each other's slots: two
+        // jobs released at the same instant each reclaim their own ring
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        let a = c.place(1, 5).unwrap(); // spans both nodes
+        let b = c.place(2, 3).unwrap();
+        c.release(1).unwrap();
+        c.release(2).unwrap();
+        assert_eq!(c.place_with_affinity(1, 5, &a).unwrap(), a);
+        assert_eq!(c.place_with_affinity(2, 3, &b).unwrap(), b);
+        // affinity overflows gracefully into the policy path, and
+        // out-of-range preferred slots are ignored, not a panic
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        c.place(9, 7).unwrap();
+        c.place_with_affinity(1, 1, &[(99, 0), (0, 99)]).unwrap();
+        assert_eq!(c.span_of(1).gpus, 1);
+        assert_consistent(&c);
+    }
+
+    #[test]
+    fn place_batch_is_largest_first_and_fifo_within_width() {
+        let mut c = ClusterState::new(ClusterSpec::new(2, 8));
+        c.place_batch(&[(1, 2), (2, 8), (3, 2)]).unwrap();
+        // the 8-gang got the empty node; both 2-gangs share the other
+        assert_eq!(c.nodes_spanned(2), 1);
+        assert_eq!(c.nodes_spanned(1), 1);
+        assert_eq!(c.nodes_spanned(3), 1);
+        let n8 = c.node_set(2)[0];
+        assert_ne!(c.node_set(1)[0], n8);
+        assert_ne!(c.node_set(3)[0], n8);
     }
 }

@@ -58,6 +58,22 @@ impl Default for CostParams {
     }
 }
 
+impl CostParams {
+    /// Intra-node interconnect: NVLink/PCIe-class links plus shared
+    /// memory — ~1 µs message latency, ~50 GB/s per link.
+    pub fn intra_node() -> CostParams {
+        CostParams { alpha: 1e-6, beta: 2e-11, gamma: 1e-10 }
+    }
+
+    /// Commodity inter-node network (the setting where placement is
+    /// first-order, cf. GADGET): 10 GbE-class — ~50 µs latency,
+    /// ~1.25 GB/s. The paper's own EDR InfiniBand testbed sits between
+    /// this and `intra_node`; pick explicit α/β to model it.
+    pub fn inter_node() -> CostParams {
+        CostParams { alpha: 5e-5, beta: 8e-10, gamma: 1e-10 }
+    }
+}
+
 fn log2f(w: usize) -> f64 {
     (w as f64).log2()
 }

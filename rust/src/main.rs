@@ -13,11 +13,12 @@
 //! ```
 
 use ringmaster::cli::Args;
+use ringmaster::cluster::PlacePolicy;
 use ringmaster::collectives::{self, cost, Algorithm};
 use ringmaster::coordinator;
 use ringmaster::metrics::CsvTable;
 use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
-use ringmaster::perfmodel::{ConvergenceModel, SpeedModel};
+use ringmaster::perfmodel::{ConvergenceModel, PlacementModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
 use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
 use ringmaster::trainer::{train, Checkpoint, TrainConfig};
@@ -90,6 +91,11 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --contention C     extreme|moderate|none (default moderate)\n\
              \x20 --strategy S       precompute|exploratory|fixed-1|fixed-2|fixed-4|fixed-8\n\
              \x20 --all              run all strategies x all contentions\n\
+             \x20 --nodes N          grid topology: node count (default 0 = flat pool)\n\
+             \x20 --gpus-per-node G  grid topology: GPUs per node (default 8)\n\
+             \x20 --placement P      pack|scatter gang layout (default pack)\n\
+             \x20 --model-bytes B    per-job all-reduce payload for the topology\n\
+             \x20                    penalty (default 6.9e6, the paper's ResNet-110)\n\
              \x20 --seed S           workload seed (default 42)\n"
         }
         "orchestrate" => {
@@ -103,6 +109,15 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --epochs E         generated per-job epochs (default 1.0)\n\
              \x20 --max-w W          generated per-job worker cap (default 8)\n\
              \x20 --emit-trace FILE  write the trace that was run as JSONL\n\
+             \x20 --nodes N          grid topology: node count (default 0 = flat pool)\n\
+             \x20 --gpus-per-node G  grid topology: GPUs per node (default 8); with\n\
+             \x20                    --nodes, capacity becomes N*G and rings spanning\n\
+             \x20                    nodes pay the eq 2-4 inter-node cost\n\
+             \x20 --placement P      pack|scatter gang layout (default pack)\n\
+             \x20 --model-bytes B    override every job's all-reduce payload bytes\n\
+             \x20 --preempt          stop running segments at the next *step* on every\n\
+             \x20                    arrival (mid-segment preemption; model bits become\n\
+             \x20                    execution-dependent, the schedule stays deterministic)\n\
              \x20 --preset NAME      trainer preset (default tiny)\n\
              \x20 --segment-steps N  real steps between scheduling decisions (default 16)\n\
              \x20 --dataset-examples M  windows per epoch (default 256)\n\
@@ -250,7 +265,27 @@ fn cmd_simulate() -> Result<()> {
     let all = a.flag("all");
     let contention_s = a.str_or("contention", "moderate");
     let strategy_s = a.str_or("strategy", "precompute");
+    let nodes = a.get_or("nodes", 0usize)?;
+    let gpn_s = a.str_opt("gpus-per-node");
+    let placement_s = a.str_opt("placement");
+    let model_bytes_s = a.str_opt("model-bytes");
     a.reject_unknown()?;
+    // Topology knobs are inert on a flat pool — reject rather than let a
+    // forgotten --nodes silently produce penalty-free results.
+    anyhow::ensure!(
+        nodes > 0 || (gpn_s.is_none() && placement_s.is_none() && model_bytes_s.is_none()),
+        "--gpus-per-node/--placement/--model-bytes require --nodes \
+         (a flat pool has no topology penalty)"
+    );
+    let gpus_per_node: usize = match &gpn_s {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--gpus-per-node {s:?}: {e}"))?,
+        None => 8,
+    };
+    let place_policy = parse_placement(placement_s.as_deref().unwrap_or("pack"))?;
+    let model_bytes: f64 = match &model_bytes_s {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--model-bytes {s:?}: {e}"))?,
+        None => PlacementModel::paper().n_bytes,
+    };
 
     let contentions: Vec<Contention> = if all {
         Contention::all().to_vec()
@@ -266,7 +301,12 @@ fn cmd_simulate() -> Result<()> {
     let mut table = CsvTable::new(&["strategy", "contention", "avg_hours", "jobs", "peak", "rescales"]);
     for &c in &contentions {
         for &s in &strategies {
-            let cfg = SimConfig::paper(s, c, seed);
+            let mut cfg = SimConfig::paper(s, c, seed);
+            if nodes > 0 {
+                cfg = cfg.with_topology(nodes, gpus_per_node);
+                cfg.placement = PlacementModel::paper().with_model_bytes(model_bytes);
+                cfg.place_policy = place_policy;
+            }
             let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
             let r = simulate(&cfg, &jobs);
             table.row(&[
@@ -293,6 +333,13 @@ fn cmd_orchestrate() -> Result<()> {
     let epochs = a.get_or("epochs", 1.0f64)?;
     let max_w = a.get_or("max-w", 8usize)?;
     let emit = a.str_opt("emit-trace");
+    let nodes = a.get_or("nodes", 0usize)?;
+    let gpn_s = a.str_opt("gpus-per-node");
+    let placement_s = a.str_opt("placement");
+    // (--model-bytes stays legal without --nodes: it rewrites the specs
+    // and is recorded in emitted traces either way)
+    let model_bytes = a.str_opt("model-bytes");
+    let preempt = a.flag("preempt");
     let preset = a.str_or("preset", "tiny");
     let segment_steps = a.get_or("segment-steps", 16u64)?;
     let dataset_examples = a.get_or("dataset-examples", 256usize)?;
@@ -300,14 +347,29 @@ fn cmd_orchestrate() -> Result<()> {
     let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
     let seed = a.get_or("seed", 42u64)?;
     a.reject_unknown()?;
+    anyhow::ensure!(
+        nodes > 0 || (gpn_s.is_none() && placement_s.is_none()),
+        "--gpus-per-node/--placement require --nodes (a flat pool has no topology penalty)"
+    );
+    let gpus_per_node: usize = match &gpn_s {
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--gpus-per-node {s:?}: {e}"))?,
+        None => 8,
+    };
+    let place_policy = parse_placement(placement_s.as_deref().unwrap_or("pack"))?;
 
-    let specs = match &trace_path {
+    let mut specs = match &trace_path {
         Some(path) => orchestrator::load_trace(path)?,
         None => orchestrator::generate_trace(
             &TraceGen { n_jobs, mean_interarrival, total_epochs: epochs, max_w },
             seed,
         ),
     };
+    if let Some(b) = &model_bytes {
+        let b: f64 = b.parse().map_err(|e| anyhow::anyhow!("--model-bytes {b:?}: {e}"))?;
+        for s in &mut specs {
+            s.model_bytes = b;
+        }
+    }
     if let Some(emit) = &emit {
         orchestrator::save_trace(emit, &specs)?;
         println!("trace ({} jobs) -> {emit}", specs.len());
@@ -320,11 +382,18 @@ fn cmd_orchestrate() -> Result<()> {
     let mut cfg = OrchestratorConfig::new(tcfg, capacity);
     cfg.restart_cost = restart_cost;
     cfg.segment_steps = segment_steps;
+    cfg.place_policy = place_policy;
+    cfg.preempt_on_arrival = preempt;
+    if nodes > 0 {
+        cfg = cfg.with_topology(nodes, gpus_per_node);
+    }
 
     let scheduler = orchestrator::scheduler_by_name(&strategy)?;
     println!(
-        "orchestrating {} jobs on {capacity} workers under {} (preset {preset}, seed {seed})...",
+        "orchestrating {} jobs on {} workers ({}) under {} (preset {preset}, seed {seed})...",
         specs.len(),
+        cfg.capacity,
+        cfg.topology.label(),
         scheduler.name()
     );
     let report = orchestrator::orchestrate(&cfg, scheduler.as_ref(), &specs)?;
@@ -399,6 +468,14 @@ fn parse_contention(s: &str) -> Result<Contention> {
         "moderate" => Contention::Moderate,
         "none" => Contention::None,
         other => anyhow::bail!("contention {other:?}: want extreme|moderate|none"),
+    })
+}
+
+fn parse_placement(s: &str) -> Result<PlacePolicy> {
+    Ok(match s {
+        "pack" => PlacePolicy::Pack,
+        "scatter" => PlacePolicy::Scatter,
+        other => anyhow::bail!("placement {other:?}: want pack|scatter"),
     })
 }
 

@@ -21,13 +21,16 @@ use crate::Result;
 pub struct SegmentPlan {
     pub job: u64,
     pub workers: usize,
+    /// Nodes the gang's ring spans (placement record; 1 on flat pools).
+    pub nodes: usize,
     pub steps: u64,
     /// Checkpoint to resume from (None = cold start).
     pub resume: Option<Checkpoint>,
     /// Round-trip the checkpoint through disk before training — the
     /// stop→restart path, taken when the worker count changed.
     pub restart_from_disk: bool,
-    /// Trainer config with `workers` already set for this segment.
+    /// Trainer config with `workers` (and, under mid-segment preemption,
+    /// the shared stop flag) already set for this segment.
     pub config: TrainConfig,
 }
 
@@ -35,6 +38,9 @@ pub struct SegmentPlan {
 pub struct SegmentOutcome {
     pub job: u64,
     pub workers: usize,
+    /// Nodes the segment's ring spanned (echoed from the plan).
+    pub nodes: usize,
+    /// Steps actually executed (≤ planned when the stop flag fired).
     pub steps: u64,
     /// Rank 0 state after the segment (cumulative step/epoch counters).
     pub checkpoint: Checkpoint,
@@ -59,7 +65,7 @@ pub fn spawn_segment(plan: SegmentPlan) -> Receiver<Result<SegmentOutcome>> {
 }
 
 fn run_segment(plan: SegmentPlan) -> Result<SegmentOutcome> {
-    let SegmentPlan { job, workers, steps, resume, restart_from_disk, config } = plan;
+    let SegmentPlan { job, workers, nodes, steps, resume, restart_from_disk, config } = plan;
     anyhow::ensure!(config.workers == workers, "segment plan worker mismatch");
 
     // Process-unique nonce: concurrent orchestrations in one process
@@ -86,7 +92,8 @@ fn run_segment(plan: SegmentPlan) -> Result<SegmentOutcome> {
     Ok(SegmentOutcome {
         job,
         workers,
-        steps,
+        nodes,
+        steps: report.steps,
         checkpoint,
         final_loss: report.logs.last().map(|l| l.loss),
         train_secs: t.elapsed().as_secs_f64(),
@@ -115,6 +122,7 @@ mod tests {
         let rx = spawn_segment(SegmentPlan {
             job: 7,
             workers: 1,
+            nodes: 1,
             steps: 4,
             resume: None,
             restart_from_disk: false,
@@ -134,6 +142,7 @@ mod tests {
         let rx = spawn_segment(SegmentPlan {
             job: 8,
             workers: 1,
+            nodes: 1,
             steps: 3,
             resume: None,
             restart_from_disk: false,
@@ -143,6 +152,7 @@ mod tests {
         let rx = spawn_segment(SegmentPlan {
             job: 8,
             workers: 2,
+            nodes: 1,
             steps: 3,
             resume: Some(first.checkpoint.clone()),
             restart_from_disk: true,
@@ -161,6 +171,7 @@ mod tests {
         let rx = spawn_segment(SegmentPlan {
             job: 9,
             workers: 2,
+            nodes: 1,
             steps: 1,
             resume: None,
             restart_from_disk: false,

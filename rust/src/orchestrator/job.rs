@@ -9,9 +9,12 @@
 //! an orchestrator bug, not a recoverable condition, so it surfaces as an
 //! error immediately.
 
+use std::sync::atomic::AtomicBool;
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 use super::executor::SegmentOutcome;
+use crate::perfmodel::placement::PAPER_MODEL_BYTES;
 use crate::sim::workload::JobProfile;
 use crate::trainer::Checkpoint;
 use crate::Result;
@@ -27,11 +30,15 @@ pub struct JobSpec {
     pub profile: JobProfile,
     /// Hard cap on workers for this job (paper: 8).
     pub max_w: usize,
+    /// Gradient payload per all-reduce (bytes) — sizes the eq-2
+    /// inter-node penalty when this job's ring spans nodes (trace schema
+    /// v2; defaults to the paper's ResNet-110).
+    pub model_bytes: f64,
 }
 
 impl JobSpec {
     pub fn from_profile(id: u64, profile: JobProfile, max_w: usize) -> JobSpec {
-        JobSpec { id, profile, max_w }
+        JobSpec { id, profile, max_w, model_bytes: PAPER_MODEL_BYTES }
     }
 }
 
@@ -62,6 +69,31 @@ impl JobState {
     }
 }
 
+/// Virtual-clock bookkeeping of the in-flight segment — everything the
+/// orchestrator needs to preempt it mid-flight and stay deterministic.
+#[derive(Clone, Debug)]
+pub struct SegmentMeta {
+    /// Virtual end (the queued SegmentEnd event; moves earlier on
+    /// preemption — an event not matching this is stale and ignored).
+    pub end: f64,
+    /// Virtual launch instant.
+    pub start: f64,
+    /// §6 charge paid at the head of this segment (0 for continuations).
+    pub restart_pay: f64,
+    /// Virtual seconds per training step at this width and placement.
+    pub step_secs: f64,
+    pub planned_steps: u64,
+    pub epochs_per_step: f64,
+    /// Progress counters at launch (the base preempted credit adds to).
+    pub launch_epochs: f64,
+    pub launch_steps: u64,
+    /// Shared stop flag the real trainer polls each step (present only
+    /// when mid-segment preemption is on).
+    pub stop: Option<Arc<AtomicBool>>,
+    /// Set on preemption: whole steps credited on the virtual clock.
+    pub preempted_steps: Option<u64>,
+}
+
 /// One registered job: spec, lifecycle state, the in-memory checkpoint
 /// between segments, and metric accumulators.
 pub struct Job {
@@ -69,6 +101,14 @@ pub struct Job {
     pub state: JobState,
     /// Worker count of the most recently finished segment (0 = never ran).
     pub last_w: usize,
+    /// Node set of the most recently finished segment's ring; a
+    /// continuation must resume on the same nodes, not just the same
+    /// width (restarts may change placement, not just width).
+    pub last_nodes: Vec<usize>,
+    /// Exact GPUs of that ring — the affinity a continuation reclaims.
+    pub last_gpus: Vec<crate::cluster::Gpu>,
+    /// Bookkeeping of the in-flight segment (None between segments).
+    pub segment: Option<SegmentMeta>,
     /// Cumulative training progress (trainer accounting: steps·batch·w/M).
     pub epochs_done: f64,
     pub steps_done: u64,
@@ -97,6 +137,10 @@ pub struct Job {
     pub measured_train_secs: f64,
     pub final_loss: Option<f32>,
     pub max_w_granted: usize,
+    /// Widest node span any of this job's segments ever had.
+    pub max_nodes_spanned: usize,
+    /// Segments whose ring crossed a node boundary.
+    pub cross_node_segments: u64,
 }
 
 impl Job {
@@ -105,6 +149,9 @@ impl Job {
             spec,
             state: JobState::Pending,
             last_w: 0,
+            last_nodes: Vec::new(),
+            last_gpus: Vec::new(),
+            segment: None,
             epochs_done: 0.0,
             steps_done: 0,
             checkpoint: None,
@@ -119,6 +166,8 @@ impl Job {
             measured_train_secs: 0.0,
             final_loss: None,
             max_w_granted: 0,
+            max_nodes_spanned: 0,
+            cross_node_segments: 0,
         }
     }
 
@@ -161,15 +210,15 @@ mod tests {
     use super::*;
 
     fn spec(id: u64) -> JobSpec {
-        JobSpec {
+        JobSpec::from_profile(
             id,
-            profile: JobProfile {
+            JobProfile {
                 arrival: 0.0,
                 epoch_secs: vec![(1, 138.0), (2, 81.9), (4, 47.3), (8, 29.6)],
                 total_epochs: 2.0,
             },
-            max_w: 8,
-        }
+            8,
+        )
     }
 
     #[test]

@@ -38,6 +38,18 @@
 //! Reallocation executes the paper's mechanism for real: stop, atomic
 //! checkpoint to disk, reload, restart the trainer at the new width with
 //! eq 7's LR rescaling applied structurally by the `base·w` schedule.
+//!
+//! **Gang placement.** On a non-flat [`Topology`] the scheduler's grant
+//! is only half the decision: the placement ledger maps each width to
+//! concrete GPUs (best-fit-decreasing batch re-pack, or the scatter
+//! strawman), and every segment's virtual duration is priced at
+//! `f(w, placement)` — the eq 2–4 inter-node delta when the ring spans
+//! more than one node (`perfmodel::placement`). Restarts may change
+//! placement, not just width: a continuation must resume on the same
+//! node set, and strategies see placement-adjusted [`Speed`]s so eq-6
+//! gains already know that doubling past a node boundary is expensive.
+//! [`Topology::Flat`] (the default) short-circuits all of it and
+//! reproduces the pre-placement orchestrator bit-for-bit.
 
 pub mod event;
 pub mod executor;
@@ -45,17 +57,20 @@ pub mod job;
 pub mod report;
 pub mod trace;
 
-pub use job::{Job, JobSpec, JobState};
+pub use job::{Job, JobSpec, JobState, SegmentMeta};
 pub use report::{JobReport, OrchestratorReport};
 pub use trace::{generate as generate_trace, load_trace, save_trace, TraceGen};
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use event::{Event, EventKind, EventQueue};
 use executor::{spawn_segment, SegmentPlan};
 
-use crate::cluster::{ClusterSpec, ClusterState};
+use crate::cluster::{ClusterState, PlacePolicy, Topology};
+use crate::perfmodel::PlacementModel;
 use crate::runtime::Artifacts;
 use crate::scheduler::{total_allocated, JobInfo, Scheduler, Speed};
 use crate::trainer::TrainConfig;
@@ -77,11 +92,45 @@ pub struct OrchestratorConfig {
     /// Trainer template; per-segment copies get `workers` set and the
     /// seed mixed with the job id (distinct corpora per job).
     pub train: TrainConfig,
+    /// Pool shape. [`Topology::Flat`] (the default) reproduces the
+    /// pre-placement orchestrator bit-for-bit; a grid makes every
+    /// segment's virtual duration depend on the nodes its ring spans.
+    pub topology: Topology,
+    /// Eq 2–4 intra/inter-node split (per-job `model_bytes` from the
+    /// spec sizes the payload).
+    pub placement: PlacementModel,
+    /// Gang layout policy (pack = locality-aware best-fit-decreasing).
+    pub place_policy: PlacePolicy,
+    /// Mid-segment preemption: every arrival stops running segments at
+    /// their next *step* boundary (shared stop flag into the real
+    /// trainer) instead of waiting out the segment. The virtual schedule
+    /// stays deterministic — preempted segments are credited
+    /// whole-steps-elapsed on the virtual clock — but the *model bits*
+    /// become execution-dependent (the real thread may have run a
+    /// different number of steps than credited). Default off.
+    pub preempt_on_arrival: bool,
 }
 
 impl OrchestratorConfig {
     pub fn new(train: TrainConfig, capacity: usize) -> OrchestratorConfig {
-        OrchestratorConfig { capacity, restart_cost: 10.0, segment_steps: 16, train }
+        OrchestratorConfig {
+            capacity,
+            restart_cost: 10.0,
+            segment_steps: 16,
+            train,
+            topology: Topology::flat(capacity),
+            placement: PlacementModel::paper(),
+            place_policy: PlacePolicy::Pack,
+            preempt_on_arrival: false,
+        }
+    }
+
+    /// Switch the pool to a `nodes × gpus_per_node` grid (capacity
+    /// follows the grid).
+    pub fn with_topology(mut self, nodes: usize, gpus_per_node: usize) -> OrchestratorConfig {
+        self.topology = Topology::cluster(nodes, gpus_per_node);
+        self.capacity = self.topology.capacity();
+        self
     }
 }
 
@@ -134,12 +183,17 @@ struct Orchestrator {
     busy_gpu_secs: f64,
     peak_allocated: usize,
     total_restarts: u64,
+    total_preemptions: u64,
+    cross_node_segments: u64,
     events: u64,
 }
 
 impl Orchestrator {
     fn new(cfg: &OrchestratorConfig, specs: &[JobSpec]) -> Result<Orchestrator> {
+        let mut cfg = cfg.clone();
         anyhow::ensure!(cfg.capacity >= 1, "capacity must be >= 1");
+        cfg.topology = cfg.topology.reconciled(cfg.capacity)?;
+        cfg.placement.checked()?;
         anyhow::ensure!(cfg.segment_steps >= 1, "segment_steps must be >= 1");
         anyhow::ensure!(cfg.restart_cost >= 0.0, "restart_cost must be >= 0");
         anyhow::ensure!(cfg.train.dataset_examples >= 1, "dataset_examples must be >= 1");
@@ -154,6 +208,11 @@ impl Orchestrator {
         let mut queue = EventQueue::new();
         for spec in specs {
             anyhow::ensure!(spec.max_w >= 1, "job {}: max_w must be >= 1", spec.id);
+            anyhow::ensure!(
+                spec.model_bytes > 0.0 && spec.model_bytes.is_finite(),
+                "job {}: bad model_bytes",
+                spec.id
+            );
             anyhow::ensure!(
                 spec.profile.arrival.is_finite() && spec.profile.arrival >= 0.0,
                 "job {}: bad arrival",
@@ -173,17 +232,19 @@ impl Orchestrator {
         }
 
         Ok(Orchestrator {
-            cfg: cfg.clone(),
+            cluster: ClusterState::with_policy(cfg.topology.spec(), cfg.place_policy),
+            cfg,
             batch,
             jobs,
             index,
             queue,
-            cluster: ClusterState::new(ClusterSpec::new(1, cfg.capacity)),
             committed: 0,
             now: 0.0,
             busy_gpu_secs: 0.0,
             peak_allocated: 0,
             total_restarts: 0,
+            total_preemptions: 0,
+            cross_node_segments: 0,
             events: 0,
         })
     }
@@ -192,11 +253,27 @@ impl Orchestrator {
         let wall = Instant::now();
         while let Some((t, batch)) = self.queue.pop_batch() {
             self.now = t;
+            let mut arrivals = false;
             for ev in batch {
                 self.events += 1;
                 match ev.kind {
-                    EventKind::Arrival => self.on_arrival(ev.job)?,
+                    EventKind::Arrival => {
+                        arrivals = true;
+                        self.on_arrival(ev.job)?;
+                    }
                     EventKind::SegmentEnd => self.on_segment_end(ev.job)?,
+                }
+            }
+            if self.cfg.preempt_on_arrival && arrivals {
+                let cut = self.preempt_running();
+                // When everything is committed, defer the decision to
+                // the cut segments' step-boundary ends (queued just
+                // ahead) so all freed workers pool into one pass. With
+                // idle workers on hand, still reallocate now — an
+                // arrival must never wait longer *because* preemption
+                // is on.
+                if cut > 0 && self.committed >= self.cfg.capacity {
+                    continue;
                 }
             }
             self.reallocate(scheduler)?;
@@ -238,6 +315,8 @@ impl Orchestrator {
                 steps: j.steps_done,
                 epochs: j.epochs_done,
                 max_w: j.max_w_granted,
+                max_nodes: j.max_nodes_spanned,
+                cross_node_segments: j.cross_node_segments,
                 final_loss: j.final_loss,
             });
         }
@@ -246,11 +325,14 @@ impl Orchestrator {
         Ok(OrchestratorReport {
             strategy: scheduler.name().to_string(),
             capacity: self.cfg.capacity,
+            topology: self.cfg.topology,
             jobs: job_reports,
             makespan_secs: makespan,
             utilization: self.busy_gpu_secs / (self.cfg.capacity as f64 * makespan).max(1e-9),
             peak_allocated: self.peak_allocated,
             total_restarts: self.total_restarts,
+            total_preemptions: self.total_preemptions,
+            cross_node_segments: self.cross_node_segments,
             events: self.events,
             wall_secs: wall.elapsed().as_secs_f64(),
         })
@@ -268,6 +350,16 @@ impl Orchestrator {
         let idx = self.idx(id)?;
         let now = self.now;
         let job = &mut self.jobs[idx];
+        // Stale event: a preemption moved this segment's end earlier and
+        // the original event still fires later — ignore it.
+        let current = job
+            .segment
+            .as_ref()
+            .map_or(false, |m| m.end.to_bits() == now.to_bits());
+        if !current {
+            return Ok(());
+        }
+        let meta = job.segment.take().expect("checked above");
         let workers = match job.state {
             JobState::Running { workers } => workers,
             ref other => {
@@ -282,10 +374,32 @@ impl Orchestrator {
             .recv()
             .map_err(|_| anyhow::anyhow!("job {id}: segment runner thread vanished"))??;
 
-        job.epochs_done = outcome.checkpoint.epochs;
-        job.steps_done = outcome.checkpoint.step;
+        if self.cfg.preempt_on_arrival {
+            // Preemption mode: progress is credited purely on the
+            // virtual clock (whole steps elapsed), never from the racing
+            // real thread — once any segment can be cut short, real
+            // checkpoints stop being a deterministic function of the
+            // trace, so the schedule must not read them. Model bits may
+            // differ across runs; JCTs cannot.
+            let steps_v = meta.preempted_steps.unwrap_or(meta.planned_steps);
+            job.epochs_done = meta.launch_epochs + steps_v as f64 * meta.epochs_per_step;
+            job.steps_done = meta.launch_steps + steps_v;
+        } else {
+            job.epochs_done = outcome.checkpoint.epochs;
+            job.steps_done = outcome.checkpoint.step;
+        }
         job.checkpoint = Some(outcome.checkpoint);
         job.last_w = workers;
+        job.last_nodes = self.cluster.node_set(id);
+        job.last_gpus = self.cluster.allocation_of(id).unwrap_or(&[]).to_vec();
+        // the executor's span record must agree with the ledger — the
+        // placement a segment *ran on* is the one that was priced
+        anyhow::ensure!(
+            outcome.nodes == job.last_nodes.len(),
+            "job {id}: executor recorded {} nodes but the ledger says {}",
+            outcome.nodes,
+            job.last_nodes.len()
+        );
         job.boundary_time = Some(now);
         job.measured_train_secs += outcome.train_secs;
         // Startup is paid on every segment (each is a fresh `train` call)
@@ -306,6 +420,52 @@ impl Orchestrator {
         self.committed -= workers;
         self.cluster.release(id)?;
         Ok(())
+    }
+
+    /// Mid-segment preemption (opt-in): flip every running segment's
+    /// stop flag — the real trainers agree to halt at their next step
+    /// boundary — and pull its virtual end forward to the matching
+    /// whole-step instant so the freed workers are schedulable now
+    /// instead of at the old segment end. Returns how many were cut.
+    fn preempt_running(&mut self) -> u64 {
+        let now = self.now;
+        let mut cut = 0;
+        let mut reschedule: Vec<(u64, f64)> = Vec::new();
+        for job in self.jobs.iter_mut() {
+            let workers = match job.state {
+                JobState::Running { workers } => workers,
+                _ => continue,
+            };
+            let Some(meta) = job.segment.as_mut() else { continue };
+            if meta.preempted_steps.is_some() || meta.end <= now {
+                continue;
+            }
+            // whole steps the virtual clock has elapsed (the trainer
+            // finishes its current step before honoring the flag)
+            let worked = now - meta.start - meta.restart_pay;
+            let steps_v = if worked <= 0.0 || meta.step_secs <= 0.0 {
+                0
+            } else {
+                ((worked / meta.step_secs).ceil() as u64).min(meta.planned_steps)
+            };
+            let new_end = meta.start + meta.restart_pay + steps_v as f64 * meta.step_secs;
+            if new_end >= meta.end {
+                continue; // already effectively at its boundary
+            }
+            if let Some(stop) = &meta.stop {
+                stop.store(true, Ordering::Relaxed);
+            }
+            self.busy_gpu_secs -= workers as f64 * (meta.end - new_end);
+            meta.end = new_end;
+            meta.preempted_steps = Some(steps_v);
+            reschedule.push((job.spec.id, new_end));
+            cut += 1;
+        }
+        for (id, t) in reschedule {
+            self.queue.push(Event { time: t, kind: EventKind::SegmentEnd, job: id });
+        }
+        self.total_preemptions += cut;
+        cut
     }
 
     /// Invoke the strategy over every stoppable job, then launch the
@@ -333,10 +493,21 @@ impl Orchestrator {
             .iter()
             .map(|&i| {
                 let j = &self.jobs[i];
+                // On a grid the strategy scores each width against the
+                // placement it would get: f(w, placement), eq 2–4 split.
+                let table = Speed::Table(j.spec.profile.speed_table());
+                let speed = match self.cfg.topology {
+                    Topology::Flat { .. } => table,
+                    Topology::Cluster(spec) => Speed::placed(
+                        table,
+                        self.cfg.placement.with_model_bytes(j.spec.model_bytes),
+                        spec.gpus_per_node,
+                    ),
+                };
                 JobInfo {
                     id: j.spec.id,
                     q: j.remaining_epochs().max(1e-6),
-                    speed: Speed::Table(j.spec.profile.speed_table()),
+                    speed,
                     max_w: j.spec.max_w.min(self.cfg.capacity),
                 }
             })
@@ -349,19 +520,45 @@ impl Orchestrator {
             total_allocated(&alloc)
         );
 
-        for info in &infos {
-            let w = alloc.get(&info.id).copied().unwrap_or(0);
-            if w > 0 {
-                self.launch(info.id, w)?;
-            }
+        // Place and launch continuations first (a job resuming at an
+        // unchanged width at its own boundary reclaims its ring — its
+        // old slots are still free, so a segment boundary is never a
+        // migration), then the rest widest-first (FIFO within a width
+        // class): big gangs pick their nodes before smaller ones
+        // fragment the grid.
+        let mut grants: Vec<(u64, usize)> = infos
+            .iter()
+            .filter_map(|info| {
+                alloc.get(&info.id).copied().filter(|&w| w > 0).map(|w| (info.id, w))
+            })
+            .collect();
+        grants.sort_by(|a, b| b.1.cmp(&a.1));
+        let (continuations, fresh): (Vec<_>, Vec<_>) =
+            grants.into_iter().partition(|&(id, w)| self.resumes_unchanged(id, w));
+        for (id, w) in continuations.into_iter().chain(fresh) {
+            self.launch(id, w)?;
         }
         Ok(())
     }
 
-    /// Start one training segment for `id` at `w` workers: charge the §6
-    /// restart cost if the width changed (or cold start), size the
-    /// segment, spawn the real runner thread, and enqueue the segment's
-    /// virtual end event.
+    /// True when `id` would resume at its just-ended segment's width at
+    /// this very instant — the candidate-continuation predicate shared
+    /// by placement priority, affinity, and the §6 charge.
+    fn resumes_unchanged(&self, id: u64, w: usize) -> bool {
+        let Some(&idx) = self.index.get(&id) else { return false };
+        let job = &self.jobs[idx];
+        job.last_w == w
+            && job
+                .boundary_time
+                .map(|t| t.to_bits() == self.now.to_bits())
+                .unwrap_or(false)
+    }
+
+    /// Start one training segment for `id` at `w` workers: map the grant
+    /// to concrete GPUs, charge the §6 restart cost if the width *or
+    /// placement* changed (or cold start), size the segment, spawn the
+    /// real runner thread, and enqueue the segment's virtual end event —
+    /// priced at `f(w, placement)`.
     fn launch(&mut self, id: u64, w: usize) -> Result<()> {
         anyhow::ensure!(
             self.committed + w <= self.cfg.capacity,
@@ -370,26 +567,54 @@ impl Orchestrator {
             self.cfg.capacity
         );
         let idx = self.idx(id)?;
-        self.cluster.place(id, w)?;
+        // A candidate continuation asks for its exact previous GPUs
+        // back; it is placed before any fresh grant and siblings only
+        // reclaim their own former slots, so the reclaim succeeds and
+        // the node-set comparison below sees an unchanged ring.
+        let prefer: Vec<crate::cluster::Gpu> = if self.resumes_unchanged(id, w) {
+            self.jobs[idx].last_gpus.clone()
+        } else {
+            Vec::new()
+        };
+        self.cluster.place_with_affinity(id, w, &prefer)?;
+        let nodes_now = self.cluster.node_set(id);
+        let nodes = nodes_now.len();
 
         let now = self.now;
         let restart_cost = self.cfg.restart_cost;
         let segment_steps = self.cfg.segment_steps;
         let dataset = self.cfg.train.dataset_examples;
         let batch = self.batch;
+        let preempt = self.cfg.preempt_on_arrival;
+
+        // f(w, placement): the profile's epoch seconds are single-node
+        // truth; a ring spanning nodes pays the eq-2 inter-node delta.
+        let base_epoch_secs = self.jobs[idx].spec.profile.secs_per_epoch(w);
+        let epoch_secs = if self.cfg.topology.is_flat() {
+            base_epoch_secs
+        } else {
+            self.cfg
+                .placement
+                .with_model_bytes(self.jobs[idx].spec.model_bytes)
+                .placed_epoch_secs(base_epoch_secs, w, nodes)
+        };
 
         let mut tcfg = self.cfg.train.clone();
         tcfg.workers = w;
         tcfg.seed = self.cfg.train.seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let stop = if preempt { Some(Arc::new(AtomicBool::new(false))) } else { None };
+        tcfg.stop_flag = stop.clone();
 
         let job = &mut self.jobs[idx];
         // A segment is a *continuation* (the job was never stopped) only
-        // when it resumes at the same width at the very instant its last
-        // segment ended. Everything else — cold start, width change, or
-        // sitting parked while its workers ran other jobs — is a real
+        // when it resumes at the same width, on the same nodes, at the
+        // very instant its last segment ended. Everything else — cold
+        // start, width change, migration to different nodes, or sitting
+        // parked while its workers ran other jobs — is a real
         // stop→restart and pays the §6 cost, exactly like the DES
         // (sim/des.rs charges on every `w` transition, including 0→w).
         let continued = job.last_w == w
+            && job.last_nodes == nodes_now
             && job
                 .boundary_time
                 .map(|t| t.to_bits() == now.to_bits())
@@ -403,22 +628,41 @@ impl Orchestrator {
         let steps = needed.min(segment_steps);
         let seg_epochs = steps as f64 * epochs_per_step;
         let restart_pay = if pay_restart { restart_cost } else { 0.0 };
-        let duration = restart_pay + seg_epochs * job.spec.profile.secs_per_epoch(w);
+        let duration = restart_pay + seg_epochs * epoch_secs;
+        let end = now + duration;
 
         let restart_from_disk = pay_restart && job.checkpoint.is_some();
         let plan = SegmentPlan {
             job: id,
             workers: w,
+            nodes,
             steps,
             resume: job.checkpoint.take(),
             restart_from_disk,
             config: tcfg,
         };
         job.transition(JobState::Running { workers: w })?;
+        job.segment = Some(SegmentMeta {
+            end,
+            start: now,
+            restart_pay,
+            step_secs: epochs_per_step * epoch_secs,
+            planned_steps: steps,
+            epochs_per_step,
+            launch_epochs: job.epochs_done,
+            launch_steps: job.steps_done,
+            stop,
+            preempted_steps: None,
+        });
         job.inflight = Some(spawn_segment(plan));
         job.last_segment_restarted = pay_restart;
         job.segments += 1;
         job.max_w_granted = job.max_w_granted.max(w);
+        job.max_nodes_spanned = job.max_nodes_spanned.max(nodes);
+        if nodes > 1 {
+            job.cross_node_segments += 1;
+            self.cross_node_segments += 1;
+        }
         if job.first_start.is_none() {
             job.first_start = Some(now);
         }
@@ -431,7 +675,7 @@ impl Orchestrator {
         self.committed += w;
         self.peak_allocated = self.peak_allocated.max(self.committed);
         self.busy_gpu_secs += w as f64 * duration;
-        self.queue.push(Event { time: now + duration, kind: EventKind::SegmentEnd, job: id });
+        self.queue.push(Event { time: end, kind: EventKind::SegmentEnd, job: id });
         Ok(())
     }
 

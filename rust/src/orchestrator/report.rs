@@ -8,6 +8,7 @@
 //! utilization (busy GPU-seconds over capacity × makespan), and restart
 //! counts — everything the sim-vs-real experiment compares.
 
+use crate::cluster::Topology;
 use crate::metrics::{quantile, CsvTable};
 
 /// Completed-job metrics (all times in virtual seconds unless noted).
@@ -33,6 +34,10 @@ pub struct JobReport {
     pub epochs: f64,
     /// Largest worker count the job ever held.
     pub max_w: usize,
+    /// Widest node span any segment's ring ever had (1 on flat pools).
+    pub max_nodes: usize,
+    /// Segments whose ring crossed a node boundary.
+    pub cross_node_segments: u64,
     pub final_loss: Option<f32>,
 }
 
@@ -41,6 +46,8 @@ pub struct JobReport {
 pub struct OrchestratorReport {
     pub strategy: String,
     pub capacity: usize,
+    /// Pool shape the run was placed on.
+    pub topology: Topology,
     pub jobs: Vec<JobReport>,
     /// Virtual time of the last completion.
     pub makespan_secs: f64,
@@ -49,6 +56,10 @@ pub struct OrchestratorReport {
     /// Largest number of workers ever simultaneously allocated.
     pub peak_allocated: usize,
     pub total_restarts: u64,
+    /// Mid-segment preemptions (0 unless `preempt_on_arrival`).
+    pub total_preemptions: u64,
+    /// Segments across the whole run whose ring spanned >1 node.
+    pub cross_node_segments: u64,
     /// Events processed by the loop (arrivals + segment ends).
     pub events: u64,
     /// Real wall seconds of the whole orchestration.
@@ -89,8 +100,8 @@ impl OrchestratorReport {
     /// Aligned per-job table (rendered by `ringmaster orchestrate`).
     pub fn per_job_table(&self) -> CsvTable {
         let mut t = CsvTable::new(&[
-            "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "steps",
-            "epochs", "train_s(real)", "restart_s(real)", "final_loss",
+            "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "nodes",
+            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "final_loss",
         ]);
         for j in &self.jobs {
             t.row(&[
@@ -101,6 +112,8 @@ impl OrchestratorReport {
                 j.segments.to_string(),
                 j.restarts.to_string(),
                 j.max_w.to_string(),
+                j.max_nodes.to_string(),
+                j.cross_node_segments.to_string(),
                 j.steps.to_string(),
                 format!("{:.2}", j.epochs),
                 format!("{:.2}", j.measured_train_secs),
@@ -114,11 +127,13 @@ impl OrchestratorReport {
     /// Multi-line cluster summary.
     pub fn summary(&self) -> String {
         format!(
-            "strategy={} capacity={} jobs={} events={}\n\
+            "strategy={} capacity={} topology={} jobs={} events={}\n\
              avg JCT {:.1}s  p50 JCT {:.1}s  avg queue {:.1}s  makespan {:.1}s (virtual)\n\
-             utilization {:.1}%  peak workers {}  restarts {}  orchestration wall {:.2}s (real)",
+             utilization {:.1}%  peak workers {}  restarts {}  preemptions {}  \
+             cross-node segs {}  orchestration wall {:.2}s (real)",
             self.strategy,
             self.capacity,
+            self.topology.label(),
             self.jobs.len(),
             self.events,
             self.avg_jct_secs(),
@@ -128,6 +143,8 @@ impl OrchestratorReport {
             100.0 * self.utilization,
             self.peak_allocated,
             self.total_restarts,
+            self.total_preemptions,
+            self.cross_node_segments,
             self.wall_secs,
         )
     }
@@ -153,6 +170,8 @@ mod tests {
             steps: 32,
             epochs: 1.0,
             max_w: 4,
+            max_nodes: 1,
+            cross_node_segments: 0,
             final_loss: Some(1.25),
         }
     }
@@ -161,11 +180,14 @@ mod tests {
         OrchestratorReport {
             strategy: "doubling".into(),
             capacity: 8,
+            topology: Topology::flat(8),
             jobs: vec![job(0, 0.0, 0.0, 100.0), job(1, 0.0, 50.0, 200.0), job(2, 10.0, 60.0, 310.0)],
             makespan_secs: 310.0,
             utilization: 0.8,
             peak_allocated: 8,
             total_restarts: 3,
+            total_preemptions: 0,
+            cross_node_segments: 0,
             events: 9,
             wall_secs: 1.5,
         }

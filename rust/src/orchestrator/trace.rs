@@ -5,27 +5,42 @@
 //! One JSON object per line:
 //!
 //! ```text
+//! {"ringmaster_trace":2}
 //! {"id":0,"arrival":0.0,"total_epochs":2.0,
-//!  "epoch_secs":[[1,138.0],[2,81.9],[4,47.3],[8,29.6]],"max_w":8}
+//!  "epoch_secs":[[1,138.0],[2,81.9],[4,47.3],[8,29.6]],"max_w":8,
+//!  "model_bytes":6900000.0}
 //! ```
 //!
 //! `epoch_secs` is the job's true seconds/epoch at each measured worker
 //! count (the precompute-strategy knowledge of §4); `id` and `max_w` are
 //! optional (smallest unclaimed id, and 8, by default). Blank lines and
 //! `#` comments are ignored, so traces can be annotated by hand.
+//!
+//! **Schema versioning.** The optional `{"ringmaster_trace":N}` preamble
+//! names the schema; files without one are v1. v2 adds the per-job
+//! `model_bytes` field (gradient payload, sizing the placement penalty),
+//! which defaults to the paper's ResNet-110 when absent — every v1 trace
+//! loads unchanged, and versions newer than [`TRACE_VERSION`] are
+//! rejected instead of silently misread.
 
 use std::collections::BTreeSet;
 use std::path::Path;
 
 use super::job::JobSpec;
 use crate::jsonx::{self, Json};
+use crate::perfmodel::placement::PAPER_MODEL_BYTES;
 use crate::rngx::Rng;
 use crate::sim::workload::{JobProfile, WorkloadGen};
 use crate::Result;
 
-/// Serialize a trace as JSONL.
+/// Current JSONL trace schema version.
+pub const TRACE_VERSION: u64 = 2;
+
+/// Serialize a trace as JSONL (current schema, version preamble first).
 pub fn save_trace(path: impl AsRef<Path>, specs: &[JobSpec]) -> Result<()> {
     let mut out = String::new();
+    out.push_str(&Json::obj(vec![("ringmaster_trace", Json::num(TRACE_VERSION as f64))]).dump());
+    out.push('\n');
     for s in specs {
         out.push_str(&spec_to_json(s).dump());
         out.push('\n');
@@ -44,7 +59,7 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
     let path = path.as_ref();
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading trace {}: {e}", path.display()))?;
-    let mut parsed: Vec<(Option<u64>, JobProfile, usize)> = Vec::new();
+    let mut parsed: Vec<ParsedRow> = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -52,6 +67,17 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
         }
         let v = jsonx::parse(line)
             .map_err(|e| anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1))?;
+        if let Some(version) = v.opt("ringmaster_trace") {
+            let version = version.as_usize().map_err(|e| {
+                anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1)
+            })? as u64;
+            anyhow::ensure!(
+                version <= TRACE_VERSION,
+                "trace {} is schema v{version}; this build reads up to v{TRACE_VERSION}",
+                path.display()
+            );
+            continue;
+        }
         let row = parse_line(&v)
             .map_err(|e| anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1))?;
         parsed.push(row);
@@ -59,23 +85,28 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
     anyhow::ensure!(!parsed.is_empty(), "trace {} contains no jobs", path.display());
 
     let mut taken = BTreeSet::new();
-    for (id, _, _) in &parsed {
-        if let Some(id) = id {
-            anyhow::ensure!(taken.insert(*id), "trace {}: duplicate job id {id}", path.display());
+    for row in &parsed {
+        if let Some(id) = row.id {
+            anyhow::ensure!(taken.insert(id), "trace {}: duplicate job id {id}", path.display());
         }
     }
     let mut next_free = 0u64;
     let mut specs: Vec<JobSpec> = parsed
         .into_iter()
-        .map(|(id, profile, max_w)| {
-            let id = id.unwrap_or_else(|| {
+        .map(|row| {
+            let id = row.id.unwrap_or_else(|| {
                 while taken.contains(&next_free) {
                     next_free += 1;
                 }
                 taken.insert(next_free);
                 next_free
             });
-            JobSpec { id, profile, max_w }
+            JobSpec {
+                id,
+                profile: row.profile,
+                max_w: row.max_w,
+                model_bytes: row.model_bytes,
+            }
         })
         .collect();
     specs.sort_by(|a, b| {
@@ -103,10 +134,18 @@ fn spec_to_json(s: &JobSpec) -> Json {
             ),
         ),
         ("max_w", Json::num(s.max_w as f64)),
+        ("model_bytes", Json::num(s.model_bytes)),
     ])
 }
 
-fn parse_line(v: &Json) -> Result<(Option<u64>, JobProfile, usize)> {
+struct ParsedRow {
+    id: Option<u64>,
+    profile: JobProfile,
+    max_w: usize,
+    model_bytes: f64,
+}
+
+fn parse_line(v: &Json) -> Result<ParsedRow> {
     let id = match v.opt("id") {
         Some(j) => Some(j.as_usize()? as u64),
         None => None,
@@ -137,7 +176,21 @@ fn parse_line(v: &Json) -> Result<(Option<u64>, JobProfile, usize)> {
         None => 8,
     };
     anyhow::ensure!(max_w >= 1, "max_w must be >= 1");
-    Ok((id, JobProfile { arrival, epoch_secs, total_epochs }, max_w))
+    // v2: per-job gradient payload; v1 rows default to the paper's model
+    let model_bytes = match v.opt("model_bytes") {
+        Some(j) => j.as_f64()?,
+        None => PAPER_MODEL_BYTES,
+    };
+    anyhow::ensure!(
+        model_bytes.is_finite() && model_bytes > 0.0,
+        "bad model_bytes {model_bytes}"
+    );
+    Ok(ParsedRow {
+        id,
+        profile: JobProfile { arrival, epoch_secs, total_epochs },
+        max_w,
+        model_bytes,
+    })
 }
 
 /// Parameters for generated orchestrator workloads — the same
@@ -170,7 +223,7 @@ pub fn generate(gen: &TraceGen, seed: u64) -> Vec<JobSpec> {
         .enumerate()
         .map(|(i, mut p)| {
             p.total_epochs = (gen.total_epochs * rng.uniform_range(0.8, 1.2)).max(0.05);
-            JobSpec { id: i as u64, profile: p, max_w: gen.max_w }
+            JobSpec::from_profile(i as u64, p, gen.max_w)
         })
         .collect()
 }
@@ -213,6 +266,46 @@ mod tests {
         assert_eq!(specs[1].max_w, 4);
         // epoch_secs sorted by w regardless of file order
         assert_eq!(specs[1].profile.epoch_secs, vec![(1, 90.0), (2, 50.0)]);
+        // v1 rows (no preamble, no model_bytes) default to the paper model
+        assert_eq!(specs[0].model_bytes, crate::perfmodel::placement::PAPER_MODEL_BYTES);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn v2_model_bytes_round_trips_and_newer_schemas_are_rejected() {
+        let p = tmpfile("v2");
+        std::fs::write(
+            &p,
+            "{\"ringmaster_trace\": 2}\n\
+             {\"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]], \
+              \"model_bytes\": 1.0e8}\n",
+        )
+        .unwrap();
+        let specs = load_trace(&p).unwrap();
+        assert_eq!(specs[0].model_bytes, 1.0e8);
+        // save writes the preamble + model_bytes; reload is exact
+        save_trace(&p, &specs).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("{\"ringmaster_trace\":"), "{text}");
+        assert!(text.contains("model_bytes"));
+        assert_eq!(load_trace(&p).unwrap(), specs);
+        // a future schema fails loudly instead of being misread
+        std::fs::write(
+            &p,
+            "{\"ringmaster_trace\": 99}\n\
+             {\"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]]}\n",
+        )
+        .unwrap();
+        let err = load_trace(&p).unwrap_err().to_string();
+        assert!(err.contains("v99"), "{err}");
+        // bad model_bytes is rejected
+        std::fs::write(
+            &p,
+            "{\"arrival\": 0.0, \"total_epochs\": 1.0, \"epoch_secs\": [[1, 10.0]], \
+              \"model_bytes\": 0.0}\n",
+        )
+        .unwrap();
+        assert!(load_trace(&p).is_err());
         let _ = std::fs::remove_file(&p);
     }
 

@@ -11,11 +11,18 @@
 //!
 //! [`JobModel`] combines both into the quantity the scheduler minimizes:
 //! predicted remaining runtime `t_j = Q_j / f(w_j)` (§4.1).
+//!
+//! [`placement`] extends step 2 beyond the paper: `f(w)` becomes
+//! `f(w, placement)` by pricing the eq 2–4 α/β terms differently intra-
+//! vs inter-node, so a ring scattered across nodes is slower than the
+//! same `w` packed into one.
 
 pub mod convergence;
+pub mod placement;
 pub mod speed;
 
 pub use convergence::ConvergenceModel;
+pub use placement::{PlacementModel, TopoCostParams};
 pub use speed::SpeedModel;
 
 /// Full performance model of one training job.

@@ -1,0 +1,223 @@
+//! Placement-dependent speed — the eq 2–4 intra/inter-node split.
+//!
+//! The paper's cost models (eqs 2–4) price one all-reduce with a single
+//! (α, β, γ); its testbed nodes hold 8 GPUs, so a ring wider than 8 —
+//! or any ring a fragmented cluster scatters across nodes — mixes two
+//! very different links. A synchronous ring pipeline advances at the
+//! pace of its *slowest* edge, so the split is sharp:
+//!
+//! - ring fits one node → every edge is NVLink/PCIe: eq 2 with
+//!   `(α_intra, β_intra)`;
+//! - ring spans `k ≥ 2` nodes → every pipelined chunk round is gated by
+//!   an inter-node edge: eq 2 with `(α_inter, β_inter)`, plus a per-hop
+//!   latency term growing in `k` (switch traversals).
+//!
+//! Rings are always ordered node-contiguously (GPUs sorted by node), so
+//! a ring spanning `k` nodes crosses the network exactly `k` times —
+//! the *span* is the whole story, which is why [`crate::cluster::Span`]
+//! is all a speed lookup needs. [`PlacementModel`] turns the comm-time
+//! delta into extra seconds per epoch so the profile-table speeds
+//! (measured on a single node) extend to any placement:
+//!
+//! `secs/epoch(w, k) = secs/epoch(w) + steps(w) · (ring(w,k) − ring(w,1))`
+//!
+//! with `steps(w) = steps_per_epoch_1w / w` (global batch grows with
+//! `w`, exactly the trainer's accounting). For `k = 1` — and for
+//! [`Topology::Flat`] — the delta is identically zero: the flat path is
+//! preserved bit-for-bit.
+
+use crate::collectives::cost::{comm_time, Algorithm, CostParams};
+use crate::Result;
+
+/// ResNet-110/CIFAR-10, the paper's workload: ~1.7M f32 params.
+pub const PAPER_MODEL_BYTES: f64 = 6.9e6;
+
+/// 50k examples / minibatch 128 → all-reduce rounds per epoch at w = 1.
+pub const PAPER_STEPS_PER_EPOCH_1W: f64 = 390.0;
+
+/// Link constants for the two tiers of the interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct TopoCostParams {
+    pub intra: CostParams,
+    pub inter: CostParams,
+    /// Extra per-message latency per node boundary beyond the first
+    /// split (additional switch hops), seconds.
+    pub hop_alpha: f64,
+}
+
+impl Default for TopoCostParams {
+    fn default() -> Self {
+        TopoCostParams {
+            intra: CostParams::intra_node(),
+            inter: CostParams::inter_node(),
+            hop_alpha: 5e-6,
+        }
+    }
+}
+
+/// Turns a `(w, nodes_spanned)` placement into an epoch-time penalty.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementModel {
+    pub params: TopoCostParams,
+    /// Gradient payload per all-reduce (model size in bytes).
+    pub n_bytes: f64,
+    /// All-reduce rounds per epoch for a 1-worker run (`M / batch`);
+    /// rounds at `w` workers = this / `w`.
+    pub steps_per_epoch_1w: f64,
+}
+
+impl Default for PlacementModel {
+    fn default() -> Self {
+        PlacementModel::paper()
+    }
+}
+
+impl PlacementModel {
+    /// The paper's workload on a two-tier commodity cluster.
+    pub fn paper() -> PlacementModel {
+        PlacementModel {
+            params: TopoCostParams::default(),
+            n_bytes: PAPER_MODEL_BYTES,
+            steps_per_epoch_1w: PAPER_STEPS_PER_EPOCH_1W,
+        }
+    }
+
+    /// Same interconnect, a communication-bound model (`n_bytes`
+    /// override) — the regime where locality is first-order.
+    pub fn with_model_bytes(mut self, n_bytes: f64) -> PlacementModel {
+        self.n_bytes = n_bytes;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.n_bytes > 0.0 && self.steps_per_epoch_1w > 0.0,
+            "placement model needs positive n_bytes/steps_per_epoch"
+        );
+        Ok(())
+    }
+
+    /// Eq-2 ring all-reduce seconds for a ring of `w` spanning `nodes`
+    /// nodes (node-contiguous ring order; zero for `w <= 1`). Delegates
+    /// to the canonical eq-2 model in `collectives::cost` with the
+    /// link tier — and, past one node, the per-hop latency — folded
+    /// into the constants, so the two can never drift apart.
+    pub fn ring_comm_secs(&self, w: usize, nodes: usize, n_bytes: f64) -> f64 {
+        let tier = if nodes <= 1 { self.params.intra } else { self.params.inter };
+        // slowest-edge gating: one inter-node edge paces every chunk round
+        let alpha = if nodes <= 1 {
+            tier.alpha
+        } else {
+            tier.alpha + self.params.hop_alpha * (nodes as f64 - 2.0).max(0.0)
+        };
+        comm_time(Algorithm::Ring, w, n_bytes, &CostParams { alpha, ..tier })
+    }
+
+    /// Extra seconds per epoch a ring of `w` pays for spanning `nodes`
+    /// nodes instead of one, for a job moving `n_bytes` per all-reduce.
+    /// Exactly 0.0 for `nodes <= 1`.
+    pub fn extra_epoch_secs_for(&self, w: usize, nodes: usize, n_bytes: f64) -> f64 {
+        if nodes <= 1 || w <= 1 {
+            return 0.0;
+        }
+        let steps = self.steps_per_epoch_1w / w as f64;
+        steps * (self.ring_comm_secs(w, nodes, n_bytes) - self.ring_comm_secs(w, 1, n_bytes))
+    }
+
+    /// [`Self::extra_epoch_secs_for`] with the model's own payload size.
+    pub fn extra_epoch_secs(&self, w: usize, nodes: usize) -> f64 {
+        self.extra_epoch_secs_for(w, nodes, self.n_bytes)
+    }
+
+    /// Profile seconds/epoch adjusted for placement. Identity (the exact
+    /// same float) when the ring fits one node.
+    pub fn placed_epoch_secs(&self, base_secs: f64, w: usize, nodes: usize) -> f64 {
+        if nodes <= 1 {
+            return base_secs;
+        }
+        base_secs + self.extra_epoch_secs(w, nodes)
+    }
+
+    /// Checked constructor for config plumbing.
+    pub fn checked(self) -> Result<PlacementModel> {
+        self.validate()?;
+        Ok(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Communication-bound payload (VGG-class, 25M params).
+    const BIG: f64 = 1.0e8;
+
+    #[test]
+    fn single_node_span_is_exact_identity() {
+        let m = PlacementModel::paper();
+        for w in [1usize, 2, 4, 8, 64] {
+            assert_eq!(m.extra_epoch_secs(w, 1), 0.0);
+            assert_eq!(m.extra_epoch_secs(w, 0), 0.0);
+            let base = 29.6;
+            assert_eq!(m.placed_epoch_secs(base, w, 1).to_bits(), base.to_bits());
+        }
+    }
+
+    #[test]
+    fn crossing_a_node_boundary_costs_time() {
+        let m = PlacementModel::paper();
+        for w in [2usize, 4, 8, 16] {
+            assert!(m.extra_epoch_secs(w, 2) > 0.0, "w={w}");
+        }
+    }
+
+    #[test]
+    fn penalty_monotone_in_nodes_spanned() {
+        let m = PlacementModel::paper();
+        let mut prev = 0.0;
+        for nodes in 1..=8 {
+            let extra = m.extra_epoch_secs(16, nodes);
+            assert!(extra >= prev, "nodes={nodes}: {extra} < {prev}");
+            prev = extra;
+        }
+        // and strictly so once the hop term engages
+        assert!(m.extra_epoch_secs(16, 4) > m.extra_epoch_secs(16, 2));
+    }
+
+    #[test]
+    fn penalty_scales_with_payload() {
+        let m = PlacementModel::paper();
+        let small = m.extra_epoch_secs_for(8, 2, PAPER_MODEL_BYTES);
+        let big = m.extra_epoch_secs_for(8, 2, BIG);
+        assert!(big > 10.0 * small, "{big} vs {small}");
+    }
+
+    #[test]
+    fn comm_bound_model_pays_measurably() {
+        // VGG-class payload on 10 GbE: spanning 2 nodes at w=8 must cost
+        // a double-digit percentage of the paper's 29.6 s/epoch — the
+        // regime where gang placement is first-order.
+        let m = PlacementModel::paper().with_model_bytes(BIG);
+        let extra = m.extra_epoch_secs(8, 2);
+        assert!(extra > 0.1 * 29.6, "extra {extra:.2}s not measurable");
+    }
+
+    #[test]
+    fn ring_comm_matches_eq2_shape() {
+        // intra ring at w=2 vs w=4: latency term linear in (w-1)
+        let m = PlacementModel::paper();
+        let c2 = m.ring_comm_secs(2, 1, 4e6);
+        let c4 = m.ring_comm_secs(4, 1, 4e6);
+        assert!(c4 > c2);
+        assert_eq!(m.ring_comm_secs(1, 1, 4e6), 0.0);
+        assert_eq!(m.ring_comm_secs(1, 4, 4e6), 0.0);
+    }
+
+    #[test]
+    fn checked_rejects_nonsense() {
+        let mut m = PlacementModel::paper();
+        m.n_bytes = 0.0;
+        assert!(m.checked().is_err());
+        assert!(PlacementModel::paper().checked().is_ok());
+    }
+}

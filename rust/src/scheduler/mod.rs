@@ -28,11 +28,12 @@ pub mod optimus;
 
 use std::collections::BTreeMap;
 
-use crate::perfmodel::SpeedModel;
+use crate::perfmodel::{PlacementModel, SpeedModel};
 
-/// Training speed f(w) as the scheduler sees it: either the smooth eq-5
-/// fit, or a piecewise table (ground truth in simulations — eqs 2–4 are
-/// piecewise across the dh/bb boundary, which eq 5 cannot represent).
+/// Training speed f(w) as the scheduler sees it: the smooth eq-5 fit, a
+/// piecewise table (ground truth in simulations — eqs 2–4 are piecewise
+/// across the dh/bb boundary, which eq 5 cannot represent), or either of
+/// those adjusted for gang placement (`f(w, placement)`).
 #[derive(Clone, Debug)]
 pub enum Speed {
     /// Eq-5 NNLS fit.
@@ -40,12 +41,55 @@ pub enum Speed {
     /// `(w, epochs_per_sec)` samples, w ascending; linear interpolation
     /// between entries, flat extrapolation outside.
     Table(Vec<(usize, f64)>),
+    /// Topology-adjusted speed: the base profile assumes a single-node
+    /// ring; widths whose gang must span several nodes pay the eq-2
+    /// inter-node delta. This is what schedulers see on a non-flat
+    /// topology, so eq-6 gains are scored against the placement the
+    /// cluster would actually grant.
+    Placed(PlacedSpeed),
+}
+
+/// Placement-aware wrapper around a base [`Speed`].
+#[derive(Clone, Debug)]
+pub struct PlacedSpeed {
+    pub base: Box<Speed>,
+    pub model: PlacementModel,
+    /// Node width of the target topology; the scheduler scores `w`
+    /// against the contiguous best case `ceil(w / gpus_per_node)`.
+    pub gpus_per_node: usize,
+}
+
+impl PlacedSpeed {
+    /// Nodes a gang of `w` spans in the contiguous best case.
+    pub fn span(&self, w: usize) -> usize {
+        crate::cluster::contiguous_span(w, self.gpus_per_node)
+    }
+
+    pub fn epochs_per_sec(&self, w: usize) -> f64 {
+        let base = self.base.epochs_per_sec(w);
+        if base <= 0.0 {
+            return 0.0;
+        }
+        let extra = self.model.extra_epoch_secs(w, self.span(w));
+        if extra <= 0.0 {
+            // exact flat identity (1/(1/x) is not bit-stable)
+            return base;
+        }
+        1.0 / (1.0 / base + extra)
+    }
 }
 
 impl Speed {
+    /// Wrap a base speed with the placement penalty of `topology`
+    /// (identity wrapper for a single-node span).
+    pub fn placed(base: Speed, model: PlacementModel, gpus_per_node: usize) -> Speed {
+        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node })
+    }
+
     pub fn epochs_per_sec(&self, w: usize) -> f64 {
         match self {
             Speed::Fitted(m) => m.epochs_per_sec(w),
+            Speed::Placed(p) => p.epochs_per_sec(w),
             Speed::Table(t) => {
                 debug_assert!(!t.is_empty());
                 if w <= t[0].0 {
@@ -173,5 +217,64 @@ mod tests {
         let j = job(1, 10.0, 400.0);
         assert!(j.time_at(8) < j.time_at(4));
         assert!(j.time_at(4) < j.time_at(1));
+    }
+
+    mod placed {
+        use super::super::*;
+        use crate::perfmodel::PlacementModel;
+
+        /// Strong-scaling truth table out to w=16 (flat world).
+        fn strong_table() -> Vec<(usize, f64)> {
+            [1usize, 2, 4, 8, 16]
+                .iter()
+                .map(|&w| (w, 1.0 / (200.0 / w as f64 + 1.0 * (w as f64 - 1.0) + 2.0)))
+                .collect()
+        }
+
+        fn placed_speed(gpus_per_node: usize) -> Speed {
+            // communication-bound payload so the span penalty bites
+            let model = PlacementModel::paper().with_model_bytes(1.0e8);
+            Speed::placed(Speed::Table(strong_table()), model, gpus_per_node)
+        }
+
+        #[test]
+        fn identity_while_the_gang_fits_one_node() {
+            let flat = Speed::Table(strong_table());
+            let placed = placed_speed(8);
+            for w in [1usize, 2, 4, 8] {
+                assert_eq!(
+                    placed.epochs_per_sec(w).to_bits(),
+                    flat.epochs_per_sec(w).to_bits(),
+                    "w={w}"
+                );
+            }
+        }
+
+        #[test]
+        fn slower_once_the_ring_spans_nodes() {
+            let flat = Speed::Table(strong_table());
+            let placed = placed_speed(8);
+            assert!(placed.epochs_per_sec(16) < flat.epochs_per_sec(16));
+            assert!(placed.epochs_per_sec(9) < flat.epochs_per_sec(9));
+        }
+
+        #[test]
+        fn doubling_stops_at_the_node_boundary() {
+            // Flat sees strong scaling to 16 and doubles past 8; the
+            // placement-adjusted view knows 16 means spanning 2 nodes on
+            // a 10 GbE network and keeps the gang inside one node.
+            let flat_job = JobInfo {
+                id: 1,
+                q: 100.0,
+                speed: Speed::Table(strong_table()),
+                max_w: 16,
+            };
+            let placed_job = JobInfo { speed: placed_speed(8), ..flat_job.clone() };
+            let flat_alloc = doubling::Doubling.allocate(std::slice::from_ref(&flat_job), 16);
+            let placed_alloc =
+                doubling::Doubling.allocate(std::slice::from_ref(&placed_job), 16);
+            assert_eq!(flat_alloc[&1], 16, "flat should chase the strong scaling");
+            assert_eq!(placed_alloc[&1], 8, "placed should refuse to span nodes");
+        }
     }
 }

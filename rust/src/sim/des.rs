@@ -2,12 +2,17 @@
 //!
 //! Time advances event-to-event (arrival, exploration end, completion);
 //! between events every running job progresses linearly at its true
-//! `secs_per_epoch(w)`. Every event triggers a full reallocation under
-//! the configured strategy, and any job whose worker count changes pays
-//! the stop/restart cost (§6) as a busy period with no progress.
+//! `secs_per_epoch(w)` — adjusted for the nodes its ring spans when the
+//! pool is a real grid ([`SimConfig::topology`]). Every event triggers a
+//! full reallocation under the configured strategy; a placement ledger
+//! ([`ClusterState`]) maps granted widths to concrete GPUs with a
+//! defragmenting re-pack over the jobs that moved, and any job whose
+//! worker count changes pays the stop/restart cost (§6) as a busy period
+//! with no progress.
 
 use super::workload::JobProfile;
 use super::{SimConfig, StrategyKind};
+use crate::cluster::{ClusterState, Topology};
 use crate::scheduler::{doubling::Doubling, fixed::Fixed, Allocation, JobInfo, Scheduler, Speed};
 
 const EPS: f64 = 1e-6;
@@ -28,9 +33,19 @@ struct SimJob {
     profile: JobProfile,
     state: State,
     w: usize,
+    /// Nodes the current gang spans (0 = unplaced; always 1 on a flat
+    /// topology) — the placement half of the `(w, placement)` speed key.
+    nodes: usize,
     remaining_epochs: f64,
     /// No progress before this time (restart penalty).
     busy_until: f64,
+}
+
+impl SimJob {
+    /// True seconds/epoch at the job's current width *and placement*.
+    fn secs_per_epoch_placed(&self, cfg: &SimConfig) -> f64 {
+        cfg.placement.placed_epoch_secs(self.profile.secs_per_epoch(self.w), self.w, self.nodes)
+    }
 }
 
 /// Outcome of one simulation run.
@@ -49,8 +64,13 @@ pub struct SimResult {
 
 /// Run one strategy over one generated workload.
 pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
+    let topology = cfg
+        .topology
+        .reconciled(cfg.capacity)
+        .expect("grid topology must agree with cfg.capacity (use with_topology)");
     let explore_reserve = cfg.explore_sizes.iter().copied().max().unwrap_or(8);
     let explore_duration = cfg.explore_secs_per_size * cfg.explore_sizes.len() as f64;
+    let mut cluster = ClusterState::with_policy(topology.spec(), cfg.place_policy);
 
     let mut jobs: Vec<SimJob> = profiles
         .iter()
@@ -58,6 +78,7 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             profile: p.clone(),
             state: State::NotArrived,
             w: 0,
+            nodes: 0,
             remaining_epochs: p.total_epochs,
             busy_until: 0.0,
         })
@@ -130,29 +151,28 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             .collect();
         ready.sort_by(|&a, &b| jobs[a].profile.arrival.partial_cmp(&jobs[b].profile.arrival).unwrap());
 
-        let alloc: Allocation = match cfg.strategy {
-            StrategyKind::Fixed(k) => {
-                let infos: Vec<JobInfo> = ready
-                    .iter()
-                    .map(|&i| JobInfo {
-                        id: i as u64,
-                        q: jobs[i].remaining_epochs,
-                        speed: Speed::Table(jobs[i].profile.speed_table()),
-                        max_w: cfg.capacity,
-                    })
-                    .collect();
-                Fixed(k).allocate(&infos, capacity)
+        // Strategies score widths against the placement the grid would
+        // actually grant: on a non-flat topology the speed is wrapped
+        // with the eq-2 inter-node penalty at the contiguous best case.
+        let speed_of = |j: &SimJob| -> Speed {
+            let table = Speed::Table(j.profile.speed_table());
+            match topology {
+                Topology::Flat { .. } => table,
+                Topology::Cluster(spec) => Speed::placed(table, cfg.placement, spec.gpus_per_node),
             }
+        };
+        let infos: Vec<JobInfo> = ready
+            .iter()
+            .map(|&i| JobInfo {
+                id: i as u64,
+                q: jobs[i].remaining_epochs,
+                speed: speed_of(&jobs[i]),
+                max_w: cfg.capacity,
+            })
+            .collect();
+        let alloc: Allocation = match cfg.strategy {
+            StrategyKind::Fixed(k) => Fixed(k).allocate(&infos, capacity),
             StrategyKind::Precompute | StrategyKind::Exploratory => {
-                let infos: Vec<JobInfo> = ready
-                    .iter()
-                    .map(|&i| JobInfo {
-                        id: i as u64,
-                        q: jobs[i].remaining_epochs,
-                        speed: Speed::Table(jobs[i].profile.speed_table()),
-                        max_w: cfg.capacity,
-                    })
-                    .collect();
                 Doubling.allocate(&infos, capacity)
             }
         };
@@ -165,6 +185,41 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                     total_rescales += 1;
                 }
                 j.w = w_new;
+            }
+        }
+
+        // ---- 2b. sync the placement ledger ------------------------------
+        // Desired holdings at this instant: explore reservations plus
+        // granted ready widths. Jobs whose holding changed are released
+        // and batch re-placed largest-first (the defragmenting re-pack);
+        // jobs keeping their width keep their slots — no phantom
+        // migrations, so spans only change when the scheduler moved you.
+        // Flat pools skip the ledger entirely: `nodes` stays 0 and
+        // `placed_epoch_secs` is an identity, so results are bit-equal
+        // to the pre-placement simulator at zero extra cost.
+        if !topology.is_flat() {
+            let mut desired: Vec<(u64, usize)> = Vec::new();
+            for (i, j) in jobs.iter().enumerate() {
+                match j.state {
+                    State::Exploring { .. } => desired.push((i as u64, explore_reserve)),
+                    State::Ready if j.w > 0 => desired.push((i as u64, j.w)),
+                    _ => {}
+                }
+            }
+            for (id, held) in cluster.placed_jobs() {
+                let keep = desired.iter().any(|&(d, w)| d == id && w == held);
+                if !keep {
+                    cluster.release(id).expect("ledger holds what it reported");
+                }
+            }
+            let movers: Vec<(u64, usize)> = desired
+                .iter()
+                .copied()
+                .filter(|&(id, _)| cluster.allocation_of(id).is_none())
+                .collect();
+            cluster.place_batch(&movers).expect("granted widths never exceed capacity");
+            for (i, j) in jobs.iter_mut().enumerate() {
+                j.nodes = cluster.nodes_spanned(i as u64);
             }
         }
 
@@ -184,7 +239,7 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 State::Exploring { end } => next = next.min(end),
                 State::Ready if j.w > 0 => {
                     let start = now.max(j.busy_until);
-                    let finish = start + j.remaining_epochs * j.profile.secs_per_epoch(j.w);
+                    let finish = start + j.remaining_epochs * j.secs_per_epoch_placed(cfg);
                     next = next.min(finish);
                 }
                 _ => {}
@@ -201,7 +256,7 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 let start = now.max(j.busy_until);
                 let dt = (next - start).max(0.0);
                 j.remaining_epochs =
-                    (j.remaining_epochs - dt / j.profile.secs_per_epoch(j.w)).max(0.0);
+                    (j.remaining_epochs - dt / j.secs_per_epoch_placed(cfg)).max(0.0);
             }
         }
         now = next;
@@ -321,6 +376,59 @@ mod tests {
         let a = run(StrategyKind::Precompute, Contention::Moderate, 23);
         let b = run(StrategyKind::Precompute, Contention::Moderate, 23);
         assert_eq!(a.avg_completion_hours, b.avg_completion_hours);
+        assert_eq!(a.total_rescales, b.total_rescales);
+    }
+
+    #[test]
+    fn single_node_grid_reproduces_flat_bit_for_bit() {
+        // Topology::Cluster(1 x 64) is the degenerate case: every ring
+        // spans one node, so results must equal the flat pool exactly.
+        let flat = run(StrategyKind::Precompute, Contention::Moderate, 29);
+        let cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 29)
+            .with_topology(1, 64);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 29);
+        let grid = simulate(&cfg, &jobs);
+        assert_eq!(flat.avg_completion_hours.to_bits(), grid.avg_completion_hours.to_bits());
+        assert_eq!(flat.total_rescales, grid.total_rescales);
+        assert_eq!(flat.makespan_hours.to_bits(), grid.makespan_hours.to_bits());
+        for (a, b) in flat.completion_secs.iter().zip(&grid.completion_secs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn topology_awareness_never_speeds_jobs_up() {
+        use crate::perfmodel::PlacementModel;
+        // Fixed-8 consults no speed model, so flat and grid worlds make
+        // identical allocation decisions and differ only by the span
+        // penalty — JCT degradation is guaranteed, not just likely.
+        // (Adaptive strategies can legitimately reorder around the
+        // penalty, so monotonicity is only provable for fixed-k.) On
+        // 4-wide nodes every 8-gang must span 2, so with a comm-bound
+        // payload the degradation is strict.
+        let flat = run(StrategyKind::Fixed(8), Contention::Moderate, 31);
+        let mut cfg = SimConfig::paper(StrategyKind::Fixed(8), Contention::Moderate, 31)
+            .with_topology(16, 4);
+        cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 31);
+        let topo = simulate(&cfg, &jobs);
+        assert_eq!(topo.completed, flat.completed);
+        assert!(
+            topo.avg_completion_hours > flat.avg_completion_hours,
+            "topo {:.3}h did not degrade vs flat {:.3}h",
+            topo.avg_completion_hours,
+            flat.avg_completion_hours
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed_on_a_grid() {
+        let cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 37)
+            .with_topology(8, 8);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 37);
+        let a = simulate(&cfg, &jobs);
+        let b = simulate(&cfg, &jobs);
+        assert_eq!(a.avg_completion_hours.to_bits(), b.avg_completion_hours.to_bits());
         assert_eq!(a.total_rescales, b.total_rescales);
     }
 }

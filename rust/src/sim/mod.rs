@@ -23,6 +23,9 @@ pub mod workload;
 pub use des::{simulate, SimResult};
 pub use workload::{JobProfile, WorkloadGen};
 
+use crate::cluster::{PlacePolicy, Topology};
+use crate::perfmodel::PlacementModel;
+
 /// Which Table 3 strategy a simulation runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StrategyKind {
@@ -70,6 +73,14 @@ pub struct SimConfig {
     /// Exploration probe sizes (§7: 1, 2, 4, 8 — reserving max while probing).
     pub explore_sizes: Vec<usize>,
     pub seed: u64,
+    /// Pool shape. [`Topology::Flat`] (the default) reproduces the
+    /// pre-placement simulator bit-for-bit; a cluster topology makes
+    /// every job's speed depend on the nodes its ring spans.
+    pub topology: Topology,
+    /// Eq 2–4 intra/inter-node split applied when `topology` is a grid.
+    pub placement: PlacementModel,
+    /// How gangs are laid out on the grid (pack = locality-aware BFD).
+    pub place_policy: PlacePolicy,
 }
 
 impl SimConfig {
@@ -89,7 +100,18 @@ impl SimConfig {
             explore_secs_per_size: 150.0,
             explore_sizes: vec![1, 2, 4, 8],
             seed,
+            topology: Topology::flat(64),
+            placement: PlacementModel::paper(),
+            place_policy: PlacePolicy::Pack,
         }
+    }
+
+    /// Switch the pool to a `nodes × gpus_per_node` grid (capacity
+    /// follows the grid).
+    pub fn with_topology(mut self, nodes: usize, gpus_per_node: usize) -> SimConfig {
+        self.topology = Topology::cluster(nodes, gpus_per_node);
+        self.capacity = self.topology.capacity();
+        self
     }
 }
 

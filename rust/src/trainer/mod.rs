@@ -23,7 +23,9 @@ pub use checkpoint::Checkpoint;
 pub use lr::LrSchedule;
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::collectives::{self, Algorithm, World};
@@ -53,6 +55,12 @@ pub struct TrainConfig {
     /// algorithms on the gradient hot path (§Perf; traffic counters then
     /// read zero since nothing crosses the "wire").
     pub shared_mem: bool,
+    /// Mid-segment preemption: when set, every rank polls this flag at
+    /// the top of each step and the world agrees on stopping via a
+    /// one-word all-reduce (all ranks must break at the same step or the
+    /// gradient all-reduce deadlocks). `None` (the default) keeps the
+    /// loop bit-identical to the pre-flag trainer.
+    pub stop_flag: Option<Arc<AtomicBool>>,
 }
 
 impl TrainConfig {
@@ -69,6 +77,7 @@ impl TrainConfig {
             log_every: 5,
             algorithm: None,
             shared_mem: false,
+            stop_flag: None,
         }
     }
 }
@@ -88,6 +97,8 @@ pub struct StepLog {
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub logs: Vec<StepLog>,
+    /// Steps actually executed — less than requested when a
+    /// [`TrainConfig::stop_flag`] preempted the segment early.
     pub steps: u64,
     pub epochs_done: f64,
     /// Wall time of the training loop (excluding startup).
@@ -108,9 +119,12 @@ pub struct TrainReport {
     pub mean_allreduce_secs: f64,
 }
 
-/// Train `run_steps` steps at `cfg.workers` workers, resuming from
-/// `resume` if given (the checkpoint may come from a different worker
-/// count — that's the rescale path). Returns rank 0's final state.
+/// Train up to `run_steps` steps at `cfg.workers` workers, resuming
+/// from `resume` if given (the checkpoint may come from a different
+/// worker count — that's the rescale path). A set
+/// [`TrainConfig::stop_flag`] ends the segment at the next step
+/// boundary, all ranks agreeing via consensus. Returns rank 0's final
+/// state.
 pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> Result<(Checkpoint, TrainReport)> {
     anyhow::ensure!(cfg.workers >= 1, "need >= 1 worker");
     let w = cfg.workers;
@@ -176,9 +190,26 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
                 let mut epoch = start_epochs;
                 let mut step_time_sum = 0.0;
                 let mut ar_time_sum = 0.0;
+                let mut steps_run = 0u64;
                 let loop_t = Instant::now();
 
                 for s in start_step..start_step + run_steps {
+                    // Mid-segment preemption (ROADMAP): the orchestrator
+                    // flips the shared flag and every rank sees a stop
+                    // request — but ranks may read it at different
+                    // moments, so the *decision* is a one-word all-reduce
+                    // (identical mean on every rank = identical verdict).
+                    if let Some(flag) = &cfg.stop_flag {
+                        let mut vote = [if flag.load(Ordering::Relaxed) { 1.0f32 } else { 0.0 }];
+                        if cfg.shared_mem {
+                            shmem.all_reduce_mean(&mut vote);
+                        } else {
+                            collectives::all_reduce_mean(alg, &mut rank, &mut vote)?;
+                        }
+                        if vote[0] > 0.0 {
+                            break;
+                        }
+                    }
                     let step_t = Instant::now();
                     let (inputs, targets) =
                         corpus.batch(rank.rank(), s, preset.batch, preset.seq_len);
@@ -200,6 +231,7 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
                     theta = t2;
                     mu = m2;
                     epoch += epochs_per_step;
+                    steps_run += 1;
 
                     if rank.rank() == 0 {
                         let secs = step_t.elapsed().as_secs_f64();
@@ -216,6 +248,7 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
                     theta,
                     mu,
                     epoch,
+                    steps_run,
                     startup_secs,
                     loop_secs: loop_t.elapsed().as_secs_f64(),
                     step_time_sum,
@@ -238,16 +271,25 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
     outs.sort_by_key(|o| o.rank);
     let rank0 = &outs[0];
 
-    // data-parallel invariant: all ranks hold identical parameters
+    // data-parallel invariant: all ranks hold identical parameters and
+    // agreed on the same stop step (the consensus vote guarantees it)
     for o in &outs[1..] {
         anyhow::ensure!(
             o.theta == rank0.theta,
             "rank {} diverged from rank 0 — all-reduce broke determinism",
             o.rank
         );
+        anyhow::ensure!(
+            o.steps_run == rank0.steps_run,
+            "rank {} stopped at step {} but rank 0 at {} — stop consensus broke",
+            o.rank,
+            o.steps_run,
+            rank0.steps_run
+        );
     }
 
-    let end_step = start_step + run_steps;
+    let steps_run = rank0.steps_run;
+    let end_step = start_step + steps_run;
     let preset_tokens = {
         let artifacts = Artifacts::resolve(&cfg.artifacts_dir)?;
         artifacts.preset(&cfg.preset)?.tokens_per_step
@@ -255,18 +297,18 @@ pub fn train(cfg: &TrainConfig, resume: Option<Checkpoint>, run_steps: u64) -> R
     let wall = rank0.loop_secs;
     let report = TrainReport {
         logs,
-        steps: run_steps,
+        steps: steps_run,
         epochs_done: rank0.epoch,
         wall_secs: wall,
         startup_secs: outs.iter().map(|o| o.startup_secs).fold(0.0, f64::max),
-        steps_per_sec: run_steps as f64 / wall.max(1e-9),
-        tokens_per_sec: (run_steps as usize * preset_tokens * w) as f64 / wall.max(1e-9),
+        steps_per_sec: steps_run as f64 / wall.max(1e-9),
+        tokens_per_sec: (steps_run as usize * preset_tokens * w) as f64 / wall.max(1e-9),
         allreduce_msgs: traffic.messages(),
         allreduce_bytes: traffic.bytes(),
         algorithm: rank0.algorithm,
         backend: rank0.backend.clone(),
-        mean_step_secs: rank0.step_time_sum / run_steps.max(1) as f64,
-        mean_allreduce_secs: rank0.ar_time_sum / run_steps.max(1) as f64,
+        mean_step_secs: rank0.step_time_sum / steps_run.max(1) as f64,
+        mean_allreduce_secs: rank0.ar_time_sum / steps_run.max(1) as f64,
     };
 
     let lr_now = cfg.schedule.lr(w, rank0.epoch);
@@ -287,6 +329,7 @@ struct WorkerOut {
     theta: Vec<f32>,
     mu: Vec<f32>,
     epoch: f64,
+    steps_run: u64,
     startup_secs: f64,
     loop_secs: f64,
     step_time_sum: f64,

@@ -122,6 +122,45 @@ fn orchestrate_runs_a_generated_workload_on_bare_checkout() {
 }
 
 #[test]
+fn orchestrate_runs_on_a_grid_topology() {
+    // 2x2 grid: capacity follows the grid (4), summary names the shape,
+    // and the per-job table reports node spans
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--nodes",
+            "2",
+            "--gpus-per-node",
+            "2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "grid orchestrate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("topology=2x2"), "summary missing topology:\n{text}");
+    assert!(text.contains("nodes"), "per-job table missing node spans:\n{text}");
+    assert!(text.contains("cross-node segs"), "summary missing cross-node count:\n{text}");
+}
+
+#[test]
 fn orchestrate_round_trips_a_trace_file() {
     let dir = std::env::temp_dir();
     let trace = dir.join(format!("rm-cli-trace-{}.jsonl", std::process::id()));

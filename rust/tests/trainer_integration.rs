@@ -5,6 +5,9 @@
 //! These spin up real worker threads that each compile the tiny preset,
 //! so they are the slowest tests in the suite — kept few and meaningful.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use ringmaster::collectives::dh;
 use ringmaster::coordinator::run_with_rescales;
 use ringmaster::trainer::{train, TrainConfig};
@@ -34,6 +37,58 @@ fn loss_decreases_with_two_workers() {
     );
     assert_eq!(report.algorithm, "doubling-halving");
     assert!(report.startup_secs > 0.0);
+}
+
+#[test]
+fn stop_flag_set_before_start_runs_zero_steps() {
+    // The flag is checked (by consensus) before every step, so a
+    // pre-raised flag deterministically yields an empty segment.
+    let mut c = cfg(2);
+    let flag = Arc::new(AtomicBool::new(true));
+    c.stop_flag = Some(flag);
+    let (ck, report) = train(&c, None, 40).expect("train");
+    assert_eq!(report.steps, 0);
+    assert_eq!(ck.step, 0);
+    assert_eq!(ck.epochs, 0.0);
+}
+
+#[test]
+fn stop_flag_mid_run_halts_all_ranks_consistently() {
+    // Raise the flag from outside while a long multi-worker run is in
+    // flight: every rank must agree on the same stop step (train()
+    // errors internally if they don't) and the run must end early
+    // instead of deadlocking in the gradient all-reduce.
+    let mut c = cfg(2);
+    c.log_every = u64::MAX;
+    let flag = Arc::new(AtomicBool::new(false));
+    c.stop_flag = Some(flag.clone());
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        flag.store(true, Ordering::Relaxed);
+    });
+    let run_steps = 200_000; // far more than 150 ms of tiny-preset steps
+    let (ck, report) = train(&c, None, run_steps).expect("train");
+    killer.join().unwrap();
+    assert!(
+        report.steps < run_steps,
+        "flag never honored: ran all {run_steps} steps"
+    );
+    assert_eq!(ck.step, report.steps);
+    // progress accounting matches the executed (not requested) steps
+    assert!(ck.epochs > 0.0 || report.steps == 0);
+}
+
+#[test]
+fn absent_stop_flag_changes_nothing() {
+    // bit-parity: the default config must produce the exact run it did
+    // before the flag existed (no consensus all-reduce on the hot path)
+    let (ck_a, ra) = train(&cfg(2), None, 10).expect("a");
+    let mut c = cfg(2);
+    c.stop_flag = None;
+    let (ck_b, rb) = train(&c, None, 10).expect("b");
+    assert_eq!(ck_a.theta, ck_b.theta);
+    assert_eq!(ra.steps, rb.steps);
+    assert_eq!(ra.allreduce_msgs, rb.allreduce_msgs, "phantom traffic");
 }
 
 #[test]
