@@ -118,6 +118,14 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --preempt          stop running segments at the next *step* on every\n\
              \x20                    arrival (mid-segment preemption; model bits become\n\
              \x20                    execution-dependent, the schedule stays deterministic)\n\
+             \x20 --segment-budget S cut any running segment at its next step boundary\n\
+             \x20                    once its training time exceeds S virtual seconds\n\
+             \x20                    (default inf = off; same determinism contract as\n\
+             \x20                    --preempt)\n\
+             \x20 --online-model     learn eq-1/eq-5 fits from live segments instead of\n\
+             \x20                    trusting the trace tables; schedulers use the learned\n\
+             \x20                    fit once its confidence gate opens, and the per-job\n\
+             \x20                    table reports model-vs-truth RMSE\n\
              \x20 --preset NAME      trainer preset (default tiny)\n\
              \x20 --segment-steps N  real steps between scheduling decisions (default 16)\n\
              \x20 --dataset-examples M  windows per epoch (default 256)\n\
@@ -340,6 +348,8 @@ fn cmd_orchestrate() -> Result<()> {
     // and is recorded in emitted traces either way)
     let model_bytes = a.str_opt("model-bytes");
     let preempt = a.flag("preempt");
+    let segment_budget = a.get_or("segment-budget", f64::INFINITY)?;
+    let online_model = a.flag("online-model");
     let preset = a.str_or("preset", "tiny");
     let segment_steps = a.get_or("segment-steps", 16u64)?;
     let dataset_examples = a.get_or("dataset-examples", 256usize)?;
@@ -384,6 +394,8 @@ fn cmd_orchestrate() -> Result<()> {
     cfg.segment_steps = segment_steps;
     cfg.place_policy = place_policy;
     cfg.preempt_on_arrival = preempt;
+    cfg.segment_budget_secs = segment_budget;
+    cfg.online_model = online_model;
     if nodes > 0 {
         cfg = cfg.with_topology(nodes, gpus_per_node);
     }

@@ -18,6 +18,12 @@ pub enum EventKind {
     /// A running segment's virtual end (the real thread is joined when
     /// this event is processed).
     SegmentEnd,
+    /// A running segment reached its virtual-seconds budget
+    /// (`--segment-budget`): if it is still the same in-flight segment,
+    /// it is cut at its next whole-step boundary. Ordered after
+    /// `SegmentEnd` so a deadline that coincides with its own segment's
+    /// end is trivially stale.
+    BudgetCheck,
 }
 
 /// One scheduled event.
@@ -121,6 +127,7 @@ mod tests {
     fn equal_times_batch_together_arrivals_first() {
         let mut q = EventQueue::new();
         q.push(ev(2.0, EventKind::SegmentEnd, 9));
+        q.push(ev(2.0, EventKind::BudgetCheck, 1));
         q.push(ev(2.0, EventKind::Arrival, 4));
         q.push(ev(2.0, EventKind::SegmentEnd, 3));
         q.push(ev(2.0, EventKind::Arrival, 7));
@@ -134,6 +141,7 @@ mod tests {
                 (EventKind::Arrival, 7),
                 (EventKind::SegmentEnd, 3),
                 (EventKind::SegmentEnd, 9),
+                (EventKind::BudgetCheck, 1),
             ]
         );
     }

@@ -92,6 +92,10 @@ pub struct SegmentMeta {
     pub stop: Option<Arc<AtomicBool>>,
     /// Set on preemption: whole steps credited on the virtual clock.
     pub preempted_steps: Option<u64>,
+    /// Virtual instant of this segment's queued `BudgetCheck` (None
+    /// when the segment fits its budget); a check event not matching
+    /// this is stale and ignored.
+    pub budget_deadline: Option<f64>,
 }
 
 /// One registered job: spec, lifecycle state, the in-memory checkpoint
@@ -124,6 +128,10 @@ pub struct Job {
     /// startup counts as restart overhead; continuations' startup is an
     /// artifact of segment-wise execution and is excluded).
     pub last_segment_restarted: bool,
+    /// Online eq-1/eq-5 learner (`--online-model` only): accumulates
+    /// this job's finished-segment observations and serves the
+    /// confidence-gated fit the scheduler consumes.
+    pub online: Option<crate::perfmodel::OnlineModel>,
     // ---- metrics ----
     pub first_start: Option<f64>,
     pub segments: u64,
@@ -141,6 +149,14 @@ pub struct Job {
     pub max_nodes_spanned: usize,
     /// Segments whose ring crossed a node boundary.
     pub cross_node_segments: u64,
+    /// Model-vs-truth RMSE (secs/epoch over the trace table's widths)
+    /// the first time the confidence gate was open, and the latest —
+    /// the learned-vs-oracle gap and how it moved as segments accrued.
+    pub model_rmse_first: Option<f64>,
+    pub model_rmse_last: Option<f64>,
+    /// Completed segments when the confidence gate first opened (None =
+    /// the scheduler only ever saw the trace-table prior).
+    pub learned_after_segments: Option<u64>,
 }
 
 impl Job {
@@ -158,6 +174,7 @@ impl Job {
             inflight: None,
             boundary_time: None,
             last_segment_restarted: false,
+            online: None,
             first_start: None,
             segments: 0,
             restarts: 0,
@@ -168,6 +185,9 @@ impl Job {
             max_w_granted: 0,
             max_nodes_spanned: 0,
             cross_node_segments: 0,
+            model_rmse_first: None,
+            model_rmse_last: None,
+            learned_after_segments: None,
         }
     }
 

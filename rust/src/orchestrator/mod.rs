@@ -50,6 +50,19 @@
 //! gains already know that doubling past a node boundary is expensive.
 //! [`Topology::Flat`] (the default) short-circuits all of it and
 //! reproduces the pre-placement orchestrator bit-for-bit.
+//!
+//! **Online modelling.** Under `--online-model` the trace speed tables
+//! stop being scheduler knowledge and become hidden ground truth: each
+//! job's finished segments feed a per-job
+//! [`crate::perfmodel::OnlineModel`] that refits eq 1/eq 5 after every
+//! segment, and strategies consume [`Speed::Learned`] — the
+//! confidence-gated fit once trustworthy, the trace-table prior until
+//! then (DESIGN.md §11). The learned-vs-truth gap is reported per job as
+//! model RMSE. A `--segment-budget` additionally cuts any segment whose
+//! training time outruns the budget at its next whole-step boundary
+//! (same machinery and determinism contract as `--preempt`), so wide
+//! segments cannot starve the scheduler — or the learner — of decision
+//! points.
 
 pub mod event;
 pub mod executor;
@@ -70,7 +83,8 @@ use event::{Event, EventKind, EventQueue};
 use executor::{spawn_segment, SegmentPlan};
 
 use crate::cluster::{ClusterState, PlacePolicy, Topology};
-use crate::perfmodel::PlacementModel;
+use crate::perfmodel::online::PAPER_EXAMPLES_PER_EPOCH;
+use crate::perfmodel::{OnlineModel, PlacementModel};
 use crate::runtime::Artifacts;
 use crate::scheduler::{total_allocated, JobInfo, Scheduler, Speed};
 use crate::trainer::TrainConfig;
@@ -109,6 +123,21 @@ pub struct OrchestratorConfig {
     /// become execution-dependent (the real thread may have run a
     /// different number of steps than credited). Default off.
     pub preempt_on_arrival: bool,
+    /// Segment budget: a running segment whose training time (restart
+    /// charge excluded) would exceed this many virtual seconds is cut at
+    /// its next whole-step boundary past the budget — so a wide-stepped
+    /// segment can never starve the scheduler of decision points. Same
+    /// determinism contract as `preempt_on_arrival` (whole-step virtual
+    /// credit; model bits execution-dependent). Default `INFINITY` (off).
+    pub segment_budget_secs: f64,
+    /// Online modelling (§7's exploratory strategy as a service): treat
+    /// each job's trace speed table as hidden ground truth, learn
+    /// eq-1/eq-5 fits from its finished segments into a per-job
+    /// [`crate::perfmodel::OnlineModel`], and hand schedulers
+    /// [`Speed::Learned`] — the confidence-gated fit once trustworthy,
+    /// the trace-table prior until then. Per-job model-vs-truth RMSE is
+    /// reported in [`JobReport`]. Default off (oracle tables).
+    pub online_model: bool,
 }
 
 impl OrchestratorConfig {
@@ -122,6 +151,8 @@ impl OrchestratorConfig {
             placement: PlacementModel::paper(),
             place_policy: PlacePolicy::Pack,
             preempt_on_arrival: false,
+            segment_budget_secs: f64::INFINITY,
+            online_model: false,
         }
     }
 
@@ -196,6 +227,10 @@ impl Orchestrator {
         cfg.placement.checked()?;
         anyhow::ensure!(cfg.segment_steps >= 1, "segment_steps must be >= 1");
         anyhow::ensure!(cfg.restart_cost >= 0.0, "restart_cost must be >= 0");
+        anyhow::ensure!(
+            cfg.segment_budget_secs > 0.0,
+            "segment_budget_secs must be > 0 (INFINITY = off)"
+        );
         anyhow::ensure!(cfg.train.dataset_examples >= 1, "dataset_examples must be >= 1");
         anyhow::ensure!(!specs.is_empty(), "no jobs to orchestrate");
 
@@ -228,7 +263,18 @@ impl Orchestrator {
                 kind: EventKind::Arrival,
                 job: spec.id,
             });
-            jobs.push(Job::new(spec.clone()));
+            let mut job = Job::new(spec.clone());
+            if cfg.online_model {
+                // The learner knows the interconnect (cluster config) so
+                // it can strip placement from samples; it must *not* know
+                // the trace table — that is the truth it has to discover.
+                job.online = Some(OnlineModel::new(
+                    cfg.placement.with_model_bytes(spec.model_bytes),
+                    PAPER_EXAMPLES_PER_EPOCH,
+                    spec.model_bytes,
+                ));
+            }
+            jobs.push(job);
         }
 
         Ok(Orchestrator {
@@ -262,6 +308,7 @@ impl Orchestrator {
                         self.on_arrival(ev.job)?;
                     }
                     EventKind::SegmentEnd => self.on_segment_end(ev.job)?,
+                    EventKind::BudgetCheck => self.on_budget_check(ev.job)?,
                 }
             }
             if self.cfg.preempt_on_arrival && arrivals {
@@ -318,6 +365,9 @@ impl Orchestrator {
                 max_nodes: j.max_nodes_spanned,
                 cross_node_segments: j.cross_node_segments,
                 final_loss: j.final_loss,
+                model_rmse_first: j.model_rmse_first,
+                model_rmse: j.model_rmse_last,
+                learned_after_segments: j.learned_after_segments,
             });
         }
 
@@ -343,12 +393,21 @@ impl Orchestrator {
         self.jobs[idx].transition(JobState::Queued)
     }
 
+    /// True when any mode may cut running segments short — segments then
+    /// carry stop flags and progress is credited purely on the virtual
+    /// clock (real checkpoints stop being a deterministic function of
+    /// the trace the moment any segment can be cut).
+    fn preempt_capable(&self) -> bool {
+        self.cfg.preempt_on_arrival || self.cfg.segment_budget_secs.is_finite()
+    }
+
     /// Join the real runner thread for this job's segment (it finished at
     /// this virtual instant), fold its outcome into the registry, and
     /// park the job at the boundary (or complete it).
     fn on_segment_end(&mut self, id: u64) -> Result<()> {
         let idx = self.idx(id)?;
         let now = self.now;
+        let preempt_capable = self.preempt_capable();
         let job = &mut self.jobs[idx];
         // Stale event: a preemption moved this segment's end earlier and
         // the original event still fires later — ignore it.
@@ -374,13 +433,14 @@ impl Orchestrator {
             .recv()
             .map_err(|_| anyhow::anyhow!("job {id}: segment runner thread vanished"))??;
 
-        if self.cfg.preempt_on_arrival {
-            // Preemption mode: progress is credited purely on the
-            // virtual clock (whole steps elapsed), never from the racing
-            // real thread — once any segment can be cut short, real
-            // checkpoints stop being a deterministic function of the
-            // trace, so the schedule must not read them. Model bits may
-            // differ across runs; JCTs cannot.
+        if preempt_capable {
+            // Preemption-capable modes (arrival preemption or a segment
+            // budget): progress is credited purely on the virtual clock
+            // (whole steps elapsed), never from the racing real thread —
+            // once any segment can be cut short, real checkpoints stop
+            // being a deterministic function of the trace, so the
+            // schedule must not read them. Model bits may differ across
+            // runs; JCTs cannot.
             let steps_v = meta.preempted_steps.unwrap_or(meta.planned_steps);
             job.epochs_done = meta.launch_epochs + steps_v as f64 * meta.epochs_per_step;
             job.steps_done = meta.launch_steps + steps_v;
@@ -412,6 +472,32 @@ impl Orchestrator {
             job.final_loss = Some(l);
         }
 
+        // Online modelling: fold this finished segment into the job's
+        // learner. The speed sample is the segment's virtual-clock price
+        // at the placement it ran on (f(w, placement) — exactly what a
+        // real cluster would measure); the loss sample is the trainer's
+        // real reported loss at the cumulative epoch. Loss samples never
+        // feed back into the schedule, so determinism is untouched even
+        // where model bits are execution-dependent.
+        if let Some(online) = job.online.as_mut() {
+            if meta.epochs_per_step > 0.0 {
+                let placed_secs_per_epoch = meta.step_secs / meta.epochs_per_step;
+                online.observe_speed(workers, job.last_nodes.len().max(1), placed_secs_per_epoch);
+            }
+            if let Some(l) = outcome.final_loss {
+                online.observe_loss(job.epochs_done, l as f64);
+            }
+            if let Some(rmse) = online.speed_rmse_vs(&job.spec.profile.epoch_secs) {
+                if job.model_rmse_first.is_none() {
+                    job.model_rmse_first = Some(rmse);
+                }
+                job.model_rmse_last = Some(rmse);
+            }
+            if online.gate_open() && job.learned_after_segments.is_none() {
+                job.learned_after_segments = Some(job.segments);
+            }
+        }
+
         if job.remaining_epochs() <= EPOCH_EPS {
             job.transition(JobState::Done { finish: now })?;
         } else {
@@ -422,50 +508,79 @@ impl Orchestrator {
         Ok(())
     }
 
-    /// Mid-segment preemption (opt-in): flip every running segment's
-    /// stop flag — the real trainers agree to halt at their next step
-    /// boundary — and pull its virtual end forward to the matching
-    /// whole-step instant so the freed workers are schedulable now
-    /// instead of at the old segment end. Returns how many were cut.
-    fn preempt_running(&mut self) -> u64 {
+    /// Cut `jobs[idx]`'s in-flight segment at its next whole-step
+    /// boundary after `self.now`: flip the real trainer's stop flag (it
+    /// finishes its current step before honoring it) and pull the
+    /// segment's virtual end forward to the matching whole-step instant.
+    /// Returns the new end, or `None` when there is nothing to cut (not
+    /// running, already cut, or already effectively at its boundary).
+    fn cut_segment(&mut self, idx: usize) -> Option<f64> {
         let now = self.now;
-        let mut cut = 0;
-        let mut reschedule: Vec<(u64, f64)> = Vec::new();
-        for job in self.jobs.iter_mut() {
-            let workers = match job.state {
-                JobState::Running { workers } => workers,
-                _ => continue,
-            };
-            let Some(meta) = job.segment.as_mut() else { continue };
-            if meta.preempted_steps.is_some() || meta.end <= now {
-                continue;
-            }
-            // whole steps the virtual clock has elapsed (the trainer
-            // finishes its current step before honoring the flag)
-            let worked = now - meta.start - meta.restart_pay;
-            let steps_v = if worked <= 0.0 || meta.step_secs <= 0.0 {
-                0
-            } else {
-                ((worked / meta.step_secs).ceil() as u64).min(meta.planned_steps)
-            };
-            let new_end = meta.start + meta.restart_pay + steps_v as f64 * meta.step_secs;
-            if new_end >= meta.end {
-                continue; // already effectively at its boundary
-            }
-            if let Some(stop) = &meta.stop {
-                stop.store(true, Ordering::Relaxed);
-            }
-            self.busy_gpu_secs -= workers as f64 * (meta.end - new_end);
-            meta.end = new_end;
-            meta.preempted_steps = Some(steps_v);
-            reschedule.push((job.spec.id, new_end));
-            cut += 1;
+        let job = &mut self.jobs[idx];
+        let workers = match job.state {
+            JobState::Running { workers } => workers,
+            _ => return None,
+        };
+        let meta = job.segment.as_mut()?;
+        if meta.preempted_steps.is_some() || meta.end <= now {
+            return None;
         }
-        for (id, t) in reschedule {
-            self.queue.push(Event { time: t, kind: EventKind::SegmentEnd, job: id });
+        // whole steps the virtual clock has elapsed
+        let worked = now - meta.start - meta.restart_pay;
+        let steps_v = if worked <= 0.0 || meta.step_secs <= 0.0 {
+            0
+        } else {
+            ((worked / meta.step_secs).ceil() as u64).min(meta.planned_steps)
+        };
+        let new_end = meta.start + meta.restart_pay + steps_v as f64 * meta.step_secs;
+        if new_end >= meta.end {
+            return None; // already effectively at its boundary
+        }
+        if let Some(stop) = &meta.stop {
+            stop.store(true, Ordering::Relaxed);
+        }
+        self.busy_gpu_secs -= workers as f64 * (meta.end - new_end);
+        meta.end = new_end;
+        meta.preempted_steps = Some(steps_v);
+        Some(new_end)
+    }
+
+    /// Mid-segment preemption (opt-in): cut every running segment so the
+    /// freed workers are schedulable now instead of at the old segment
+    /// end. Returns how many were cut.
+    fn preempt_running(&mut self) -> u64 {
+        let mut cut = 0;
+        for idx in 0..self.jobs.len() {
+            let id = self.jobs[idx].spec.id;
+            if let Some(new_end) = self.cut_segment(idx) {
+                self.queue.push(Event { time: new_end, kind: EventKind::SegmentEnd, job: id });
+                cut += 1;
+            }
         }
         self.total_preemptions += cut;
         cut
+    }
+
+    /// A segment's virtual-seconds budget expired. If the same segment
+    /// is still in flight (the deadline matches and nothing cut it
+    /// already), cut it at its next whole-step boundary; stale checks —
+    /// the segment ended, or an arrival preemption got there first — are
+    /// ignored, exactly like stale `SegmentEnd` events.
+    fn on_budget_check(&mut self, id: u64) -> Result<()> {
+        let idx = self.idx(id)?;
+        let now = self.now;
+        let current = self.jobs[idx].segment.as_ref().map_or(false, |m| {
+            m.budget_deadline.map_or(false, |d| d.to_bits() == now.to_bits())
+                && m.preempted_steps.is_none()
+        });
+        if !current {
+            return Ok(());
+        }
+        if let Some(new_end) = self.cut_segment(idx) {
+            self.queue.push(Event { time: new_end, kind: EventKind::SegmentEnd, job: id });
+            self.total_preemptions += 1;
+        }
+        Ok(())
     }
 
     /// Invoke the strategy over every stoppable job, then launch the
@@ -493,13 +608,23 @@ impl Orchestrator {
             .iter()
             .map(|&i| {
                 let j = &self.jobs[i];
+                // Under --online-model the trace table is only the
+                // pre-gate prior: once the job's learner passes its
+                // confidence gate, strategies score widths against the
+                // *measured* eq-5 fit instead.
+                let table = Speed::Table(j.spec.profile.speed_table());
+                let base = if self.cfg.online_model {
+                    let fit = j.online.as_ref().and_then(|o| o.speed().cloned());
+                    Speed::learned(fit, table)
+                } else {
+                    table
+                };
                 // On a grid the strategy scores each width against the
                 // placement it would get: f(w, placement), eq 2–4 split.
-                let table = Speed::Table(j.spec.profile.speed_table());
                 let speed = match self.cfg.topology {
-                    Topology::Flat { .. } => table,
+                    Topology::Flat { .. } => base,
                     Topology::Cluster(spec) => Speed::placed(
-                        table,
+                        base,
                         self.cfg.placement.with_model_bytes(j.spec.model_bytes),
                         spec.gpus_per_node,
                     ),
@@ -585,7 +710,7 @@ impl Orchestrator {
         let segment_steps = self.cfg.segment_steps;
         let dataset = self.cfg.train.dataset_examples;
         let batch = self.batch;
-        let preempt = self.cfg.preempt_on_arrival;
+        let preempt = self.preempt_capable();
 
         // f(w, placement): the profile's epoch seconds are single-node
         // truth; a ring spanning nodes pays the eq-2 inter-node delta.
@@ -631,6 +756,22 @@ impl Orchestrator {
         let duration = restart_pay + seg_epochs * epoch_secs;
         let end = now + duration;
 
+        // Segment budget: if the training part of this segment outruns
+        // the budget, schedule a check at the deadline; firing, it cuts
+        // the segment at the first whole-step boundary past the budget
+        // (so the scheduler regains a decision point, and an overrunning
+        // segment can never monopolize its workers between decisions).
+        let step_secs = epochs_per_step * epoch_secs;
+        let budget = self.cfg.segment_budget_secs;
+        let budget_deadline = if budget.is_finite()
+            && step_secs > 0.0
+            && ((budget / step_secs).ceil() as u64) < steps
+        {
+            Some(now + restart_pay + budget)
+        } else {
+            None
+        };
+
         let restart_from_disk = pay_restart && job.checkpoint.is_some();
         let plan = SegmentPlan {
             job: id,
@@ -646,13 +787,14 @@ impl Orchestrator {
             end,
             start: now,
             restart_pay,
-            step_secs: epochs_per_step * epoch_secs,
+            step_secs,
             planned_steps: steps,
             epochs_per_step,
             launch_epochs: job.epochs_done,
             launch_steps: job.steps_done,
             stop,
             preempted_steps: None,
+            budget_deadline,
         });
         job.inflight = Some(spawn_segment(plan));
         job.last_segment_restarted = pay_restart;
@@ -676,6 +818,9 @@ impl Orchestrator {
         self.peak_allocated = self.peak_allocated.max(self.committed);
         self.busy_gpu_secs += w as f64 * duration;
         self.queue.push(Event { time: end, kind: EventKind::SegmentEnd, job: id });
+        if let Some(deadline) = budget_deadline {
+            self.queue.push(Event { time: deadline, kind: EventKind::BudgetCheck, job: id });
+        }
         Ok(())
     }
 
@@ -719,5 +864,11 @@ mod tests {
         assert!(Orchestrator::new(&cfg, &specs).is_err());
         cfg.segment_steps = 8;
         assert!(Orchestrator::new(&cfg, &[]).is_err());
+        cfg.segment_budget_secs = 0.0;
+        assert!(Orchestrator::new(&cfg, &specs).is_err());
+        cfg.segment_budget_secs = f64::NAN;
+        assert!(Orchestrator::new(&cfg, &specs).is_err());
+        cfg.segment_budget_secs = f64::INFINITY;
+        assert!(Orchestrator::new(&cfg, &specs).is_ok());
     }
 }

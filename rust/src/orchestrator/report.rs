@@ -39,6 +39,15 @@ pub struct JobReport {
     /// Segments whose ring crossed a node boundary.
     pub cross_node_segments: u64,
     pub final_loss: Option<f32>,
+    /// `--online-model` only: learned-model-vs-trace-truth RMSE
+    /// (secs/epoch over the trace table's widths) at the first refit the
+    /// confidence gate accepted, and at the last — the learned-vs-oracle
+    /// gap and its trajectory as segments accumulated.
+    pub model_rmse_first: Option<f64>,
+    pub model_rmse: Option<f64>,
+    /// Completed segments when the confidence gate first opened; `None`
+    /// when the scheduler only ever consulted the trace-table prior.
+    pub learned_after_segments: Option<u64>,
 }
 
 /// Whole-run outcome.
@@ -97,11 +106,17 @@ impl OrchestratorReport {
         self.jobs.iter().map(|j| j.queue_secs).sum::<f64>() / self.jobs.len() as f64
     }
 
+    /// Jobs whose confidence gate opened (ran on a learned model).
+    pub fn learned_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.learned_after_segments.is_some()).count()
+    }
+
     /// Aligned per-job table (rendered by `ringmaster orchestrate`).
     pub fn per_job_table(&self) -> CsvTable {
         let mut t = CsvTable::new(&[
             "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "nodes",
-            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "final_loss",
+            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "rmse",
+            "final_loss",
         ]);
         for j in &self.jobs {
             t.row(&[
@@ -118,6 +133,7 @@ impl OrchestratorReport {
                 format!("{:.2}", j.epochs),
                 format!("{:.2}", j.measured_train_secs),
                 format!("{:.2}", j.measured_restart_secs),
+                j.model_rmse.map(|r| format!("{r:.2}")).unwrap_or_else(|| "-".into()),
                 j.final_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
             ]);
         }
@@ -126,11 +142,16 @@ impl OrchestratorReport {
 
     /// Multi-line cluster summary.
     pub fn summary(&self) -> String {
+        let learned = if self.learned_jobs() > 0 {
+            format!("  learned models {}/{}", self.learned_jobs(), self.jobs.len())
+        } else {
+            String::new()
+        };
         format!(
             "strategy={} capacity={} topology={} jobs={} events={}\n\
              avg JCT {:.1}s  p50 JCT {:.1}s  avg queue {:.1}s  makespan {:.1}s (virtual)\n\
              utilization {:.1}%  peak workers {}  restarts {}  preemptions {}  \
-             cross-node segs {}  orchestration wall {:.2}s (real)",
+             cross-node segs {}{learned}  orchestration wall {:.2}s (real)",
             self.strategy,
             self.capacity,
             self.topology.label(),
@@ -173,6 +194,9 @@ mod tests {
             max_nodes: 1,
             cross_node_segments: 0,
             final_loss: Some(1.25),
+            model_rmse_first: None,
+            model_rmse: None,
+            learned_after_segments: None,
         }
     }
 
@@ -210,6 +234,21 @@ mod tests {
         }
         let s = r.summary();
         assert!(s.contains("avg JCT") && s.contains("utilization") && s.contains("doubling"));
+    }
+
+    #[test]
+    fn learned_model_metrics_render_when_present() {
+        let mut r = report();
+        assert_eq!(r.learned_jobs(), 0);
+        assert!(!r.summary().contains("learned models"));
+        let rendered = r.per_job_table().render();
+        assert!(rendered.contains("rmse"));
+        r.jobs[0].model_rmse_first = Some(4.5);
+        r.jobs[0].model_rmse = Some(1.25);
+        r.jobs[0].learned_after_segments = Some(3);
+        assert_eq!(r.learned_jobs(), 1);
+        assert!(r.summary().contains("learned models 1/3"), "{}", r.summary());
+        assert!(r.per_job_table().render().contains("1.25"));
     }
 
     #[test]

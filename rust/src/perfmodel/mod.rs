@@ -16,12 +16,19 @@
 //! `f(w, placement)` by pricing the eq 2–4 α/β terms differently intra-
 //! vs inter-node, so a ring scattered across nodes is slower than the
 //! same `w` packed into one.
+//!
+//! [`online`] closes §7's precompute-vs-explore loop: a per-job
+//! [`OnlineModel`] learns both fits from finished live segments
+//! (placement-stripped via [`PlacementModel`]) behind a confidence gate,
+//! so schedulers can run on *measured* behavior instead of trace tables.
 
 pub mod convergence;
+pub mod online;
 pub mod placement;
 pub mod speed;
 
 pub use convergence::ConvergenceModel;
+pub use online::{OnlineConfig, OnlineModel};
 pub use placement::{PlacementModel, TopoCostParams};
 pub use speed::SpeedModel;
 

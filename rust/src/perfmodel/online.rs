@@ -1,0 +1,393 @@
+//! Online performance modelling — learning the eq 1 / eq 5 fits from
+//! live segments instead of assuming them (§7's precompute-vs-explore
+//! tradeoff, resolved the way Optimus deploys it: fit as you go).
+//!
+//! The precompute strategy of §4 assumes every job arrives with its
+//! resource-to-speed curve `f(w)` and loss curve known. Real clusters
+//! have neither: they *observe* finished training segments. Each live
+//! job therefore owns one [`OnlineModel`] that accumulates
+//!
+//! - **speed observations** `(w, nodes_spanned, measured secs/epoch)` —
+//!   one per finished segment, priced at whatever placement the segment
+//!   actually ran on, and
+//! - **loss observations** `(epoch, loss)` — the trainer's reported
+//!   losses over cumulative epochs,
+//!
+//! and refits [`SpeedModel`] (eq 5) and [`ConvergenceModel`] (eq 1)
+//! after every segment.
+//!
+//! **Placement split.** A segment whose ring spanned `k > 1` nodes
+//! measured `base + extra(w, k)` seconds/epoch, where `extra` is the
+//! eq 2–4 inter-node delta of [`PlacementModel`]. The interconnect model
+//! is cluster configuration, not job knowledge, so the learner strips
+//! the delta and fits eq 5 on single-node-equivalent samples — the same
+//! convention the trace tables use, which is what lets a learned model
+//! be wrapped in the scheduler's placement-aware
+//! [`Speed::Placed`](crate::scheduler::Speed) exactly like a table.
+//!
+//! **Confidence gate.** A fit is handed to the scheduler only once it is
+//! trustworthy: at least [`OnlineConfig::min_speed_samples`] segments
+//! observed, at least [`OnlineConfig::min_distinct_widths`] distinct
+//! worker counts among them (eq 5 is unconstrained along `w` with one),
+//! and relative fit residual at most [`OnlineConfig::max_rel_residual`].
+//! Until the gate opens, consumers fall back to their prior — under
+//! `--online-model` the submission-time trace table (see
+//! `scheduler::LearnedSpeed`).
+//!
+//! **Dedup by width.** Segments repeat widths; on the virtual clock
+//! repeated measurements at one `(w, nodes)` are identical, so the fit
+//! uses the *latest* observation per width. This keeps the fit — and
+//! the model-vs-truth RMSE trajectory the orchestrator reports — a pure
+//! function of which widths have been visited: new information moves
+//! the model, repetition never jitters it.
+
+use std::collections::BTreeMap;
+
+use crate::perfmodel::convergence::{ConvergenceModel, MIN_SAMPLES};
+use crate::perfmodel::placement::PlacementModel;
+use crate::perfmodel::speed::SpeedModel;
+
+/// CIFAR-10 examples per epoch — the paper's `m`, scaling feature 0 of
+/// eq 5. Only conditioning depends on it (eq-5 coefficients absorb any
+/// positive scale), so it doubles as the default for learned fits over
+/// trace profiles, which are calibrated to the paper's workload.
+pub const PAPER_EXAMPLES_PER_EPOCH: f64 = 50_000.0;
+
+/// Confidence-gate thresholds for [`OnlineModel`].
+#[derive(Clone, Copy, Debug)]
+pub struct OnlineConfig {
+    /// Segments observed before the speed fit may be trusted.
+    pub min_speed_samples: usize,
+    /// Distinct worker counts observed before the speed fit may be
+    /// trusted (eq 5 needs >= 2 to constrain the `w` direction at all).
+    pub min_distinct_widths: usize,
+    /// Largest trustworthy relative residual: RMS fit error over the
+    /// RMS of the measured seconds/epoch.
+    pub max_rel_residual: f64,
+    /// Loss observations before an eq-1 fit is attempted.
+    pub min_loss_samples: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            min_speed_samples: 3,
+            min_distinct_widths: 2,
+            max_rel_residual: 0.15,
+            min_loss_samples: MIN_SAMPLES,
+        }
+    }
+}
+
+/// One finished segment's measured speed at the placement it ran on.
+#[derive(Clone, Copy, Debug)]
+pub struct SpeedObs {
+    pub w: usize,
+    /// Nodes the segment's ring spanned (1 on flat pools).
+    pub nodes: usize,
+    /// Measured seconds/epoch *including* the span's eq-2 delta.
+    pub secs_per_epoch: f64,
+}
+
+/// Per-job online model: accumulated observations plus the current
+/// eq-5 / eq-1 refits and the confidence-gate verdict.
+#[derive(Clone, Debug)]
+pub struct OnlineModel {
+    cfg: OnlineConfig,
+    /// Interconnect model used to strip the inter-node delta from
+    /// observations (sized to this job's gradient payload).
+    placement: PlacementModel,
+    /// Eq-5 job constants (`m` examples/epoch, `n` payload bytes).
+    m: f64,
+    n_bytes: f64,
+    speed_obs: Vec<SpeedObs>,
+    loss_obs: Vec<(f64, f64)>,
+    speed: Option<SpeedModel>,
+    confident: bool,
+    convergence: Option<ConvergenceModel>,
+    refits: u64,
+}
+
+impl OnlineModel {
+    pub fn new(placement: PlacementModel, m: f64, n_bytes: f64) -> OnlineModel {
+        OnlineModel::with_config(placement, m, n_bytes, OnlineConfig::default())
+    }
+
+    pub fn with_config(
+        placement: PlacementModel,
+        m: f64,
+        n_bytes: f64,
+        cfg: OnlineConfig,
+    ) -> OnlineModel {
+        OnlineModel {
+            cfg,
+            placement,
+            m,
+            n_bytes,
+            speed_obs: Vec::new(),
+            loss_obs: Vec::new(),
+            speed: None,
+            confident: false,
+            convergence: None,
+            refits: 0,
+        }
+    }
+
+    /// Record one finished segment's measured speed and refit eq 5.
+    /// Non-finite or non-positive measurements are dropped, never fitted.
+    pub fn observe_speed(&mut self, w: usize, nodes: usize, secs_per_epoch: f64) {
+        if w == 0 || !secs_per_epoch.is_finite() || secs_per_epoch <= 0.0 {
+            return;
+        }
+        self.speed_obs.push(SpeedObs { w, nodes: nodes.max(1), secs_per_epoch });
+        self.refit_speed();
+    }
+
+    /// Record one loss sample at cumulative `epoch` and refit eq 1 once
+    /// enough samples exist. A failed refit keeps the previous fit.
+    pub fn observe_loss(&mut self, epoch: f64, loss: f64) {
+        if !epoch.is_finite() || !loss.is_finite() || loss <= 0.0 {
+            return;
+        }
+        self.loss_obs.push((epoch, loss));
+        if self.loss_obs.len() >= self.cfg.min_loss_samples {
+            if let Ok(m) = ConvergenceModel::fit(&self.loss_obs) {
+                self.convergence = Some(m);
+                self.refits += 1;
+            }
+        }
+    }
+
+    /// Single-node-equivalent seconds/epoch of one observation: the
+    /// eq-2 delta its span paid is stripped. Clamped positive so a
+    /// mis-specified interconnect model can degrade the fit but never
+    /// poison it with a non-positive speed.
+    fn base_secs(&self, o: &SpeedObs) -> f64 {
+        let stripped = o.secs_per_epoch - self.placement.extra_epoch_secs(o.w, o.nodes);
+        stripped.max(0.01 * o.secs_per_epoch)
+    }
+
+    /// Fit samples: latest observation per width, placement-stripped,
+    /// as `(w, epochs/sec)` the way [`SpeedModel::fit`] wants them.
+    fn fit_samples(&self) -> Vec<(usize, f64)> {
+        let mut latest: BTreeMap<usize, f64> = BTreeMap::new();
+        for o in &self.speed_obs {
+            latest.insert(o.w, self.base_secs(o));
+        }
+        latest.into_iter().map(|(w, secs)| (w, 1.0 / secs)).collect()
+    }
+
+    fn refit_speed(&mut self) {
+        let samples = self.fit_samples();
+        self.confident = false;
+        if samples.len() < 2 {
+            self.speed = None;
+            return;
+        }
+        match SpeedModel::fit(&samples, self.m, self.n_bytes) {
+            Ok(m) => {
+                // Relative residual: RMS fit error over RMS target, both
+                // in seconds/epoch space.
+                let rms_target = (samples.iter().map(|&(_, f)| (1.0 / f).powi(2)).sum::<f64>()
+                    / samples.len() as f64)
+                    .sqrt();
+                let rms_err = m.residual / (samples.len() as f64).sqrt();
+                let rel = rms_err / rms_target.max(1e-12);
+                self.confident = self.speed_obs.len() >= self.cfg.min_speed_samples
+                    && samples.len() >= self.cfg.min_distinct_widths
+                    && rel <= self.cfg.max_rel_residual;
+                self.speed = Some(m);
+                self.refits += 1;
+            }
+            Err(_) => self.speed = None,
+        }
+    }
+
+    /// The gate-opened eq-5 fit — what schedulers may consume. `None`
+    /// until the confidence gate opens.
+    pub fn speed(&self) -> Option<&SpeedModel> {
+        if self.confident {
+            self.speed.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// Current eq-5 fit regardless of confidence (diagnostics only).
+    pub fn speed_ungated(&self) -> Option<&SpeedModel> {
+        self.speed.as_ref()
+    }
+
+    /// Latest eq-1 loss-curve fit, if enough samples have arrived.
+    pub fn convergence(&self) -> Option<&ConvergenceModel> {
+        self.convergence.as_ref()
+    }
+
+    /// True once the speed fit passed the confidence gate.
+    pub fn gate_open(&self) -> bool {
+        self.confident
+    }
+
+    pub fn speed_samples(&self) -> usize {
+        self.speed_obs.len()
+    }
+
+    pub fn distinct_widths(&self) -> usize {
+        let mut ws: Vec<usize> = self.speed_obs.iter().map(|o| o.w).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws.len()
+    }
+
+    /// Total successful refits (speed + convergence).
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// RMSE of the *gated* fit against a truth table of
+    /// `(w, secs/epoch)` — the learned-vs-oracle gap the orchestrator
+    /// reports per job. `None` while the gate is closed.
+    pub fn speed_rmse_vs(&self, truth: &[(usize, f64)]) -> Option<f64> {
+        let m = self.speed()?;
+        if truth.is_empty() {
+            return None;
+        }
+        let sse: f64 = truth
+            .iter()
+            .map(|&(w, secs)| (m.secs_per_epoch(w) - secs).powi(2))
+            .sum();
+        Some((sse / truth.len() as f64).sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Eq-5-realizable truth: `t(w) = a/w + b·(w-1) + c`, all >= 0 —
+    /// exactly the function family eq 5 spans, so a fit over >= 3
+    /// distinct widths must reproduce it at *every* width (the eq-5
+    /// features are rank 3 and their null direction is prediction-free).
+    fn truth(a: f64, b: f64, c: f64) -> impl Fn(usize) -> f64 {
+        move |w: usize| a / w as f64 + b * (w as f64 - 1.0) + c
+    }
+
+    fn model() -> OnlineModel {
+        OnlineModel::new(PlacementModel::paper(), PAPER_EXAMPLES_PER_EPOCH, 6.9e6)
+    }
+
+    #[test]
+    fn gate_stays_closed_without_distinct_widths() {
+        let t = truth(120.0, 1.2, 16.0);
+        let mut m = model();
+        for _ in 0..5 {
+            m.observe_speed(4, 1, t(4));
+        }
+        assert!(m.speed().is_none(), "one width can never open the gate");
+        assert!(!m.gate_open());
+        assert_eq!(m.distinct_widths(), 1);
+        m.observe_speed(8, 1, t(8));
+        assert!(m.gate_open(), "exact samples at 2 widths and 6 obs must pass");
+        assert!(m.speed().is_some());
+    }
+
+    #[test]
+    fn gate_needs_min_samples_even_with_two_widths() {
+        let t = truth(120.0, 1.2, 16.0);
+        let mut m = model();
+        m.observe_speed(1, 1, t(1));
+        m.observe_speed(2, 1, t(2));
+        assert!(m.speed().is_none(), "2 obs < min_speed_samples");
+        assert!(m.speed_ungated().is_some(), "a fit exists, just untrusted");
+        m.observe_speed(2, 1, t(2));
+        assert!(m.gate_open());
+    }
+
+    #[test]
+    fn full_width_coverage_recovers_truth_everywhere() {
+        let t = truth(140.0, 0.9, 11.0);
+        let mut m = model();
+        for &w in &[1usize, 2, 4, 8] {
+            m.observe_speed(w, 1, t(w));
+        }
+        let fit = m.speed().expect("gate open");
+        for w in [1usize, 3, 5, 8, 16, 32] {
+            let got = fit.secs_per_epoch(w);
+            let want = t(w);
+            assert!((got - want).abs() / want < 1e-3, "w={w}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn placement_split_strips_the_internode_delta() {
+        // Observations taken on rings spanning 2 nodes include the eq-2
+        // delta; the learner must recover the single-node base curve.
+        let t = truth(130.0, 1.0, 14.0);
+        let placement = PlacementModel::paper().with_model_bytes(1.0e8);
+        let mut m =
+            OnlineModel::new(placement, PAPER_EXAMPLES_PER_EPOCH, 1.0e8);
+        for &(w, nodes) in &[(1usize, 1usize), (2, 2), (4, 2), (8, 2)] {
+            let measured = placement.placed_epoch_secs(t(w), w, nodes);
+            m.observe_speed(w, nodes, measured);
+        }
+        let fit = m.speed().expect("gate open");
+        for &w in &[1usize, 2, 4, 8] {
+            let got = fit.secs_per_epoch(w);
+            let want = t(w);
+            assert!((got - want).abs() / want < 1e-3, "w={w}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rmse_drops_to_zero_at_full_coverage_and_repeats_do_not_jitter() {
+        let t = truth(125.0, 1.4, 13.0);
+        let table: Vec<(usize, f64)> = [1usize, 2, 4, 8].iter().map(|&w| (w, t(w))).collect();
+        let mut m = model();
+        m.observe_speed(8, 1, t(8));
+        m.observe_speed(4, 1, t(4));
+        m.observe_speed(4, 1, t(4));
+        let first = m.speed_rmse_vs(&table).expect("gate open at 2 widths / 3 obs");
+        m.observe_speed(4, 1, t(4));
+        let repeat = m.speed_rmse_vs(&table).unwrap();
+        assert_eq!(first.to_bits(), repeat.to_bits(), "duplicate widths moved the fit");
+        m.observe_speed(2, 1, t(2));
+        m.observe_speed(1, 1, t(1));
+        let last = m.speed_rmse_vs(&table).unwrap();
+        // slack above NNLS numerical noise, far below any real signal
+        assert!(last <= first + 1e-6 * t(1), "rmse rose with coverage: {first} -> {last}");
+        assert!(last < 1e-3 * t(1), "full coverage should recover truth: rmse={last}");
+    }
+
+    #[test]
+    fn garbage_observations_are_dropped() {
+        let t = truth(120.0, 1.2, 16.0);
+        let mut m = model();
+        m.observe_speed(0, 1, 10.0);
+        m.observe_speed(2, 1, f64::NAN);
+        m.observe_speed(2, 1, -3.0);
+        m.observe_speed(2, 1, 0.0);
+        assert_eq!(m.speed_samples(), 0);
+        m.observe_loss(f64::NAN, 1.0);
+        m.observe_loss(0.0, -1.0);
+        // valid data still works afterwards
+        for &w in &[1usize, 2, 4] {
+            m.observe_speed(w, 1, t(w));
+        }
+        assert!(m.gate_open());
+    }
+
+    #[test]
+    fn convergence_fit_arrives_with_enough_losses() {
+        let mut m = model();
+        for e in 0..4 {
+            m.observe_loss(e as f64, 1.0 / (0.4 * e as f64 + 1.2) + 0.2);
+        }
+        assert!(m.convergence().is_none(), "below min_loss_samples");
+        for e in 4..30 {
+            m.observe_loss(e as f64, 1.0 / (0.4 * e as f64 + 1.2) + 0.2);
+        }
+        let conv = m.convergence().expect("fit after enough samples");
+        let want = 1.0 / (0.4 * 15.0 + 1.2) + 0.2;
+        assert!((conv.predict(15.0) - want).abs() / want < 0.05);
+    }
+}

@@ -130,6 +130,32 @@ mod tests {
     }
 
     #[test]
+    fn learned_fit_unlocks_doubling_the_prior_would_refuse() {
+        // Prior says the job does not scale (flat table -> zero eq-6
+        // gain); the live-learned fit shows strong scaling. With the
+        // gate closed the heuristic holds at 1; once it opens, the same
+        // job is doubled up — schedulers act on measured behavior.
+        use super::super::Speed;
+        use crate::perfmodel::SpeedModel;
+        let flat_prior = || Speed::Table(vec![(1, 1.0 / 50.0), (16, 1.0 / 50.0)]);
+        let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&w| (w, 1.0 / (800.0 / w as f64 + 0.5 * (w as f64 - 1.0) + 2.0)))
+            .collect();
+        let fit = SpeedModel::fit(&samples, 800.0, 4.0e6).unwrap();
+        let mk = |fit| super::super::JobInfo {
+            id: 1,
+            q: 100.0,
+            speed: Speed::learned(fit, flat_prior()),
+            max_w: 16,
+        };
+        let closed = Doubling.allocate(&[mk(None)], 16);
+        assert_eq!(closed[&1], 1, "closed gate must follow the flat prior");
+        let open = Doubling.allocate(&[mk(Some(fit))], 16);
+        assert!(open[&1] >= 8, "open gate should chase the measured scaling, got {}", open[&1]);
+    }
+
+    #[test]
     fn empty_jobs_empty_allocation() {
         let alloc = Doubling.allocate(&[], 64);
         assert!(alloc.is_empty());

@@ -129,6 +129,28 @@ mod tests {
     }
 
     #[test]
+    fn exact_dp_optimizes_against_the_learned_fit() {
+        // The DP must find the learned curve's argmin width, not the
+        // prior's. Learned truth: t(w) = 400/w + 4(w-1) + 2, minimized
+        // at w = 10 over integers (sqrt(100) = 10).
+        use super::super::Speed;
+        use crate::perfmodel::SpeedModel;
+        let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
+            .iter()
+            .map(|&w| (w, 1.0 / (400.0 / w as f64 + 4.0 * (w as f64 - 1.0) + 2.0)))
+            .collect();
+        let fit = SpeedModel::fit(&samples, 400.0, 4.0e6).unwrap();
+        let prior = Speed::Table(vec![(1, 1.0 / 30.0), (32, 1.0 / 30.0)]);
+        let j = JobInfo { id: 1, q: 100.0, speed: Speed::learned(Some(fit), prior), max_w: 32 };
+        let alloc = ExactDp.allocate(std::slice::from_ref(&j), 32);
+        let best_w = (1..=32)
+            .min_by(|&a, &b| j.time_at(a).partial_cmp(&j.time_at(b)).unwrap())
+            .unwrap();
+        assert_eq!(alloc[&1], best_w);
+        assert!((6..=14).contains(&best_w), "fit should minimize near w=10, got {best_w}");
+    }
+
+    #[test]
     fn table_job_interpolates() {
         let tj = table_job(1, 10.0, &[(1, 0.1), (4, 0.4)], 8);
         let f2 = tj.speed.epochs_per_sec(2);

@@ -78,6 +78,23 @@ mod tests {
     }
 
     #[test]
+    fn fixed_ignores_the_learned_model_by_design() {
+        // Fixed-k consults no performance model, so gate state must not
+        // change its grants — the baseline stays a baseline under
+        // --online-model.
+        use super::super::Speed;
+        use crate::perfmodel::SpeedModel;
+        let prior = || Speed::Table(vec![(1, 1.0 / 50.0), (8, 1.0 / 10.0)]);
+        let samples: Vec<(usize, f64)> =
+            [1usize, 2, 4, 8].iter().map(|&w| (w, 1.0 / (100.0 / w as f64 + 3.0))).collect();
+        let fit = SpeedModel::fit(&samples, 100.0, 4.0e6).unwrap();
+        let mk = |id, fit| JobInfo { id, q: 50.0, speed: Speed::learned(fit, prior()), max_w: 8 };
+        let closed = Fixed(4).allocate(&[mk(1, None), mk(2, None)], 8);
+        let open = Fixed(4).allocate(&[mk(1, Some(fit.clone())), mk(2, Some(fit))], 8);
+        assert_eq!(closed, open);
+    }
+
+    #[test]
     fn names_match_table3_rows() {
         assert_eq!(Fixed(1).name(), "fixed-1");
         assert_eq!(Fixed(8).name(), "fixed-8");

@@ -32,8 +32,9 @@ use crate::perfmodel::{PlacementModel, SpeedModel};
 
 /// Training speed f(w) as the scheduler sees it: the smooth eq-5 fit, a
 /// piecewise table (ground truth in simulations — eqs 2–4 are piecewise
-/// across the dh/bb boundary, which eq 5 cannot represent), or either of
-/// those adjusted for gang placement (`f(w, placement)`).
+/// across the dh/bb boundary, which eq 5 cannot represent), a
+/// live-learned fit with a fallback prior, or any of those adjusted for
+/// gang placement (`f(w, placement)`).
 #[derive(Clone, Debug)]
 pub enum Speed {
     /// Eq-5 NNLS fit.
@@ -47,6 +48,38 @@ pub enum Speed {
     /// topology, so eq-6 gains are scored against the placement the
     /// cluster would actually grant.
     Placed(PlacedSpeed),
+    /// Online-learned speed: the confidence-gated eq-5 fit from a job's
+    /// finished live segments once the gate opens, the submission-time
+    /// prior until then. This is what strategies see under the
+    /// orchestrator's `--online-model` — widths are scored against
+    /// *measured* behavior, not assumed tables.
+    Learned(LearnedSpeed),
+}
+
+/// Live-learned speed with its pre-gate fallback.
+#[derive(Clone, Debug)]
+pub struct LearnedSpeed {
+    /// The gate-opened eq-5 fit (single-node base, like the tables —
+    /// wrap the whole `Learned` in [`Speed::placed`] on a grid).
+    /// `None` while the confidence gate is closed.
+    pub fit: Option<SpeedModel>,
+    /// Speed consulted until the gate opens (the trace table under
+    /// `--online-model`).
+    pub prior: Box<Speed>,
+}
+
+impl LearnedSpeed {
+    pub fn epochs_per_sec(&self, w: usize) -> f64 {
+        match &self.fit {
+            Some(m) => m.epochs_per_sec(w),
+            None => self.prior.epochs_per_sec(w),
+        }
+    }
+
+    /// True once the scheduler is running on the learned fit.
+    pub fn gate_open(&self) -> bool {
+        self.fit.is_some()
+    }
 }
 
 /// Placement-aware wrapper around a base [`Speed`].
@@ -86,10 +119,17 @@ impl Speed {
         Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node })
     }
 
+    /// Wrap an online-learned fit (possibly still gate-closed) over its
+    /// fallback prior.
+    pub fn learned(fit: Option<SpeedModel>, prior: Speed) -> Speed {
+        Speed::Learned(LearnedSpeed { fit, prior: Box::new(prior) })
+    }
+
     pub fn epochs_per_sec(&self, w: usize) -> f64 {
         match self {
             Speed::Fitted(m) => m.epochs_per_sec(w),
             Speed::Placed(p) => p.epochs_per_sec(w),
+            Speed::Learned(l) => l.epochs_per_sec(w),
             Speed::Table(t) => {
                 debug_assert!(!t.is_empty());
                 if w <= t[0].0 {
@@ -259,6 +299,28 @@ mod tests {
         }
 
         #[test]
+        fn learned_speed_composes_with_placement() {
+            // A learned fit wrapped in Placed pays the span penalty just
+            // like a table does: gate open, w=16 spans 2 nodes -> slower
+            // than the bare learned fit.
+            let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16]
+                .iter()
+                .map(|&w| (w, 1.0 / (200.0 / w as f64 + 2.0)))
+                .collect();
+            let fit = crate::perfmodel::SpeedModel::fit(&samples, 200.0, 1.0e8).unwrap();
+            let bare = Speed::learned(Some(fit.clone()), Speed::Table(strong_table()));
+            let placed = Speed::placed(
+                bare.clone(),
+                PlacementModel::paper().with_model_bytes(1.0e8),
+                8,
+            );
+            for w in [1usize, 2, 4, 8] {
+                assert_eq!(placed.epochs_per_sec(w).to_bits(), bare.epochs_per_sec(w).to_bits());
+            }
+            assert!(placed.epochs_per_sec(16) < bare.epochs_per_sec(16));
+        }
+
+        #[test]
         fn doubling_stops_at_the_node_boundary() {
             // Flat sees strong scaling to 16 and doubles past 8; the
             // placement-adjusted view knows 16 means spanning 2 nodes on
@@ -275,6 +337,48 @@ mod tests {
                 doubling::Doubling.allocate(std::slice::from_ref(&placed_job), 16);
             assert_eq!(flat_alloc[&1], 16, "flat should chase the strong scaling");
             assert_eq!(placed_alloc[&1], 8, "placed should refuse to span nodes");
+        }
+    }
+
+    mod learned {
+        use super::super::*;
+        use crate::perfmodel::SpeedModel;
+
+        fn strong_fit() -> SpeedModel {
+            let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16]
+                .iter()
+                .map(|&w| (w, 1.0 / (400.0 / w as f64 + 1.0 * (w as f64 - 1.0) + 2.0)))
+                .collect();
+            SpeedModel::fit(&samples, 400.0, 4.0e6).unwrap()
+        }
+
+        /// Pessimistic prior: no scaling at all past w=1.
+        fn flat_prior() -> Speed {
+            Speed::Table(vec![(1, 1.0 / 50.0), (16, 1.0 / 50.0)])
+        }
+
+        #[test]
+        fn closed_gate_consults_the_prior_bit_for_bit() {
+            let learned = Speed::learned(None, flat_prior());
+            for w in [1usize, 2, 7, 16, 64] {
+                assert_eq!(
+                    learned.epochs_per_sec(w).to_bits(),
+                    flat_prior().epochs_per_sec(w).to_bits(),
+                    "w={w}"
+                );
+            }
+            match &learned {
+                Speed::Learned(l) => assert!(!l.gate_open()),
+                _ => unreachable!(),
+            }
+        }
+
+        #[test]
+        fn open_gate_overrides_the_prior() {
+            let fit = strong_fit();
+            let learned = Speed::learned(Some(fit.clone()), flat_prior());
+            assert_eq!(learned.epochs_per_sec(8).to_bits(), fit.epochs_per_sec(8).to_bits());
+            assert!(learned.epochs_per_sec(8) > flat_prior().epochs_per_sec(8));
         }
     }
 }

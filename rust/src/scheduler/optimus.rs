@@ -100,6 +100,32 @@ mod tests {
         assert_eq!(alloc[&1], 1);
     }
 
+    #[test]
+    fn learned_fit_redirects_the_greedy() {
+        // Two identical-prior jobs; only job 2's gate is open, revealing
+        // strong measured scaling. The +1 greedy must pour the extra
+        // workers into the job whose *measured* gains are real.
+        use super::super::Speed;
+        let prior = || Speed::Table(vec![(1, 1.0 / 60.0), (16, 1.0 / 60.0)]);
+        let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&w| (w, 1.0 / (600.0 / w as f64 + 1.0 * (w as f64 - 1.0) + 2.0)))
+            .collect();
+        let fit = SpeedModel::fit(&samples, 600.0, 4.0e6).unwrap();
+        let jobs = vec![
+            super::super::JobInfo { id: 1, q: 100.0, speed: Speed::learned(None, prior()), max_w: 16 },
+            super::super::JobInfo {
+                id: 2,
+                q: 100.0,
+                speed: Speed::learned(Some(fit), prior()),
+                max_w: 16,
+            },
+        ];
+        let alloc = OptimusGreedy.allocate(&jobs, 12);
+        assert_eq!(alloc[&1], 1, "flat prior offers no marginal gain");
+        assert!(alloc[&2] > alloc[&1], "{alloc:?}");
+    }
+
     /// The §4.2 trap: a speed model with a cliff at w=9 (fit through the
     /// eq 3/eq 4 boundary) blocks the +1 greedy below 16 while the
     /// doubling heuristic jumps it. This is the paper's motivating case.

@@ -62,6 +62,42 @@ pub struct SimResult {
     pub completion_secs: Vec<f64>,
 }
 
+/// Per-node GPU counts of an exploration reservation, largest block
+/// first — computed once per exploring job, then consulted for every
+/// probe size in the ladder. Empty when the reservation is not in the
+/// ledger (callers fall back to the grid's contiguous best case).
+fn reservation_blocks(cluster: &ClusterState, job: u64) -> Vec<usize> {
+    let mut per_node: std::collections::BTreeMap<usize, usize> =
+        std::collections::BTreeMap::new();
+    for &(node, _) in cluster.allocation_of(job).unwrap_or(&[]) {
+        *per_node.entry(node).or_insert(0) += 1;
+    }
+    let mut counts: Vec<usize> = per_node.into_values().collect();
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    counts
+}
+
+/// Nodes a probe ring of `s` GPUs spans inside a reservation with the
+/// given per-node blocks: probes use the most-packed subset of the
+/// reserved GPUs (whole blocks, largest first), so a probe that fits
+/// one reserved node pays nothing even when the full reservation spans
+/// several.
+fn probe_span(blocks: &[usize], s: usize, topology: &Topology) -> usize {
+    if blocks.is_empty() {
+        return topology.min_span(s);
+    }
+    let mut need = s;
+    let mut nodes = 0;
+    for &c in blocks {
+        if need == 0 {
+            break;
+        }
+        need = need.saturating_sub(c);
+        nodes += 1;
+    }
+    nodes.max(1)
+}
+
 /// Run one strategy over one generated workload.
 pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
     let topology = cfg
@@ -102,14 +138,35 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 };
             }
         }
-        for j in jobs.iter_mut() {
+        for (i, j) in jobs.iter_mut().enumerate() {
             if let State::Exploring { end } = j.state {
                 if end <= now + EPS {
-                    // lump-sum progress of the probe runs (2.5 min each size)
+                    // Lump-sum progress of the probe runs (2.5 min each
+                    // size). Probes run *inside* the reservation the
+                    // ledger granted, so on a grid each probe size pays
+                    // the eq-2 penalty of the nodes it must span there —
+                    // a fragmented reservation makes exploration itself
+                    // slower, exactly as on a real cluster. Flat pools
+                    // skip the ledger and keep the original arithmetic
+                    // bit-for-bit.
+                    let blocks = if topology.is_flat() {
+                        Vec::new()
+                    } else {
+                        reservation_blocks(&cluster, i as u64)
+                    };
                     let gained: f64 = cfg
                         .explore_sizes
                         .iter()
-                        .map(|&s| cfg.explore_secs_per_size / j.profile.secs_per_epoch(s))
+                        .map(|&s| {
+                            let base = j.profile.secs_per_epoch(s);
+                            let secs = if topology.is_flat() {
+                                base
+                            } else {
+                                let nodes = probe_span(&blocks, s, &topology);
+                                cfg.placement.placed_epoch_secs(base, s, nodes)
+                            };
+                            cfg.explore_secs_per_size / secs
+                        })
                         .sum();
                     j.remaining_epochs = (j.remaining_epochs - gained).max(0.0);
                     j.state = State::Ready;
@@ -419,6 +476,62 @@ mod tests {
             topo.avg_completion_hours,
             flat.avg_completion_hours
         );
+    }
+
+    #[test]
+    fn exploratory_probes_pay_the_internode_penalty_on_a_grid() {
+        use crate::perfmodel::PlacementModel;
+        // One comm-bound job; the probe ladder reaches 16, so the
+        // exploration reservation is the whole 2x8 grid and the
+        // 16-probe *must* span both nodes (smaller probes pack into one
+        // reserved node and pay nothing). The job's profile is flat
+        // beyond w=8, so after exploring, doubling settles at w=8 in
+        // both worlds and the 8-gang packs into a single node on the
+        // grid — post-explore speeds are identical, and the completion
+        // gap is exactly the probes' lost progress.
+        let mk = |flat: bool| -> SimResult {
+            let mut cfg = SimConfig::paper(StrategyKind::Exploratory, Contention::None, 1);
+            cfg.n_jobs = 1;
+            cfg.explore_sizes = vec![1, 2, 4, 8, 16];
+            if flat {
+                cfg.capacity = 16;
+                cfg.topology = Topology::flat(16);
+            } else {
+                cfg = cfg.with_topology(2, 8);
+                cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+            }
+            let jobs = WorkloadGen::default().generate(1, 1000.0, 1);
+            simulate(&cfg, &jobs)
+        };
+        let flat = mk(true);
+        let grid = mk(false);
+        assert_eq!(flat.completed, 1);
+        assert_eq!(grid.completed, 1);
+        assert!(
+            grid.completion_secs[0] > flat.completion_secs[0] + 1.0,
+            "probes on the grid must make strictly less progress: \
+             grid {:.1}s vs flat {:.1}s",
+            grid.completion_secs[0],
+            flat.completion_secs[0]
+        );
+    }
+
+    #[test]
+    fn exploratory_single_node_grid_is_bit_identical_to_flat() {
+        // Cluster(1 x 64) is the degenerate grid: the reservation and
+        // every probe span one node, so the exploratory strategy must
+        // reproduce the flat pool exactly — the probe-placement change
+        // costs flat worlds nothing.
+        let flat = run(StrategyKind::Exploratory, Contention::Moderate, 41);
+        let cfg = SimConfig::paper(StrategyKind::Exploratory, Contention::Moderate, 41)
+            .with_topology(1, 64);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 41);
+        let grid = simulate(&cfg, &jobs);
+        assert_eq!(flat.avg_completion_hours.to_bits(), grid.avg_completion_hours.to_bits());
+        assert_eq!(flat.total_rescales, grid.total_rescales);
+        for (a, b) in flat.completion_secs.iter().zip(&grid.completion_secs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

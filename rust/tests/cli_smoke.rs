@@ -161,6 +161,45 @@ fn orchestrate_runs_on_a_grid_topology() {
 }
 
 #[test]
+fn orchestrate_online_model_runs_on_bare_checkout() {
+    // --online-model + --segment-budget: the learner path end-to-end on
+    // a miniature workload; the per-job table must carry the rmse column
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--capacity",
+            "2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--online-model",
+            "--segment-budget",
+            "30",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "online-model orchestrate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rmse"), "per-job table missing rmse column:\n{text}");
+    assert!(text.contains("avg JCT"), "summary missing avg JCT:\n{text}");
+}
+
+#[test]
 fn orchestrate_round_trips_a_trace_file() {
     let dir = std::env::temp_dir();
     let trace = dir.join(format!("rm-cli-trace-{}.jsonl", std::process::id()));
