@@ -3,7 +3,7 @@
 # `make artifacts` needs python3 + jax (build-time only; see DESIGN.md §1).
 # Everything else is pure cargo and runs on a bare toolchain.
 
-.PHONY: all artifacts test bench lint clean
+.PHONY: all artifacts test bench bench-scale lint clean
 
 all:
 	cargo build --release
@@ -19,6 +19,11 @@ test:
 
 bench:
 	cargo bench --bench hotpath
+
+# 100 -> 100k job scale sweep; writes BENCH_SCALE.json at the repo root
+# (the perf trajectory later PRs race — see EXPERIMENTS.md A5).
+bench-scale:
+	cargo bench --bench scale_sweep
 
 lint:
 	cargo fmt --all --check

@@ -1,0 +1,138 @@
+//! A5: scheduling-core scale sweep — the repo's first recorded perf
+//! trajectory.
+//!
+//! Replays heavy-tailed traces of J ∈ {100, 1k, 10k, 100k} jobs under
+//! {doubling, optimus, fixed-8} on a flat 128-GPU pool and a 16×8 grid,
+//! measuring wall seconds, events/sec, and µs/event. The workload
+//! targets ~65% offered load at every size ([`WorkloadGen::trace_scale`]),
+//! so the *active* set is bounded while total work grows linearly —
+//! exactly the regime where the event-heap engine must hold per-event
+//! cost flat. The pre-PR-5 scan engine was O(events × jobs) here: every
+//! event walked all J jobs four times, so 100k jobs cost ~1000× more
+//! *per event* than 100 jobs.
+//!
+//! Emits `BENCH_SCALE.json` at the repo root (cargo runs bench binaries
+//! with the *package* root as cwd, so the path is anchored on
+//! `CARGO_MANIFEST_DIR/..`) so later PRs have a trajectory to beat, and
+//! asserts the loose sublinearity bound from the issue: 10× jobs must
+//! cost < 100× wall time.
+//!
+//! `cargo bench --bench scale_sweep`
+
+use ringmaster::cluster::Topology;
+use ringmaster::metrics::CsvTable;
+use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+
+const CAPACITY: usize = 128;
+const SEED: u64 = 42;
+
+struct Row {
+    jobs: usize,
+    strategy: String,
+    topology: String,
+    wall_secs: f64,
+    events: u64,
+}
+
+fn main() -> ringmaster::Result<()> {
+    let sizes = [100usize, 1_000, 10_000, 100_000];
+    let strategies =
+        [StrategyKind::Precompute, StrategyKind::Optimus, StrategyKind::Fixed(8)];
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut table =
+        CsvTable::new(&["jobs", "strategy", "topology", "wall_s", "events", "events/s", "us/event"]);
+
+    for grid in [false, true] {
+        for &strategy in &strategies {
+            for &n in &sizes {
+                // same seed at every (strategy, topology): each size is
+                // one fixed trace raced by every configuration
+                let jobs = WorkloadGen::trace_scale(n, CAPACITY, SEED);
+                // contention preset is irrelevant: trace_scale sets the
+                // arrival process, and capacity/topology are overridden
+                let mut cfg = SimConfig::paper(strategy, Contention::Moderate, SEED);
+                cfg.n_jobs = n;
+                if grid {
+                    cfg = cfg.with_topology(16, 8);
+                } else {
+                    cfg.capacity = CAPACITY;
+                    cfg.topology = Topology::flat(CAPACITY);
+                }
+                let t = std::time::Instant::now();
+                let r = simulate(&cfg, &jobs);
+                let wall = t.elapsed().as_secs_f64();
+
+                assert_eq!(
+                    r.completed, n,
+                    "{} on {} left jobs unfinished at J={n}",
+                    r.strategy,
+                    if grid { "16x8" } else { "flat" }
+                );
+                let topology = if grid { "16x8".to_string() } else { format!("flat({CAPACITY})") };
+                table.row(&[
+                    n.to_string(),
+                    r.strategy.clone(),
+                    topology.clone(),
+                    format!("{wall:.3}"),
+                    r.events.to_string(),
+                    format!("{:.0}", r.events as f64 / wall.max(1e-9)),
+                    format!("{:.2}", wall * 1e6 / r.events.max(1) as f64),
+                ]);
+                rows.push(Row { jobs: n, strategy: r.strategy, topology, wall_secs: wall, events: r.events });
+            }
+        }
+    }
+    print!("{}", table.render());
+
+    // ---- sublinearity: 10x jobs < 100x wall -----------------------------
+    // (tiny sizes are timer noise, so floor the denominator at 1 ms; the
+    // scan engine fails this at the 10k->100k step by construction)
+    for w in rows.chunks(sizes.len()) {
+        for pair in w.windows(2) {
+            let (small, big) = (&pair[0], &pair[1]);
+            let ratio = big.wall_secs / small.wall_secs.max(1e-3);
+            assert!(
+                ratio < 100.0,
+                "{} {}: {}->{} jobs cost {ratio:.1}x wall (superlinear blowup)",
+                small.strategy,
+                small.topology,
+                small.jobs,
+                big.jobs
+            );
+        }
+    }
+
+    // ---- BENCH_SCALE.json: the trajectory later PRs race ----------------
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"bench\": \"scale_sweep\",\n");
+    json.push_str(&format!("  \"capacity\": {CAPACITY},\n"));
+    json.push_str(&format!("  \"seed\": {SEED},\n"));
+    json.push_str("  \"offered_load\": 0.65,\n");
+    json.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"jobs\": {}, \"strategy\": \"{}\", \"topology\": \"{}\", \
+             \"wall_secs\": {:.6}, \"events\": {}, \"events_per_sec\": {:.1}, \
+             \"us_per_event\": {:.3}}}{}\n",
+            r.jobs,
+            r.strategy,
+            r.topology,
+            r.wall_secs,
+            r.events,
+            r.events as f64 / r.wall_secs.max(1e-9),
+            r.wall_secs * 1e6 / r.events.max(1) as f64,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    // repo root, not the package root cargo sets as cwd for benches
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package root has a parent")
+        .join("BENCH_SCALE.json");
+    std::fs::write(&path, &json)?;
+    println!("wrote {} ({} rows)", path.display(), rows.len());
+    Ok(())
+}

@@ -89,8 +89,11 @@ fn subcommand_help(sub: &str) -> &'static str {
             "ringmaster simulate — 64-GPU scheduler simulation (Table 3)\n\n\
              flags:\n\
              \x20 --contention C     extreme|moderate|none (default moderate)\n\
-             \x20 --strategy S       precompute|exploratory|fixed-1|fixed-2|fixed-4|fixed-8\n\
+             \x20 --strategy S       precompute|exploratory|optimus|fixed-1|fixed-2|fixed-4|fixed-8\n\
              \x20 --all              run all strategies x all contentions\n\
+             \x20 --n-jobs N         override the trace length (default: contention preset)\n\
+             \x20 --trace-scale      heavy-tailed workload, arrival rate targeting ~65%\n\
+             \x20                    pool load (scale sweeps; pairs with --n-jobs)\n\
              \x20 --nodes N          grid topology: node count (default 0 = flat pool)\n\
              \x20 --gpus-per-node G  grid topology: GPUs per node (default 8)\n\
              \x20 --placement P      pack|scatter gang layout (default pack)\n\
@@ -271,8 +274,11 @@ fn cmd_simulate() -> Result<()> {
     let a = Args::from_env(2)?;
     let seed = a.get_or("seed", 42u64)?;
     let all = a.flag("all");
-    let contention_s = a.str_or("contention", "moderate");
+    let contention_opt = a.str_opt("contention");
+    let contention_s = contention_opt.clone().unwrap_or_else(|| "moderate".into());
     let strategy_s = a.str_or("strategy", "precompute");
+    let n_jobs = a.get_or("n-jobs", 0usize)?;
+    let trace_scale = a.flag("trace-scale");
     let nodes = a.get_or("nodes", 0usize)?;
     let gpn_s = a.str_opt("gpus-per-node");
     let placement_s = a.str_opt("placement");
@@ -284,6 +290,14 @@ fn cmd_simulate() -> Result<()> {
         nodes > 0 || (gpn_s.is_none() && placement_s.is_none() && model_bytes_s.is_none()),
         "--gpus-per-node/--placement/--model-bytes require --nodes \
          (a flat pool has no topology penalty)"
+    );
+    // --trace-scale replaces the contention presets' arrival process, so
+    // an explicit --contention (or the --all sweep) would be silently
+    // ignored — reject, same convention as the topology knobs above.
+    anyhow::ensure!(
+        !trace_scale || (contention_opt.is_none() && !all),
+        "--trace-scale supplies its own load-targeted arrival process; \
+         drop --contention/--all and size the trace with --n-jobs"
     );
     let gpus_per_node: usize = match &gpn_s {
         Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--gpus-per-node {s:?}: {e}"))?,
@@ -315,7 +329,16 @@ fn cmd_simulate() -> Result<()> {
                 cfg.placement = PlacementModel::paper().with_model_bytes(model_bytes);
                 cfg.place_policy = place_policy;
             }
-            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+            if n_jobs > 0 {
+                cfg.n_jobs = n_jobs;
+            }
+            let jobs = if trace_scale {
+                // heavy-tailed trace sized to the pool: --contention's
+                // arrival mean is replaced by a load-targeted one
+                WorkloadGen::trace_scale(cfg.n_jobs, cfg.capacity, seed)
+            } else {
+                WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed)
+            };
             let r = simulate(&cfg, &jobs);
             table.row(&[
                 r.strategy.clone(),
@@ -495,6 +518,7 @@ fn parse_strategy(s: &str) -> Result<StrategyKind> {
     Ok(match s {
         "precompute" => StrategyKind::Precompute,
         "exploratory" => StrategyKind::Exploratory,
+        "optimus" => StrategyKind::Optimus,
         "fixed-1" | "one" => StrategyKind::Fixed(1),
         "fixed-2" | "two" => StrategyKind::Fixed(2),
         "fixed-4" | "four" => StrategyKind::Fixed(4),

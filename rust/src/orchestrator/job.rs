@@ -102,6 +102,11 @@ pub struct SegmentMeta {
 /// between segments, and metric accumulators.
 pub struct Job {
     pub spec: JobSpec,
+    /// `(w, 1/epoch_secs)` scheduler table, built once at registration
+    /// and `Arc`-shared into every reallocation's `JobInfo` — the
+    /// per-event `speed_table()` clone was the orchestrator's hottest
+    /// allocation (one Vec per schedulable job per event).
+    pub speed_shared: Arc<Vec<(usize, f64)>>,
     pub state: JobState,
     /// Worker count of the most recently finished segment (0 = never ran).
     pub last_w: usize,
@@ -161,8 +166,10 @@ pub struct Job {
 
 impl Job {
     pub fn new(spec: JobSpec) -> Job {
+        let speed_shared = Arc::new(spec.profile.speed_table());
         Job {
             spec,
+            speed_shared,
             state: JobState::Pending,
             last_w: 0,
             last_nodes: Vec::new(),

@@ -611,8 +611,10 @@ impl Orchestrator {
                 // Under --online-model the trace table is only the
                 // pre-gate prior: once the job's learner passes its
                 // confidence gate, strategies score widths against the
-                // *measured* eq-5 fit instead.
-                let table = Speed::Table(j.spec.profile.speed_table());
+                // *measured* eq-5 fit instead. The table itself is the
+                // job's Arc-shared copy — built once at registration,
+                // never cloned per event.
+                let table = Speed::Shared(j.speed_shared.clone());
                 let base = if self.cfg.online_model {
                     let fit = j.online.as_ref().and_then(|o| o.speed().cloned());
                     Speed::learned(fit, table)

@@ -129,6 +129,17 @@ impl PlacementModel {
         self.extra_epoch_secs_for(w, nodes, self.n_bytes)
     }
 
+    /// Memo table of [`Self::extra_epoch_secs`] at the contiguous
+    /// best-case span, for widths `1..=max_w` (indexed by `w - 1`) —
+    /// what `Speed::placed_memo` consults so scheduler inner loops stop
+    /// re-pricing eq 2–4 per probe. Values are produced by the exact
+    /// same call the unmemoized path makes, so they agree bit for bit.
+    pub fn contiguous_extra_table(&self, gpus_per_node: usize, max_w: usize) -> Vec<f64> {
+        (1..=max_w)
+            .map(|w| self.extra_epoch_secs(w, crate::cluster::contiguous_span(w, gpus_per_node)))
+            .collect()
+    }
+
     /// Profile seconds/epoch adjusted for placement. Identity (the exact
     /// same float) when the ring fits one node.
     pub fn placed_epoch_secs(&self, base_secs: f64, w: usize, nodes: usize) -> f64 {

@@ -17,7 +17,25 @@
 //! non-power-of-two cliff, and bound the precompute table to log2(C)
 //! entries per job.
 
-use super::{Allocation, JobInfo, Scheduler};
+use std::collections::BinaryHeap;
+
+use super::{Allocation, Gain, JobInfo, Scheduler};
+
+/// Eq-6 average marginal gain per GPU of doubling job `i`, pushed only
+/// while it is a live candidate (non-zero width, cap respected, finite
+/// positive gain — non-finite gains from degenerate speed models are
+/// dropped, so a malformed table degrades to "no grant" instead of
+/// winning every round).
+fn push_gain(heap: &mut BinaryHeap<Gain>, jobs: &[JobInfo], w: &[usize], i: usize) {
+    let wi = w[i];
+    if wi == 0 || 2 * wi > jobs[i].max_w {
+        return;
+    }
+    let gain = (jobs[i].time_at(wi) - jobs[i].time_at(2 * wi)) / wi as f64;
+    if gain.is_finite() && gain > 0.0 {
+        heap.push(Gain { gain, idx: i, w: wi });
+    }
+}
 
 /// The paper's scheduler.
 #[derive(Clone, Copy, Debug, Default)]
@@ -25,44 +43,42 @@ pub struct Doubling;
 
 impl Scheduler for Doubling {
     fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
-        let mut alloc = Allocation::new();
+        let mut w = vec![0usize; jobs.len()];
         let mut free = capacity;
 
         // Step 1: one worker each, FIFO until capacity runs out.
-        for j in jobs {
-            if free > 0 {
-                alloc.insert(j.id, 1);
-                free -= 1;
-            } else {
-                alloc.insert(j.id, 0);
+        for slot in w.iter_mut() {
+            if free == 0 {
+                break;
             }
+            *slot = 1;
+            free -= 1;
         }
 
         // Step 2: double the best per-GPU gain while anything fits.
-        loop {
-            let mut best: Option<(u64, usize, f64)> = None; // (job, add, gain)
-            for j in jobs {
-                let w = alloc[&j.id];
-                if w == 0 || w > free || 2 * w > j.max_w {
-                    continue;
-                }
-                let gain = (j.time_at(w) - j.time_at(2 * w)) / w as f64;
-                if gain <= 0.0 {
-                    continue;
-                }
-                if best.map_or(true, |(_, _, g)| gain > g) {
-                    best = Some((j.id, w, gain));
-                }
-            }
-            match best {
-                Some((id, add, _)) => {
-                    *alloc.get_mut(&id).unwrap() += add;
-                    free -= add;
-                }
-                None => break,
-            }
+        //
+        // A grant only changes the *winner's* own gain, so instead of a
+        // full O(J) rescan per round we keep a max-heap of (gain, job)
+        // entries and lazily discard stale ones. `free` only shrinks and
+        // a doubling needs `w` extra GPUs, so an entry that no longer
+        // fits can be dropped outright — it can never fit again.
+        let mut heap: BinaryHeap<Gain> = BinaryHeap::with_capacity(jobs.len());
+        for i in 0..jobs.len() {
+            push_gain(&mut heap, jobs, &w, i);
         }
-        alloc
+        while let Some(g) = heap.pop() {
+            if w[g.idx] != g.w {
+                continue; // stale: this job was already doubled
+            }
+            if g.w > free {
+                continue;
+            }
+            w[g.idx] *= 2;
+            free -= g.w;
+            push_gain(&mut heap, jobs, &w, g.idx);
+        }
+
+        jobs.iter().zip(&w).map(|(j, &w)| (j.id, w)).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -153,6 +169,89 @@ mod tests {
         assert_eq!(closed[&1], 1, "closed gate must follow the flat prior");
         let open = Doubling.allocate(&[mk(Some(fit))], 16);
         assert!(open[&1] >= 8, "open gate should chase the measured scaling, got {}", open[&1]);
+    }
+
+    /// The pre-heap allocator, kept verbatim as the equivalence oracle:
+    /// full rescan of every job per round, strict-`>` argmax.
+    fn reference_allocate(jobs: &[super::super::JobInfo], capacity: usize) -> Allocation {
+        let mut alloc = Allocation::new();
+        let mut free = capacity;
+        for j in jobs {
+            if free > 0 {
+                alloc.insert(j.id, 1);
+                free -= 1;
+            } else {
+                alloc.insert(j.id, 0);
+            }
+        }
+        loop {
+            let mut best: Option<(u64, usize, f64)> = None;
+            for j in jobs {
+                let w = alloc[&j.id];
+                if w == 0 || w > free || 2 * w > j.max_w {
+                    continue;
+                }
+                let gain = (j.time_at(w) - j.time_at(2 * w)) / w as f64;
+                if gain <= 0.0 {
+                    continue;
+                }
+                if best.map_or(true, |(_, _, g)| gain > g) {
+                    best = Some((j.id, w, gain));
+                }
+            }
+            match best {
+                Some((id, add, _)) => {
+                    *alloc.get_mut(&id).unwrap() += add;
+                    free -= add;
+                }
+                None => break,
+            }
+        }
+        alloc
+    }
+
+    /// Randomized instances (mixed eq-5 fits and piecewise tables,
+    /// deliberate duplicates so equal gains exercise the tie-break):
+    /// the gain-heap rewrite must reproduce the rescan loop exactly.
+    #[test]
+    fn gain_heap_matches_reference_rescan_on_random_instances() {
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(0xD0B1);
+        for case in 0..300 {
+            let n = 1 + rng.uniform_range(0.0, 12.0) as usize;
+            let capacity = rng.uniform_range(0.0, 90.0) as usize;
+            let mut jobs: Vec<super::super::JobInfo> = Vec::with_capacity(n);
+            for i in 0..n {
+                let q = rng.uniform_range(1.0, 300.0);
+                let mut j = if rng.uniform_range(0.0, 1.0) < 0.5 {
+                    job(i as u64, q, rng.uniform_range(5.0, 2000.0))
+                } else {
+                    // piecewise table with a random cliff shape
+                    let base = rng.uniform_range(10.0, 500.0);
+                    let comm = rng.uniform_range(0.0, 30.0);
+                    let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
+                        .iter()
+                        .map(|&w| (w, 1.0 / (base / w as f64 + comm * (w as f64 - 1.0) + 2.0)))
+                        .collect();
+                    super::super::exact::table_job(i as u64, q, &samples, 64)
+                };
+                if rng.uniform_range(0.0, 1.0) < 0.3 {
+                    j.max_w = 1 << (rng.uniform_range(0.0, 6.0) as usize);
+                }
+                // duplicate the previous job's shape now and then: equal
+                // gains must fall to the FIFO tie-break in both solvers
+                if i > 0 && rng.uniform_range(0.0, 1.0) < 0.25 {
+                    let prev = jobs[i - 1].clone();
+                    j = super::super::JobInfo { id: i as u64, ..prev };
+                }
+                jobs.push(j);
+            }
+            assert_eq!(
+                Doubling.allocate(&jobs, capacity),
+                reference_allocate(&jobs, capacity),
+                "case {case} (n={n}, capacity={capacity})"
+            );
+        }
     }
 
     #[test]

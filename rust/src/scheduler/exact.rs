@@ -123,7 +123,7 @@ mod tests {
         let alloc = ExactDp.allocate(&jobs, 32);
         // optimum = argmin over w of time_at(w)
         let best_w = (1..=32).min_by(|&a, &b| {
-            jobs[0].time_at(a).partial_cmp(&jobs[0].time_at(b)).unwrap()
+            jobs[0].time_at(a).total_cmp(&jobs[0].time_at(b))
         });
         assert_eq!(alloc[&1], best_w.unwrap());
     }
@@ -144,7 +144,7 @@ mod tests {
         let j = JobInfo { id: 1, q: 100.0, speed: Speed::learned(Some(fit), prior), max_w: 32 };
         let alloc = ExactDp.allocate(std::slice::from_ref(&j), 32);
         let best_w = (1..=32)
-            .min_by(|&a, &b| j.time_at(a).partial_cmp(&j.time_at(b)).unwrap())
+            .min_by(|&a, &b| j.time_at(a).total_cmp(&j.time_at(b)))
             .unwrap();
         assert_eq!(alloc[&1], best_w);
         assert!((6..=14).contains(&best_w), "fit should minimize near w=10, got {best_w}");

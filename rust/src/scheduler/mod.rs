@@ -27,6 +27,7 @@ pub mod fixed;
 pub mod optimus;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::perfmodel::{PlacementModel, SpeedModel};
 
@@ -39,9 +40,15 @@ use crate::perfmodel::{PlacementModel, SpeedModel};
 pub enum Speed {
     /// Eq-5 NNLS fit.
     Fitted(SpeedModel),
-    /// `(w, epochs_per_sec)` samples, w ascending; linear interpolation
-    /// between entries, flat extrapolation outside.
+    /// `(w, epochs_per_sec)` samples, w strictly ascending; linear
+    /// interpolation between entries, flat extrapolation outside.
     Table(Vec<(usize, f64)>),
+    /// [`Speed::Table`] backed by a shared, immutable sample set — what
+    /// hot loops (the DES, the orchestrator) hand to every scheduler
+    /// call, so per-event `JobInfo` construction is an `Arc` bump
+    /// instead of a table copy. Lookup semantics are bit-identical to
+    /// `Table`.
+    Shared(Arc<Vec<(usize, f64)>>),
     /// Topology-adjusted speed: the base profile assumes a single-node
     /// ring; widths whose gang must span several nodes pay the eq-2
     /// inter-node delta. This is what schedulers see on a non-flat
@@ -90,6 +97,11 @@ pub struct PlacedSpeed {
     /// Node width of the target topology; the scheduler scores `w`
     /// against the contiguous best case `ceil(w / gpus_per_node)`.
     pub gpus_per_node: usize,
+    /// Memoized `extra_epoch_secs(w, span(w))` indexed by `w - 1` —
+    /// eqs 2–4 sum per-chunk comm times, far too hot to recompute for
+    /// every (job, width) probe of a scheduler's inner loop. `None`
+    /// computes on demand; the values are bit-identical either way.
+    memo: Option<Arc<Vec<f64>>>,
 }
 
 impl PlacedSpeed {
@@ -103,7 +115,10 @@ impl PlacedSpeed {
         if base <= 0.0 {
             return 0.0;
         }
-        let extra = self.model.extra_epoch_secs(w, self.span(w));
+        let extra = match &self.memo {
+            Some(m) if w >= 1 && w <= m.len() => m[w - 1],
+            _ => self.model.extra_epoch_secs(w, self.span(w)),
+        };
         if extra <= 0.0 {
             // exact flat identity (1/(1/x) is not bit-stable)
             return base;
@@ -116,7 +131,21 @@ impl Speed {
     /// Wrap a base speed with the placement penalty of `topology`
     /// (identity wrapper for a single-node span).
     pub fn placed(base: Speed, model: PlacementModel, gpus_per_node: usize) -> Speed {
-        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node })
+        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node, memo: None })
+    }
+
+    /// [`Speed::placed`] with the span penalty precomputed for widths
+    /// `1..=memo.len()` (see [`PlacementModel::contiguous_extra_table`]).
+    /// Build the memo once per (model, topology) and share it across
+    /// every job wrapped at the same placement — the DES does this once
+    /// per run instead of re-pricing eq 2–4 at every event.
+    pub fn placed_memo(
+        base: Speed,
+        model: PlacementModel,
+        gpus_per_node: usize,
+        memo: Arc<Vec<f64>>,
+    ) -> Speed {
+        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node, memo: Some(memo) })
     }
 
     /// Wrap an online-learned fit (possibly still gate-closed) over its
@@ -130,24 +159,31 @@ impl Speed {
             Speed::Fitted(m) => m.epochs_per_sec(w),
             Speed::Placed(p) => p.epochs_per_sec(w),
             Speed::Learned(l) => l.epochs_per_sec(w),
-            Speed::Table(t) => {
-                debug_assert!(!t.is_empty());
-                if w <= t[0].0 {
-                    return t[0].1;
-                }
-                for pair in t.windows(2) {
-                    let (w0, f0) = pair[0];
-                    let (w1, f1) = pair[1];
-                    if w == w0 {
-                        return f0;
-                    }
-                    if w < w1 {
-                        let frac = (w - w0) as f64 / (w1 - w0) as f64;
-                        return f0 + frac * (f1 - f0);
-                    }
-                }
-                t.last().unwrap().1
-            }
+            Speed::Table(t) => table_epochs_per_sec(t, w),
+            Speed::Shared(t) => table_epochs_per_sec(t, w),
+        }
+    }
+}
+
+/// Interpolating `(w, epochs/sec)` lookup shared by [`Speed::Table`] and
+/// [`Speed::Shared`]: binary search over the sample widths (strictly
+/// ascending), linear interpolation between neighbours, flat
+/// extrapolation outside — the same piecewise curve the old linear walk
+/// produced, bit for bit, at O(log n) per probe.
+fn table_epochs_per_sec(t: &[(usize, f64)], w: usize) -> f64 {
+    debug_assert!(!t.is_empty());
+    debug_assert!(t.windows(2).all(|p| p[0].0 < p[1].0), "table widths must strictly ascend");
+    if w <= t[0].0 {
+        return t[0].1;
+    }
+    match t.binary_search_by(|probe| probe.0.cmp(&w)) {
+        Ok(i) => t[i].1,
+        Err(i) if i == t.len() => t[t.len() - 1].1,
+        Err(i) => {
+            let (w0, f0) = t[i - 1];
+            let (w1, f1) = t[i];
+            let frac = (w - w0) as f64 / (w1 - w0) as f64;
+            f0 + frac * (f1 - f0)
         }
     }
 }
@@ -199,6 +235,36 @@ pub fn total_allocated(alloc: &Allocation) -> usize {
 pub trait Scheduler {
     fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation;
     fn name(&self) -> &'static str;
+}
+
+/// One candidate step in a greedy allocator's gain heap: job at slice
+/// position `idx`, scored at width `w` — stale once the job's width
+/// moved past `w`. Shared by [`doubling`] (×2 steps) and [`optimus`]
+/// (+1 steps) so the load-bearing tie-break lives in exactly one place.
+pub(crate) struct Gain {
+    pub(crate) gain: f64,
+    pub(crate) idx: usize,
+    pub(crate) w: usize,
+}
+
+impl PartialEq for Gain {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Gain {}
+impl PartialOrd for Gain {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Gain {
+    /// Max-heap on gain; ties go to the earlier (FIFO) job — exactly the
+    /// candidate a full O(J) rescan's strict-`>` argmax would keep.
+    /// Callers only push finite gains, so `total_cmp` is a plain order.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.gain.total_cmp(&other.gain).then_with(|| other.idx.cmp(&self.idx))
+    }
 }
 
 #[cfg(test)]
@@ -257,6 +323,58 @@ mod tests {
         let j = job(1, 10.0, 400.0);
         assert!(j.time_at(8) < j.time_at(4));
         assert!(j.time_at(4) < j.time_at(1));
+    }
+
+    /// The old linear walk, kept verbatim as the lookup oracle.
+    fn linear_epochs_per_sec(t: &[(usize, f64)], w: usize) -> f64 {
+        if w <= t[0].0 {
+            return t[0].1;
+        }
+        for pair in t.windows(2) {
+            let (w0, f0) = pair[0];
+            let (w1, f1) = pair[1];
+            if w == w0 {
+                return f0;
+            }
+            if w < w1 {
+                let frac = (w - w0) as f64 / (w1 - w0) as f64;
+                return f0 + frac * (f1 - f0);
+            }
+        }
+        t.last().unwrap().1
+    }
+
+    #[test]
+    fn binary_search_lookup_matches_linear_walk_bit_for_bit() {
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(0xBEEF);
+        for _ in 0..200 {
+            // random strictly-ascending table, 1..=9 entries
+            let len = 1 + (rng.uniform_range(0.0, 9.0) as usize).min(8);
+            let mut t: Vec<(usize, f64)> = Vec::with_capacity(len);
+            let mut w = 1 + rng.uniform_range(0.0, 3.0) as usize;
+            for _ in 0..len {
+                t.push((w, rng.uniform_range(1e-4, 1.0)));
+                w += 1 + rng.uniform_range(0.0, 7.0) as usize;
+            }
+            let table = Speed::Table(t.clone());
+            let shared = Speed::Shared(std::sync::Arc::new(t.clone()));
+            for probe in 0..=(w + 4) {
+                let want = linear_epochs_per_sec(&t, probe);
+                assert_eq!(table.epochs_per_sec(probe).to_bits(), want.to_bits(), "w={probe}");
+                assert_eq!(shared.epochs_per_sec(probe).to_bits(), want.to_bits(), "w={probe}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_table_is_one_arc_not_a_copy() {
+        let t = std::sync::Arc::new(vec![(1usize, 0.1f64), (8, 0.5)]);
+        let a = Speed::Shared(t.clone());
+        let b = a.clone();
+        drop(b);
+        assert!(std::sync::Arc::strong_count(&t) >= 2);
+        assert_eq!(a.epochs_per_sec(8), 0.5);
     }
 
     mod placed {
@@ -318,6 +436,23 @@ mod tests {
                 assert_eq!(placed.epochs_per_sec(w).to_bits(), bare.epochs_per_sec(w).to_bits());
             }
             assert!(placed.epochs_per_sec(16) < bare.epochs_per_sec(16));
+        }
+
+        #[test]
+        fn memoized_placement_is_bit_identical_to_on_demand() {
+            let model = PlacementModel::paper().with_model_bytes(1.0e8);
+            let memo = std::sync::Arc::new(model.contiguous_extra_table(8, 16));
+            let plain = Speed::placed(Speed::Table(strong_table()), model, 8);
+            let memod =
+                Speed::placed_memo(Speed::Table(strong_table()), model, 8, memo);
+            // inside the memo, past its end (falls back to on-demand), and w=0
+            for w in [0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 33, 64] {
+                assert_eq!(
+                    memod.epochs_per_sec(w).to_bits(),
+                    plain.epochs_per_sec(w).to_bits(),
+                    "w={w}"
+                );
+            }
         }
 
         #[test]

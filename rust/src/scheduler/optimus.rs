@@ -10,7 +10,23 @@
 //! to 16 even when `f(16) ≫ f(8)` (§4.2). The ablation bench
 //! (`ablation_heuristic`) measures exactly this gap.
 
-use super::{Allocation, JobInfo, Scheduler};
+use std::collections::BinaryHeap;
+
+use super::{Allocation, Gain, JobInfo, Scheduler};
+
+/// Marginal gain of one more worker for job `i`, pushed only while the
+/// job is a live candidate (finite positive gain; non-finite values from
+/// degenerate models are dropped so they never win the heap).
+fn push_gain(heap: &mut BinaryHeap<Gain>, jobs: &[JobInfo], w: &[usize], i: usize) {
+    let wi = w[i];
+    if wi == 0 || wi + 1 > jobs[i].max_w {
+        return;
+    }
+    let gain = jobs[i].time_at(wi) - jobs[i].time_at(wi + 1);
+    if gain.is_finite() && gain > 0.0 {
+        heap.push(Gain { gain, idx: i, w: wi });
+    }
+}
 
 /// Greedy +1 allocator (Optimus).
 #[derive(Clone, Copy, Debug, Default)]
@@ -18,42 +34,35 @@ pub struct OptimusGreedy;
 
 impl Scheduler for OptimusGreedy {
     fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
-        let mut alloc = Allocation::new();
+        let mut w = vec![0usize; jobs.len()];
         let mut free = capacity;
 
-        for j in jobs {
-            if free > 0 {
-                alloc.insert(j.id, 1);
-                free -= 1;
-            } else {
-                alloc.insert(j.id, 0);
+        for slot in w.iter_mut() {
+            if free == 0 {
+                break;
             }
+            *slot = 1;
+            free -= 1;
         }
 
-        while free > 0 {
-            let mut best: Option<(u64, f64)> = None;
-            for j in jobs {
-                let w = alloc[&j.id];
-                if w == 0 || w + 1 > j.max_w {
-                    continue;
-                }
-                let gain = j.time_at(w) - j.time_at(w + 1);
-                if gain <= 0.0 {
-                    continue;
-                }
-                if best.map_or(true, |(_, g)| gain > g) {
-                    best = Some((j.id, gain));
-                }
-            }
-            match best {
-                Some((id, _)) => {
-                    *alloc.get_mut(&id).unwrap() += 1;
-                    free -= 1;
-                }
-                None => break,
-            }
+        // A grant only changes the winner's own gain, so the per-round
+        // O(J) rescan collapses to a max-heap with lazy staleness checks
+        // (same trick as `doubling`, stepping +1 instead of ×2).
+        let mut heap: BinaryHeap<Gain> = BinaryHeap::with_capacity(jobs.len());
+        for i in 0..jobs.len() {
+            push_gain(&mut heap, jobs, &w, i);
         }
-        alloc
+        while free > 0 {
+            let Some(g) = heap.pop() else { break };
+            if w[g.idx] != g.w {
+                continue; // stale: this job already grew
+            }
+            w[g.idx] += 1;
+            free -= 1;
+            push_gain(&mut heap, jobs, &w, g.idx);
+        }
+
+        jobs.iter().zip(&w).map(|(j, &w)| (j.id, w)).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -124,6 +133,84 @@ mod tests {
         let alloc = OptimusGreedy.allocate(&jobs, 12);
         assert_eq!(alloc[&1], 1, "flat prior offers no marginal gain");
         assert!(alloc[&2] > alloc[&1], "{alloc:?}");
+    }
+
+    /// The pre-heap greedy, kept verbatim as the equivalence oracle.
+    fn reference_allocate(jobs: &[super::super::JobInfo], capacity: usize) -> Allocation {
+        let mut alloc = Allocation::new();
+        let mut free = capacity;
+        for j in jobs {
+            if free > 0 {
+                alloc.insert(j.id, 1);
+                free -= 1;
+            } else {
+                alloc.insert(j.id, 0);
+            }
+        }
+        while free > 0 {
+            let mut best: Option<(u64, f64)> = None;
+            for j in jobs {
+                let w = alloc[&j.id];
+                if w == 0 || w + 1 > j.max_w {
+                    continue;
+                }
+                let gain = j.time_at(w) - j.time_at(w + 1);
+                if gain <= 0.0 {
+                    continue;
+                }
+                if best.map_or(true, |(_, g)| gain > g) {
+                    best = Some((j.id, gain));
+                }
+            }
+            match best {
+                Some((id, _)) => {
+                    *alloc.get_mut(&id).unwrap() += 1;
+                    free -= 1;
+                }
+                None => break,
+            }
+        }
+        alloc
+    }
+
+    /// Randomized instances (eq-5 fits and cliffy tables, duplicates for
+    /// tie-break coverage): the heap rewrite must match the rescan loop.
+    #[test]
+    fn gain_heap_matches_reference_rescan_on_random_instances() {
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(0x0971);
+        for case in 0..300 {
+            let n = 1 + rng.uniform_range(0.0, 10.0) as usize;
+            let capacity = rng.uniform_range(0.0, 60.0) as usize;
+            let mut jobs: Vec<super::super::JobInfo> = Vec::with_capacity(n);
+            for i in 0..n {
+                let q = rng.uniform_range(1.0, 300.0);
+                let mut j = if rng.uniform_range(0.0, 1.0) < 0.5 {
+                    job(i as u64, q, rng.uniform_range(5.0, 1500.0))
+                } else {
+                    let base = rng.uniform_range(10.0, 500.0);
+                    let comm = rng.uniform_range(0.0, 30.0);
+                    let samples: Vec<(usize, f64)> = [1usize, 2, 4, 8, 16, 32]
+                        .iter()
+                        .map(|&w| (w, 1.0 / (base / w as f64 + comm * (w as f64 - 1.0) + 2.0)))
+                        .collect();
+                    super::super::exact::table_job(i as u64, q, &samples, 64)
+                };
+                if rng.uniform_range(0.0, 1.0) < 0.3 {
+                    j.max_w = 1 + rng.uniform_range(0.0, 20.0) as usize;
+                }
+                if i > 0 && rng.uniform_range(0.0, 1.0) < 0.25 {
+                    let prev = jobs[i - 1].clone();
+                    j = super::super::JobInfo { id: i as u64, ..prev };
+                }
+                jobs.push(j);
+            }
+            assert_eq!(
+                OptimusGreedy.allocate(&jobs, capacity),
+                reference_allocate(&jobs, capacity),
+                "case {case} (n={n}, capacity={capacity})"
+            );
+        }
     }
 
     /// The §4.2 trap: a speed model with a cliff at w=9 (fit through the

@@ -18,9 +18,11 @@
 //! job completion time in hours.
 
 pub mod des;
+pub mod reference;
 pub mod workload;
 
 pub use des::{simulate, SimResult};
+pub use reference::simulate_reference;
 pub use workload::{JobProfile, WorkloadGen};
 
 use crate::cluster::{PlacePolicy, Topology};
@@ -31,6 +33,9 @@ use crate::perfmodel::PlacementModel;
 pub enum StrategyKind {
     Precompute,
     Exploratory,
+    /// The +1-greedy baseline (not a Table 3 row; used by the scale
+    /// sweep and ablations to race the doubling heuristic at scale).
+    Optimus,
     Fixed(usize),
 }
 
@@ -39,6 +44,7 @@ impl StrategyKind {
         match self {
             StrategyKind::Precompute => "precompute".into(),
             StrategyKind::Exploratory => "exploratory".into(),
+            StrategyKind::Optimus => "optimus".into(),
             StrategyKind::Fixed(k) => format!("fixed-{k}"),
         }
     }

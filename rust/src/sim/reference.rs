@@ -1,0 +1,284 @@
+//! The frozen pre-heap simulation engine — the golden-parity oracle.
+//!
+//! This is the scan engine exactly as it shipped before the event-heap
+//! rewrite of [`super::des`]: four full-array scans per event (arrival
+//! firing, exploration firing, next-event search, progress), a fresh
+//! `speed_table()` clone per ready job per event, and a full
+//! `placed_jobs()` ledger diff at every reallocation point — O(events ×
+//! jobs), which is why it was replaced. It is kept *verbatim* (modulo
+//! NaN-safe `total_cmp` sorts and the shared probe helpers it now
+//! imports from `des`) so `tests/golden_parity.rs` can assert the
+//! rewritten engine reproduces it bit for bit on the paper workloads.
+//!
+//! Do not optimize this file; its only job is to stay identical to the
+//! engine the Table 3 numbers were first validated on. New features go
+//! in `des.rs` — and must preserve parity with this oracle or
+//! consciously retire it.
+
+use super::des::{probe_span, reservation_blocks, SimResult};
+use super::workload::JobProfile;
+use super::{SimConfig, StrategyKind};
+use crate::cluster::{ClusterState, Topology};
+use crate::scheduler::{
+    doubling::Doubling, fixed::Fixed, optimus::OptimusGreedy, Allocation, JobInfo, Scheduler,
+    Speed,
+};
+
+const EPS: f64 = 1e-6;
+
+#[derive(Clone, Debug, PartialEq)]
+enum State {
+    NotArrived,
+    WaitingExplore,
+    Exploring { end: f64 },
+    Ready,
+    Done { finish: f64 },
+}
+
+struct SimJob {
+    profile: JobProfile,
+    state: State,
+    w: usize,
+    nodes: usize,
+    remaining_epochs: f64,
+    busy_until: f64,
+}
+
+impl SimJob {
+    fn secs_per_epoch_placed(&self, cfg: &SimConfig) -> f64 {
+        cfg.placement.placed_epoch_secs(self.profile.secs_per_epoch(self.w), self.w, self.nodes)
+    }
+}
+
+/// Run one strategy over one generated workload with the frozen scan
+/// engine. Identical semantics to [`super::des::simulate`]; quadratic
+/// cost. Test/bench oracle only.
+pub fn simulate_reference(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
+    let topology = cfg
+        .topology
+        .reconciled(cfg.capacity)
+        .expect("grid topology must agree with cfg.capacity (use with_topology)");
+    let explore_reserve = cfg.explore_sizes.iter().copied().max().unwrap_or(8);
+    let explore_duration = cfg.explore_secs_per_size * cfg.explore_sizes.len() as f64;
+    let mut cluster = ClusterState::with_policy(topology.spec(), cfg.place_policy);
+
+    let mut jobs: Vec<SimJob> = profiles
+        .iter()
+        .map(|p| SimJob {
+            profile: p.clone(),
+            state: State::NotArrived,
+            w: 0,
+            nodes: 0,
+            remaining_epochs: p.total_epochs,
+            busy_until: 0.0,
+        })
+        .collect();
+
+    let mut now = 0.0f64;
+    let mut peak_concurrent = 0usize;
+    let mut total_rescales = 0u64;
+    let mut events = 0u64;
+    let mut guard = 0usize;
+
+    loop {
+        guard += 1;
+        assert!(guard < 10_000_000, "simulation failed to converge");
+        events += 1;
+
+        // ---- 1. fire due events -----------------------------------------
+        for j in jobs.iter_mut() {
+            if j.state == State::NotArrived && j.profile.arrival <= now + EPS {
+                j.state = match cfg.strategy {
+                    StrategyKind::Exploratory => State::WaitingExplore,
+                    _ => State::Ready,
+                };
+            }
+        }
+        for (i, j) in jobs.iter_mut().enumerate() {
+            if let State::Exploring { end } = j.state {
+                if end <= now + EPS {
+                    // Lump-sum progress of the probe runs (2.5 min each
+                    // size), paying the eq-2 penalty of the nodes each
+                    // probe spans inside its reservation on a grid.
+                    let blocks = if topology.is_flat() {
+                        Vec::new()
+                    } else {
+                        reservation_blocks(&cluster, i as u64)
+                    };
+                    let gained: f64 = cfg
+                        .explore_sizes
+                        .iter()
+                        .map(|&s| {
+                            let base = j.profile.secs_per_epoch(s);
+                            let secs = if topology.is_flat() {
+                                base
+                            } else {
+                                let nodes = probe_span(&blocks, s, &topology);
+                                cfg.placement.placed_epoch_secs(base, s, nodes)
+                            };
+                            cfg.explore_secs_per_size / secs
+                        })
+                        .sum();
+                    j.remaining_epochs = (j.remaining_epochs - gained).max(0.0);
+                    j.state = State::Ready;
+                    j.w = 0;
+                }
+            }
+        }
+        for j in jobs.iter_mut() {
+            if j.state == State::Ready && j.remaining_epochs <= EPS {
+                j.state = State::Done { finish: now };
+                j.w = 0;
+            }
+        }
+
+        // ---- 2. reallocate ----------------------------------------------
+        let mut capacity = cfg.capacity;
+        for j in jobs.iter() {
+            if matches!(j.state, State::Exploring { .. }) {
+                capacity = capacity.saturating_sub(explore_reserve);
+            }
+        }
+        let mut waiting: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].state == State::WaitingExplore)
+            .collect();
+        waiting.sort_by(|&a, &b| {
+            jobs[a].profile.arrival.total_cmp(&jobs[b].profile.arrival)
+        });
+        for i in waiting {
+            if capacity >= explore_reserve {
+                capacity -= explore_reserve;
+                jobs[i].state = State::Exploring { end: now + explore_duration };
+                jobs[i].busy_until = now; // probes include their own startup
+            }
+        }
+
+        let mut ready: Vec<usize> = (0..jobs.len())
+            .filter(|&i| jobs[i].state == State::Ready)
+            .collect();
+        ready.sort_by(|&a, &b| {
+            jobs[a].profile.arrival.total_cmp(&jobs[b].profile.arrival)
+        });
+
+        let speed_of = |j: &SimJob| -> Speed {
+            let table = Speed::Table(j.profile.speed_table());
+            match topology {
+                Topology::Flat { .. } => table,
+                Topology::Cluster(spec) => Speed::placed(table, cfg.placement, spec.gpus_per_node),
+            }
+        };
+        let infos: Vec<JobInfo> = ready
+            .iter()
+            .map(|&i| JobInfo {
+                id: i as u64,
+                q: jobs[i].remaining_epochs,
+                speed: speed_of(&jobs[i]),
+                max_w: cfg.capacity,
+            })
+            .collect();
+        let alloc: Allocation = match cfg.strategy {
+            StrategyKind::Fixed(k) => Fixed(k).allocate(&infos, capacity),
+            StrategyKind::Optimus => OptimusGreedy.allocate(&infos, capacity),
+            StrategyKind::Precompute | StrategyKind::Exploratory => {
+                Doubling.allocate(&infos, capacity)
+            }
+        };
+        for (&id, &w_new) in &alloc {
+            let j = &mut jobs[id as usize];
+            if j.w != w_new {
+                if w_new > 0 {
+                    j.busy_until = now + cfg.restart_cost;
+                    total_rescales += 1;
+                }
+                j.w = w_new;
+            }
+        }
+
+        // ---- 2b. sync the placement ledger ------------------------------
+        if !topology.is_flat() {
+            let mut desired: Vec<(u64, usize)> = Vec::new();
+            for (i, j) in jobs.iter().enumerate() {
+                match j.state {
+                    State::Exploring { .. } => desired.push((i as u64, explore_reserve)),
+                    State::Ready if j.w > 0 => desired.push((i as u64, j.w)),
+                    _ => {}
+                }
+            }
+            for (id, held) in cluster.placed_jobs() {
+                let keep = desired.iter().any(|&(d, w)| d == id && w == held);
+                if !keep {
+                    cluster.release(id).expect("ledger holds what it reported");
+                }
+            }
+            let movers: Vec<(u64, usize)> = desired
+                .iter()
+                .copied()
+                .filter(|&(id, _)| cluster.allocation_of(id).is_none())
+                .collect();
+            cluster.place_batch(&movers).expect("granted widths never exceed capacity");
+            for (i, j) in jobs.iter_mut().enumerate() {
+                j.nodes = cluster.nodes_spanned(i as u64);
+            }
+        }
+
+        let concurrent = jobs
+            .iter()
+            .filter(|j| {
+                matches!(j.state, State::Ready | State::Exploring { .. } | State::WaitingExplore)
+            })
+            .count();
+        peak_concurrent = peak_concurrent.max(concurrent);
+
+        // ---- 3. find the next event --------------------------------------
+        let mut next = f64::INFINITY;
+        for j in jobs.iter() {
+            match j.state {
+                State::NotArrived => next = next.min(j.profile.arrival),
+                State::Exploring { end } => next = next.min(end),
+                State::Ready if j.w > 0 => {
+                    let start = now.max(j.busy_until);
+                    let finish = start + j.remaining_epochs * j.secs_per_epoch_placed(cfg);
+                    next = next.min(finish);
+                }
+                _ => {}
+            }
+        }
+        if !next.is_finite() {
+            break; // nothing left to happen
+        }
+        let next = next.max(now + EPS);
+
+        // ---- 4. progress running jobs to `next` ---------------------------
+        for j in jobs.iter_mut() {
+            if j.state == State::Ready && j.w > 0 {
+                let start = now.max(j.busy_until);
+                let dt = (next - start).max(0.0);
+                j.remaining_epochs =
+                    (j.remaining_epochs - dt / j.secs_per_epoch_placed(cfg)).max(0.0);
+            }
+        }
+        now = next;
+    }
+
+    let completion_secs: Vec<f64> = jobs
+        .iter()
+        .map(|j| match j.state {
+            State::Done { finish } => finish - j.profile.arrival,
+            _ => f64::NAN,
+        })
+        .collect();
+    let completed = completion_secs.iter().filter(|v| v.is_finite()).count();
+    let avg = completion_secs.iter().filter(|v| v.is_finite()).sum::<f64>()
+        / completed.max(1) as f64;
+
+    SimResult {
+        strategy: cfg.strategy.name(),
+        avg_completion_hours: avg / 3600.0,
+        completed,
+        makespan_hours: now / 3600.0,
+        peak_concurrent,
+        total_rescales,
+        completion_secs,
+        events,
+    }
+}

@@ -75,15 +75,56 @@ pub struct WorkloadGen {
     pub size_sigma: f64,
     /// Jitter σ on scaling efficiency at each doubling.
     pub efficiency_sigma: f64,
+    /// Probability a job is an "elephant" (heavy-tailed trace mode).
+    /// The default generator sets 0.0, which also skips the extra rng
+    /// draw — its stream, and therefore every paper workload, is
+    /// bit-identical to the pre-elephant generator.
+    pub elephant_prob: f64,
+    /// Size multiplier applied to elephants.
+    pub elephant_mult: f64,
 }
 
 impl Default for WorkloadGen {
     fn default() -> Self {
-        WorkloadGen { size_sigma: 0.45, efficiency_sigma: 0.08 }
+        WorkloadGen { size_sigma: 0.45, efficiency_sigma: 0.08, elephant_prob: 0.0, elephant_mult: 1.0 }
     }
 }
 
 impl WorkloadGen {
+    /// Heavy-tailed generator for Philly/Helios-style synthetic traces:
+    /// a wider log-normal body plus a small population of elephants
+    /// (~3% of jobs, ~12× the work), so large replays exercise the
+    /// queueing dynamics public traces show instead of 100k clones of
+    /// ResNet-110.
+    pub fn heavy_tailed() -> WorkloadGen {
+        WorkloadGen { size_sigma: 0.8, efficiency_sigma: 0.08, elephant_prob: 0.03, elephant_mult: 12.0 }
+    }
+
+    /// An `n`-job heavy-tailed trace whose arrival rate keeps a
+    /// `capacity`-GPU pool at ~65% offered load *regardless of `n`* —
+    /// the scale-sweep workload: the active set stays bounded by load
+    /// while total work grows linearly, which is exactly the regime
+    /// where per-event cost must not depend on trace length.
+    pub fn trace_scale(n: usize, capacity: usize, seed: u64) -> Vec<JobProfile> {
+        let g = WorkloadGen::heavy_tailed();
+        let mean = g.mean_interarrival_for(capacity, 0.65);
+        g.generate(n, mean, seed)
+    }
+
+    /// Mean inter-arrival seconds that put a `capacity`-GPU pool at
+    /// `offered_load` utilization under this generator's size
+    /// distribution, costing each job at the w = 8 operating point
+    /// (Table 2's knee — the widest point of the profile, so the true
+    /// load is never *above* the target).
+    pub fn mean_interarrival_for(&self, capacity: usize, offered_load: f64) -> f64 {
+        // E[log-normal(σ)] = exp(σ²/2), times the elephant mixture mean
+        let mean_mult = (self.size_sigma * self.size_sigma / 2.0).exp()
+            * (1.0 - self.elephant_prob + self.elephant_prob * self.elephant_mult);
+        // 165 epochs × secs/epoch(8) × 8 GPUs of work per mean-size job
+        let gpu_secs = mean_mult * 165.0 * PAPER_EPOCH_SECS[3].1 * 8.0;
+        gpu_secs / (capacity as f64 * offered_load)
+    }
+
     /// Generate `n_jobs` arrivals with exponential inter-arrival times.
     pub fn generate(&self, n_jobs: usize, mean_interarrival: f64, seed: u64) -> Vec<JobProfile> {
         let mut rng = Rng::new(seed);
@@ -97,7 +138,12 @@ impl WorkloadGen {
     }
 
     fn one_job(&self, rng: &mut Rng, arrival: f64) -> JobProfile {
-        let size = rng.jitter(self.size_sigma); // log-normal multiplier
+        let mut size = rng.jitter(self.size_sigma); // log-normal multiplier
+        // `&&` short-circuits: with elephants off no draw happens, so
+        // the default stream is untouched
+        if self.elephant_prob > 0.0 && rng.uniform_range(0.0, 1.0) < self.elephant_prob {
+            size *= self.elephant_mult;
+        }
         let mut epoch_secs = Vec::with_capacity(4);
         let mut prev = PAPER_EPOCH_SECS[0].1 * size;
         epoch_secs.push((1, prev));
@@ -183,6 +229,51 @@ mod tests {
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = v[v.len() / 2];
         assert!((median - 138.0).abs() < 25.0, "median={median}");
+    }
+
+    #[test]
+    fn default_generator_never_draws_the_elephant_coin() {
+        // elephant_prob = 0 must leave the rng stream untouched: the
+        // default workload (every paper test and golden) is bit-stable
+        // against the heavy-tail extension.
+        let base = WorkloadGen { elephant_prob: 0.0, elephant_mult: 99.0, ..WorkloadGen::default() };
+        let a = WorkloadGen::default().generate(50, 500.0, 3);
+        let b = base.generate(50, 500.0, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.epoch_secs, y.epoch_secs);
+            assert_eq!(x.total_epochs.to_bits(), y.total_epochs.to_bits());
+        }
+    }
+
+    #[test]
+    fn trace_scale_is_deterministic_and_heavy_tailed() {
+        let a = WorkloadGen::trace_scale(2000, 128, 7);
+        let b = WorkloadGen::trace_scale(2000, 128, 7);
+        assert_eq!(a.len(), 2000);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.epoch_secs, y.epoch_secs);
+        }
+        // heavy tail: the max w=1 serial time should dwarf the median
+        let mut v: Vec<f64> = a.iter().map(|j| j.serial_secs(1)).collect();
+        v.sort_by(|x, y| x.total_cmp(y));
+        let median = v[v.len() / 2];
+        let max = v[v.len() - 1];
+        assert!(max > 8.0 * median, "tail too light: max={max:.0} median={median:.0}");
+    }
+
+    #[test]
+    fn trace_scale_offered_load_stays_below_capacity() {
+        // arrival rate × mean GPU-seconds (at the costliest w=8 point)
+        // must stay below capacity — the stability condition that keeps
+        // the active set bounded at any trace length.
+        let jobs = WorkloadGen::trace_scale(4000, 128, 11);
+        let horizon = jobs.last().unwrap().arrival;
+        let gpu_secs: f64 = jobs.iter().map(|j| j.serial_secs(8) * 8.0).sum();
+        let load = gpu_secs / (horizon * 128.0);
+        assert!(load < 0.95, "offered load {load:.2} would diverge");
+        assert!(load > 0.3, "offered load {load:.2} — sweep would be idle");
     }
 
     #[test]

@@ -86,6 +86,41 @@ fn collectives_runs_on_bare_checkout() {
 }
 
 #[test]
+fn simulate_trace_scale_runs_a_heavy_tailed_workload() {
+    // scale-sweep plumbing end to end: --n-jobs overrides the preset
+    // trace length, --trace-scale swaps in the load-targeted heavy-tail
+    // generator, and the optimus baseline rides the same DES
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "optimus",
+            "--n-jobs",
+            "60",
+            "--trace-scale",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "simulate --trace-scale failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    // anchor on the data row's jobs column (strategy, contention,
+    // avg_hours, jobs, ...) — a bare substring/token match could hit an
+    // unrelated cell like a "3.60" average or a rescale count
+    let row = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("optimus"))
+        .unwrap_or_else(|| panic!("no optimus row in output:\n{text}"));
+    let jobs_cell = row.split_whitespace().nth(3).unwrap_or("");
+    assert_eq!(jobs_cell, "60", "completed-jobs column should read exactly 60:\n{text}");
+}
+
+#[test]
 fn orchestrate_runs_a_generated_workload_on_bare_checkout() {
     // miniature live run: 2 jobs, tiny epochs, reference backend
     let out = bin()

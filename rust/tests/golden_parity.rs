@@ -1,0 +1,120 @@
+//! Golden parity: the event-heap DES (PR 5) must reproduce the frozen
+//! pre-refactor scan engine (`sim::reference`) **bit for bit**.
+//!
+//! The rewrite changed how the engine *finds* the next event and who it
+//! reconciles against the placement ledger — never when the scheduler
+//! runs, what it sees, or the order anything is placed. These tests pin
+//! that claim on the paper config across every strategy (the six Table 3
+//! rows plus the optimus baseline), three topologies (flat, the
+//! degenerate 1×64 grid, the paper's 8×8 grid), and three seeds:
+//! `avg_completion_hours`, `total_rescales`, `makespan_hours`, and every
+//! per-job `completion_secs` must agree to the last bit, and the event
+//! counts must match exactly (same instants fired).
+//!
+//! The scheduler inner-loop rewrites are covered separately by the
+//! randomized equivalence property tests in `scheduler::doubling` /
+//! `scheduler::optimus`, and the binary-search table lookup by the
+//! lookup property test in `scheduler` — together the chain reaches the
+//! true pre-PR-5 engine even though both engines here link the new
+//! scheduler code.
+
+use ringmaster::sim::{
+    simulate, simulate_reference, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen,
+};
+
+fn assert_bit_identical(heap: &SimResult, scan: &SimResult, label: &str) {
+    assert_eq!(
+        heap.avg_completion_hours.to_bits(),
+        scan.avg_completion_hours.to_bits(),
+        "{label}: avg_completion_hours {} vs {}",
+        heap.avg_completion_hours,
+        scan.avg_completion_hours
+    );
+    assert_eq!(heap.total_rescales, scan.total_rescales, "{label}: total_rescales");
+    assert_eq!(
+        heap.makespan_hours.to_bits(),
+        scan.makespan_hours.to_bits(),
+        "{label}: makespan_hours"
+    );
+    assert_eq!(heap.completed, scan.completed, "{label}: completed");
+    assert_eq!(heap.peak_concurrent, scan.peak_concurrent, "{label}: peak_concurrent");
+    assert_eq!(heap.events, scan.events, "{label}: event count");
+    assert_eq!(heap.completion_secs.len(), scan.completion_secs.len(), "{label}: job count");
+    for (i, (a, b)) in heap.completion_secs.iter().zip(&scan.completion_secs).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{label}: job {i} completion {a} vs {b}");
+    }
+}
+
+fn strategies() -> Vec<StrategyKind> {
+    let mut v = StrategyKind::table3_rows();
+    v.push(StrategyKind::Optimus);
+    v
+}
+
+fn parity_case(strategy: StrategyKind, topo: Option<(usize, usize)>, seed: u64) {
+    let mut cfg = SimConfig::paper(strategy, Contention::Moderate, seed);
+    let label = match topo {
+        Some((n, g)) => {
+            cfg = cfg.with_topology(n, g);
+            format!("{} {}x{} seed {seed}", strategy.name(), n, g)
+        }
+        None => format!("{} flat seed {seed}", strategy.name()),
+    };
+    let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+    let heap = simulate(&cfg, &jobs);
+    let scan = simulate_reference(&cfg, &jobs);
+    assert_bit_identical(&heap, &scan, &label);
+}
+
+#[test]
+fn flat_pool_parity_all_strategies_three_seeds() {
+    for seed in [11u64, 23, 42] {
+        for s in strategies() {
+            parity_case(s, None, seed);
+        }
+    }
+}
+
+#[test]
+fn degenerate_grid_parity_all_strategies_three_seeds() {
+    // 1×64: every ring spans one node — the ledger runs but every
+    // penalty is zero, so this catches dirty-tracking bugs that flat
+    // (which skips the ledger entirely) cannot.
+    for seed in [11u64, 23, 42] {
+        for s in strategies() {
+            parity_case(s, Some((1, 64)), seed);
+        }
+    }
+}
+
+#[test]
+fn paper_grid_parity_all_strategies_three_seeds() {
+    // 8×8: real spans, real penalties, real re-packs.
+    for seed in [11u64, 23, 42] {
+        for s in strategies() {
+            parity_case(s, Some((8, 8)), seed);
+        }
+    }
+}
+
+#[test]
+fn heavy_tailed_trace_parity() {
+    // the scale-sweep workload itself (elephants, load-targeted
+    // arrivals) on both engines, flat and grid — modest n so the scan
+    // oracle stays cheap
+    for &(nodes, gpn) in &[(0usize, 0usize), (16, 8)] {
+        let mut cfg =
+            SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 7);
+        if nodes > 0 {
+            cfg = cfg.with_topology(nodes, gpn);
+        } else {
+            cfg.capacity = 128;
+            cfg.topology = ringmaster::cluster::Topology::flat(128);
+        }
+        cfg.n_jobs = 500;
+        let jobs = WorkloadGen::trace_scale(500, 128, 7);
+        let heap = simulate(&cfg, &jobs);
+        let scan = simulate_reference(&cfg, &jobs);
+        assert_bit_identical(&heap, &scan, &format!("trace_scale {nodes}x{gpn}"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Tier-1 scale smoke: the O(events × jobs) → O(events × active) claim
+//! is *exercised* on every CI run, not just compiled.
+//!
+//! A 1k-job heavy-tailed replay finishes fast on the event-heap engine
+//! (the scan engine needed ~1000 full-array walks per event here) and
+//! must neither trip the scaled convergence guard nor strand jobs. The
+//! full {100 … 100k} sweep lives in `benches/scale_sweep.rs`; this is
+//! the cheap regression tripwire.
+
+use ringmaster::cluster::Topology;
+use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+
+#[test]
+fn thousand_job_trace_completes_under_doubling() {
+    let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 7);
+    cfg.capacity = 128;
+    cfg.topology = Topology::flat(128);
+    cfg.n_jobs = 1000;
+    let jobs = WorkloadGen::trace_scale(1000, 128, 7);
+    let t = std::time::Instant::now();
+    let r = simulate(&cfg, &jobs);
+    let wall = t.elapsed().as_secs_f64();
+    assert_eq!(r.completed, 1000, "jobs stranded on a stable (~65% load) trace");
+    // >= one arrival instant and one completion instant per job minus
+    // coalescing; and nowhere near the guard (10M + 200/job)
+    assert!(r.events > 1000, "suspiciously few events: {}", r.events);
+    assert!((r.events as usize) < 10_000_000, "guard headroom gone: {}", r.events);
+    // generous wall bound: release-profile runs take well under a
+    // second; even a debug build has 60x slack before this fires
+    assert!(wall < 60.0, "1k-job replay took {wall:.1}s — hot path regressed to O(J^2)?");
+}
+
+#[test]
+fn grid_scale_trace_completes_under_optimus() {
+    // the 16×8 grid exercises the dirty-tracked ledger at scale; a
+    // smaller n keeps tier-1 fast while still ~10x the paper workload
+    let mut cfg =
+        SimConfig::paper(StrategyKind::Optimus, Contention::Moderate, 9).with_topology(16, 8);
+    cfg.n_jobs = 400;
+    let jobs = WorkloadGen::trace_scale(400, 128, 9);
+    let r = simulate(&cfg, &jobs);
+    assert_eq!(r.completed, 400);
+    assert!(r.total_rescales > 400, "adaptive strategy should rescale more than once per job");
+}
+
+#[test]
+fn scaled_guard_admits_legitimate_large_replays() {
+    // regression for the old fixed `guard < 10_000_000`: a legitimate
+    // large replay must complete without tripping the convergence
+    // guard, whose limit now grows with the trace (10M + 200/job).
+    let mut cfg = SimConfig::paper(StrategyKind::Fixed(8), Contention::Moderate, 3);
+    cfg.capacity = 128;
+    cfg.topology = Topology::flat(128);
+    cfg.n_jobs = 5000;
+    let jobs = WorkloadGen::trace_scale(5000, 128, 3);
+    let r = simulate(&cfg, &jobs);
+    assert_eq!(r.completed, 5000);
+}
