@@ -41,6 +41,7 @@ fn main() -> ringmaster::Result<()> {
         topology: ringmaster::cluster::Topology::flat(capacity),
         placement: ringmaster::perfmodel::PlacementModel::paper(),
         place_policy: ringmaster::cluster::PlacePolicy::Pack,
+        link_contention: ringmaster::perfmodel::LinkContention::OFF,
     };
 
     let mut train = TrainConfig::new(

@@ -134,6 +134,14 @@ pub enum PlacePolicy {
     /// Round-robin across the emptiest nodes: maximize span — the
     /// locality-blind strawman the placement ablation measures against.
     Scatter,
+    /// Contention-aware pack: identical to [`PlacePolicy::Pack`] while a
+    /// gang fits one node (an intra-node ring never touches a link), but
+    /// a gang that must cross nodes prefers nodes whose uplinks carry
+    /// the fewest rings — unavoidable cross-node rings are spread across
+    /// link groups instead of stacking on the uplinks Pack's best-fit
+    /// remainder rule gravitates to (the partially-filled nodes, which
+    /// are exactly the nodes already carrying a crossing ring).
+    Spread,
 }
 
 /// Compact placement summary a speed lookup needs.
@@ -155,6 +163,16 @@ pub struct ClusterState {
     busy: Vec<Vec<Option<u64>>>,
     /// job id -> GPUs held.
     allocations: BTreeMap<u64, Vec<Gpu>>,
+    /// Per-link ring ledger: `link_rings[n]` = rings currently crossing
+    /// node `n`'s uplink. Each node has one uplink into the shared
+    /// switch fabric; a node-contiguous ring spanning `k >= 2` nodes
+    /// crosses the uplink of each node it occupies exactly once per
+    /// chunk round, so the ledger increments once per occupied node per
+    /// crossing job. Single-node gangs never register: an intra-node
+    /// ring has no link to share. Maintained by every place/release, so
+    /// `sum(link_rings)` always equals the summed span of the jobs
+    /// spanning more than one node.
+    link_rings: Vec<usize>,
 }
 
 impl ClusterState {
@@ -168,6 +186,7 @@ impl ClusterState {
             policy,
             busy: vec![vec![None; spec.gpus_per_node]; spec.nodes],
             allocations: BTreeMap::new(),
+            link_rings: vec![0; spec.nodes],
         }
     }
 
@@ -218,6 +237,68 @@ impl ClusterState {
         Span {
             gpus: self.allocations.get(&job).map_or(0, |g| g.len()),
             nodes: self.nodes_spanned(job),
+        }
+    }
+
+    /// Rings currently crossing each node's uplink (the shared-bandwidth
+    /// ledger the contention model prices against).
+    pub fn link_rings(&self) -> &[usize] {
+        &self.link_rings
+    }
+
+    /// Tenancy of `job`'s ring: rings (including its own) on the busiest
+    /// uplink it traverses. `1` for single-node gangs, unplaced jobs,
+    /// and sole tenants — exactly the cases the contention law leaves
+    /// bit-identical to the uncontended model.
+    pub fn tenancy_of(&self, job: u64) -> usize {
+        let nodes = self.node_set(job);
+        if nodes.len() <= 1 {
+            return 1;
+        }
+        nodes.iter().map(|&n| self.link_rings[n]).max().unwrap_or(1).max(1)
+    }
+
+    /// Worst-case rings any uplink carries, not counting `job`'s own
+    /// contribution — what a scheduler assumes a *candidate* cross-node
+    /// ring for `job` would have to share a link with (pessimistic: the
+    /// placement policy may dodge the busiest link, but the score must
+    /// not promise that).
+    pub fn max_link_rings_excluding(&self, job: u64) -> usize {
+        let own = self.node_set(job);
+        let crosses = own.len() > 1;
+        (0..self.spec.nodes)
+            .map(|n| {
+                let r = self.link_rings[n];
+                if crosses && own.binary_search(&n).is_ok() {
+                    r.saturating_sub(1)
+                } else {
+                    r
+                }
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Register `job`'s ring on the uplinks of every node it occupies
+    /// (no-op for single-node gangs).
+    fn ledger_add(&mut self, job: u64) {
+        let nodes = self.node_set(job);
+        if nodes.len() > 1 {
+            for n in nodes {
+                self.link_rings[n] += 1;
+            }
+        }
+    }
+
+    /// Inverse of [`Self::ledger_add`]; called before the allocation is
+    /// dropped so the node set is still known.
+    fn ledger_sub(&mut self, job: u64) {
+        let nodes = self.node_set(job);
+        if nodes.len() > 1 {
+            for n in nodes {
+                debug_assert!(self.link_rings[n] > 0, "link ledger underflow at node {n}");
+                self.link_rings[n] = self.link_rings[n].saturating_sub(1);
+            }
         }
     }
 
@@ -294,10 +375,41 @@ impl ClusterState {
                             .cmp(&free_of(&self.busy[b]))
                             .then(b.cmp(&a))
                     }),
+                PlacePolicy::Spread => {
+                    // A gang that still fits one node is an intra-node
+                    // ring — no link, no contention — so locality wins
+                    // and the choice is exactly Pack's best fit. Only a
+                    // ring forced to cross (a partial pick already made,
+                    // or no node can hold the remainder) weighs uplink
+                    // tenancy: fewest rings first, then best fit, then
+                    // lowest index — all deterministic.
+                    let crossing = !picked.is_empty()
+                        || (0..self.spec.nodes).all(|n| free_of(&self.busy[n]) < remaining);
+                    if !crossing {
+                        (0..self.spec.nodes)
+                            .filter(|&n| free_of(&self.busy[n]) >= remaining)
+                            .min_by_key(|&n| free_of(&self.busy[n]))
+                    } else {
+                        let exact = (0..self.spec.nodes)
+                            .filter(|&n| free_of(&self.busy[n]) >= remaining)
+                            .min_by_key(|&n| (self.link_rings[n], free_of(&self.busy[n]), n));
+                        exact.or_else(|| {
+                            (0..self.spec.nodes)
+                                .filter(|&n| free_of(&self.busy[n]) > 0)
+                                .min_by_key(|&n| {
+                                    (
+                                        self.link_rings[n],
+                                        std::cmp::Reverse(free_of(&self.busy[n])),
+                                        n,
+                                    )
+                                })
+                        })
+                    }
+                }
             };
             let node = node.expect("capacity checked above");
             let mut take = match self.policy {
-                PlacePolicy::Pack => remaining,
+                PlacePolicy::Pack | PlacePolicy::Spread => remaining,
                 PlacePolicy::Scatter => 1,
             };
             for slot in 0..self.spec.gpus_per_node {
@@ -313,6 +425,7 @@ impl ClusterState {
             }
         }
         self.allocations.insert(job, picked.clone());
+        self.ledger_add(job);
         Ok(picked)
     }
 
@@ -333,10 +446,12 @@ impl ClusterState {
 
     /// Release every GPU held by `job`.
     pub fn release(&mut self, job: u64) -> Result<usize> {
-        let gpus = self
-            .allocations
-            .remove(&job)
-            .ok_or_else(|| anyhow::anyhow!("job {job} holds no allocation"))?;
+        anyhow::ensure!(
+            self.allocations.contains_key(&job),
+            "job {job} holds no allocation"
+        );
+        self.ledger_sub(job);
+        let gpus = self.allocations.remove(&job).expect("checked above");
         let count = gpus.len();
         for (n, s) in gpus {
             debug_assert_eq!(self.busy[n][s], Some(job));
@@ -494,13 +609,29 @@ mod tests {
         // no orphaned busy slots
         let busy_count = c.busy.iter().flatten().filter(|s| s.is_some()).count();
         assert_eq!(busy_count, total);
+        // link ledger conservation: each uplink carries exactly the
+        // crossing rings occupying its node, and the sum equals the
+        // summed span of crossing jobs
+        let mut want = vec![0usize; c.spec().nodes];
+        let mut crossing_span = 0usize;
+        for &job in c.allocations.keys() {
+            let nodes = c.node_set(job);
+            if nodes.len() > 1 {
+                crossing_span += nodes.len();
+                for n in nodes {
+                    want[n] += 1;
+                }
+            }
+        }
+        assert_eq!(c.link_rings(), want.as_slice(), "per-link ring counts drifted");
+        assert_eq!(c.link_rings().iter().sum::<usize>(), crossing_span);
     }
 
     #[test]
     fn churn_sequence_preserves_invariants() {
         // alloc/free/rescale/re-pack churn over a 4x4 grid; the ledger
-        // must stay exact at every step under both policies.
-        for policy in [PlacePolicy::Pack, PlacePolicy::Scatter] {
+        // must stay exact at every step under every policy.
+        for policy in [PlacePolicy::Pack, PlacePolicy::Scatter, PlacePolicy::Spread] {
             let mut c = ClusterState::with_policy(ClusterSpec::new(4, 4), policy);
             c.place(1, 5).unwrap();
             c.place(2, 3).unwrap();
@@ -570,6 +701,75 @@ mod tests {
         c.place_with_affinity(1, 1, &[(99, 0), (0, 99)]).unwrap();
         assert_eq!(c.span_of(1).gpus, 1);
         assert_consistent(&c);
+    }
+
+    #[test]
+    fn link_ledger_tracks_crossing_rings_only() {
+        let mut c = ClusterState::new(ClusterSpec::new(4, 4));
+        c.place(1, 4).unwrap(); // one node: no ring on any uplink
+        assert_eq!(c.link_rings().iter().sum::<usize>(), 0);
+        assert_eq!(c.tenancy_of(1), 1);
+        c.place(2, 6).unwrap(); // crosses: registers on each node it spans
+        assert_eq!(c.nodes_spanned(2), 2);
+        assert_eq!(c.link_rings().iter().sum::<usize>(), 2);
+        assert_eq!(c.tenancy_of(2), 1, "sole crossing ring is sole tenant");
+        c.release(2).unwrap();
+        assert_eq!(c.link_rings().iter().sum::<usize>(), 0);
+        assert_consistent(&c);
+    }
+
+    #[test]
+    fn tenancy_counts_shared_uplinks() {
+        // 3x4: job 1 takes a full node + 2; job 2's crossing remainder
+        // lands on job 1's partial node under Pack -> both rings cross
+        // that node's uplink.
+        let mut c = ClusterState::new(ClusterSpec::new(3, 4));
+        c.place(1, 6).unwrap();
+        c.place(2, 6).unwrap();
+        assert_consistent(&c);
+        let shared: Vec<usize> =
+            c.node_set(1).into_iter().filter(|n| c.node_set(2).contains(n)).collect();
+        assert!(!shared.is_empty(), "pack should co-locate the remainders");
+        assert_eq!(c.tenancy_of(1), 2);
+        assert_eq!(c.tenancy_of(2), 2);
+        // excluding a job's own contribution still sees the other ring
+        assert_eq!(c.max_link_rings_excluding(1), 1);
+        assert_eq!(c.max_link_rings_excluding(99), 2, "outsider sees both rings");
+    }
+
+    #[test]
+    fn spread_matches_pack_until_a_ring_must_cross() {
+        // single-node-fit gangs: Spread is Pack (locality first)
+        let mut p = ClusterState::new(ClusterSpec::new(4, 4));
+        let mut s = ClusterState::with_policy(ClusterSpec::new(4, 4), PlacePolicy::Spread);
+        for (job, w) in [(1u64, 3), (2, 1), (3, 4), (4, 2)] {
+            assert_eq!(p.place(job, w).unwrap(), s.place(job, w).unwrap(), "job {job}");
+        }
+        assert_consistent(&s);
+    }
+
+    #[test]
+    fn spread_avoids_sharing_uplinks_when_it_can() {
+        // 4x4, two 6-gangs. Pack's best-fit remainder rule stacks the
+        // second gang's remainder onto the first gang's partial node
+        // (shared uplink); Spread gives the gangs disjoint node sets.
+        let mut p = ClusterState::new(ClusterSpec::new(4, 4));
+        p.place(1, 6).unwrap();
+        p.place(2, 6).unwrap();
+        let overlap: Vec<usize> =
+            p.node_set(1).into_iter().filter(|n| p.node_set(2).contains(n)).collect();
+        assert!(!overlap.is_empty(), "pack stacks remainders on a shared node");
+        assert_eq!(p.tenancy_of(2), 2);
+
+        let mut s = ClusterState::with_policy(ClusterSpec::new(4, 4), PlacePolicy::Spread);
+        s.place(1, 6).unwrap();
+        s.place(2, 6).unwrap();
+        let overlap: Vec<usize> =
+            s.node_set(1).into_iter().filter(|n| s.node_set(2).contains(n)).collect();
+        assert!(overlap.is_empty(), "spread must pick disjoint link groups");
+        assert_eq!(s.tenancy_of(1), 1);
+        assert_eq!(s.tenancy_of(2), 1);
+        assert_consistent(&s);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use ringmaster::collectives::{self, cost, Algorithm};
 use ringmaster::coordinator;
 use ringmaster::metrics::CsvTable;
 use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
-use ringmaster::perfmodel::{ConvergenceModel, PlacementModel, SpeedModel};
+use ringmaster::perfmodel::{ConvergenceModel, LinkContention, PlacementModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
 use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
 use ringmaster::trainer::{train, Checkpoint, TrainConfig};
@@ -96,9 +96,15 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20                    pool load (scale sweeps; pairs with --n-jobs)\n\
              \x20 --nodes N          grid topology: node count (default 0 = flat pool)\n\
              \x20 --gpus-per-node G  grid topology: GPUs per node (default 8)\n\
-             \x20 --placement P      pack|scatter gang layout (default pack)\n\
+             \x20 --placement P      pack|scatter|spread gang layout (default pack;\n\
+             \x20                    spread = contention-aware pack)\n\
              \x20 --model-bytes B    per-job all-reduce payload for the topology\n\
              \x20                    penalty (default 6.9e6, the paper's ResNet-110)\n\
+             \x20 --link-contention  model shared uplink bandwidth: concurrent rings\n\
+             \x20                    crossing the same inter-node link degrade each\n\
+             \x20                    other's eq-2 constants (off by default; named\n\
+             \x20                    --link-contention because --contention is this\n\
+             \x20                    subcommand's arrival-rate preset)\n\
              \x20 --seed S           workload seed (default 42)\n"
         }
         "orchestrate" => {
@@ -116,7 +122,12 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --gpus-per-node G  grid topology: GPUs per node (default 8); with\n\
              \x20                    --nodes, capacity becomes N*G and rings spanning\n\
              \x20                    nodes pay the eq 2-4 inter-node cost\n\
-             \x20 --placement P      pack|scatter gang layout (default pack)\n\
+             \x20 --placement P      pack|scatter|spread gang layout (default pack;\n\
+             \x20                    spread = contention-aware pack)\n\
+             \x20 --contention       model shared uplink bandwidth: concurrent rings\n\
+             \x20                    crossing the same inter-node link degrade each\n\
+             \x20                    other's eq-2 constants; segments are priced at\n\
+             \x20                    their launch-time tenancy (off by default)\n\
              \x20 --model-bytes B    override every job's all-reduce payload bytes\n\
              \x20 --preempt          stop running segments at the next *step* on every\n\
              \x20                    arrival (mid-segment preemption; model bits become\n\
@@ -283,12 +294,17 @@ fn cmd_simulate() -> Result<()> {
     let gpn_s = a.str_opt("gpus-per-node");
     let placement_s = a.str_opt("placement");
     let model_bytes_s = a.str_opt("model-bytes");
+    let link_contention = a.flag("link-contention");
     a.reject_unknown()?;
     // Topology knobs are inert on a flat pool — reject rather than let a
     // forgotten --nodes silently produce penalty-free results.
     anyhow::ensure!(
-        nodes > 0 || (gpn_s.is_none() && placement_s.is_none() && model_bytes_s.is_none()),
-        "--gpus-per-node/--placement/--model-bytes require --nodes \
+        nodes > 0
+            || (gpn_s.is_none()
+                && placement_s.is_none()
+                && model_bytes_s.is_none()
+                && !link_contention),
+        "--gpus-per-node/--placement/--model-bytes/--link-contention require --nodes \
          (a flat pool has no topology penalty)"
     );
     // --trace-scale replaces the contention presets' arrival process, so
@@ -328,6 +344,9 @@ fn cmd_simulate() -> Result<()> {
                 cfg = cfg.with_topology(nodes, gpus_per_node);
                 cfg.placement = PlacementModel::paper().with_model_bytes(model_bytes);
                 cfg.place_policy = place_policy;
+                if link_contention {
+                    cfg.link_contention = LinkContention::fair_share();
+                }
             }
             if n_jobs > 0 {
                 cfg.n_jobs = n_jobs;
@@ -371,6 +390,7 @@ fn cmd_orchestrate() -> Result<()> {
     // and is recorded in emitted traces either way)
     let model_bytes = a.str_opt("model-bytes");
     let preempt = a.flag("preempt");
+    let contention = a.flag("contention");
     let segment_budget = a.get_or("segment-budget", f64::INFINITY)?;
     let online_model = a.flag("online-model");
     let preset = a.str_or("preset", "tiny");
@@ -381,8 +401,9 @@ fn cmd_orchestrate() -> Result<()> {
     let seed = a.get_or("seed", 42u64)?;
     a.reject_unknown()?;
     anyhow::ensure!(
-        nodes > 0 || (gpn_s.is_none() && placement_s.is_none()),
-        "--gpus-per-node/--placement require --nodes (a flat pool has no topology penalty)"
+        nodes > 0 || (gpn_s.is_none() && placement_s.is_none() && !contention),
+        "--gpus-per-node/--placement/--contention require --nodes \
+         (a flat pool has no topology penalty)"
     );
     let gpus_per_node: usize = match &gpn_s {
         Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--gpus-per-node {s:?}: {e}"))?,
@@ -421,6 +442,9 @@ fn cmd_orchestrate() -> Result<()> {
     cfg.online_model = online_model;
     if nodes > 0 {
         cfg = cfg.with_topology(nodes, gpus_per_node);
+        if contention {
+            cfg.link_contention = LinkContention::fair_share();
+        }
     }
 
     let scheduler = orchestrator::scheduler_by_name(&strategy)?;
@@ -510,7 +534,8 @@ fn parse_placement(s: &str) -> Result<PlacePolicy> {
     Ok(match s {
         "pack" => PlacePolicy::Pack,
         "scatter" => PlacePolicy::Scatter,
-        other => anyhow::bail!("placement {other:?}: want pack|scatter"),
+        "spread" => PlacePolicy::Spread,
+        other => anyhow::bail!("placement {other:?}: want pack|scatter|spread"),
     })
 }
 

@@ -84,7 +84,7 @@ use executor::{spawn_segment, SegmentPlan};
 
 use crate::cluster::{ClusterState, PlacePolicy, Topology};
 use crate::perfmodel::online::PAPER_EXAMPLES_PER_EPOCH;
-use crate::perfmodel::{OnlineModel, PlacementModel};
+use crate::perfmodel::{LinkContention, OnlineModel, PlacementModel};
 use crate::runtime::Artifacts;
 use crate::scheduler::{total_allocated, JobInfo, Scheduler, Speed};
 use crate::trainer::TrainConfig;
@@ -115,6 +115,13 @@ pub struct OrchestratorConfig {
     pub placement: PlacementModel,
     /// Gang layout policy (pack = locality-aware best-fit-decreasing).
     pub place_policy: PlacePolicy,
+    /// Shared-bandwidth law for inter-node links (`--contention`):
+    /// when enabled on a grid, a segment whose ring shares an uplink
+    /// with other rings at launch is priced at the degraded eq-2
+    /// constants, and schedulers score cross-node widths against the
+    /// worst-case uplink tenancy. [`LinkContention::OFF`] (the default)
+    /// structurally delegates every call to the PR-3 path — bit-exact.
+    pub link_contention: LinkContention,
     /// Mid-segment preemption: every arrival stops running segments at
     /// their next *step* boundary (shared stop flag into the real
     /// trainer) instead of waiting out the segment. The virtual schedule
@@ -150,6 +157,7 @@ impl OrchestratorConfig {
             topology: Topology::flat(capacity),
             placement: PlacementModel::paper(),
             place_policy: PlacePolicy::Pack,
+            link_contention: LinkContention::OFF,
             preempt_on_arrival: false,
             segment_budget_secs: f64::INFINITY,
             online_model: false,
@@ -225,6 +233,7 @@ impl Orchestrator {
         anyhow::ensure!(cfg.capacity >= 1, "capacity must be >= 1");
         cfg.topology = cfg.topology.reconciled(cfg.capacity)?;
         cfg.placement.checked()?;
+        cfg.link_contention.checked()?;
         anyhow::ensure!(cfg.segment_steps >= 1, "segment_steps must be >= 1");
         anyhow::ensure!(cfg.restart_cost >= 0.0, "restart_cost must be >= 0");
         anyhow::ensure!(
@@ -622,14 +631,28 @@ impl Orchestrator {
                     table
                 };
                 // On a grid the strategy scores each width against the
-                // placement it would get: f(w, placement), eq 2–4 split.
+                // placement it would get: f(w, placement), eq 2–4 split
+                // — and under `--contention` against the worst-case
+                // uplink tenancy a cross-node ring could land on:
+                // f(w, placement, contention).
                 let speed = match self.cfg.topology {
                     Topology::Flat { .. } => base,
-                    Topology::Cluster(spec) => Speed::placed(
-                        base,
-                        self.cfg.placement.with_model_bytes(j.spec.model_bytes),
-                        spec.gpus_per_node,
-                    ),
+                    Topology::Cluster(spec) => {
+                        let pm = self.cfg.placement.with_model_bytes(j.spec.model_bytes);
+                        if self.cfg.link_contention.enabled() {
+                            let tenants = 1 + self.cluster.max_link_rings_excluding(j.spec.id);
+                            Speed::placed_contended(
+                                base,
+                                pm,
+                                spec.gpus_per_node,
+                                None,
+                                self.cfg.link_contention,
+                                tenants,
+                            )
+                        } else {
+                            Speed::placed(base, pm, spec.gpus_per_node)
+                        }
+                    }
                 };
                 JobInfo {
                     id: j.spec.id,
@@ -716,14 +739,24 @@ impl Orchestrator {
 
         // f(w, placement): the profile's epoch seconds are single-node
         // truth; a ring spanning nodes pays the eq-2 inter-node delta.
+        // Under `--contention` the segment is additionally priced at the
+        // uplink tenancy the ledger shows *at launch* — a segment is one
+        // committed unit of work, so later-arriving sharers slow their
+        // own segments, not this one (launch-time sampling; DESIGN §13).
         let base_epoch_secs = self.jobs[idx].spec.profile.secs_per_epoch(w);
         let epoch_secs = if self.cfg.topology.is_flat() {
             base_epoch_secs
         } else {
-            self.cfg
+            let pm = self
+                .cfg
                 .placement
-                .with_model_bytes(self.jobs[idx].spec.model_bytes)
-                .placed_epoch_secs(base_epoch_secs, w, nodes)
+                .with_model_bytes(self.jobs[idx].spec.model_bytes);
+            if self.cfg.link_contention.enabled() {
+                let tenants = self.cluster.tenancy_of(id);
+                pm.contended_epoch_secs(base_epoch_secs, w, nodes, self.cfg.link_contention, tenants)
+            } else {
+                pm.placed_epoch_secs(base_epoch_secs, w, nodes)
+            }
         };
 
         let mut tcfg = self.cfg.train.clone();

@@ -29,7 +29,7 @@ pub mod speed;
 
 pub use convergence::ConvergenceModel;
 pub use online::{OnlineConfig, OnlineModel};
-pub use placement::{PlacementModel, TopoCostParams};
+pub use placement::{LinkContention, PlacementModel, TopoCostParams};
 pub use speed::SpeedModel;
 
 /// Full performance model of one training job.

@@ -35,6 +35,72 @@ pub const PAPER_MODEL_BYTES: f64 = 6.9e6;
 /// 50k examples / minibatch 128 → all-reduce rounds per epoch at w = 1.
 pub const PAPER_STEPS_PER_EPOCH_1W: f64 = 390.0;
 
+/// Multi-tenant shared-bandwidth law for the inter-node links (GADGET's
+/// contention regime, arXiv 2202.01158 / 2207.07817).
+///
+/// Eqs 2–4 price an all-reduce as if the ring owned its links; on a
+/// shared cluster every ring crossing a node's uplink competes with the
+/// other rings crossing it. With `r` rings on the busiest link a job
+/// traverses, the effective link constants degrade linearly:
+///
+/// - `β_eff = β · (1 + beta_share · (r − 1))` — bandwidth is divided:
+///   `beta_share = 1.0` is perfect fair-share (each of `r` rings sees
+///   `1/r` of the pipe);
+/// - `α_eff = α · (1 + alpha_share · (r − 1))` — per-message latency
+///   grows with switch/NIC queueing, a weaker second-order term.
+///
+/// `r = 1` (sole tenant) leaves both constants untouched — by
+/// construction every `r <= 1` call delegates to the uncontended code
+/// path, so a single-tenant world is **bit-identical** to the PR-3
+/// placement model, and disabling the law (`enabled = false`) is
+/// bit-identical everywhere. Intra-node rings never touch a link and
+/// are never degraded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkContention {
+    /// Master switch; `false` (the default) is provably the PR-3 model.
+    pub enabled: bool,
+    /// Fractional β growth per extra tenant (1.0 = fair-share).
+    pub beta_share: f64,
+    /// Fractional α growth per extra tenant (switch queueing).
+    pub alpha_share: f64,
+}
+
+impl Default for LinkContention {
+    fn default() -> Self {
+        LinkContention::OFF
+    }
+}
+
+impl LinkContention {
+    /// Contention modelling off — the uncontended eq 2–4 world.
+    pub const OFF: LinkContention =
+        LinkContention { enabled: false, beta_share: 1.0, alpha_share: 0.25 };
+
+    /// Fair-share bandwidth division with mild latency queueing — the
+    /// `--contention` default.
+    pub fn fair_share() -> LinkContention {
+        LinkContention { enabled: true, beta_share: 1.0, alpha_share: 0.25 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Checked constructor for config plumbing: negative shares would
+    /// make extra tenants *speed a ring up*, violating monotonicity.
+    pub fn checked(self) -> Result<LinkContention> {
+        anyhow::ensure!(
+            self.beta_share >= 0.0 && self.beta_share.is_finite(),
+            "link contention beta_share must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.alpha_share >= 0.0 && self.alpha_share.is_finite(),
+            "link contention alpha_share must be finite and >= 0"
+        );
+        Ok(self)
+    }
+}
+
 /// Link constants for the two tiers of the interconnect.
 #[derive(Clone, Copy, Debug)]
 pub struct TopoCostParams {
@@ -154,6 +220,87 @@ impl PlacementModel {
         self.validate()?;
         Ok(self)
     }
+
+    /// [`Self::ring_comm_secs`] under link contention: `tenants` rings
+    /// share the busiest link this ring traverses, degrading the
+    /// inter-node constants per `law`. Delegates to the uncontended
+    /// method — same floats, same order — whenever the law is off, the
+    /// ring is sole tenant, or the ring never leaves its node, so those
+    /// cases are bit-identical to the PR-3 model by construction.
+    pub fn contended_ring_comm_secs(
+        &self,
+        w: usize,
+        nodes: usize,
+        n_bytes: f64,
+        law: LinkContention,
+        tenants: usize,
+    ) -> f64 {
+        if !law.enabled() || tenants <= 1 || nodes <= 1 {
+            return self.ring_comm_secs(w, nodes, n_bytes);
+        }
+        let tier = self.params.inter;
+        let extra_tenants = (tenants - 1) as f64;
+        // same slowest-edge α as the uncontended path, then queueing
+        let alpha = (tier.alpha + self.params.hop_alpha * (nodes as f64 - 2.0).max(0.0))
+            * (1.0 + law.alpha_share * extra_tenants);
+        // fair-share bandwidth division on the shared uplink
+        let beta = tier.beta * (1.0 + law.beta_share * extra_tenants);
+        comm_time(Algorithm::Ring, w, n_bytes, &CostParams { alpha, beta, ..tier })
+    }
+
+    /// [`Self::extra_epoch_secs_for`] under link contention. The
+    /// single-node baseline inside the delta stays uncontended (an
+    /// intra-node ring has no link to share), so the penalty is
+    /// monotone in `tenants` and exactly the PR-3 delta at one tenant.
+    pub fn contended_extra_epoch_secs_for(
+        &self,
+        w: usize,
+        nodes: usize,
+        n_bytes: f64,
+        law: LinkContention,
+        tenants: usize,
+    ) -> f64 {
+        if nodes <= 1 || w <= 1 {
+            return 0.0;
+        }
+        let steps = self.steps_per_epoch_1w / w as f64;
+        steps
+            * (self.contended_ring_comm_secs(w, nodes, n_bytes, law, tenants)
+                - self.ring_comm_secs(w, 1, n_bytes))
+    }
+
+    /// [`Self::contended_extra_epoch_secs_for`] with the model's own
+    /// payload size.
+    pub fn contended_extra_epoch_secs(
+        &self,
+        w: usize,
+        nodes: usize,
+        law: LinkContention,
+        tenants: usize,
+    ) -> f64 {
+        self.contended_extra_epoch_secs_for(w, nodes, self.n_bytes, law, tenants)
+    }
+
+    /// [`Self::placed_epoch_secs`] under link contention. Structurally
+    /// delegates to `placed_epoch_secs` when the law is off or the job
+    /// is sole tenant — the contention-off execution path *is* the PR-3
+    /// path, not a re-derivation of it.
+    pub fn contended_epoch_secs(
+        &self,
+        base_secs: f64,
+        w: usize,
+        nodes: usize,
+        law: LinkContention,
+        tenants: usize,
+    ) -> f64 {
+        if !law.enabled() || tenants <= 1 {
+            return self.placed_epoch_secs(base_secs, w, nodes);
+        }
+        if nodes <= 1 {
+            return base_secs;
+        }
+        base_secs + self.contended_extra_epoch_secs(w, nodes, law, tenants)
+    }
 }
 
 #[cfg(test)]
@@ -230,5 +377,82 @@ mod tests {
         m.n_bytes = 0.0;
         assert!(m.checked().is_err());
         assert!(PlacementModel::paper().checked().is_ok());
+    }
+
+    #[test]
+    fn contention_single_tenant_is_bit_identical() {
+        // tenants = 1 and law-off must be the PR-3 floats exactly
+        let m = PlacementModel::paper().with_model_bytes(BIG);
+        let law = LinkContention::fair_share();
+        for w in [2usize, 4, 8, 16] {
+            for nodes in [1usize, 2, 4] {
+                let base = 29.6;
+                let plain = m.placed_epoch_secs(base, w, nodes);
+                assert_eq!(
+                    m.contended_epoch_secs(base, w, nodes, law, 1).to_bits(),
+                    plain.to_bits(),
+                    "tenants=1 w={w} nodes={nodes}"
+                );
+                assert_eq!(
+                    m.contended_epoch_secs(base, w, nodes, LinkContention::OFF, 5).to_bits(),
+                    plain.to_bits(),
+                    "law off w={w} nodes={nodes}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn contention_monotone_in_tenants() {
+        let m = PlacementModel::paper().with_model_bytes(BIG);
+        let law = LinkContention::fair_share();
+        let mut prev = 0.0;
+        for tenants in 1..=6 {
+            let extra = m.contended_extra_epoch_secs(8, 2, law, tenants);
+            assert!(extra >= prev, "tenants={tenants}: {extra} < {prev}");
+            prev = extra;
+        }
+        // strictly worse once a second ring shares the link
+        assert!(
+            m.contended_extra_epoch_secs(8, 2, law, 2)
+                > m.contended_extra_epoch_secs(8, 2, law, 1)
+        );
+    }
+
+    #[test]
+    fn contention_never_touches_intra_node_rings() {
+        let m = PlacementModel::paper().with_model_bytes(BIG);
+        let law = LinkContention::fair_share();
+        for tenants in 1..=8 {
+            assert_eq!(m.contended_extra_epoch_secs(8, 1, law, tenants), 0.0);
+            let base = 47.3;
+            assert_eq!(
+                m.contended_epoch_secs(base, 8, 1, law, tenants).to_bits(),
+                base.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn fair_share_halves_effective_bandwidth_at_two_tenants() {
+        // with β dominating (huge payload), two fair-share tenants pay
+        // roughly twice the β term of the sole-tenant inter-node ring
+        let m = PlacementModel::paper();
+        let alone = m.contended_ring_comm_secs(8, 2, 1.0e9, LinkContention::fair_share(), 1);
+        let shared = m.contended_ring_comm_secs(8, 2, 1.0e9, LinkContention::fair_share(), 2);
+        assert!(shared > 1.8 * alone, "shared {shared} vs alone {alone}");
+        assert!(shared < 2.5 * alone, "shared {shared} vs alone {alone}");
+    }
+
+    #[test]
+    fn link_contention_checked_rejects_nonsense() {
+        assert!(LinkContention::fair_share().checked().is_ok());
+        assert!(LinkContention::OFF.checked().is_ok());
+        let mut bad = LinkContention::fair_share();
+        bad.beta_share = -0.1;
+        assert!(bad.checked().is_err());
+        bad = LinkContention::fair_share();
+        bad.alpha_share = f64::NAN;
+        assert!(bad.checked().is_err());
     }
 }

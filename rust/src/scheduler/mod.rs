@@ -29,7 +29,7 @@ pub mod optimus;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::perfmodel::{PlacementModel, SpeedModel};
+use crate::perfmodel::{LinkContention, PlacementModel, SpeedModel};
 
 /// Training speed f(w) as the scheduler sees it: the smooth eq-5 fit, a
 /// piecewise table (ground truth in simulations — eqs 2–4 are piecewise
@@ -102,6 +102,15 @@ pub struct PlacedSpeed {
     /// every (job, width) probe of a scheduler's inner loop. `None`
     /// computes on demand; the values are bit-identical either way.
     memo: Option<Arc<Vec<f64>>>,
+    /// Shared-bandwidth law ([`LinkContention::OFF`] unless built via
+    /// [`Speed::placed_contended`]).
+    law: LinkContention,
+    /// Rings the scheduler assumes a cross-node gang for this job would
+    /// share its busiest link with (1 = sole tenant). Only consulted
+    /// when the law is enabled *and* tenants > 1 — otherwise the memo /
+    /// uncontended path runs unchanged, so contention-off scoring is
+    /// bit-identical to PR 3.
+    tenants: usize,
 }
 
 impl PlacedSpeed {
@@ -115,9 +124,16 @@ impl PlacedSpeed {
         if base <= 0.0 {
             return 0.0;
         }
-        let extra = match &self.memo {
-            Some(m) if w >= 1 && w <= m.len() => m[w - 1],
-            _ => self.model.extra_epoch_secs(w, self.span(w)),
+        let extra = if self.law.enabled() && self.tenants > 1 {
+            // memo entries price a sole-tenant ring; a contended score
+            // must re-price at the assumed tenancy (intra-node widths
+            // still come out 0.0 — contention never touches them)
+            self.model.contended_extra_epoch_secs(w, self.span(w), self.law, self.tenants)
+        } else {
+            match &self.memo {
+                Some(m) if w >= 1 && w <= m.len() => m[w - 1],
+                _ => self.model.extra_epoch_secs(w, self.span(w)),
+            }
         };
         if extra <= 0.0 {
             // exact flat identity (1/(1/x) is not bit-stable)
@@ -131,7 +147,14 @@ impl Speed {
     /// Wrap a base speed with the placement penalty of `topology`
     /// (identity wrapper for a single-node span).
     pub fn placed(base: Speed, model: PlacementModel, gpus_per_node: usize) -> Speed {
-        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node, memo: None })
+        Speed::Placed(PlacedSpeed {
+            base: Box::new(base),
+            model,
+            gpus_per_node,
+            memo: None,
+            law: LinkContention::OFF,
+            tenants: 1,
+        })
     }
 
     /// [`Speed::placed`] with the span penalty precomputed for widths
@@ -145,7 +168,38 @@ impl Speed {
         gpus_per_node: usize,
         memo: Arc<Vec<f64>>,
     ) -> Speed {
-        Speed::Placed(PlacedSpeed { base: Box::new(base), model, gpus_per_node, memo: Some(memo) })
+        Speed::Placed(PlacedSpeed {
+            base: Box::new(base),
+            model,
+            gpus_per_node,
+            memo: Some(memo),
+            law: LinkContention::OFF,
+            tenants: 1,
+        })
+    }
+
+    /// [`Speed::placed`]/[`Speed::placed_memo`] under a shared-bandwidth
+    /// law: cross-node widths are scored as if their ring shared its
+    /// busiest link with `tenants - 1` other rings. With `tenants <= 1`
+    /// (or the law disabled) every lookup takes the exact uncontended
+    /// path — including the memo — so this wrapper is bit-identical to
+    /// its plain counterparts in the sole-tenant case.
+    pub fn placed_contended(
+        base: Speed,
+        model: PlacementModel,
+        gpus_per_node: usize,
+        memo: Option<Arc<Vec<f64>>>,
+        law: LinkContention,
+        tenants: usize,
+    ) -> Speed {
+        Speed::Placed(PlacedSpeed {
+            base: Box::new(base),
+            model,
+            gpus_per_node,
+            memo,
+            law,
+            tenants: tenants.max(1),
+        })
     }
 
     /// Wrap an online-learned fit (possibly still gate-closed) over its
@@ -453,6 +507,96 @@ mod tests {
                     "w={w}"
                 );
             }
+        }
+
+        #[test]
+        fn contended_sole_tenant_is_bit_identical_to_plain_and_memo() {
+            use crate::perfmodel::LinkContention;
+            let model = PlacementModel::paper().with_model_bytes(1.0e8);
+            let memo = std::sync::Arc::new(model.contiguous_extra_table(8, 16));
+            let plain = Speed::placed(Speed::Table(strong_table()), model, 8);
+            let memod =
+                Speed::placed_memo(Speed::Table(strong_table()), model, 8, memo.clone());
+            let sole = Speed::placed_contended(
+                Speed::Table(strong_table()),
+                model,
+                8,
+                Some(memo.clone()),
+                LinkContention::fair_share(),
+                1,
+            );
+            let off = Speed::placed_contended(
+                Speed::Table(strong_table()),
+                model,
+                8,
+                Some(memo),
+                LinkContention::OFF,
+                4,
+            );
+            for w in [0usize, 1, 2, 7, 8, 9, 16, 17, 33] {
+                let want = memod.epochs_per_sec(w).to_bits();
+                assert_eq!(sole.epochs_per_sec(w).to_bits(), want, "tenants=1 w={w}");
+                assert_eq!(off.epochs_per_sec(w).to_bits(), want, "law off w={w}");
+                assert_eq!(plain.epochs_per_sec(w).to_bits(), want, "plain w={w}");
+            }
+        }
+
+        #[test]
+        fn contended_cross_node_widths_score_slower() {
+            use crate::perfmodel::LinkContention;
+            let model = PlacementModel::paper().with_model_bytes(1.0e8);
+            let sole = placed_speed(8);
+            let shared = Speed::placed_contended(
+                Speed::Table(strong_table()),
+                model,
+                8,
+                None,
+                LinkContention::fair_share(),
+                2,
+            );
+            // intra-node widths: no link, no degradation, bit-identical
+            for w in [1usize, 2, 4, 8] {
+                assert_eq!(
+                    shared.epochs_per_sec(w).to_bits(),
+                    sole.epochs_per_sec(w).to_bits(),
+                    "w={w}"
+                );
+            }
+            // cross-node widths: sharing the uplink must score slower
+            for w in [9usize, 16] {
+                assert!(
+                    shared.epochs_per_sec(w) < sole.epochs_per_sec(w),
+                    "w={w}: contended not slower"
+                );
+            }
+        }
+
+        #[test]
+        fn doubling_refuses_node_boundary_sooner_under_contention() {
+            use crate::perfmodel::LinkContention;
+            // A mildly comm-bound job where doubling 8 -> 16 is *just*
+            // worth it alone: adding a second tenant on the uplink must
+            // flip the decision back to the single-node width. This is
+            // the f(w, placement, contention) the marginal-gain heaps
+            // are supposed to see.
+            let model = PlacementModel::paper().with_model_bytes(3.0e7);
+            let mk = |tenants: usize| JobInfo {
+                id: 1,
+                q: 100.0,
+                speed: Speed::placed_contended(
+                    Speed::Table(strong_table()),
+                    model,
+                    8,
+                    None,
+                    LinkContention::fair_share(),
+                    tenants,
+                ),
+                max_w: 16,
+            };
+            let alone = doubling::Doubling.allocate(std::slice::from_ref(&mk(1)), 16);
+            let crowded = doubling::Doubling.allocate(std::slice::from_ref(&mk(4)), 16);
+            assert_eq!(alone[&1], 16, "sole tenant should still cross");
+            assert_eq!(crowded[&1], 8, "4 tenants must keep the gang on one node");
         }
 
         #[test]

@@ -99,13 +99,26 @@ struct SimJob {
     /// Width the placement ledger currently holds for this job
     /// (0 = unplaced; stays 0 on flat pools, which skip the ledger).
     held: usize,
+    /// Rings sharing the busiest uplink this job's ring traverses,
+    /// including its own (1 = sole tenant; always 1 while contention is
+    /// off or the ring fits one node) — the contention third of the
+    /// `(w, placement, contention)` speed key. Re-read from the link
+    /// ledger after every reconciliation while contention is on.
+    tenants: usize,
 }
 
 impl SimJob {
-    /// Refresh the cached secs/epoch after `w` or `nodes` moved.
+    /// Refresh the cached secs/epoch after `w`, `nodes`, or `tenants`
+    /// moved. With contention off (or sole tenancy) this is exactly the
+    /// PR-3 `placed_epoch_secs` call — same floats, same order.
     fn refresh_secs(&mut self, cfg: &SimConfig) {
-        self.secs_placed =
-            cfg.placement.placed_epoch_secs(self.profile.secs_per_epoch(self.w), self.w, self.nodes);
+        self.secs_placed = cfg.placement.contended_epoch_secs(
+            self.profile.secs_per_epoch(self.w),
+            self.w,
+            self.nodes,
+            cfg.link_contention,
+            self.tenants,
+        );
     }
 }
 
@@ -209,6 +222,11 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
         .reconciled(cfg.capacity)
         .expect("grid topology must agree with cfg.capacity (use with_topology)");
     let flat = topology.is_flat();
+    // Link contention only exists where links do: flat pools (and the
+    // off switch, the default) keep every pricing call on the exact
+    // PR-3 path, so the contention-off engine is bit-identical to the
+    // frozen reference (asserted by tests/golden_parity.rs).
+    let contended = !flat && cfg.link_contention.enabled();
     let explore_reserve = cfg.explore_sizes.iter().copied().max().unwrap_or(8);
     let explore_duration = cfg.explore_secs_per_size * cfg.explore_sizes.len() as f64;
     let mut cluster = ClusterState::with_policy(topology.spec(), cfg.place_policy);
@@ -234,6 +252,7 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             secs_placed: f64::INFINITY,
             speed: Arc::new(p.speed_table()),
             held: 0,
+            tenants: 1,
         })
         .collect();
 
@@ -371,7 +390,27 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 let table = Speed::Shared(jobs[i].speed.clone());
                 let speed = match (&memo, topology) {
                     (Some(m), Topology::Cluster(spec)) => {
-                        Speed::placed_memo(table, cfg.placement, spec.gpus_per_node, m.clone())
+                        if contended {
+                            // f(w, placement, contention): a candidate
+                            // cross-node ring is scored as sharing its
+                            // busiest link with the worst uplink on the
+                            // grid (minus this job's own ring) — the
+                            // pessimistic bound a scheduler can promise
+                            // without knowing where the policy will put
+                            // the gang. Sole tenancy takes the memoized
+                            // uncontended path bit-for-bit.
+                            let tenants = 1 + cluster.max_link_rings_excluding(i as u64);
+                            Speed::placed_contended(
+                                table,
+                                cfg.placement,
+                                spec.gpus_per_node,
+                                Some(m.clone()),
+                                cfg.link_contention,
+                                tenants,
+                            )
+                        } else {
+                            Speed::placed_memo(table, cfg.placement, spec.gpus_per_node, m.clone())
+                        }
                     }
                     _ => table,
                 };
@@ -447,6 +486,26 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
         for &i in touched.iter() {
             if jobs[i].w > 0 {
                 jobs[i].refresh_secs(cfg);
+            }
+        }
+        // Contention-on: any place/release can change the tenancy of
+        // rings that did NOT move (a new neighbour on their uplink), so
+        // re-read the ledger for every running job and re-price the ones
+        // whose tenancy moved. Execution speed is therefore piecewise-
+        // constant between events at the *current* link population —
+        // the same approximation the DES already makes for placement.
+        // O(active × nodes) per event, paid only when the law is on.
+        if contended {
+            for &i in ready.iter() {
+                let j = &mut jobs[i];
+                if j.w == 0 {
+                    continue;
+                }
+                let t = if j.nodes > 1 { cluster.tenancy_of(i as u64) } else { 1 };
+                if t != j.tenants {
+                    j.tenants = t;
+                    j.refresh_secs(cfg);
+                }
             }
         }
 
@@ -730,6 +789,80 @@ mod tests {
         let b = simulate(&cfg, &jobs);
         assert_eq!(a.avg_completion_hours.to_bits(), b.avg_completion_hours.to_bits());
         assert_eq!(a.total_rescales, b.total_rescales);
+    }
+
+    #[test]
+    fn link_contention_degrades_jct_when_rings_share_uplinks() {
+        use crate::perfmodel::{LinkContention, PlacementModel};
+        // Fixed-6 on 4-wide nodes: every gang is 4+2, so Pack's best-fit
+        // remainder rule stacks concurrent gangs' remainders onto the
+        // same partial node — shared uplinks whenever two jobs overlap.
+        // Fixed-k consults no speed model, so the contention law only
+        // slows execution; average JCT must strictly degrade.
+        let mk = |law: LinkContention| {
+            let mut cfg = SimConfig::paper(StrategyKind::Fixed(6), Contention::Moderate, 47)
+                .with_topology(4, 4);
+            cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+            cfg.link_contention = law;
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 47);
+            simulate(&cfg, &jobs)
+        };
+        let off = mk(LinkContention::OFF);
+        let on = mk(LinkContention::fair_share());
+        assert_eq!(off.completed, on.completed);
+        assert!(
+            on.avg_completion_hours > off.avg_completion_hours,
+            "contention on {:.3}h did not degrade vs off {:.3}h",
+            on.avg_completion_hours,
+            off.avg_completion_hours
+        );
+    }
+
+    #[test]
+    fn spread_policy_recovers_contention_losses() {
+        use crate::cluster::PlacePolicy;
+        use crate::perfmodel::{LinkContention, PlacementModel};
+        // Same contended world, blind vs aware placement: Spread gives
+        // concurrent 6-gangs disjoint link groups, so it must not lose
+        // to Pack's stacked remainders.
+        let mk = |policy: PlacePolicy| {
+            let mut cfg = SimConfig::paper(StrategyKind::Fixed(6), Contention::Moderate, 53)
+                .with_topology(4, 4);
+            cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+            cfg.link_contention = LinkContention::fair_share();
+            cfg.place_policy = policy;
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 53);
+            simulate(&cfg, &jobs)
+        };
+        let pack = mk(PlacePolicy::Pack);
+        let spread = mk(PlacePolicy::Spread);
+        assert_eq!(pack.completed, spread.completed);
+        assert!(
+            spread.avg_completion_hours <= pack.avg_completion_hours,
+            "spread {:.3}h lost to pack {:.3}h under contention",
+            spread.avg_completion_hours,
+            pack.avg_completion_hours
+        );
+    }
+
+    #[test]
+    fn contention_on_single_node_grid_is_still_bit_identical_to_flat() {
+        use crate::perfmodel::LinkContention;
+        // 1x64: no ring can ever cross a link, so even with the law
+        // enabled every job is sole tenant and the engine must
+        // reproduce the flat pool bit for bit — the engine-level form
+        // of "intra-node jobs are unaffected by link contention".
+        let flat = run(StrategyKind::Precompute, Contention::Moderate, 59);
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 59)
+            .with_topology(1, 64);
+        cfg.link_contention = LinkContention::fair_share();
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 59);
+        let grid = simulate(&cfg, &jobs);
+        assert_eq!(flat.avg_completion_hours.to_bits(), grid.avg_completion_hours.to_bits());
+        assert_eq!(flat.total_rescales, grid.total_rescales);
+        for (a, b) in flat.completion_secs.iter().zip(&grid.completion_secs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub use reference::simulate_reference;
 pub use workload::{JobProfile, WorkloadGen};
 
 use crate::cluster::{PlacePolicy, Topology};
-use crate::perfmodel::PlacementModel;
+use crate::perfmodel::{LinkContention, PlacementModel};
 
 /// Which Table 3 strategy a simulation runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +87,13 @@ pub struct SimConfig {
     pub placement: PlacementModel,
     /// How gangs are laid out on the grid (pack = locality-aware BFD).
     pub place_policy: PlacePolicy,
+    /// Shared-bandwidth law for inter-node links: when enabled (and the
+    /// pool is a grid), concurrent rings crossing the same uplink
+    /// degrade each other's eq-2 constants per the per-link ring ledger.
+    /// [`LinkContention::OFF`] (the default) is provably the
+    /// contention-free engine — every pricing call structurally
+    /// delegates to the PR-3 path, bit for bit.
+    pub link_contention: LinkContention,
 }
 
 impl SimConfig {
@@ -109,6 +116,7 @@ impl SimConfig {
             topology: Topology::flat(64),
             placement: PlacementModel::paper(),
             place_policy: PlacePolicy::Pack,
+            link_contention: LinkContention::OFF,
         }
     }
 

@@ -121,6 +121,99 @@ fn simulate_trace_scale_runs_a_heavy_tailed_workload() {
 }
 
 #[test]
+fn simulate_link_contention_runs_with_spread_placement() {
+    // the contended DES end to end: fixed-8 gangs on 6-wide nodes must
+    // split 6+2, --link-contention prices the shared uplinks, and the
+    // spread policy is accepted by --placement
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "fixed-8",
+            "--n-jobs",
+            "40",
+            "--nodes",
+            "8",
+            "--gpus-per-node",
+            "6",
+            "--link-contention",
+            "--placement",
+            "spread",
+            "--model-bytes",
+            "1e8",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "simulate --link-contention failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    let row = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("fixed-8"))
+        .unwrap_or_else(|| panic!("no fixed-8 row in output:\n{text}"));
+    let jobs_cell = row.split_whitespace().nth(3).unwrap_or("");
+    assert_eq!(jobs_cell, "40", "completed-jobs column should read exactly 40:\n{text}");
+}
+
+#[test]
+fn link_contention_flags_require_a_grid() {
+    // a flat pool has no links to share: both binaries' flags must be
+    // rejected rather than silently ignored
+    let out = bin().args(["simulate", "--link-contention"]).output().expect("run binary");
+    assert!(!out.status.success(), "simulate --link-contention without --nodes passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--nodes"));
+
+    let out = bin().args(["orchestrate", "--contention"]).output().expect("run binary");
+    assert!(!out.status.success(), "orchestrate --contention without --nodes passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--nodes"));
+}
+
+#[test]
+fn orchestrate_runs_under_link_contention() {
+    // miniature contended live run: 2x2 grid, two jobs, spread placement
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--nodes",
+            "2",
+            "--gpus-per-node",
+            "2",
+            "--contention",
+            "--placement",
+            "spread",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "contended orchestrate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("topology=2x2"), "summary missing topology:\n{text}");
+    assert!(text.contains("avg JCT"), "summary missing avg JCT:\n{text}");
+}
+
+#[test]
 fn orchestrate_runs_a_generated_workload_on_bare_checkout() {
     // miniature live run: 2 jobs, tiny epochs, reference backend
     let out = bin()

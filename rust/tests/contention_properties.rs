@@ -1,0 +1,272 @@
+//! Generative property harness for the shared-bandwidth link model
+//! (PR 6): randomized payloads, grids, and churn sequences pin the four
+//! invariants the contention design rests on:
+//!
+//! - **ring-count monotonicity** — more rings on a shared uplink never
+//!   make anyone faster, and with a positive bandwidth share every
+//!   extra tenant is strictly slower (cross-node, w > 1);
+//! - **single-tenant equivalence** — a sole tenant (or a disabled law)
+//!   is *bit-identical* to the PR-3 placement model, at the model level
+//!   and through every `Speed` wrapper (plain, memo, contended);
+//! - **ledger conservation** — under arbitrary place/release/rescale
+//!   churn on any policy, the per-link ring ledger always equals the
+//!   count recomputed from scratch out of the live allocations, and its
+//!   sum equals the summed span of crossing jobs;
+//! - **intra-node immunity** — a gang on one node has no uplink to
+//!   share: tenancy 1 regardless of neighbours, and the contended price
+//!   is the base price for any tenant count.
+//!
+//! No proptest crate in the vendor set, so the same discipline by hand
+//! as `model_fit_properties`: a deterministic RNG drives >= 20 cases
+//! per property and every assertion message carries the case number.
+
+use std::sync::Arc;
+
+use ringmaster::cluster::{ClusterSpec, ClusterState, PlacePolicy};
+use ringmaster::perfmodel::{LinkContention, PlacementModel};
+use ringmaster::rngx::Rng;
+use ringmaster::scheduler::Speed;
+
+/// Parameter sets per property (issue floor: 20).
+const CASES: usize = 24;
+
+/// Random comm payload, log-uniform across compute-bound (paper's
+/// 6.9 MB) to severely comm-bound (200 MB) regimes.
+fn random_model(rng: &mut Rng) -> PlacementModel {
+    let n_bytes = 10f64.powf(rng.uniform_range(6.5, 8.3));
+    PlacementModel::paper().with_model_bytes(n_bytes)
+}
+
+fn random_law(rng: &mut Rng) -> LinkContention {
+    LinkContention {
+        enabled: true,
+        beta_share: rng.uniform_range(0.1, 2.0),
+        alpha_share: rng.uniform_range(0.0, 1.0),
+    }
+}
+
+// ----------------------------------------------------------------------
+// ring-count monotonicity
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_contended_price_monotone_in_ring_count() {
+    let mut rng = Rng::new(0xC0DE01);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        let law = random_law(&mut rng);
+        let w = 2 + rng.below(31);
+        let nodes = 2 + rng.below(5);
+        let base = rng.uniform_range(5.0, 200.0);
+        let mut prev = 0.0;
+        for tenants in 1..=8 {
+            let extra = m.contended_extra_epoch_secs(w, nodes, law, tenants);
+            assert!(
+                extra >= prev - 1e-12,
+                "case {case} w={w} nodes={nodes} tenants={tenants}: extra fell {prev} -> {extra}"
+            );
+            if tenants > 1 && law.beta_share > 0.0 {
+                assert!(
+                    extra > prev,
+                    "case {case} w={w} nodes={nodes} tenants={tenants}: not strictly slower"
+                );
+            }
+            prev = extra;
+            // the full epoch price inherits the ordering
+            let secs = m.contended_epoch_secs(base, w, nodes, law, tenants);
+            assert!(secs.is_finite() && secs >= base, "case {case}: bad price {secs}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// single-tenant equivalence (model level and Speed level)
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_sole_tenant_is_bit_identical_to_uncontended_model() {
+    let mut rng = Rng::new(0xC0DE02);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        let law = random_law(&mut rng);
+        let off = LinkContention::OFF;
+        let base = rng.uniform_range(5.0, 200.0);
+        for w in [1usize, 2, 5, 8, 9, 16, 33] {
+            for nodes in [1usize, 2, 3, 5] {
+                let want = m.placed_epoch_secs(base, w, nodes);
+                // tenants = 1 under a live law, and any tenancy under a
+                // disabled law, must both be the PR-3 float exactly
+                let sole = m.contended_epoch_secs(base, w, nodes, law, 1);
+                let dark = m.contended_epoch_secs(base, w, nodes, off, 1 + rng.below(6));
+                assert_eq!(
+                    sole.to_bits(),
+                    want.to_bits(),
+                    "case {case} w={w} nodes={nodes}: sole tenant drifted"
+                );
+                assert_eq!(
+                    dark.to_bits(),
+                    want.to_bits(),
+                    "case {case} w={w} nodes={nodes}: disabled law drifted"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sole_tenant_speed_wrapper_matches_plain_and_memo() {
+    let mut rng = Rng::new(0xC0DE03);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        let law = random_law(&mut rng);
+        let gpn = 2 + rng.below(7);
+        let table: Vec<(usize, f64)> =
+            (0..5).map(|i| (1usize << i, rng.uniform_range(1e-3, 0.5))).collect();
+        let memo = Arc::new(m.contiguous_extra_table(gpn, 33));
+        let plain = Speed::placed(Speed::Table(table.clone()), m, gpn);
+        let memoed = Speed::placed_memo(Speed::Table(table.clone()), m, gpn, memo.clone());
+        let sole = Speed::placed_contended(
+            Speed::Table(table.clone()),
+            m,
+            gpn,
+            Some(memo.clone()),
+            law,
+            1,
+        );
+        let dark = Speed::placed_contended(
+            Speed::Table(table.clone()),
+            m,
+            gpn,
+            Some(memo),
+            LinkContention::OFF,
+            2 + rng.below(5),
+        );
+        for w in 0..=33usize {
+            let want = plain.epochs_per_sec(w);
+            for (name, s) in [("memo", &memoed), ("sole", &sole), ("off-law", &dark)] {
+                assert_eq!(
+                    s.epochs_per_sec(w).to_bits(),
+                    want.to_bits(),
+                    "case {case} {name} w={w}: wrapper drifted from plain"
+                );
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// ledger conservation under churn
+// ----------------------------------------------------------------------
+
+/// The ledger recomputed from scratch out of the live allocations — the
+/// ground truth the incremental bookkeeping must always agree with.
+fn recomputed_ledger(c: &ClusterState) -> Vec<usize> {
+    let mut exp = vec![0usize; c.spec().nodes];
+    for (job, _) in c.placed_jobs() {
+        let nodes = c.node_set(job);
+        if nodes.len() > 1 {
+            for n in nodes {
+                exp[n] += 1;
+            }
+        }
+    }
+    exp
+}
+
+fn assert_ledger_conserved(c: &ClusterState, label: &str) {
+    let want = recomputed_ledger(c);
+    assert_eq!(c.link_rings(), &want[..], "{label}: ledger != recomputed");
+    let crossing_span: usize = c
+        .placed_jobs()
+        .iter()
+        .map(|&(job, _)| c.nodes_spanned(job))
+        .filter(|&n| n > 1)
+        .sum();
+    let total: usize = c.link_rings().iter().sum();
+    assert_eq!(total, crossing_span, "{label}: sum(ledger) != summed crossing span");
+}
+
+#[test]
+fn prop_link_ledger_conserved_under_churn() {
+    let mut rng = Rng::new(0xC0DE04);
+    for case in 0..CASES {
+        for policy in [PlacePolicy::Pack, PlacePolicy::Scatter, PlacePolicy::Spread] {
+            let nodes = 2 + rng.below(5);
+            let gpn = 2 + rng.below(7);
+            let mut c = ClusterState::with_policy(ClusterSpec::new(nodes, gpn), policy);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for step in 0..120 {
+                let label = format!("case {case} {policy:?} {nodes}x{gpn} step {step}");
+                let roll = rng.uniform();
+                if (roll < 0.55 || live.is_empty()) && c.free_gpus() > 0 {
+                    let w = 1 + rng.below(c.free_gpus().min(2 * gpn));
+                    c.place(next_id, w).unwrap_or_else(|e| panic!("{label}: {e}"));
+                    live.push(next_id);
+                    next_id += 1;
+                } else if roll < 0.8 && !live.is_empty() {
+                    let job = live.swap_remove(rng.below(live.len()));
+                    c.release(job).unwrap_or_else(|e| panic!("{label}: {e}"));
+                } else if !live.is_empty() {
+                    let job = live[rng.below(live.len())];
+                    let freed = c.free_gpus() + c.span_of(job).gpus;
+                    let w = 1 + rng.below(freed.min(2 * gpn));
+                    c.rescale(job, w).unwrap_or_else(|e| panic!("{label}: {e}"));
+                }
+                assert_ledger_conserved(&c, &label);
+            }
+            // drain: the ledger must return to all-zero, not just balance
+            for job in live {
+                c.release(job).unwrap();
+            }
+            assert!(
+                c.link_rings().iter().all(|&r| r == 0),
+                "case {case} {policy:?}: ledger nonzero after drain: {:?}",
+                c.link_rings()
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// intra-node immunity
+// ----------------------------------------------------------------------
+
+#[test]
+fn prop_intra_node_gangs_are_immune_to_neighbours() {
+    let mut rng = Rng::new(0xC0DE05);
+    for case in 0..CASES {
+        let m = random_model(&mut rng);
+        let law = random_law(&mut rng);
+        let base = rng.uniform_range(5.0, 200.0);
+        // model level: one node -> base price at any tenant count
+        for tenants in 1..=8 {
+            for w in [1usize, 2, 4, 7] {
+                let got = m.contended_epoch_secs(base, w, 1, law, tenants);
+                assert_eq!(
+                    got.to_bits(),
+                    base.to_bits(),
+                    "case {case} w={w} tenants={tenants}: intra-node ring was priced"
+                );
+            }
+        }
+        // ledger level: surround a single-node gang with crossing rings;
+        // its own tenancy must stay 1 (no uplink in its ring)
+        let gpn = 3 + rng.below(5);
+        let mut c = ClusterState::with_policy(ClusterSpec::new(4, gpn), PlacePolicy::Pack);
+        c.place(0, gpn).unwrap(); // fills node exactly: intra-node
+        let mut id = 1u64;
+        while c.free_gpus() > gpn {
+            // gangs of gpn+1 must cross somewhere
+            c.place(id, gpn + 1).unwrap();
+            id += 1;
+        }
+        assert_eq!(c.nodes_spanned(0), 1, "case {case}: victim gang split unexpectedly");
+        assert_eq!(c.tenancy_of(0), 1, "case {case}: intra-node gang picked up tenancy");
+        // while the crossing neighbours really are contended with each other
+        if id > 2 {
+            let busiest: usize = c.link_rings().iter().copied().max().unwrap_or(0);
+            assert!(busiest >= 1, "case {case}: no ring ever crossed");
+        }
+    }
+}

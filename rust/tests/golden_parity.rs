@@ -18,6 +18,8 @@
 //! true pre-PR-5 engine even though both engines here link the new
 //! scheduler code.
 
+use ringmaster::cluster::PlacePolicy;
+use ringmaster::perfmodel::{LinkContention, PlacementModel};
 use ringmaster::sim::{
     simulate, simulate_reference, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen,
 };
@@ -93,6 +95,52 @@ fn paper_grid_parity_all_strategies_three_seeds() {
     for seed in [11u64, 23, 42] {
         for s in strategies() {
             parity_case(s, Some((8, 8)), seed);
+        }
+    }
+}
+
+#[test]
+fn contention_off_stays_reference_identical_even_set_explicitly() {
+    // `LinkContention::OFF` is the default everywhere above; this pins
+    // the *explicit* off switch (and the new spread policy, whose picks
+    // both engines share through `ClusterState`) to the same bit-exact
+    // parity claim. The scan oracle predates contention entirely, so
+    // passing here proves the off path never touches the new code.
+    for seed in [11u64, 23, 42] {
+        for policy in [PlacePolicy::Pack, PlacePolicy::Spread] {
+            let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, seed)
+                .with_topology(8, 8);
+            cfg.link_contention = LinkContention::OFF;
+            cfg.place_policy = policy;
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+            let heap = simulate(&cfg, &jobs);
+            let scan = simulate_reference(&cfg, &jobs);
+            assert_bit_identical(&heap, &scan, &format!("off {policy:?} seed {seed}"));
+        }
+    }
+}
+
+#[test]
+fn contention_on_runs_are_bit_deterministic() {
+    // The scan oracle has no contention path, so contention-on cannot
+    // parity-check against it; the golden claim is instead full-run
+    // determinism: same config, same trace, run twice — every summary
+    // statistic and every per-job completion identical to the last bit.
+    // Fixed-6 on 4-wide nodes forces every gang to split 4+2, so the
+    // ledger, the tenancy resync, and (for spread) the uplink-aware
+    // picks are all genuinely exercised.
+    for policy in [PlacePolicy::Pack, PlacePolicy::Spread] {
+        for seed in [11u64, 23, 42] {
+            let mut cfg = SimConfig::paper(StrategyKind::Fixed(6), Contention::Moderate, seed)
+                .with_topology(16, 4);
+            cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+            cfg.link_contention = LinkContention::fair_share();
+            cfg.place_policy = policy;
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+            let a = simulate(&cfg, &jobs);
+            let b = simulate(&cfg, &jobs);
+            assert_bit_identical(&a, &b, &format!("contended {policy:?} seed {seed}"));
+            assert_eq!(a.completed, cfg.n_jobs, "contended {policy:?} seed {seed}: unfinished");
         }
     }
 }

@@ -7,10 +7,11 @@
 //! backend), so job sizes are kept miniature; all *scheduling* arithmetic
 //! happens on the virtual clock, where the paper-scale profiles apply.
 
-use ringmaster::cluster::PlacePolicy;
+use ringmaster::cluster::{ClusterSpec, ClusterState, PlacePolicy};
 use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport, TraceGen,
 };
+use ringmaster::perfmodel::LinkContention;
 use ringmaster::sim::workload::JobProfile;
 use ringmaster::trainer::TrainConfig;
 
@@ -433,6 +434,130 @@ fn segment_budget_frees_workers_for_arrivals_without_preempt_mode() {
     // schedule is still a pure function of the trace
     let again = run_with(budget_cfg, "doubling", &specs);
     assert_same_schedule(&budgeted, &again);
+}
+
+/// Two comm-bound 6-gangs on a 4×4 grid: fixed-6 forces each to split
+/// 4+2, so the placement policy alone decides whether their rings share
+/// an uplink (Pack's best-fit remainder rule lands both remainders on
+/// the same node) or run on disjoint link groups (Spread).
+fn two_crossing_jobs() -> Vec<JobSpec> {
+    let mut specs = vec![paper_job(0, 0.0, 0.5, 1.0), paper_job(1, 1.0, 0.5, 1.0)];
+    for s in &mut specs {
+        s.model_bytes = 1.0e8; // VGG-class payload: sharing a link is expensive
+    }
+    specs
+}
+
+fn grid_cfg(policy: PlacePolicy, law: LinkContention) -> OrchestratorConfig {
+    let mut cfg = OrchestratorConfig::new(train_cfg(), 16).with_topology(4, 4);
+    cfg.segment_steps = 16;
+    cfg.restart_cost = 10.0;
+    cfg.place_policy = policy;
+    cfg.link_contention = law;
+    cfg
+}
+
+#[test]
+fn spread_places_unavoidable_crossings_on_disjoint_link_groups() {
+    // The placement claim underneath the JCT claim, pinned at the
+    // ClusterState level: two 6-gangs on 4×4 must both cross, Pack's
+    // remainders stack on one shared node, Spread's pick disjoint pairs.
+    let mut pack = ClusterState::with_policy(ClusterSpec::new(4, 4), PlacePolicy::Pack);
+    pack.place(0, 6).unwrap();
+    pack.place(1, 6).unwrap();
+    let shared: Vec<usize> = pack
+        .node_set(0)
+        .into_iter()
+        .filter(|n| pack.node_set(1).contains(n))
+        .collect();
+    assert!(!shared.is_empty(), "pack's remainders should share a node");
+    assert_eq!(pack.tenancy_of(0), 2, "shared uplink must read tenancy 2");
+    assert_eq!(pack.tenancy_of(1), 2);
+
+    let mut spread = ClusterState::with_policy(ClusterSpec::new(4, 4), PlacePolicy::Spread);
+    spread.place(0, 6).unwrap();
+    spread.place(1, 6).unwrap();
+    let overlap: Vec<usize> = spread
+        .node_set(0)
+        .into_iter()
+        .filter(|n| spread.node_set(1).contains(n))
+        .collect();
+    assert!(overlap.is_empty(), "spread must pick disjoint link groups, shared {overlap:?}");
+    assert_eq!(spread.tenancy_of(0), 1, "disjoint rings are sole tenants");
+    assert_eq!(spread.tenancy_of(1), 1);
+}
+
+#[test]
+fn shared_uplink_costs_jct_and_contention_aware_placement_recovers_it() {
+    let specs = two_crossing_jobs();
+    let law = LinkContention::fair_share();
+    let pack_off = run_with(grid_cfg(PlacePolicy::Pack, LinkContention::OFF), "fixed-6", &specs);
+    let pack_on = run_with(grid_cfg(PlacePolicy::Pack, law), "fixed-6", &specs);
+    let spread_on = run_with(grid_cfg(PlacePolicy::Spread, law), "fixed-6", &specs);
+
+    // modelling the shared link can only slow the blind packer down
+    assert!(
+        pack_on.avg_jct_secs() >= pack_off.avg_jct_secs() - 1e-9,
+        "contention sped pack up: {:.1}s vs {:.1}s",
+        pack_on.avg_jct_secs(),
+        pack_off.avg_jct_secs()
+    );
+    // the headline: jobs sharing an uplink finish later than the same
+    // jobs spread across disjoint link groups under the same physics
+    assert!(
+        spread_on.avg_jct_secs() < pack_on.avg_jct_secs(),
+        "spread {:.1}s must beat pack {:.1}s under contention",
+        spread_on.avg_jct_secs(),
+        pack_on.avg_jct_secs()
+    );
+    // job 1 (the late arrival, priced at launch against job 0's ring on
+    // the shared node) is the one paying pack's bill
+    let p1 = pack_on.jobs.iter().find(|j| j.id == 1).unwrap();
+    let s1 = spread_on.jobs.iter().find(|j| j.id == 1).unwrap();
+    assert!(
+        p1.jct_secs > s1.jct_secs,
+        "job 1 should pay for the shared link: pack {:.1}s vs spread {:.1}s",
+        p1.jct_secs,
+        s1.jct_secs
+    );
+    for r in [&pack_off, &pack_on, &spread_on] {
+        assert_eq!(r.jobs.len(), specs.len());
+        for j in &r.jobs {
+            assert!(j.epochs + 1e-9 >= 0.5, "job {} under-trained", j.id);
+        }
+    }
+}
+
+#[test]
+fn contention_off_placement_choice_is_price_invisible_here() {
+    // With the law off, a segment's price depends only on (w, nodes
+    // spanned) — and both policies split each 6-gang across exactly two
+    // nodes — so *which* nodes were picked must not move a single bit of
+    // the schedule. This is the orchestrator-level half of the
+    // "contention off is provably unchanged" claim.
+    let specs = two_crossing_jobs();
+    let pack = run_with(grid_cfg(PlacePolicy::Pack, LinkContention::OFF), "fixed-6", &specs);
+    let spread = run_with(grid_cfg(PlacePolicy::Spread, LinkContention::OFF), "fixed-6", &specs);
+    assert_same_schedule(&pack, &spread);
+}
+
+#[test]
+fn contended_runs_are_seed_deterministic_down_to_model_bits() {
+    let specs = two_crossing_jobs();
+    let cfg = grid_cfg(PlacePolicy::Spread, LinkContention::fair_share());
+    let a = run_with(cfg.clone(), "fixed-6", &specs);
+    let b = run_with(cfg, "fixed-6", &specs);
+    assert_same_schedule(&a, &b);
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        // real training under a contended schedule is bit-deterministic
+        // too, not just the virtual clock
+        assert_eq!(
+            ja.final_loss.map(f32::to_bits),
+            jb.final_loss.map(f32::to_bits),
+            "job {} trained different models",
+            ja.id
+        );
+    }
 }
 
 #[test]
