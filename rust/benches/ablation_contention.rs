@@ -29,7 +29,8 @@
 //! `cargo bench --bench ablation_contention`
 
 use ringmaster::cluster::PlacePolicy;
-use ringmaster::metrics::CsvTable;
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::perfmodel::{LinkContention, PlacementModel};
 use ringmaster::sim::{simulate, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen};
 
@@ -60,6 +61,12 @@ fn main() -> ringmaster::Result<()> {
     ];
 
     let mut table = CsvTable::new(&["world", "seed", "avg_jct_h", "events", "completed"]);
+    let mut bench = BenchJson::new("ablation_contention");
+    bench
+        .meta("nodes", Json::num(NODES as f64))
+        .meta("gpus_per_node", Json::num(GPUS_PER_NODE as f64))
+        .meta("n_jobs", Json::num(N_JOBS as f64))
+        .meta("model_bytes", Json::num(MODEL_BYTES));
     let mut means = [0.0f64; 3];
     for (i, (name, policy, law)) in arms.iter().enumerate() {
         for &seed in &SEEDS {
@@ -76,11 +83,20 @@ fn main() -> ringmaster::Result<()> {
                 r.events.to_string(),
                 r.completed.to_string(),
             ]);
+            bench.row(vec![
+                ("world", Json::str(*name)),
+                ("seed", Json::num(seed as f64)),
+                ("avg_jct_h", Json::num(r.avg_completion_hours)),
+                ("events", Json::num(r.events as f64)),
+                ("completed", Json::num(r.completed as f64)),
+            ]);
             means[i] += r.avg_completion_hours / SEEDS.len() as f64;
         }
     }
     print!("{}", table.render());
     table.write_csv("ablation_contention.csv")?;
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "CONTENTION")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
 
     let [off, blind, aware] = means;
     println!(

@@ -23,7 +23,8 @@
 //!
 //! `cargo bench --bench ablation_online`
 
-use ringmaster::metrics::CsvTable;
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport,
 };
@@ -75,6 +76,8 @@ fn main() -> ringmaster::Result<()> {
         "world", "avg_jct_s", "p50_jct_s", "makespan_s", "restarts", "learned_jobs",
         "mean_final_rmse",
     ]);
+    let mut bench = BenchJson::new("ablation_online");
+    bench.meta("capacity", Json::num(8.0)).meta("n_jobs", Json::num(specs.len() as f64));
     for (name, r) in [("oracle", &oracle), ("learned", &online)] {
         let rmses: Vec<f64> = r.jobs.iter().filter_map(|j| j.model_rmse).collect();
         let mean_rmse = if rmses.is_empty() {
@@ -91,9 +94,27 @@ fn main() -> ringmaster::Result<()> {
             r.learned_jobs().to_string(),
             mean_rmse,
         ]);
+        bench.row(vec![
+            ("world", Json::str(name)),
+            ("avg_jct_s", Json::num(r.avg_jct_secs())),
+            ("p50_jct_s", Json::num(r.p50_jct_secs())),
+            ("makespan_s", Json::num(r.makespan_secs)),
+            ("restarts", Json::num(r.total_restarts as f64)),
+            ("learned_jobs", Json::num(r.learned_jobs() as f64)),
+            (
+                "mean_final_rmse",
+                if rmses.is_empty() {
+                    Json::Null
+                } else {
+                    Json::num(rmses.iter().sum::<f64>() / rmses.len() as f64)
+                },
+            ),
+        ]);
     }
     print!("{}", table.render());
     table.write_csv("ablation_online.csv")?;
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "ONLINE")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
 
     println!("\nper-job learning trajectory (learned world):");
     let mut detail =

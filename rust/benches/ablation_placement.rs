@@ -25,7 +25,8 @@
 //! `cargo bench --bench ablation_placement`
 
 use ringmaster::cluster::PlacePolicy;
-use ringmaster::metrics::CsvTable;
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport,
 };
@@ -93,6 +94,11 @@ fn main() -> ringmaster::Result<()> {
     let mut table = CsvTable::new(&[
         "world", "avg_jct_s", "p50_jct_s", "makespan_s", "xnode_segs", "restarts", "util_%",
     ]);
+    let mut bench = BenchJson::new("ablation_placement");
+    bench
+        .meta("capacity", Json::num(16.0))
+        .meta("model_bytes", Json::num(MODEL_BYTES))
+        .meta("n_jobs", Json::num(specs.len() as f64));
     for (name, r) in [("flat(16)", &flat), ("2x8 pack", &pack), ("2x8 scatter", &scatter)] {
         table.row(&[
             name.to_string(),
@@ -103,9 +109,20 @@ fn main() -> ringmaster::Result<()> {
             r.total_restarts.to_string(),
             format!("{:.1}", 100.0 * r.utilization),
         ]);
+        bench.row(vec![
+            ("world", Json::str(name)),
+            ("avg_jct_s", Json::num(r.avg_jct_secs())),
+            ("p50_jct_s", Json::num(r.p50_jct_secs())),
+            ("makespan_s", Json::num(r.makespan_secs)),
+            ("cross_node_segments", Json::num(r.cross_node_segments as f64)),
+            ("restarts", Json::num(r.total_restarts as f64)),
+            ("utilization", Json::num(r.utilization)),
+        ]);
     }
     print!("{}", table.render());
     table.write_csv("ablation_placement.csv")?;
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "PLACEMENT")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
 
     // The ablation's claim, asserted: locality-aware placement beats
     // locality-blind on the same grid. (flat is printed as the

@@ -11,7 +11,8 @@
 //!
 //! `cargo bench --bench orchestrator_live`
 
-use ringmaster::metrics::CsvTable;
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, OrchestratorConfig, TraceGen,
 };
@@ -60,6 +61,11 @@ fn main() -> ringmaster::Result<()> {
         "strategy", "des_avg_jct_s", "live_avg_jct_s", "live/des", "live_util_%", "restarts",
         "measured_restart_s", "live_wall_s",
     ]);
+    let mut bench = BenchJson::new("orchestrator_live");
+    bench
+        .meta("capacity", Json::num(capacity as f64))
+        .meta("n_jobs", Json::num(gen.n_jobs as f64))
+        .meta("seed", Json::num(seed as f64));
     for (name, kind) in [("doubling", StrategyKind::Precompute), ("fixed-8", StrategyKind::Fixed(8))]
     {
         let des = simulate(&des_cfg(kind), &profiles);
@@ -78,6 +84,16 @@ fn main() -> ringmaster::Result<()> {
             format!("{measured_restart:.2}"),
             format!("{:.2}", live.wall_secs),
         ]);
+        bench.row(vec![
+            ("strategy", Json::str(name)),
+            ("des_avg_jct_s", Json::num(des_avg)),
+            ("live_avg_jct_s", Json::num(live.avg_jct_secs())),
+            ("live_over_des", Json::num(live.avg_jct_secs() / des_avg)),
+            ("live_utilization", Json::num(live.utilization)),
+            ("restarts", Json::num(live.total_restarts as f64)),
+            ("measured_restart_s", Json::num(measured_restart)),
+            ("live_wall_s", Json::num(live.wall_secs)),
+        ]);
 
         // the live run can lag the idealized DES (boundary granularity)
         // but must reproduce its *shape*: both measure the same physics
@@ -88,6 +104,8 @@ fn main() -> ringmaster::Result<()> {
     }
     print!("{}", table.render());
     table.write_csv("orchestrator_live.csv")?;
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "LIVE")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
     println!(
         "\nlive/des > 1 is the boundary-granularity + real-restart cost the DES idealizes away;\n\
          the strategy ordering (doubling < fixed-8 on a burst) must agree between the two."

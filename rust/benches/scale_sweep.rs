@@ -20,7 +20,8 @@
 //! `cargo bench --bench scale_sweep`
 
 use ringmaster::cluster::Topology;
-use ringmaster::metrics::CsvTable;
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
 
 const CAPACITY: usize = 128;
@@ -104,35 +105,23 @@ fn main() -> ringmaster::Result<()> {
     }
 
     // ---- BENCH_SCALE.json: the trajectory later PRs race ----------------
-    let mut json = String::new();
-    json.push_str("{\n");
-    json.push_str("  \"bench\": \"scale_sweep\",\n");
-    json.push_str(&format!("  \"capacity\": {CAPACITY},\n"));
-    json.push_str(&format!("  \"seed\": {SEED},\n"));
-    json.push_str("  \"offered_load\": 0.65,\n");
-    json.push_str("  \"rows\": [\n");
-    for (i, r) in rows.iter().enumerate() {
-        json.push_str(&format!(
-            "    {{\"jobs\": {}, \"strategy\": \"{}\", \"topology\": \"{}\", \
-             \"wall_secs\": {:.6}, \"events\": {}, \"events_per_sec\": {:.1}, \
-             \"us_per_event\": {:.3}}}{}\n",
-            r.jobs,
-            r.strategy,
-            r.topology,
-            r.wall_secs,
-            r.events,
-            r.events as f64 / r.wall_secs.max(1e-9),
-            r.wall_secs * 1e6 / r.events.max(1) as f64,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
+    let mut bench = BenchJson::new("scale_sweep");
+    bench
+        .meta("capacity", Json::num(CAPACITY as f64))
+        .meta("seed", Json::num(SEED as f64))
+        .meta("offered_load", Json::num(0.65));
+    for r in &rows {
+        bench.row(vec![
+            ("jobs", Json::num(r.jobs as f64)),
+            ("strategy", Json::str(r.strategy.as_str())),
+            ("topology", Json::str(r.topology.as_str())),
+            ("wall_secs", Json::num(r.wall_secs)),
+            ("events", Json::num(r.events as f64)),
+            ("events_per_sec", Json::num(r.events as f64 / r.wall_secs.max(1e-9))),
+            ("us_per_event", Json::num(r.wall_secs * 1e6 / r.events.max(1) as f64)),
+        ]);
     }
-    json.push_str("  ]\n}\n");
-    // repo root, not the package root cargo sets as cwd for benches
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("package root has a parent")
-        .join("BENCH_SCALE.json");
-    std::fs::write(&path, &json)?;
-    println!("wrote {} ({} rows)", path.display(), rows.len());
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "SCALE")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
     Ok(())
 }

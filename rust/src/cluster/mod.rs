@@ -221,6 +221,17 @@ impl ClusterState {
         self.node_set(job).len()
     }
 
+    /// Per-node GPU counts of `job`'s allocation, ascending by node —
+    /// the shape telemetry placement snapshots record (compact where a
+    /// raw slot list would be O(gpus) noise the audit never needs).
+    pub fn node_gpu_counts(&self, job: u64) -> Vec<(usize, usize)> {
+        let mut per: BTreeMap<usize, usize> = BTreeMap::new();
+        for &(n, _) in self.allocation_of(job).unwrap_or(&[]) {
+            *per.entry(n).or_insert(0) += 1;
+        }
+        per.into_iter().collect()
+    }
+
     /// Sorted distinct nodes `job` occupies (empty if unplaced). Two
     /// placements with the same node set run the same ring topology, so
     /// this is what restart/continuation logic compares.

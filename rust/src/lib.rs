@@ -38,6 +38,7 @@ pub mod rngx;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod telemetry;
 pub mod trainer;
 
 /// Crate-wide result type (`anyhow::Result` — the offline shim in

@@ -10,6 +10,7 @@
 //! ringmaster orchestrate --strategy doubling --capacity 8        # live multi-job
 //! ringmaster collectives --workers 8 --elems 1000000             # eqs 2-4
 //! ringmaster fit       --demo                                    # eq 1 / eq 5
+//! ringmaster report    --stream telemetry.jsonl                  # run audit
 //! ```
 
 use ringmaster::cli::Args;
@@ -20,7 +21,8 @@ use ringmaster::metrics::CsvTable;
 use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
 use ringmaster::perfmodel::{ConvergenceModel, LinkContention, PlacementModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
-use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::sim::{simulate, simulate_traced, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::telemetry::{audit, Recorder};
 use ringmaster::trainer::{train, Checkpoint, TrainConfig};
 use ringmaster::Result;
 
@@ -29,6 +31,7 @@ fn main() {
     let wants_help = std::env::args().skip(2).any(|a| a == "--help" || a == "-h");
     let result = match sub.as_str() {
         "train" | "rescale" | "profile" | "simulate" | "orchestrate" | "collectives" | "fit"
+        | "report"
             if wants_help =>
         {
             print!("{}", subcommand_help(&sub));
@@ -41,6 +44,7 @@ fn main() {
         "orchestrate" => cmd_orchestrate(),
         "collectives" => cmd_collectives(),
         "fit" => cmd_fit(),
+        "report" => cmd_report(),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -105,6 +109,9 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20                    other's eq-2 constants (off by default; named\n\
              \x20                    --link-contention because --contention is this\n\
              \x20                    subcommand's arrival-rate preset)\n\
+             \x20 --telemetry FILE   record a v3 telemetry stream of the run (events,\n\
+             \x20                    decision provenance, placement snapshots) for\n\
+             \x20                    `ringmaster report`; incompatible with --all\n\
              \x20 --seed S           workload seed (default 42)\n"
         }
         "orchestrate" => {
@@ -144,6 +151,9 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --segment-steps N  real steps between scheduling decisions (default 16)\n\
              \x20 --dataset-examples M  windows per epoch (default 256)\n\
              \x20 --restart-cost S   virtual stop/restart charge (default 10)\n\
+             \x20 --telemetry FILE   record a v3 telemetry stream of the run (segment\n\
+             \x20                    lifecycle, decision provenance, placement\n\
+             \x20                    snapshots) for `ringmaster report`\n\
              \x20 --artifacts DIR    artifacts dir\n\
              \x20 --seed S           workload + trainer seed (default 42)\n"
         }
@@ -157,6 +167,17 @@ fn subcommand_help(sub: &str) -> &'static str {
             "ringmaster fit — demo of the eq 1 / eq 5 NNLS fits\n\n\
              flags:\n\
              \x20 --demo             accepted (demo is the only mode)\n"
+        }
+        "report" => {
+            "ringmaster report — audit a telemetry stream offline\n\n\
+             Replays a `--telemetry` stream event by event: renders the\n\
+             per-job timeline, utilization/queue curves, restart-cost\n\
+             ledger, and the scheduler decision table (why width w), and\n\
+             re-verifies the ledger invariants (no double-booking, link\n\
+             ring conservation, grant-chain consistency). Exits non-zero\n\
+             on any schema or invariant violation.\n\n\
+             flags:\n\
+             \x20 --stream FILE      telemetry JSONL to audit (required)\n"
         }
         _ => HELP,
     }
@@ -174,6 +195,8 @@ USAGE: ringmaster <subcommand> [flags]
   orchestrate  live multi-job scheduling over real concurrent trainers
   collectives  all-reduce algorithms vs analytic cost models (eqs 2-4)
   fit          demo of the eq 1 / eq 5 NNLS fits
+  report       audit a recorded telemetry stream (timelines, decisions,
+               ledger invariants); see simulate/orchestrate --telemetry
 
 Run `ringmaster <subcommand> --help` for that subcommand's flags (also
 documented in README.md); unknown flags are rejected with an error.
@@ -295,7 +318,15 @@ fn cmd_simulate() -> Result<()> {
     let placement_s = a.str_opt("placement");
     let model_bytes_s = a.str_opt("model-bytes");
     let link_contention = a.flag("link-contention");
+    let telemetry = a.str_opt("telemetry");
     a.reject_unknown()?;
+    // One stream records one run; the --all sweep would overwrite it
+    // 21 times and keep only the last cell of Table 3.
+    anyhow::ensure!(
+        telemetry.is_none() || !all,
+        "--telemetry records a single run; drop --all and pick one \
+         --strategy/--contention cell"
+    );
     // Topology knobs are inert on a flat pool — reject rather than let a
     // forgotten --nodes silently produce penalty-free results.
     anyhow::ensure!(
@@ -358,7 +389,17 @@ fn cmd_simulate() -> Result<()> {
             } else {
                 WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed)
             };
-            let r = simulate(&cfg, &jobs);
+            let r = match &telemetry {
+                Some(path) => {
+                    let mut rec = Recorder::new();
+                    let r = simulate_traced(&cfg, &jobs, &mut rec);
+                    rec.save(path)?;
+                    println!("telemetry ({} events) -> {path}", rec.len());
+                    print!("{}", rec.phase_summary());
+                    r
+                }
+                None => simulate(&cfg, &jobs),
+            };
             table.row(&[
                 r.strategy.clone(),
                 c.name().to_string(),
@@ -397,6 +438,7 @@ fn cmd_orchestrate() -> Result<()> {
     let segment_steps = a.get_or("segment-steps", 16u64)?;
     let dataset_examples = a.get_or("dataset-examples", 256usize)?;
     let restart_cost = a.get_or("restart-cost", 10.0f64)?;
+    let telemetry = a.str_opt("telemetry");
     let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
     let seed = a.get_or("seed", 42u64)?;
     a.reject_unknown()?;
@@ -455,9 +497,31 @@ fn cmd_orchestrate() -> Result<()> {
         cfg.topology.label(),
         scheduler.name()
     );
-    let report = orchestrator::orchestrate(&cfg, scheduler.as_ref(), &specs)?;
+    let report = match &telemetry {
+        Some(path) => {
+            let mut rec = Recorder::new();
+            let report =
+                orchestrator::orchestrate_traced(&cfg, scheduler.as_ref(), &specs, &mut rec)?;
+            rec.save(path)?;
+            println!("telemetry ({} events) -> {path}", rec.len());
+            print!("{}", rec.phase_summary());
+            report
+        }
+        None => orchestrator::orchestrate(&cfg, scheduler.as_ref(), &specs)?,
+    };
     print!("{}", report.per_job_table().render());
     println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_report() -> Result<()> {
+    let a = Args::from_env(2)?;
+    let stream = a.str_opt("stream");
+    a.reject_unknown()?;
+    let stream = stream
+        .ok_or_else(|| anyhow::anyhow!("--stream FILE is required (a --telemetry output)"))?;
+    let audit = audit::audit_file(std::path::Path::new(&stream))?;
+    print!("{}", audit.rendered);
     Ok(())
 }
 

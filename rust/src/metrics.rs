@@ -5,6 +5,8 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::jsonx::Json;
+
 /// Streaming mean/min/max/count (Welford for variance).
 #[derive(Clone, Debug, Default)]
 pub struct Stat {
@@ -58,17 +60,24 @@ impl Stat {
     }
 }
 
-/// Linear-interpolated quantile of an ascending-sorted slice
-/// (`q` in `[0, 1]`; q=0.5 is the median). Used by the orchestrator's
-/// cluster-level JCT statistics.
+/// Linear-interpolated quantile of an ascending-sorted slice (q=0.5 is
+/// the median). Total on degenerate input instead of panicking: `q` is
+/// clamped to `[0, 1]` (a NaN `q` reads as the median), NaN samples are
+/// skipped, and an empty or all-NaN slice yields 0.0 — callers render
+/// "no data" as a zero cell rather than poisoning a whole stats table.
+/// Used by the orchestrator's cluster-level JCT statistics.
 pub fn quantile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty(), "quantile of empty slice");
-    assert!((0.0..=1.0).contains(&q), "q={q} outside [0, 1]");
-    let pos = q * (sorted.len() - 1) as f64;
+    let q = if q.is_nan() { 0.5 } else { q.clamp(0.0, 1.0) };
+    // NaN sorts nowhere; dropping it keeps the remaining slice ascending
+    let clean: Vec<f64> = sorted.iter().copied().filter(|x| !x.is_nan()).collect();
+    if clean.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (clean.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     let frac = pos - lo as f64;
-    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    clean[lo] + (clean[hi] - clean[lo]) * frac
 }
 
 /// Named scope timer collection.
@@ -174,6 +183,76 @@ impl CsvTable {
     }
 }
 
+/// Shared `BENCH_*.json` emitter for the bench harnesses: top-level
+/// metadata (bench name, run parameters) plus an array of uniform row
+/// objects — the machine-readable perf trajectory later PRs race.
+///
+/// Cargo runs bench binaries with the *package* root as cwd, so
+/// [`BenchJson::save`] anchors the file at the repo root above the
+/// caller's `env!("CARGO_MANIFEST_DIR")` (the macro must expand in the
+/// bench crate, hence the argument).
+#[derive(Debug)]
+pub struct BenchJson {
+    bench: String,
+    meta: Vec<(String, Json)>,
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(bench: &str) -> Self {
+        BenchJson { bench: bench.to_string(), meta: vec![], rows: vec![] }
+    }
+
+    /// Add one top-level metadata field (capacity, seed, ...).
+    pub fn meta(&mut self, key: &str, value: Json) -> &mut Self {
+        self.meta.push((key.to_string(), value));
+        self
+    }
+
+    /// Add one result row.
+    pub fn row(&mut self, fields: Vec<(&str, Json)>) {
+        self.rows.push(Json::obj(fields));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// One meta field per line, one row per line — diffable in the repo
+    /// root while staying trivially machine-parseable.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", Json::str(self.bench.as_str()).dump()));
+        for (k, v) in &self.meta {
+            out.push_str(&format!("  {}: {},\n", Json::str(k.as_str()).dump(), v.dump()));
+        }
+        out.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            out.push_str("    ");
+            out.push_str(&r.dump());
+            out.push_str(if i + 1 == self.rows.len() { "\n" } else { ",\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<tag>.json` at the repo root above `manifest_dir`
+    /// and return the path written.
+    pub fn save(&self, manifest_dir: &str, tag: &str) -> crate::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(manifest_dir)
+            .parent()
+            .ok_or_else(|| anyhow::anyhow!("manifest dir {manifest_dir:?} has no parent"))?
+            .join(format!("BENCH_{tag}.json"));
+        std::fs::write(&path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,9 +281,22 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "empty")]
-    fn quantile_rejects_empty() {
-        let _ = quantile(&[], 0.5);
+    fn quantile_is_total_on_degenerate_input() {
+        // empty and all-NaN slices yield the documented 0.0
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile(&[f64::NAN, f64::NAN], 0.5), 0.0);
+        // single element is itself at every q
+        assert_eq!(quantile(&[7.0], 0.0), 7.0);
+        assert_eq!(quantile(&[7.0], 0.5), 7.0);
+        assert_eq!(quantile(&[7.0], 1.0), 7.0);
+        // NaN samples are skipped, not propagated
+        let v = [1.0, 2.0, 3.0, f64::NAN];
+        assert_eq!(quantile(&v, 1.0), 3.0);
+        assert!((quantile(&v, 0.5) - 2.0).abs() < 1e-12);
+        // q is clamped to [0, 1]; NaN q reads as the median
+        assert_eq!(quantile(&[1.0, 3.0], 2.0), 3.0);
+        assert_eq!(quantile(&[1.0, 3.0], -1.0), 1.0);
+        assert!((quantile(&[1.0, 3.0], f64::NAN) - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -232,5 +324,22 @@ mod tests {
     fn csv_rejects_ragged_rows() {
         let mut t = CsvTable::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn bench_json_emits_meta_and_rows() {
+        let mut b = BenchJson::new("demo");
+        b.meta("capacity", Json::num(128.0)).meta("seed", Json::num(42.0));
+        b.row(vec![("jobs", Json::num(100.0)), ("wall_secs", Json::num(0.25))]);
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_empty());
+        let text = b.to_json();
+        assert!(text.starts_with("{\n  \"bench\": \"demo\",\n"), "{text}");
+        assert!(text.contains("\"capacity\": 128,"), "{text}");
+        assert!(text.contains("{\"jobs\":100,\"wall_secs\":0.25}"), "{text}");
+        // the whole document is valid JSON and round-trips
+        let parsed = crate::jsonx::parse(&text).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "demo");
+        assert_eq!(parsed.get("rows").unwrap().as_arr().unwrap().len(), 1);
     }
 }

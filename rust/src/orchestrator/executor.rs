@@ -51,6 +51,10 @@ pub struct SegmentOutcome {
     pub startup_secs: f64,
     /// Measured checkpoint save+load seconds (0 unless restarted).
     pub ckpt_io_secs: f64,
+    /// Measured mean wall seconds per optimizer step (trainer report).
+    pub mean_step_secs: f64,
+    /// Measured mean wall seconds per all-reduce (trainer report).
+    pub mean_allreduce_secs: f64,
 }
 
 /// Launch the segment on a detached thread. The returned receiver yields
@@ -99,6 +103,8 @@ fn run_segment(plan: SegmentPlan) -> Result<SegmentOutcome> {
         train_secs: t.elapsed().as_secs_f64(),
         startup_secs: report.startup_secs,
         ckpt_io_secs,
+        mean_step_secs: report.mean_step_secs,
+        mean_allreduce_secs: report.mean_allreduce_secs,
     })
 }
 

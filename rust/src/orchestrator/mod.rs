@@ -83,10 +83,12 @@ use event::{Event, EventKind, EventQueue};
 use executor::{spawn_segment, SegmentPlan};
 
 use crate::cluster::{ClusterState, PlacePolicy, Topology};
+use crate::jsonx::Json;
 use crate::perfmodel::online::PAPER_EXAMPLES_PER_EPOCH;
 use crate::perfmodel::{LinkContention, OnlineModel, PlacementModel};
 use crate::runtime::Artifacts;
-use crate::scheduler::{total_allocated, JobInfo, Scheduler, Speed};
+use crate::scheduler::{total_allocated, GrantStep, JobInfo, Scheduler, Speed};
+use crate::telemetry::{event, NullSink, Sink};
 use crate::trainer::TrainConfig;
 use crate::Result;
 
@@ -202,7 +204,22 @@ pub fn orchestrate(
     scheduler: &dyn Scheduler,
     specs: &[JobSpec],
 ) -> Result<OrchestratorReport> {
-    Orchestrator::new(cfg, specs)?.run(scheduler)
+    orchestrate_traced(cfg, scheduler, specs, &mut NullSink)
+}
+
+/// [`orchestrate`] narrating segment lifecycle, decision provenance, and
+/// placement into a telemetry [`Sink`]. Hooks only read engine state, so
+/// the schedule (and with a [`NullSink`], the whole run) is bit-identical
+/// to [`orchestrate`]. Events derived from *real* trainer threads
+/// (wall-clock segment timings) carry `"measured": true` — they are
+/// execution-dependent and the audit never feeds them into invariants.
+pub fn orchestrate_traced(
+    cfg: &OrchestratorConfig,
+    scheduler: &dyn Scheduler,
+    specs: &[JobSpec],
+    sink: &mut dyn Sink,
+) -> Result<OrchestratorReport> {
+    Orchestrator::new(cfg, specs)?.run(scheduler, sink)
 }
 
 struct Orchestrator {
@@ -304,8 +321,30 @@ impl Orchestrator {
         })
     }
 
-    fn run(mut self, scheduler: &dyn Scheduler) -> Result<OrchestratorReport> {
+    fn run(mut self, scheduler: &dyn Scheduler, sink: &mut dyn Sink) -> Result<OrchestratorReport> {
         let wall = Instant::now();
+        if sink.enabled() {
+            let (t_nodes, t_gpn) = match self.cfg.topology {
+                Topology::Flat { .. } => (0usize, 0usize),
+                Topology::Cluster(spec) => (spec.nodes, spec.gpus_per_node),
+            };
+            sink.emit(event(
+                "run_start",
+                self.now,
+                vec![
+                    ("engine", Json::str("orchestrator")),
+                    ("strategy", Json::str(scheduler.name())),
+                    ("capacity", Json::num(self.cfg.capacity as f64)),
+                    ("nodes", Json::num(t_nodes as f64)),
+                    ("gpus_per_node", Json::num(t_gpn as f64)),
+                    ("contended", Json::Bool(self.cfg.link_contention.enabled())),
+                    ("restart_cost", Json::num(self.cfg.restart_cost)),
+                    ("segment_steps", Json::num(self.cfg.segment_steps as f64)),
+                    ("seed", Json::num(self.cfg.train.seed as f64)),
+                    ("n_jobs", Json::num(self.jobs.len() as f64)),
+                ],
+            ));
+        }
         while let Some((t, batch)) = self.queue.pop_batch() {
             self.now = t;
             let mut arrivals = false;
@@ -315,13 +354,21 @@ impl Orchestrator {
                     EventKind::Arrival => {
                         arrivals = true;
                         self.on_arrival(ev.job)?;
+                        if sink.enabled() {
+                            sink.count("arrivals", 1);
+                            sink.emit(event(
+                                "arrival",
+                                self.now,
+                                vec![("job", Json::num(ev.job as f64))],
+                            ));
+                        }
                     }
-                    EventKind::SegmentEnd => self.on_segment_end(ev.job)?,
-                    EventKind::BudgetCheck => self.on_budget_check(ev.job)?,
+                    EventKind::SegmentEnd => self.on_segment_end(ev.job, sink)?,
+                    EventKind::BudgetCheck => self.on_budget_check(ev.job, sink)?,
                 }
             }
             if self.cfg.preempt_on_arrival && arrivals {
-                let cut = self.preempt_running();
+                let cut = self.preempt_running(sink);
                 // When everything is committed, defer the decision to
                 // the cut segments' step-boundary ends (queued just
                 // ahead) so all freed workers pool into one pass. With
@@ -332,7 +379,7 @@ impl Orchestrator {
                     continue;
                 }
             }
-            self.reallocate(scheduler)?;
+            self.reallocate(scheduler, sink)?;
         }
 
         let stuck: Vec<u64> = self
@@ -381,6 +428,27 @@ impl Orchestrator {
         }
 
         let makespan = self.now;
+        if sink.enabled() {
+            sink.phase_secs("run", wall.elapsed().as_secs_f64());
+            sink.emit(event(
+                "run_end",
+                makespan,
+                vec![
+                    ("completed", Json::num(self.jobs.len() as f64)),
+                    ("restarts", Json::num(self.total_restarts as f64)),
+                    ("preemptions", Json::num(self.total_preemptions as f64)),
+                    ("events", Json::num(self.events as f64)),
+                    ("peak_allocated", Json::num(self.peak_allocated as f64)),
+                    (
+                        "utilization",
+                        Json::num(
+                            self.busy_gpu_secs
+                                / (self.cfg.capacity as f64 * makespan).max(1e-9),
+                        ),
+                    ),
+                ],
+            ));
+        }
         Ok(OrchestratorReport {
             strategy: scheduler.name().to_string(),
             capacity: self.cfg.capacity,
@@ -413,7 +481,7 @@ impl Orchestrator {
     /// Join the real runner thread for this job's segment (it finished at
     /// this virtual instant), fold its outcome into the registry, and
     /// park the job at the boundary (or complete it).
-    fn on_segment_end(&mut self, id: u64) -> Result<()> {
+    fn on_segment_end(&mut self, id: u64, sink: &mut dyn Sink) -> Result<()> {
         let idx = self.idx(id)?;
         let now = self.now;
         let preempt_capable = self.preempt_capable();
@@ -507,7 +575,49 @@ impl Orchestrator {
             }
         }
 
-        if job.remaining_epochs() <= EPOCH_EPS {
+        let done = job.remaining_epochs() <= EPOCH_EPS;
+        if sink.enabled() {
+            sink.count("segments", 1);
+            sink.emit(event(
+                "seg_end",
+                now,
+                vec![
+                    ("job", Json::num(id as f64)),
+                    ("w", Json::num(workers as f64)),
+                    ("steps", Json::num((job.steps_done - meta.launch_steps) as f64)),
+                    ("epochs", Json::num(job.epochs_done)),
+                    ("preempted", Json::Bool(meta.preempted_steps.is_some())),
+                    ("done", Json::Bool(done)),
+                ],
+            ));
+            // Wall-clock truth from the racing real thread: flagged so
+            // the audit reports it but never replays invariants over it.
+            sink.emit(event(
+                "seg_measured",
+                now,
+                vec![
+                    ("job", Json::num(id as f64)),
+                    ("measured", Json::Bool(true)),
+                    ("train_secs", Json::num(outcome.train_secs)),
+                    ("startup_secs", Json::num(outcome.startup_secs)),
+                    ("ckpt_io_secs", Json::num(outcome.ckpt_io_secs)),
+                    ("mean_step_secs", Json::num(outcome.mean_step_secs)),
+                    ("mean_allreduce_secs", Json::num(outcome.mean_allreduce_secs)),
+                ],
+            ));
+            if done {
+                sink.count("completions", 1);
+                sink.emit(event(
+                    "complete",
+                    now,
+                    vec![
+                        ("job", Json::num(id as f64)),
+                        ("jct", Json::num(now - job.spec.profile.arrival)),
+                    ],
+                ));
+            }
+        }
+        if done {
             job.transition(JobState::Done { finish: now })?;
         } else {
             job.transition(JobState::Preempted)?;
@@ -557,13 +667,25 @@ impl Orchestrator {
     /// Mid-segment preemption (opt-in): cut every running segment so the
     /// freed workers are schedulable now instead of at the old segment
     /// end. Returns how many were cut.
-    fn preempt_running(&mut self) -> u64 {
+    fn preempt_running(&mut self, sink: &mut dyn Sink) -> u64 {
         let mut cut = 0;
         for idx in 0..self.jobs.len() {
             let id = self.jobs[idx].spec.id;
             if let Some(new_end) = self.cut_segment(idx) {
                 self.queue.push(Event { time: new_end, kind: EventKind::SegmentEnd, job: id });
                 cut += 1;
+                if sink.enabled() {
+                    sink.count("preemptions", 1);
+                    sink.emit(event(
+                        "preempt",
+                        self.now,
+                        vec![
+                            ("job", Json::num(id as f64)),
+                            ("new_end", Json::num(new_end)),
+                            ("cause", Json::str("arrival")),
+                        ],
+                    ));
+                }
             }
         }
         self.total_preemptions += cut;
@@ -575,7 +697,7 @@ impl Orchestrator {
     /// already), cut it at its next whole-step boundary; stale checks —
     /// the segment ended, or an arrival preemption got there first — are
     /// ignored, exactly like stale `SegmentEnd` events.
-    fn on_budget_check(&mut self, id: u64) -> Result<()> {
+    fn on_budget_check(&mut self, id: u64, sink: &mut dyn Sink) -> Result<()> {
         let idx = self.idx(id)?;
         let now = self.now;
         let current = self.jobs[idx].segment.as_ref().map_or(false, |m| {
@@ -588,6 +710,18 @@ impl Orchestrator {
         if let Some(new_end) = self.cut_segment(idx) {
             self.queue.push(Event { time: new_end, kind: EventKind::SegmentEnd, job: id });
             self.total_preemptions += 1;
+            if sink.enabled() {
+                sink.count("preemptions", 1);
+                sink.emit(event(
+                    "preempt",
+                    now,
+                    vec![
+                        ("job", Json::num(id as f64)),
+                        ("new_end", Json::num(new_end)),
+                        ("cause", Json::str("budget")),
+                    ],
+                ));
+            }
         }
         Ok(())
     }
@@ -595,7 +729,7 @@ impl Orchestrator {
     /// Invoke the strategy over every stoppable job, then launch the
     /// granted segments. Workers held by in-flight segments are off the
     /// table; the hard capacity invariant is re-checked on every launch.
-    fn reallocate(&mut self, scheduler: &dyn Scheduler) -> Result<()> {
+    fn reallocate(&mut self, scheduler: &dyn Scheduler, sink: &mut dyn Sink) -> Result<()> {
         let mut schedulable: Vec<usize> = (0..self.jobs.len())
             .filter(|&i| self.jobs[i].is_schedulable())
             .collect();
@@ -662,13 +796,68 @@ impl Orchestrator {
                 }
             })
             .collect();
-        let alloc = scheduler.allocate(&infos, free);
+        // Traced runs take `allocate_traced` — the same loop recording
+        // its pops — so provenance can never drift from the decision.
+        let mut grant_steps: Vec<GrantStep> = Vec::new();
+        let alloc = if sink.enabled() {
+            scheduler.allocate_traced(&infos, free, &mut grant_steps)
+        } else {
+            scheduler.allocate(&infos, free)
+        };
         anyhow::ensure!(
             total_allocated(&alloc) <= free,
             "scheduler {:?} over-allocated: {} granted, {free} free",
             scheduler.name(),
             total_allocated(&alloc)
         );
+        if sink.enabled() {
+            sink.count("allocs", 1);
+            sink.sample("alloc_jobs", infos.len() as f64);
+            sink.sample("free_at_alloc", free as f64);
+            let dec: Vec<Json> = infos
+                .iter()
+                .map(|info| {
+                    // Same pessimistic bound the candidate was scored
+                    // with (pure ledger read, so the re-read is exact);
+                    // execution tenancy lands in each `seg_launch`.
+                    let scoring = if self.cfg.link_contention.enabled()
+                        && !self.cfg.topology.is_flat()
+                    {
+                        1 + self.cluster.max_link_rings_excluding(info.id)
+                    } else {
+                        1
+                    };
+                    Json::obj(vec![
+                        ("job", Json::num(info.id as f64)),
+                        ("q", Json::num(info.q)),
+                        ("to", Json::num(alloc.get(&info.id).copied().unwrap_or(0) as f64)),
+                        ("scoring_tenancy", Json::num(scoring as f64)),
+                    ])
+                })
+                .collect();
+            let steps: Vec<Json> = grant_steps
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("job", Json::num(s.job as f64)),
+                        ("from", Json::num(s.from_w as f64)),
+                        ("to", Json::num(s.to_w as f64)),
+                        ("gain", Json::num(s.gain)),
+                        ("outcome", Json::str(s.outcome.name())),
+                    ])
+                })
+                .collect();
+            sink.emit(event(
+                "alloc",
+                self.now,
+                vec![
+                    ("free", Json::num(free as f64)),
+                    ("n", Json::num(infos.len() as f64)),
+                    ("decisions", Json::Arr(dec)),
+                    ("steps", Json::Arr(steps)),
+                ],
+            ));
+        }
 
         // Place and launch continuations first (a job resuming at an
         // unchanged width at its own boundary reclaims its ring — its
@@ -686,7 +875,63 @@ impl Orchestrator {
         let (continuations, fresh): (Vec<_>, Vec<_>) =
             grants.into_iter().partition(|&(id, w)| self.resumes_unchanged(id, w));
         for (id, w) in continuations.into_iter().chain(fresh) {
-            self.launch(id, w)?;
+            self.launch(id, w, sink)?;
+        }
+        if sink.enabled() {
+            // Post-launch placement snapshot (grid only) + a utilization/
+            // queue-depth sample — the audit replays per-node occupancy
+            // and crossing-ring counts from these.
+            if !self.cfg.topology.is_flat() {
+                let mut placements: Vec<Json> = Vec::new();
+                for (id, w) in self.cluster.placed_jobs() {
+                    let gpus: Vec<Json> = self
+                        .cluster
+                        .node_gpu_counts(id)
+                        .into_iter()
+                        .map(|(n, c)| {
+                            Json::Arr(vec![Json::num(n as f64), Json::num(c as f64)])
+                        })
+                        .collect();
+                    placements.push(Json::obj(vec![
+                        ("job", Json::num(id as f64)),
+                        ("w", Json::num(w as f64)),
+                        ("probe", Json::Bool(false)),
+                        ("gpus", Json::Arr(gpus)),
+                        ("tenancy", Json::num(self.cluster.tenancy_of(id) as f64)),
+                    ]));
+                }
+                let links: Vec<Json> = self
+                    .cluster
+                    .link_rings()
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &r)| r > 0)
+                    .map(|(n, &r)| Json::Arr(vec![Json::num(n as f64), Json::num(r as f64)]))
+                    .collect();
+                sink.emit(event(
+                    "place",
+                    self.now,
+                    vec![
+                        ("placements", Json::Arr(placements)),
+                        ("links", Json::Arr(links)),
+                    ],
+                ));
+            }
+            let queued = self
+                .jobs
+                .iter()
+                .filter(|j| matches!(j.state, JobState::Queued | JobState::Preempted))
+                .count();
+            sink.sample("committed", self.committed as f64);
+            sink.emit(event(
+                "util",
+                self.now,
+                vec![
+                    ("used", Json::num(self.committed as f64)),
+                    ("capacity", Json::num(self.cfg.capacity as f64)),
+                    ("queued", Json::num(queued as f64)),
+                ],
+            ));
         }
         Ok(())
     }
@@ -709,7 +954,7 @@ impl Orchestrator {
     /// placement* changed (or cold start), size the segment, spawn the
     /// real runner thread, and enqueue the segment's virtual end event —
     /// priced at `f(w, placement)`.
-    fn launch(&mut self, id: u64, w: usize) -> Result<()> {
+    fn launch(&mut self, id: u64, w: usize, sink: &mut dyn Sink) -> Result<()> {
         anyhow::ensure!(
             self.committed + w <= self.cfg.capacity,
             "capacity invariant violated launching job {id}: {} committed + {w} > {}",
@@ -855,6 +1100,34 @@ impl Orchestrator {
         self.queue.push(Event { time: end, kind: EventKind::SegmentEnd, job: id });
         if let Some(deadline) = budget_deadline {
             self.queue.push(Event { time: deadline, kind: EventKind::BudgetCheck, job: id });
+        }
+        if sink.enabled() {
+            sink.count("launches", 1);
+            if pay_restart {
+                sink.count("restarts", 1);
+            }
+            let tenancy = if self.cfg.link_contention.enabled()
+                && !self.cfg.topology.is_flat()
+            {
+                self.cluster.tenancy_of(id)
+            } else {
+                1
+            };
+            sink.emit(event(
+                "seg_launch",
+                now,
+                vec![
+                    ("job", Json::num(id as f64)),
+                    ("w", Json::num(w as f64)),
+                    ("nodes", Json::num(nodes as f64)),
+                    ("steps", Json::num(steps as f64)),
+                    ("restart", Json::Bool(pay_restart)),
+                    ("restart_pay", Json::num(restart_pay)),
+                    ("step_secs", Json::num(step_secs)),
+                    ("end", Json::num(end)),
+                    ("tenancy", Json::num(tenancy as f64)),
+                ],
+            ));
         }
         Ok(())
     }

@@ -71,6 +71,17 @@ pub fn load_trace(path: impl AsRef<Path>) -> Result<Vec<JobSpec>> {
             let version = version.as_usize().map_err(|e| {
                 anyhow::anyhow!("trace {} line {}: {e}", path.display(), lineno + 1)
             })? as u64;
+            // Same preamble lineage, different stream: v3+ telemetry
+            // output announces itself with a `stream` key so a run
+            // audit is never misread as a job-submission trace.
+            if let Some(stream) = v.opt("stream") {
+                let stream = stream.as_str().unwrap_or("?").to_string();
+                anyhow::bail!(
+                    "trace {} is a {stream:?} output stream (v{version}), not a \
+                     job-submission trace; audit it with `ringmaster report`",
+                    path.display()
+                );
+            }
             anyhow::ensure!(
                 version <= TRACE_VERSION,
                 "trace {} is schema v{version}; this build reads up to v{TRACE_VERSION}",
@@ -306,6 +317,22 @@ mod tests {
         )
         .unwrap();
         assert!(load_trace(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn telemetry_streams_are_redirected_to_report() {
+        // a v3 telemetry stream shares the preamble lineage but must not
+        // be misread as a job trace — the loader points at the audit tool
+        let p = tmpfile("telemetry-redirect");
+        std::fs::write(
+            &p,
+            "{\"ringmaster_trace\": 3, \"stream\": \"telemetry\"}\n\
+             {\"ev\": \"run_start\", \"t\": 0.0}\n",
+        )
+        .unwrap();
+        let err = load_trace(&p).unwrap_err().to_string();
+        assert!(err.contains("ringmaster report"), "{err}");
         let _ = std::fs::remove_file(&p);
     }
 

@@ -19,7 +19,7 @@
 
 use std::collections::BinaryHeap;
 
-use super::{Allocation, Gain, JobInfo, Scheduler};
+use super::{Allocation, Gain, GrantOutcome, GrantStep, JobInfo, Scheduler};
 
 /// Eq-6 average marginal gain per GPU of doubling job `i`, pushed only
 /// while it is a live candidate (non-zero width, cap respected, finite
@@ -41,18 +41,36 @@ fn push_gain(heap: &mut BinaryHeap<Gain>, jobs: &[JobInfo], w: &[usize], i: usiz
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Doubling;
 
-impl Scheduler for Doubling {
-    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+impl Doubling {
+    /// The one allocation loop behind both trait entry points. `trace`
+    /// only ever *records* decisions already taken — the math and the
+    /// grant order are identical with and without it, so a traced
+    /// allocation equals the untraced one by construction.
+    fn allocate_inner(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        mut trace: Option<&mut Vec<GrantStep>>,
+    ) -> Allocation {
         let mut w = vec![0usize; jobs.len()];
         let mut free = capacity;
 
         // Step 1: one worker each, FIFO until capacity runs out.
-        for slot in w.iter_mut() {
+        for (i, slot) in w.iter_mut().enumerate() {
             if free == 0 {
                 break;
             }
             *slot = 1;
             free -= 1;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(GrantStep {
+                    job: jobs[i].id,
+                    from_w: 0,
+                    to_w: 1,
+                    gain: 0.0,
+                    outcome: GrantOutcome::Seed,
+                });
+            }
         }
 
         // Step 2: double the best per-GPU gain while anything fits.
@@ -68,17 +86,60 @@ impl Scheduler for Doubling {
         }
         while let Some(g) = heap.pop() {
             if w[g.idx] != g.w {
-                continue; // stale: this job was already doubled
+                // stale: this job was already doubled
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(GrantStep {
+                        job: jobs[g.idx].id,
+                        from_w: g.w,
+                        to_w: 2 * g.w,
+                        gain: g.gain,
+                        outcome: GrantOutcome::Stale,
+                    });
+                }
+                continue;
             }
             if g.w > free {
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(GrantStep {
+                        job: jobs[g.idx].id,
+                        from_w: g.w,
+                        to_w: 2 * g.w,
+                        gain: g.gain,
+                        outcome: GrantOutcome::NoFit,
+                    });
+                }
                 continue;
             }
             w[g.idx] *= 2;
             free -= g.w;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(GrantStep {
+                    job: jobs[g.idx].id,
+                    from_w: g.w,
+                    to_w: 2 * g.w,
+                    gain: g.gain,
+                    outcome: GrantOutcome::Grant,
+                });
+            }
             push_gain(&mut heap, jobs, &w, g.idx);
         }
 
         jobs.iter().zip(&w).map(|(j, &w)| (j.id, w)).collect()
+    }
+}
+
+impl Scheduler for Doubling {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+        self.allocate_inner(jobs, capacity, None)
+    }
+
+    fn allocate_traced(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        trace: &mut Vec<GrantStep>,
+    ) -> Allocation {
+        self.allocate_inner(jobs, capacity, Some(trace))
     }
 
     fn name(&self) -> &'static str {
@@ -251,6 +312,37 @@ mod tests {
                 reference_allocate(&jobs, capacity),
                 "case {case} (n={n}, capacity={capacity})"
             );
+        }
+    }
+
+    /// Replaying only the effective steps (seeds + grants) of a traced
+    /// allocation must land every job exactly on its granted width, and
+    /// the traced allocation must equal the untraced one.
+    #[test]
+    fn traced_allocation_matches_and_steps_replay_to_granted_widths() {
+        use super::super::GrantOutcome;
+        use crate::rngx::Rng;
+        let mut rng = Rng::new(0x7AC3);
+        for case in 0..50 {
+            let n = 1 + rng.uniform_range(0.0, 10.0) as usize;
+            let capacity = rng.uniform_range(0.0, 70.0) as usize;
+            let jobs: Vec<super::super::JobInfo> = (0..n)
+                .map(|i| job(i as u64, rng.uniform_range(1.0, 300.0), rng.uniform_range(5.0, 2000.0)))
+                .collect();
+            let mut steps = Vec::new();
+            let traced = Doubling.allocate_traced(&jobs, capacity, &mut steps);
+            assert_eq!(traced, Doubling.allocate(&jobs, capacity), "case {case}");
+            let mut replay: Allocation = jobs.iter().map(|j| (j.id, 0usize)).collect();
+            for s in &steps {
+                match s.outcome {
+                    GrantOutcome::Seed | GrantOutcome::Grant => {
+                        assert_eq!(replay[&s.job], s.from_w, "case {case}: step from_w mismatch");
+                        *replay.get_mut(&s.job).unwrap() = s.to_w;
+                    }
+                    GrantOutcome::Stale | GrantOutcome::NoFit => {}
+                }
+            }
+            assert_eq!(replay, traced, "case {case}: replayed steps disagree with grants");
         }
     }
 

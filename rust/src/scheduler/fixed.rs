@@ -5,14 +5,19 @@
 //! No performance model is consulted (which is the point of the
 //! comparison: these are what users do by hand today).
 
-use super::{Allocation, JobInfo, Scheduler};
+use super::{Allocation, GrantOutcome, GrantStep, JobInfo, Scheduler};
 
 /// Fixed `k`-GPU allocator.
 #[derive(Clone, Copy, Debug)]
 pub struct Fixed(pub usize);
 
-impl Scheduler for Fixed {
-    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+impl Fixed {
+    fn allocate_inner(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        mut trace: Option<&mut Vec<GrantStep>>,
+    ) -> Allocation {
         let k = self.0;
         let mut alloc = Allocation::new();
         let mut free = capacity;
@@ -21,11 +26,46 @@ impl Scheduler for Fixed {
             if want <= free {
                 alloc.insert(j.id, want);
                 free -= want;
+                if let Some(tr) = trace.as_deref_mut() {
+                    // no gain model to cite: a static request is its own
+                    // provenance, recorded as a 0 -> want seed
+                    tr.push(GrantStep {
+                        job: j.id,
+                        from_w: 0,
+                        to_w: want,
+                        gain: 0.0,
+                        outcome: GrantOutcome::Seed,
+                    });
+                }
             } else {
                 alloc.insert(j.id, 0);
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(GrantStep {
+                        job: j.id,
+                        from_w: 0,
+                        to_w: want,
+                        gain: 0.0,
+                        outcome: GrantOutcome::NoFit,
+                    });
+                }
             }
         }
         alloc
+    }
+}
+
+impl Scheduler for Fixed {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+        self.allocate_inner(jobs, capacity, None)
+    }
+
+    fn allocate_traced(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        trace: &mut Vec<GrantStep>,
+    ) -> Allocation {
+        self.allocate_inner(jobs, capacity, Some(trace))
     }
 
     fn name(&self) -> &'static str {

@@ -285,9 +285,67 @@ pub fn total_allocated(alloc: &Allocation) -> usize {
     alloc.values().sum()
 }
 
+/// What happened to one candidate step of an allocation — the decision
+/// provenance telemetry records so `ringmaster report` can answer "why
+/// width w" for every grant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrantOutcome {
+    /// Baseline grant (the 1-GPU seed of the gain heaps, or a fixed
+    /// strategy's static request).
+    Seed,
+    /// The pop won: the job stepped from `from_w` to `to_w`.
+    Grant,
+    /// The pop was stale (the job's width moved past the scored `w`
+    /// before this entry surfaced) and was discarded.
+    Stale,
+    /// The step didn't fit in the remaining free GPUs.
+    NoFit,
+}
+
+impl GrantOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            GrantOutcome::Seed => "seed",
+            GrantOutcome::Grant => "grant",
+            GrantOutcome::Stale => "stale",
+            GrantOutcome::NoFit => "nofit",
+        }
+    }
+}
+
+/// One recorded step of an allocation: the candidate considered (job,
+/// `from_w` → `to_w`), its marginal gain per GPU at pop time (0 for
+/// seeds), and what became of it. A traced allocation records *every*
+/// heap pop, so the audit can replay the argmax argument behind each
+/// granted width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GrantStep {
+    pub job: u64,
+    pub from_w: usize,
+    pub to_w: usize,
+    pub gain: f64,
+    pub outcome: GrantOutcome,
+}
+
 /// A scheduling strategy: map job demands + capacity to an allocation.
 pub trait Scheduler {
     fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation;
+
+    /// [`Scheduler::allocate`] with decision provenance: identical math,
+    /// identical result (strategies implement both off one inner loop),
+    /// plus every candidate step appended to `trace`. The default
+    /// records nothing — a strategy without provenance still allocates
+    /// correctly, it just can't explain itself in the audit.
+    fn allocate_traced(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        trace: &mut Vec<GrantStep>,
+    ) -> Allocation {
+        let _ = trace;
+        self.allocate(jobs, capacity)
+    }
+
     fn name(&self) -> &'static str;
 }
 

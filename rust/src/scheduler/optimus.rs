@@ -12,7 +12,7 @@
 
 use std::collections::BinaryHeap;
 
-use super::{Allocation, Gain, JobInfo, Scheduler};
+use super::{Allocation, Gain, GrantOutcome, GrantStep, JobInfo, Scheduler};
 
 /// Marginal gain of one more worker for job `i`, pushed only while the
 /// job is a live candidate (finite positive gain; non-finite values from
@@ -32,17 +32,34 @@ fn push_gain(heap: &mut BinaryHeap<Gain>, jobs: &[JobInfo], w: &[usize], i: usiz
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OptimusGreedy;
 
-impl Scheduler for OptimusGreedy {
-    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+impl OptimusGreedy {
+    /// The one allocation loop behind both trait entry points; `trace`
+    /// records decisions without influencing them (see
+    /// [`Doubling::allocate_inner`](super::doubling::Doubling)).
+    fn allocate_inner(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        mut trace: Option<&mut Vec<GrantStep>>,
+    ) -> Allocation {
         let mut w = vec![0usize; jobs.len()];
         let mut free = capacity;
 
-        for slot in w.iter_mut() {
+        for (i, slot) in w.iter_mut().enumerate() {
             if free == 0 {
                 break;
             }
             *slot = 1;
             free -= 1;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(GrantStep {
+                    job: jobs[i].id,
+                    from_w: 0,
+                    to_w: 1,
+                    gain: 0.0,
+                    outcome: GrantOutcome::Seed,
+                });
+            }
         }
 
         // A grant only changes the winner's own gain, so the per-round
@@ -55,14 +72,48 @@ impl Scheduler for OptimusGreedy {
         while free > 0 {
             let Some(g) = heap.pop() else { break };
             if w[g.idx] != g.w {
-                continue; // stale: this job already grew
+                // stale: this job already grew
+                if let Some(tr) = trace.as_deref_mut() {
+                    tr.push(GrantStep {
+                        job: jobs[g.idx].id,
+                        from_w: g.w,
+                        to_w: g.w + 1,
+                        gain: g.gain,
+                        outcome: GrantOutcome::Stale,
+                    });
+                }
+                continue;
             }
             w[g.idx] += 1;
             free -= 1;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.push(GrantStep {
+                    job: jobs[g.idx].id,
+                    from_w: g.w,
+                    to_w: g.w + 1,
+                    gain: g.gain,
+                    outcome: GrantOutcome::Grant,
+                });
+            }
             push_gain(&mut heap, jobs, &w, g.idx);
         }
 
         jobs.iter().zip(&w).map(|(j, &w)| (j.id, w)).collect()
+    }
+}
+
+impl Scheduler for OptimusGreedy {
+    fn allocate(&self, jobs: &[JobInfo], capacity: usize) -> Allocation {
+        self.allocate_inner(jobs, capacity, None)
+    }
+
+    fn allocate_traced(
+        &self,
+        jobs: &[JobInfo],
+        capacity: usize,
+        trace: &mut Vec<GrantStep>,
+    ) -> Allocation {
+        self.allocate_inner(jobs, capacity, Some(trace))
     }
 
     fn name(&self) -> &'static str {

@@ -59,10 +59,12 @@ use std::sync::Arc;
 use super::workload::JobProfile;
 use super::{SimConfig, StrategyKind};
 use crate::cluster::{ClusterState, Topology};
+use crate::jsonx::Json;
 use crate::scheduler::{
-    doubling::Doubling, fixed::Fixed, optimus::OptimusGreedy, Allocation, JobInfo, Scheduler,
-    Speed,
+    doubling::Doubling, fixed::Fixed, optimus::OptimusGreedy, Allocation, GrantStep, JobInfo,
+    Scheduler, Speed,
 };
+use crate::telemetry::{event, NullSink, Sink};
 
 const EPS: f64 = 1e-6;
 
@@ -217,6 +219,19 @@ pub(crate) fn probe_span(blocks: &[usize], s: usize, topology: &Topology) -> usi
 
 /// Run one strategy over one generated workload.
 pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
+    simulate_traced(cfg, profiles, &mut NullSink)
+}
+
+/// [`simulate`] narrating itself through a telemetry [`Sink`]. Every
+/// hook is guarded by [`Sink::enabled`] and only *reads* engine state,
+/// so with a [`NullSink`] this IS the pre-telemetry engine bit for bit
+/// (golden-parity tested), and with a recorder the simulated results are
+/// still bit-identical — the stream is a pure observation.
+pub fn simulate_traced(
+    cfg: &SimConfig,
+    profiles: &[JobProfile],
+    sink: &mut dyn Sink,
+) -> SimResult {
     let topology = cfg
         .topology
         .reconciled(cfg.capacity)
@@ -284,6 +299,34 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
     // for a ledger move or a cached-speed refresh.
     let mut touched: Vec<usize> = Vec::new();
 
+    // Telemetry is opt-in: one branch per hook site, engine state only
+    // ever *read*. Wall-clock phase timings go through the sink's
+    // non-serialized side channel, never into the event stream, so the
+    // stream stays a pure function of (cfg, profiles).
+    let traced = sink.enabled();
+    if traced {
+        let (t_nodes, t_gpn) = match topology {
+            Topology::Flat { .. } => (0usize, 0usize),
+            Topology::Cluster(spec) => (spec.nodes, spec.gpus_per_node),
+        };
+        sink.emit(event(
+            "run_start",
+            now,
+            vec![
+                ("engine", Json::str("des")),
+                ("strategy", Json::str(cfg.strategy.name())),
+                ("capacity", Json::num(cfg.capacity as f64)),
+                ("nodes", Json::num(t_nodes as f64)),
+                ("gpus_per_node", Json::num(t_gpn as f64)),
+                ("contended", Json::Bool(contended)),
+                ("restart_cost", Json::num(cfg.restart_cost)),
+                ("explore_reserve", Json::num(explore_reserve as f64)),
+                ("seed", Json::num(cfg.seed as f64)),
+                ("n_jobs", Json::num(jobs.len() as f64)),
+            ],
+        ));
+    }
+
     loop {
         guard += 1;
         assert!(
@@ -293,6 +336,7 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
         );
         events += 1;
         touched.clear();
+        let mut mark = if traced { Some(std::time::Instant::now()) } else { None };
 
         // ---- 1. fire due events -----------------------------------------
         while next_arrival < arrival_order.len() {
@@ -310,6 +354,17 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                     jobs[i].state = State::Ready;
                     insert_ready(&mut ready, &jobs, i);
                 }
+            }
+            if traced {
+                sink.count("arrivals", 1);
+                sink.emit(event(
+                    "arrival",
+                    now,
+                    vec![
+                        ("job", Json::num(i as f64)),
+                        ("at", Json::num(jobs[i].profile.arrival)),
+                    ],
+                ));
             }
         }
         while let Some(&Reverse(k)) = exploring.peek() {
@@ -346,17 +401,45 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             jobs[i].w = 0;
             insert_ready(&mut ready, &jobs, i);
             touched.push(i); // reservation must be released (or re-won)
+            if traced {
+                sink.count("explore_ends", 1);
+                sink.emit(event(
+                    "explore_end",
+                    now,
+                    vec![
+                        ("job", Json::num(i as f64)),
+                        ("epochs_gained", Json::num(gained)),
+                    ],
+                ));
+            }
         }
         ready.retain(|&i| {
             if jobs[i].remaining_epochs <= EPS {
                 jobs[i].state = State::Done { finish: now };
                 jobs[i].w = 0;
                 touched.push(i);
+                if traced {
+                    sink.count("completions", 1);
+                    sink.emit(event(
+                        "complete",
+                        now,
+                        vec![
+                            ("job", Json::num(i as f64)),
+                            ("jct", Json::num(now - jobs[i].profile.arrival)),
+                        ],
+                    ));
+                }
                 false
             } else {
                 true
             }
         });
+
+        if let Some(m) = mark.as_mut() {
+            let t = std::time::Instant::now();
+            sink.phase_secs("fire", t.duration_since(*m).as_secs_f64());
+            *m = t;
+        }
 
         // ---- 2. reallocate ----------------------------------------------
         // exploration reservations are sticky
@@ -377,6 +460,18 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             exploring.push(Reverse(TimeKey { t: end, idx: i }));
             touched.push(i);
             admitted += 1;
+            if traced {
+                sink.count("explore_starts", 1);
+                sink.emit(event(
+                    "explore_start",
+                    now,
+                    vec![
+                        ("job", Json::num(i as f64)),
+                        ("hold", Json::num(explore_reserve as f64)),
+                        ("until", Json::num(end)),
+                    ],
+                ));
+            }
         }
         waiting.drain(..admitted);
 
@@ -422,16 +517,38 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 }
             })
             .collect();
-        let alloc: Allocation = match cfg.strategy {
-            StrategyKind::Fixed(k) => Fixed(k).allocate(&infos, capacity),
-            StrategyKind::Optimus => OptimusGreedy.allocate(&infos, capacity),
-            StrategyKind::Precompute | StrategyKind::Exploratory => {
-                Doubling.allocate(&infos, capacity)
+        // Traced runs route through `allocate_traced`, which is the SAME
+        // loop recording its pops; untraced runs keep the exact pre-
+        // telemetry dispatch (golden-parity discipline).
+        let mut grant_steps: Vec<GrantStep> = Vec::new();
+        let alloc: Allocation = if traced {
+            match cfg.strategy {
+                StrategyKind::Fixed(k) => {
+                    Fixed(k).allocate_traced(&infos, capacity, &mut grant_steps)
+                }
+                StrategyKind::Optimus => {
+                    OptimusGreedy.allocate_traced(&infos, capacity, &mut grant_steps)
+                }
+                StrategyKind::Precompute | StrategyKind::Exploratory => {
+                    Doubling.allocate_traced(&infos, capacity, &mut grant_steps)
+                }
+            }
+        } else {
+            match cfg.strategy {
+                StrategyKind::Fixed(k) => Fixed(k).allocate(&infos, capacity),
+                StrategyKind::Optimus => OptimusGreedy.allocate(&infos, capacity),
+                StrategyKind::Precompute | StrategyKind::Exploratory => {
+                    Doubling.allocate(&infos, capacity)
+                }
             }
         };
+        let mut decisions: Vec<(usize, usize, usize, bool)> = Vec::new();
         for (&id, &w_new) in &alloc {
             let j = &mut jobs[id as usize];
             if j.w != w_new {
+                if traced {
+                    decisions.push((id as usize, j.w, w_new, w_new > 0));
+                }
                 if w_new > 0 {
                     // stop/checkpoint/restart (or cold start) penalty
                     j.busy_until = now + cfg.restart_cost;
@@ -440,6 +557,54 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 j.w = w_new;
                 touched.push(id as usize);
             }
+        }
+        if traced && !infos.is_empty() {
+            sink.count("allocs", 1);
+            sink.sample("alloc_jobs", infos.len() as f64);
+            sink.sample("grant_steps", grant_steps.len() as f64);
+            // Scoring tenancy re-reads the same ledger bound the infos
+            // were priced with (pure, so the re-read is exact); execution
+            // tenancy is observed after the ledger sync below and lands
+            // in the `place` snapshot for the audit to diff against.
+            let dec: Vec<Json> = decisions
+                .iter()
+                .map(|&(i, from, to, restart)| {
+                    let scoring = if contended {
+                        1 + cluster.max_link_rings_excluding(i as u64)
+                    } else {
+                        1
+                    };
+                    Json::obj(vec![
+                        ("job", Json::num(i as f64)),
+                        ("from", Json::num(from as f64)),
+                        ("to", Json::num(to as f64)),
+                        ("restart", Json::Bool(restart)),
+                        ("scoring_tenancy", Json::num(scoring as f64)),
+                    ])
+                })
+                .collect();
+            let steps: Vec<Json> = grant_steps
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("job", Json::num(s.job as f64)),
+                        ("from", Json::num(s.from_w as f64)),
+                        ("to", Json::num(s.to_w as f64)),
+                        ("gain", Json::num(s.gain)),
+                        ("outcome", Json::str(s.outcome.name())),
+                    ])
+                })
+                .collect();
+            sink.emit(event(
+                "alloc",
+                now,
+                vec![
+                    ("free", Json::num(capacity as f64)),
+                    ("n", Json::num(infos.len() as f64)),
+                    ("decisions", Json::Arr(dec)),
+                    ("steps", Json::Arr(steps)),
+                ],
+            ));
         }
 
         // ---- 2b. sync the placement ledger (dirty jobs only) -------------
@@ -509,6 +674,71 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
             }
         }
 
+        if traced {
+            // Full placement snapshot whenever the ledger may have moved
+            // (grid only; flat pools have no ledger). Placed jobs never
+            // exceed capacity GPUs, so the snapshot is O(capacity) — the
+            // audit replays per-node occupancy and crossing-ring counts
+            // from these and cross-checks the incremental `links` ledger.
+            if !flat && !touched.is_empty() {
+                let mut placements: Vec<Json> = Vec::new();
+                for (id, w) in cluster.placed_jobs() {
+                    let i = id as usize;
+                    let gpus: Vec<Json> = cluster
+                        .node_gpu_counts(id)
+                        .into_iter()
+                        .map(|(n, c)| {
+                            Json::Arr(vec![Json::num(n as f64), Json::num(c as f64)])
+                        })
+                        .collect();
+                    placements.push(Json::obj(vec![
+                        ("job", Json::num(i as f64)),
+                        ("w", Json::num(w as f64)),
+                        ("probe", Json::Bool(matches!(jobs[i].state, State::Exploring))),
+                        ("gpus", Json::Arr(gpus)),
+                        ("tenancy", Json::num(cluster.tenancy_of(id) as f64)),
+                    ]));
+                }
+                let links: Vec<Json> = cluster
+                    .link_rings()
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &r)| r > 0)
+                    .map(|(n, &r)| Json::Arr(vec![Json::num(n as f64), Json::num(r as f64)]))
+                    .collect();
+                sink.sample("ledger_touched", touched.len() as f64);
+                sink.emit(event(
+                    "place",
+                    now,
+                    vec![
+                        ("placements", Json::Arr(placements)),
+                        ("links", Json::Arr(links)),
+                    ],
+                ));
+            }
+            let used: usize = ready.iter().map(|&i| jobs[i].w).sum::<usize>()
+                + explore_reserve * exploring.len();
+            sink.sample("ready_len", ready.len() as f64);
+            sink.sample("explore_heap", exploring.len() as f64);
+            sink.emit(event(
+                "util",
+                now,
+                vec![
+                    ("used", Json::num(used as f64)),
+                    ("capacity", Json::num(cfg.capacity as f64)),
+                    ("running", Json::num(ready.iter().filter(|&&i| jobs[i].w > 0).count() as f64)),
+                    ("queued", Json::num(ready.iter().filter(|&&i| jobs[i].w == 0).count() as f64)),
+                    ("waiting", Json::num(waiting.len() as f64)),
+                    ("exploring", Json::num(exploring.len() as f64)),
+                ],
+            ));
+        }
+        if let Some(m) = mark.as_mut() {
+            let t = std::time::Instant::now();
+            sink.phase_secs("reallocate", t.duration_since(*m).as_secs_f64());
+            *m = t;
+        }
+
         let concurrent = ready.len() + exploring.len() + waiting.len();
         peak_concurrent = peak_concurrent.max(concurrent);
 
@@ -542,6 +772,9 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
                 j.remaining_epochs = (j.remaining_epochs - dt / j.secs_placed).max(0.0);
             }
         }
+        if let Some(m) = mark.as_ref() {
+            sink.phase_secs("advance", m.elapsed().as_secs_f64());
+        }
         now = next;
     }
 
@@ -555,6 +788,19 @@ pub fn simulate(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult {
     let completed = completion_secs.iter().filter(|v| v.is_finite()).count();
     let avg = completion_secs.iter().filter(|v| v.is_finite()).sum::<f64>()
         / completed.max(1) as f64;
+
+    if traced {
+        sink.emit(event(
+            "run_end",
+            now,
+            vec![
+                ("completed", Json::num(completed as f64)),
+                ("rescales", Json::num(total_rescales as f64)),
+                ("events", Json::num(events as f64)),
+                ("peak_concurrent", Json::num(peak_concurrent as f64)),
+            ],
+        ));
+    }
 
     SimResult {
         strategy: cfg.strategy.name(),

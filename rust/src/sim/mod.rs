@@ -21,7 +21,7 @@ pub mod des;
 pub mod reference;
 pub mod workload;
 
-pub use des::{simulate, SimResult};
+pub use des::{simulate, simulate_traced, SimResult};
 pub use reference::simulate_reference;
 pub use workload::{JobProfile, WorkloadGen};
 

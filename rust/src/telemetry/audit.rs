@@ -1,0 +1,823 @@
+//! Offline run audit: `ringmaster report` over a telemetry stream.
+//!
+//! The audit does two jobs at once. It *renders* a human-readable
+//! account of the run — per-job timeline, utilization/queue-depth
+//! curves, the restart-cost ledger, and a decision table with the "why
+//! width w" provenance the scheduler recorded — and it *re-verifies*
+//! the run event by event: every decision's `from` width must match the
+//! replayed state, every grant-step chain must land on the granted
+//! width, every placement snapshot must conserve capacity and per-node
+//! occupancy, and the incremental crossing-ring ledger the engine
+//! emitted must equal the rings recomputed from the placements alone.
+//! A violation is a hard error (non-zero exit from the CLI), so a
+//! checked-in golden stream doubles as a CI tripwire for both the
+//! schema and the engine's conservation laws.
+//!
+//! Events flagged `"measured":true` carry wall-clock observations from
+//! real trainer threads; they are summarized but never fed into an
+//! invariant (they are not deterministic — DESIGN.md §14).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::jsonx::{self, Json};
+use crate::Result;
+
+use super::TELEMETRY_VERSION;
+
+/// Tolerance for replayed f64 identities (JCT vs arrival arithmetic).
+const TIME_EPS: f64 = 1e-6;
+
+/// Outcome of a successful audit.
+pub struct Audit {
+    /// Engine that produced the stream (`des` or `orchestrator`).
+    pub engine: String,
+    /// Events audited (excluding preamble and summary lines).
+    pub events: usize,
+    /// Individual invariant checks that passed.
+    pub checks: u64,
+    /// Rendered report.
+    pub rendered: String,
+}
+
+#[derive(Default)]
+struct JobTrack {
+    arrival: Option<f64>,
+    /// Granted/running width per the replay.
+    width: usize,
+    /// Exploration reservation per the replay (DES only).
+    hold: usize,
+    first_grant: Option<f64>,
+    finish: Option<f64>,
+    restarts: u64,
+    restart_secs: f64,
+    segments: u64,
+    /// Last pessimistic tenancy a decision scored this job at.
+    scored_tenancy: Option<usize>,
+    /// Last tenancy observed at execution (place snapshot / launch).
+    observed_tenancy: Option<usize>,
+}
+
+struct Run {
+    engine: String,
+    capacity: usize,
+    nodes: usize,
+    gpus_per_node: usize,
+    contended: bool,
+    restart_cost: f64,
+}
+
+/// One rendered decision-table row.
+struct DecisionRow {
+    t: f64,
+    text: String,
+}
+
+/// Audit the telemetry stream at `path`.
+pub fn audit_file(path: &Path) -> Result<Audit> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    audit_str(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+/// Audit a telemetry stream from memory. Errors on schema violations,
+/// unknown versions, and any broken replay invariant.
+pub fn audit_str(text: &str) -> Result<Audit> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, first) = lines.next().ok_or_else(|| anyhow::anyhow!("empty stream"))?;
+    let preamble = jsonx::parse(first)?;
+    let version = preamble
+        .opt("ringmaster_trace")
+        .ok_or_else(|| anyhow::anyhow!("not a ringmaster stream: no preamble line"))?
+        .as_usize()? as u64;
+    match preamble.opt("stream").map(|s| s.as_str()).transpose()? {
+        Some("telemetry") => {}
+        Some(other) => anyhow::bail!("unknown stream kind {other:?} (want \"telemetry\")"),
+        None => anyhow::bail!(
+            "this is a v{version} job-submission trace, not a telemetry stream; \
+             feed it to `ringmaster orchestrate --trace`, then audit the \
+             `--telemetry` output"
+        ),
+    }
+    anyhow::ensure!(
+        version == TELEMETRY_VERSION,
+        "telemetry stream is schema v{version}; this build reads v{TELEMETRY_VERSION}"
+    );
+
+    let mut run: Option<Run> = None;
+    let mut jobs: BTreeMap<u64, JobTrack> = BTreeMap::new();
+    let mut events = 0usize;
+    let mut checks = 0u64;
+    let mut completions = 0u64;
+    let mut total_restart_secs = 0.0f64;
+    let mut total_restarts = 0u64;
+    let mut preemptions = 0u64;
+    let mut util_curve: Vec<(f64, f64, f64)> = Vec::new(); // t, used, queued
+    let mut decision_rows: Vec<DecisionRow> = Vec::new();
+    let mut measured: Vec<(f64, f64)> = Vec::new(); // (mean_step, mean_allreduce)
+    let mut run_end: Option<Json> = None;
+    let mut summary: Option<Json> = None;
+    let mut makespan = 0.0f64;
+
+    macro_rules! check {
+        ($line:expr, $cond:expr, $($msg:tt)*) => {
+            anyhow::ensure!($cond, "line {}: {}", $line + 1, format!($($msg)*));
+            checks += 1;
+        };
+    }
+
+    for (ln, raw) in lines {
+        let ev = jsonx::parse(raw).map_err(|e| anyhow::anyhow!("line {}: {e}", ln + 1))?;
+        let kind = ev.get("ev")?.as_str()?.to_string();
+        if kind == "summary" {
+            summary = Some(ev);
+            continue;
+        }
+        let t = ev.get("t")?.as_f64()?;
+        check!(ln, t.is_finite() && t >= 0.0, "non-finite or negative event time {t}");
+        check!(ln, t + TIME_EPS >= makespan, "time went backwards: {t} after {makespan}");
+        makespan = makespan.max(t);
+        events += 1;
+
+        if kind != "run_start" {
+            anyhow::ensure!(run.is_some(), "line {}: event before run_start", ln + 1);
+        }
+        match kind.as_str() {
+            "run_start" => {
+                check!(ln, run.is_none(), "duplicate run_start");
+                run = Some(Run {
+                    engine: ev.get("engine")?.as_str()?.to_string(),
+                    capacity: ev.get("capacity")?.as_usize()?,
+                    nodes: ev.get("nodes")?.as_usize()?,
+                    gpus_per_node: ev.get("gpus_per_node")?.as_usize()?,
+                    contended: ev.get("contended")?.as_bool()?,
+                    restart_cost: ev.get("restart_cost")?.as_f64()?,
+                });
+            }
+            "arrival" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let at = ev.opt("at").map(|v| v.as_f64()).transpose()?.unwrap_or(t);
+                let job = jobs.entry(id).or_default();
+                check!(ln, job.arrival.is_none(), "job {id} arrived twice");
+                job.arrival = Some(at);
+            }
+            "explore_start" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let hold = ev.get("hold")?.as_usize()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, job.hold == 0, "job {id} started exploring while already holding");
+                job.hold = hold;
+            }
+            "explore_end" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, job.hold > 0, "job {id} ended exploration it never started");
+                job.hold = 0;
+            }
+            "alloc" => {
+                let r = run.as_ref().expect("checked above");
+                audit_alloc(&ev, &mut jobs, ln, &mut checks, &mut decision_rows)?;
+                // restart charges (DES decisions carry a restart flag)
+                for d in ev.get("decisions")?.as_arr()? {
+                    if d.opt("restart").map(|v| v.as_bool()).transpose()?.unwrap_or(false) {
+                        let id = d.get("job")?.as_usize()? as u64;
+                        let job = track(&mut jobs, id, ln)?;
+                        job.restarts += 1;
+                        job.restart_secs += r.restart_cost;
+                        if job.first_grant.is_none() {
+                            job.first_grant = Some(t);
+                        }
+                        total_restarts += 1;
+                        total_restart_secs += r.restart_cost;
+                    }
+                }
+            }
+            "seg_launch" => {
+                let r = run.as_ref().expect("checked above");
+                let capacity = r.capacity;
+                let id = ev.get("job")?.as_usize()? as u64;
+                let w = ev.get("w")?.as_usize()?;
+                let restart = ev.get("restart")?.as_bool()?;
+                let pay = ev.get("restart_pay")?.as_f64()?;
+                let tenancy = ev.get("tenancy")?.as_usize()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, job.width == 0, "job {id} launched while already running");
+                check!(ln, w > 0, "job {id} launched at width 0");
+                job.width = w;
+                job.segments += 1;
+                job.observed_tenancy = Some(tenancy);
+                if job.first_grant.is_none() {
+                    job.first_grant = Some(t);
+                }
+                if restart {
+                    job.restarts += 1;
+                    job.restart_secs += pay;
+                    total_restarts += 1;
+                    total_restart_secs += pay;
+                }
+                let committed: usize = jobs.values().map(|j| j.width).sum();
+                check!(
+                    ln,
+                    committed <= capacity,
+                    "double-booking: {committed} workers committed > capacity {capacity}"
+                );
+            }
+            "seg_end" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let w = ev.get("w")?.as_usize()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(
+                    ln,
+                    job.width == w,
+                    "job {id} segment ended at width {w} but replay says {}",
+                    job.width
+                );
+                job.width = 0;
+            }
+            "preempt" => {
+                preemptions += 1;
+            }
+            "complete" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let jct = ev.get("jct")?.as_f64()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, job.finish.is_none(), "job {id} completed twice");
+                let arrival = job.arrival.expect("tracked jobs have arrivals");
+                let expect = t - arrival;
+                check!(
+                    ln,
+                    (jct - expect).abs() <= TIME_EPS * expect.abs().max(1.0),
+                    "job {id} jct {jct} disagrees with t - arrival = {expect}"
+                );
+                job.finish = Some(t);
+                job.width = 0;
+                completions += 1;
+            }
+            "place" => {
+                let r = run.as_ref().expect("checked above");
+                audit_place(&ev, r, &jobs, ln, &mut checks)?;
+            }
+            "util" => {
+                let r = run.as_ref().expect("checked above");
+                let used = ev.get("used")?.as_usize()?;
+                let queued =
+                    ev.opt("queued").map(|v| v.as_usize()).transpose()?.unwrap_or(0);
+                check!(
+                    ln,
+                    used <= r.capacity,
+                    "utilization over capacity: {used} > {}",
+                    r.capacity
+                );
+                let tracked: usize = jobs.values().map(|j| j.width + j.hold).sum();
+                check!(
+                    ln,
+                    used == tracked,
+                    "tenancy conservation: util says {used} workers busy, replay says {tracked}"
+                );
+                util_curve.push((t, used as f64, queued as f64));
+            }
+            "seg_measured" => {
+                // wall-clock truth: summarized, never replayed
+                measured.push((
+                    ev.get("mean_step_secs")?.as_f64()?,
+                    ev.get("mean_allreduce_secs")?.as_f64()?,
+                ));
+            }
+            "run_end" => {
+                check!(ln, run_end.is_none(), "duplicate run_end");
+                let completed = ev.get("completed")?.as_usize()? as u64;
+                check!(
+                    ln,
+                    completed == completions,
+                    "run_end says {completed} completions, replay counted {completions}"
+                );
+                run_end = Some(ev);
+            }
+            other => anyhow::bail!("line {}: unknown event kind {other:?}", ln + 1),
+        }
+    }
+
+    let run = run.ok_or_else(|| anyhow::anyhow!("stream has no run_start event"))?;
+    anyhow::ensure!(run_end.is_some(), "stream has no run_end event");
+    for (id, job) in &jobs {
+        if job.finish.is_none() {
+            anyhow::ensure!(
+                job.width == 0 && job.hold == 0,
+                "job {id} still holds workers at end of stream"
+            );
+        }
+    }
+    if let Some(s) = &summary {
+        if let Some(c) = s.get("counters")?.opt("completions") {
+            let c = c.as_usize()? as u64;
+            anyhow::ensure!(
+                c == completions,
+                "summary counter says {c} completions, replay counted {completions}"
+            );
+            checks += 1;
+        }
+    }
+
+    let rendered = render(
+        &run,
+        &jobs,
+        &util_curve,
+        &decision_rows,
+        &measured,
+        run_end.as_ref(),
+        summary.as_ref(),
+        makespan,
+        events,
+        checks,
+        total_restarts,
+        total_restart_secs,
+        preemptions,
+    );
+    Ok(Audit { engine: run.engine, events, checks, rendered })
+}
+
+fn track<'a>(
+    jobs: &'a mut BTreeMap<u64, JobTrack>,
+    id: u64,
+    ln: usize,
+) -> Result<&'a mut JobTrack> {
+    let job = jobs
+        .get_mut(&id)
+        .ok_or_else(|| anyhow::anyhow!("line {}: job {id} referenced before arrival", ln + 1))?;
+    anyhow::ensure!(
+        job.arrival.is_some(),
+        "line {}: job {id} referenced before arrival",
+        ln + 1
+    );
+    anyhow::ensure!(job.finish.is_none(), "line {}: job {id} referenced after completion", ln + 1);
+    Ok(job)
+}
+
+/// Replay one `alloc` event: decision `from` widths must match the
+/// replayed state, the grant-step chains must land exactly on the
+/// decided widths, and the total grant must fit in `free`.
+fn audit_alloc(
+    ev: &Json,
+    jobs: &mut BTreeMap<u64, JobTrack>,
+    ln: usize,
+    checks: &mut u64,
+    rows: &mut Vec<DecisionRow>,
+) -> Result<()> {
+    let t = ev.get("t")?.as_f64()?;
+    let free = ev.get("free")?.as_usize()?;
+    let decisions = ev.get("decisions")?.as_arr()?;
+    let steps = ev.get("steps")?.as_arr()?;
+
+    // Replay the recorded heap pops: seeds establish 0 -> w, grants must
+    // extend the exact current width, stale/nofit must change nothing.
+    let mut replay: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut provenance: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    for s in steps {
+        let id = s.get("job")?.as_usize()? as u64;
+        let from = s.get("from")?.as_usize()?;
+        let to = s.get("to")?.as_usize()?;
+        let gain = s.get("gain")?.as_f64()?;
+        let outcome = s.get("outcome")?.as_str()?;
+        let cur = replay.get(&id).copied();
+        match outcome {
+            "seed" => {
+                anyhow::ensure!(
+                    cur.is_none() && from == 0,
+                    "line {}: job {id} re-seeded (steps replay)",
+                    ln + 1
+                );
+                replay.insert(id, to);
+                provenance.entry(id).or_default().push(format!("seed {to}"));
+            }
+            "grant" => {
+                anyhow::ensure!(
+                    cur == Some(from),
+                    "line {}: job {id} granted {from}->{to} but replay holds {cur:?}",
+                    ln + 1
+                );
+                replay.insert(id, to);
+                provenance
+                    .entry(id)
+                    .or_default()
+                    .push(format!("{from}->{to} g={gain:.3}"));
+            }
+            // lazily-invalidated heap entries and refused grants must
+            // leave the replayed width untouched
+            "stale" | "nofit" => {
+                if outcome == "nofit" && cur.is_none() {
+                    replay.insert(id, 0); // fixed-k queues at 0
+                }
+            }
+            other => anyhow::bail!("line {}: unknown step outcome {other:?}", ln + 1),
+        }
+        *checks += 1;
+    }
+    let granted: usize = replay.values().sum();
+    anyhow::ensure!(
+        granted <= free,
+        "line {}: steps replay grants {granted} workers with only {free} free",
+        ln + 1
+    );
+    *checks += 1;
+
+    let mut summary_bits: Vec<String> = Vec::new();
+    for d in decisions {
+        let id = d.get("job")?.as_usize()? as u64;
+        let to = d.get("to")?.as_usize()?;
+        let scored = d.opt("scoring_tenancy").map(|v| v.as_usize()).transpose()?;
+        // DES decisions carry the pre-decision width; the steps replay
+        // must land every decided job exactly on its decided width.
+        if let Some(from) = d.opt("from").map(|v| v.as_usize()).transpose()? {
+            let job = jobs
+                .get(&id)
+                .ok_or_else(|| anyhow::anyhow!("line {}: decision for unknown job {id}", ln + 1))?;
+            anyhow::ensure!(
+                job.width == from,
+                "line {}: decision says job {id} was at {from}, replay says {}",
+                ln + 1,
+                job.width
+            );
+            *checks += 1;
+        }
+        if let Some(&w) = replay.get(&id) {
+            anyhow::ensure!(
+                w == to,
+                "line {}: job {id} decided to {to} but its grant chain lands on {w}",
+                ln + 1
+            );
+            *checks += 1;
+        }
+        if let Some(job) = jobs.get_mut(&id) {
+            if d.opt("from").is_some() {
+                job.width = to; // DES: decisions are the width transitions
+                if to > 0 && job.first_grant.is_none() {
+                    job.first_grant = Some(t);
+                }
+            }
+            job.scored_tenancy = scored;
+            if summary_bits.len() < 6 {
+                let chain = provenance
+                    .get(&id)
+                    .map(|c| c.join(", "))
+                    .unwrap_or_else(|| "held".to_string());
+                let tenancy = match (scored, job.observed_tenancy) {
+                    (Some(s), Some(o)) => format!(" tenancy {s}~{o}"),
+                    (Some(s), None) => format!(" tenancy {s}"),
+                    _ => String::new(),
+                };
+                summary_bits.push(format!("job {id}: {to} [{chain}]{tenancy}"));
+            }
+        }
+    }
+    if decisions.len() > summary_bits.len() {
+        summary_bits.push(format!("... {} more", decisions.len() - summary_bits.len()));
+    }
+    if !summary_bits.is_empty() {
+        rows.push(DecisionRow {
+            t,
+            text: format!("n={} free={free} | {}", decisions.len(), summary_bits.join("; ")),
+        });
+    }
+    Ok(())
+}
+
+/// Replay one placement snapshot: widths must match the replayed grants
+/// (or exploration holds), per-node occupancy must fit, and the emitted
+/// crossing-ring ledger and tenancies must equal the values recomputed
+/// from the placements alone — the audit-side proof that the engine's
+/// incremental ledger never drifted.
+fn audit_place(
+    ev: &Json,
+    run: &Run,
+    jobs: &BTreeMap<u64, JobTrack>,
+    ln: usize,
+    checks: &mut u64,
+) -> Result<()> {
+    let placements = ev.get("placements")?.as_arr()?;
+    let mut node_used: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut node_rings: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut spans: Vec<(u64, Vec<usize>, usize)> = Vec::new();
+
+    for p in placements {
+        let id = p.get("job")?.as_usize()? as u64;
+        let w = p.get("w")?.as_usize()?;
+        let probe = p.get("probe")?.as_bool()?;
+        let tenancy = p.get("tenancy")?.as_usize()?;
+        let job = jobs
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("line {}: placed job {id} never arrived", ln + 1))?;
+        let expect = if probe { job.hold } else { job.width };
+        anyhow::ensure!(
+            w == expect,
+            "line {}: job {id} placed at {w} GPUs but replay grants {expect}",
+            ln + 1
+        );
+        let mut total = 0usize;
+        let mut nodes: Vec<usize> = Vec::new();
+        for pair in p.get("gpus")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            anyhow::ensure!(pair.len() == 2, "line {}: bad gpus pair", ln + 1);
+            let node = pair[0].as_usize()?;
+            let count = pair[1].as_usize()?;
+            anyhow::ensure!(
+                node < run.nodes,
+                "line {}: job {id} on node {node} of {}",
+                ln + 1,
+                run.nodes
+            );
+            *node_used.entry(node).or_insert(0) += count;
+            total += count;
+            nodes.push(node);
+        }
+        anyhow::ensure!(
+            total == w,
+            "line {}: job {id} gpus sum to {total}, width says {w}",
+            ln + 1
+        );
+        if nodes.len() > 1 {
+            for &n in &nodes {
+                *node_rings.entry(n).or_insert(0) += 1;
+            }
+        }
+        spans.push((id, nodes, tenancy));
+        *checks += 3;
+    }
+    for (&node, &used) in &node_used {
+        anyhow::ensure!(
+            used <= run.gpus_per_node,
+            "line {}: node {node} holds {used} GPUs of {}",
+            ln + 1,
+            run.gpus_per_node
+        );
+        *checks += 1;
+    }
+    // emitted crossing-ring ledger == rings recomputed from placements
+    let mut emitted: BTreeMap<usize, usize> = BTreeMap::new();
+    for pair in ev.get("links")?.as_arr()? {
+        let pair = pair.as_arr()?;
+        anyhow::ensure!(pair.len() == 2, "line {}: bad links pair", ln + 1);
+        emitted.insert(pair[0].as_usize()?, pair[1].as_usize()?);
+    }
+    anyhow::ensure!(
+        emitted == node_rings,
+        "line {}: links ledger {:?} != rings recomputed from placements {:?}",
+        ln + 1,
+        emitted,
+        node_rings
+    );
+    *checks += 1;
+    // emitted tenancy == tenancy recomputed from the recomputed rings
+    for (id, nodes, tenancy) in &spans {
+        let expect = if nodes.len() <= 1 {
+            1
+        } else {
+            nodes.iter().map(|n| node_rings.get(n).copied().unwrap_or(0)).max().unwrap_or(1)
+        };
+        anyhow::ensure!(
+            *tenancy == expect.max(1),
+            "line {}: job {id} tenancy {tenancy} != recomputed {}",
+            ln + 1,
+            expect.max(1)
+        );
+        *checks += 1;
+    }
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render(
+    run: &Run,
+    jobs: &BTreeMap<u64, JobTrack>,
+    util: &[(f64, f64, f64)],
+    decisions: &[DecisionRow],
+    measured: &[(f64, f64)],
+    run_end: Option<&Json>,
+    summary: Option<&Json>,
+    makespan: f64,
+    events: usize,
+    checks: u64,
+    total_restarts: u64,
+    total_restart_secs: f64,
+    preemptions: u64,
+) -> String {
+    let mut out = String::new();
+    let topo = if run.nodes == 0 {
+        format!("flat x{}", run.capacity)
+    } else {
+        format!("{}x{} grid", run.nodes, run.gpus_per_node)
+    };
+    out.push_str(&format!(
+        "run audit: engine={} capacity={} topology={} contended={}\n\
+         events={} jobs={} makespan={:.1}s invariant checks passed={}\n",
+        run.engine,
+        run.capacity,
+        topo,
+        run.contended,
+        events,
+        jobs.len(),
+        makespan,
+        checks
+    ));
+
+    out.push_str("\nper-job timeline (arrival -> first grant -> finish):\n");
+    out.push_str("  job     arrival  first_grant       finish          jct  restarts  restart_s\n");
+    for (id, j) in jobs.iter().take(20) {
+        let fmt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.1}"));
+        let jct = match (j.arrival, j.finish) {
+            (Some(a), Some(f)) => format!("{:.1}", f - a),
+            _ => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "  {id:>3} {:>11} {:>12} {:>12} {:>12} {:>9} {:>10.1}\n",
+            fmt(j.arrival),
+            fmt(j.first_grant),
+            fmt(j.finish),
+            jct,
+            j.restarts,
+            j.restart_secs,
+        ));
+    }
+    if jobs.len() > 20 {
+        out.push_str(&format!("  ... {} more jobs\n", jobs.len() - 20));
+    }
+
+    if !util.is_empty() {
+        out.push_str("\ncluster utilization / queue depth:\n");
+        let stride = (util.len() / 16).max(1);
+        for (t, used, queued) in util.iter().step_by(stride) {
+            let frac = used / run.capacity.max(1) as f64;
+            let bar = "#".repeat((frac * 32.0).round() as usize);
+            out.push_str(&format!(
+                "  t={t:>10.1}  {used:>5.0}/{:<5} |{bar:<32}| queued={queued:.0}\n",
+                run.capacity
+            ));
+        }
+    }
+
+    out.push_str(&format!(
+        "\nrestart-cost ledger: {total_restarts} restarts, {total_restart_secs:.1} virtual \
+         seconds charged ({preemptions} preemptions)\n"
+    ));
+    let mut by_cost: Vec<(&u64, &JobTrack)> = jobs.iter().collect();
+    by_cost.sort_by(|a, b| b.1.restart_secs.total_cmp(&a.1.restart_secs));
+    for (id, j) in by_cost.iter().take(5).filter(|(_, j)| j.restarts > 0) {
+        out.push_str(&format!(
+            "  job {id}: {} restarts, {:.1}s ({} segments)\n",
+            j.restarts, j.restart_secs, j.segments
+        ));
+    }
+
+    if !decisions.is_empty() {
+        out.push_str("\ndecision table (why width w; tenancy scored~observed):\n");
+        let stride = (decisions.len() / 12).max(1);
+        for row in decisions.iter().step_by(stride) {
+            out.push_str(&format!("  t={:>10.1}  {}\n", row.t, row.text));
+        }
+    }
+
+    if !measured.is_empty() {
+        let n = measured.len() as f64;
+        let step: f64 = measured.iter().map(|m| m.0).sum::<f64>() / n;
+        let ar: f64 = measured.iter().map(|m| m.1).sum::<f64>() / n;
+        out.push_str(&format!(
+            "\nmeasured trainer wall clock (non-deterministic, excluded from invariants):\n  \
+             {} segments, mean step {:.2}ms, mean all-reduce {:.2}ms\n",
+            measured.len(),
+            step * 1e3,
+            ar * 1e3
+        ));
+    }
+
+    if let Some(e) = run_end {
+        out.push_str(&format!("\nrun_end: {}\n", e.dump()));
+    }
+    if let Some(s) = summary {
+        out.push_str(&format!("summary: {}\n", s.dump()));
+    }
+    out.push_str(&format!(
+        "\naudit OK: {events} events replayed, {checks} invariant checks, 0 violations\n"
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-built grid stream exercising every invariant path.
+    fn golden() -> String {
+        [
+            r#"{"ringmaster_trace":3,"stream":"telemetry"}"#,
+            r#"{"capacity":8,"contended":true,"engine":"des","ev":"run_start","explore_reserve":8,"gpus_per_node":4,"n_jobs":2,"nodes":2,"restart_cost":10,"seed":7,"strategy":"precompute","t":0}"#,
+            r#"{"at":0,"ev":"arrival","job":0,"t":0}"#,
+            r#"{"at":0,"ev":"arrival","job":1,"t":0}"#,
+            r#"{"decisions":[{"from":0,"job":0,"restart":true,"scoring_tenancy":1,"to":4},{"from":0,"job":1,"restart":true,"scoring_tenancy":1,"to":4}],"ev":"alloc","free":8,"n":2,"steps":[{"from":0,"gain":0,"job":0,"outcome":"seed","to":1},{"from":0,"gain":0,"job":1,"outcome":"seed","to":1},{"from":1,"gain":9,"job":0,"outcome":"grant","to":2},{"from":1,"gain":9,"job":1,"outcome":"grant","to":2},{"from":2,"gain":4,"job":0,"outcome":"grant","to":4},{"from":2,"gain":4,"job":1,"outcome":"grant","to":4}],"t":0}"#,
+            r#"{"ev":"place","links":[],"placements":[{"gpus":[[0,4]],"job":0,"probe":false,"tenancy":1,"w":4},{"gpus":[[1,4]],"job":1,"probe":false,"tenancy":1,"w":4}],"t":0}"#,
+            r#"{"capacity":8,"ev":"util","exploring":0,"queued":0,"running":2,"t":0,"used":8,"waiting":0}"#,
+            r#"{"ev":"complete","jct":500,"job":1,"t":500}"#,
+            r#"{"decisions":[{"from":4,"job":0,"restart":true,"scoring_tenancy":1,"to":8}],"ev":"alloc","free":8,"n":1,"steps":[{"from":0,"gain":0,"job":0,"outcome":"seed","to":1},{"from":1,"gain":9,"job":0,"outcome":"grant","to":2},{"from":2,"gain":4,"job":0,"outcome":"grant","to":4},{"from":4,"gain":2,"job":0,"outcome":"grant","to":8}],"t":500}"#,
+            r#"{"ev":"place","links":[[0,1],[1,1]],"placements":[{"gpus":[[0,4],[1,4]],"job":0,"probe":false,"tenancy":1,"w":8}],"t":500}"#,
+            r#"{"capacity":8,"ev":"util","exploring":0,"queued":0,"running":1,"t":500,"used":8,"waiting":0}"#,
+            r#"{"ev":"complete","jct":900,"job":0,"t":900}"#,
+            r#"{"completed":2,"ev":"run_end","events":5,"peak_concurrent":2,"rescales":3,"t":900}"#,
+            r#"{"counters":{"allocs":2,"arrivals":2,"completions":2},"ev":"summary","samples":{"ready_len":{"max":2,"mean":1.5,"min":1,"n":2}}}"#,
+        ]
+        .join("\n")
+    }
+
+    #[test]
+    fn golden_stream_audits_clean() {
+        let audit = audit_str(&golden()).expect("clean stream must audit");
+        assert_eq!(audit.engine, "des");
+        assert!(audit.checks > 20, "expected many checks, got {}", audit.checks);
+        assert!(audit.rendered.contains("audit OK"));
+        assert!(audit.rendered.contains("decision table"));
+        assert!(audit.rendered.contains("restart-cost ledger"));
+    }
+
+    #[test]
+    fn double_booking_is_caught() {
+        // node 0 suddenly hosts both 4-GPU gangs: 8 GPUs on a 4-GPU node
+        let bad = golden().replace(
+            r#"{"gpus":[[1,4]],"job":1,"probe":false,"tenancy":1,"w":4}"#,
+            r#"{"gpus":[[0,4]],"job":1,"probe":false,"tenancy":1,"w":4}"#,
+        );
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("node 0 holds 8"), "{err}");
+    }
+
+    #[test]
+    fn link_ledger_drift_is_caught() {
+        let bad = golden().replace(
+            r#""links":[[0,1],[1,1]]"#,
+            r#""links":[[0,1]]"#,
+        );
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("links ledger"), "{err}");
+    }
+
+    #[test]
+    fn grant_chain_mismatch_is_caught() {
+        // second alloc decides 8 but the chain is edited to stop at 4
+        let bad = golden().replace(
+            r#"{"from":4,"gain":2,"job":0,"outcome":"grant","to":8}"#,
+            r#"{"from":4,"gain":2,"job":0,"outcome":"stale","to":8}"#,
+        );
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("grant chain"), "{err}");
+    }
+
+    #[test]
+    fn stale_width_provenance_is_caught() {
+        // decision claims job 0 was at width 2 when replay says 4
+        let bad = golden().replace(
+            r#"{"from":4,"job":0,"restart":true,"scoring_tenancy":1,"to":8}"#,
+            r#"{"from":2,"job":0,"restart":true,"scoring_tenancy":1,"to":8}"#,
+        );
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("was at 2"), "{err}");
+    }
+
+    #[test]
+    fn job_traces_and_unknown_versions_are_redirected() {
+        let v2 = "{\"ringmaster_trace\":2}\n{}";
+        let err = audit_str(v2).unwrap_err().to_string();
+        assert!(err.contains("job-submission trace"), "{err}");
+        let v99 = "{\"ringmaster_trace\":99,\"stream\":\"telemetry\"}\n";
+        let err = audit_str(v99).unwrap_err().to_string();
+        assert!(err.contains("v99"), "{err}");
+        assert!(audit_str("").is_err());
+        assert!(audit_str("{\"x\":1}").is_err());
+    }
+
+    #[test]
+    fn traced_des_run_on_a_contended_grid_audits_clean() {
+        use crate::sim::workload::WorkloadGen;
+        use crate::sim::{simulate_traced, Contention, SimConfig, StrategyKind};
+        use crate::telemetry::Recorder;
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::None, 11)
+            .with_topology(4, 4);
+        cfg.n_jobs = 12;
+        cfg.link_contention = crate::perfmodel::LinkContention::fair_share();
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 11);
+        let mut rec = Recorder::new();
+        simulate_traced(&cfg, &jobs, &mut rec);
+        let audit = audit_str(&rec.to_jsonl()).expect("live DES stream must audit clean");
+        assert_eq!(audit.engine, "des");
+        assert!(audit.checks > 50);
+    }
+
+    #[test]
+    fn traced_exploratory_des_run_audits_clean() {
+        use crate::sim::workload::WorkloadGen;
+        use crate::sim::{simulate_traced, Contention, SimConfig, StrategyKind};
+        use crate::telemetry::Recorder;
+        let mut cfg = SimConfig::paper(StrategyKind::Exploratory, Contention::None, 5)
+            .with_topology(4, 4);
+        cfg.n_jobs = 8;
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 5);
+        let mut rec = Recorder::new();
+        simulate_traced(&cfg, &jobs, &mut rec);
+        audit_str(&rec.to_jsonl()).expect("exploratory stream (probes+holds) must audit clean");
+    }
+}

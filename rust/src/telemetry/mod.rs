@@ -1,0 +1,267 @@
+//! Telemetry: structured run events, counters, and samples — the audit
+//! substrate behind `ringmaster report`.
+//!
+//! Every engine (the event-heap DES, the live orchestrator) takes a
+//! [`Sink`] and narrates itself through it: scheduler decision
+//! provenance (every marginal-gain heap pop, the winning width, the
+//! contention tenancy assumed at scoring vs observed at execution),
+//! placement-ledger snapshots, segment lifecycle, and self-profiling
+//! counters/samples. The stream is JSONL, schema v3 of the versioned
+//! trace lineage (`orchestrator::trace` is v1/v2 — job *inputs*; this is
+//! run *outputs*; the preamble's `"stream":"telemetry"` key tells the
+//! two apart so neither loader misreads the other).
+//!
+//! **Zero cost when off.** The engines' public entry points
+//! (`sim::simulate`, `orchestrator::orchestrate`) pass [`NullSink`],
+//! every hook is guarded by [`Sink::enabled`], and hooks only *read*
+//! engine state — so the telemetry-off engine is the pre-telemetry
+//! engine, bit for bit (asserted in `tests/golden_parity.rs`).
+//!
+//! **Deterministic when on.** Everything serialized into the stream is
+//! derived from the virtual clock and the seeded workload: two runs of
+//! the same config and seed produce byte-identical files (also asserted
+//! in golden_parity). Wall-clock self-profiling (per-phase timings)
+//! therefore stays OUT of the stream: it lives in the recorder's
+//! side-channel, rendered by [`Recorder::phase_summary`] for humans. The
+//! one exception is the orchestrator's measured trainer timings, which
+//! are emitted as events flagged `"measured":true` — the audit tool
+//! reports them but never feeds them into an invariant.
+
+pub mod audit;
+
+use std::collections::BTreeMap;
+
+use crate::jsonx::Json;
+use crate::metrics::Stat;
+use crate::Result;
+
+/// Telemetry stream schema version. Versions 1 and 2 of the trace
+/// lineage are job-submission traces (`orchestrator::trace`); v3 is the
+/// first telemetry stream. The preamble line is
+/// `{"ringmaster_trace":3,"stream":"telemetry"}`.
+pub const TELEMETRY_VERSION: u64 = 3;
+
+/// Event sink the engines narrate through. All methods must be cheap
+/// no-ops when [`Sink::enabled`] is false; engine hooks additionally
+/// guard any work needed to *build* an event behind `enabled()`, so the
+/// disabled path never allocates, formats, or reads a clock.
+pub trait Sink {
+    /// Gate: engines skip event construction entirely when false.
+    fn enabled(&self) -> bool;
+    /// Record one structured event (built with [`event`]).
+    fn emit(&mut self, ev: Json);
+    /// Bump a named counter.
+    fn count(&mut self, name: &'static str, delta: u64);
+    /// Record one sample of a named distribution (heap sizes, resync
+    /// touch counts, queue depths, ...).
+    fn sample(&mut self, name: &'static str, value: f64);
+    /// Record wall seconds spent in a named engine phase. Side-channel:
+    /// never serialized into the stream (wall clocks are not
+    /// deterministic), only summarized for humans.
+    fn phase_secs(&mut self, name: &'static str, secs: f64);
+}
+
+/// The disabled sink: every engine entry point without an explicit
+/// telemetry argument uses this, and every method is a no-op, so
+/// telemetry-off is structurally the pre-telemetry engine.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl Sink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn emit(&mut self, _ev: Json) {}
+    fn count(&mut self, _name: &'static str, _delta: u64) {}
+    fn sample(&mut self, _name: &'static str, _value: f64) {}
+    fn phase_secs(&mut self, _name: &'static str, _secs: f64) {}
+}
+
+/// Build one telemetry event: `{"ev":kind,"t":t, ...fields}`. Keys are
+/// sorted by the `Json::Obj` BTreeMap, so serialization is
+/// deterministic regardless of field order here.
+pub fn event(kind: &str, t: f64, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![("ev", Json::str(kind)), ("t", Json::num(t))];
+    pairs.extend(fields);
+    Json::obj(pairs)
+}
+
+/// In-memory recorder: serializes each event to one JSONL line as it
+/// arrives (bounded memory per event, deterministic output), accumulates
+/// counters/samples for the trailing summary line, and keeps wall-clock
+/// phase timings in a non-serialized side channel.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    lines: Vec<String>,
+    counters: BTreeMap<&'static str, u64>,
+    samples: BTreeMap<&'static str, Stat>,
+    phases: BTreeMap<&'static str, Stat>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// The full stream: preamble, events in arrival order, then one
+    /// `{"ev":"summary",...}` line with final counters and sample
+    /// statistics. Byte-identical across runs of the same seeded config.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &Json::obj(vec![
+                ("ringmaster_trace", Json::num(TELEMETRY_VERSION as f64)),
+                ("stream", Json::str("telemetry")),
+            ])
+            .dump(),
+        );
+        out.push('\n');
+        for line in &self.lines {
+            out.push_str(line);
+            out.push('\n');
+        }
+        let counters: Vec<(&str, Json)> =
+            self.counters.iter().map(|(&k, &v)| (k, Json::num(v as f64))).collect();
+        let samples: Vec<(&str, Json)> = self
+            .samples
+            .iter()
+            .map(|(&k, s)| {
+                (
+                    k,
+                    Json::obj(vec![
+                        ("n", Json::num(s.count() as f64)),
+                        ("mean", Json::num(s.mean())),
+                        ("min", Json::num(s.min())),
+                        ("max", Json::num(s.max())),
+                    ]),
+                )
+            })
+            .collect();
+        out.push_str(
+            &Json::obj(vec![
+                ("ev", Json::str("summary")),
+                ("counters", Json::Obj(counters.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+                ("samples", Json::Obj(samples.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+            ])
+            .dump(),
+        );
+        out.push('\n');
+        out
+    }
+
+    /// Write the stream to a file.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing telemetry {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Human-readable table of the wall-clock phase side channel (the
+    /// part of self-profiling that must stay out of the stream).
+    pub fn phase_summary(&self) -> String {
+        if self.phases.is_empty() {
+            return String::new();
+        }
+        let mut out =
+            String::from("phase                            n     total_s      mean_us\n");
+        for (name, s) in &self.phases {
+            let total = s.mean() * s.count() as f64;
+            out.push_str(&format!(
+                "{:<28} {:>6} {:>11.4} {:>12.2}\n",
+                name,
+                s.count(),
+                total,
+                s.mean() * 1e6
+            ));
+        }
+        out
+    }
+}
+
+impl Sink for Recorder {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&mut self, ev: Json) {
+        self.lines.push(ev.dump());
+    }
+
+    fn count(&mut self, name: &'static str, delta: u64) {
+        *self.counters.entry(name).or_insert(0) += delta;
+    }
+
+    fn sample(&mut self, name: &'static str, value: f64) {
+        self.samples.entry(name).or_insert_with(Stat::new).push(value);
+    }
+
+    fn phase_secs(&mut self, name: &'static str, secs: f64) {
+        self.phases.entry(name).or_insert_with(Stat::new).push(secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_and_inert() {
+        let mut s = NullSink;
+        assert!(!s.enabled());
+        s.emit(event("x", 0.0, vec![]));
+        s.count("c", 1);
+        s.sample("s", 1.0);
+        s.phase_secs("p", 0.1);
+    }
+
+    #[test]
+    fn recorder_stream_has_preamble_events_and_summary() {
+        let mut r = Recorder::new();
+        r.emit(event("run_start", 0.0, vec![("capacity", Json::num(8.0))]));
+        r.emit(event("arrival", 1.5, vec![("job", Json::num(0.0))]));
+        r.count("arrivals", 1);
+        r.sample("ready", 3.0);
+        let text = r.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "{\"ringmaster_trace\":3,\"stream\":\"telemetry\"}");
+        assert!(lines[1].contains("\"ev\":\"run_start\"") && lines[1].contains("\"capacity\":8"));
+        assert!(lines[2].contains("\"ev\":\"arrival\""));
+        assert!(lines[3].contains("\"ev\":\"summary\"") && lines[3].contains("\"arrivals\":1"));
+    }
+
+    #[test]
+    fn recorder_serialization_is_deterministic() {
+        let build = || {
+            let mut r = Recorder::new();
+            r.emit(event("e", 0.5, vec![("b", Json::num(2.0)), ("a", Json::num(1.0))]));
+            r.count("z", 2);
+            r.count("a", 1);
+            r.sample("x", 0.25);
+            r.sample("x", 0.75);
+            r.to_jsonl()
+        };
+        assert_eq!(build(), build());
+        // keys inside an event are sorted regardless of insertion order
+        assert!(build().contains("{\"a\":1,\"b\":2,\"ev\":\"e\",\"t\":0.5}"));
+    }
+
+    #[test]
+    fn phase_side_channel_stays_out_of_the_stream() {
+        let mut r = Recorder::new();
+        r.phase_secs("fire", 0.001);
+        let text = r.to_jsonl();
+        assert!(!text.contains("fire"), "wall-clock phases must not be serialized:\n{text}");
+        assert!(r.phase_summary().contains("fire"));
+    }
+}

@@ -4,8 +4,8 @@
 
 use std::process::Command;
 
-const SUBCOMMANDS: [&str; 7] =
-    ["train", "rescale", "profile", "simulate", "orchestrate", "collectives", "fit"];
+const SUBCOMMANDS: [&str; 8] =
+    ["train", "rescale", "profile", "simulate", "orchestrate", "collectives", "fit", "report"];
 
 fn bin() -> Command {
     let mut c = Command::new(env!("CARGO_BIN_EXE_ringmaster"));
@@ -366,6 +366,102 @@ fn orchestrate_round_trips_a_trace_file() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("fixed-2"));
     let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn report_audits_the_checked_in_golden_fixture() {
+    // same fixture CI replays: schema v3 + every ledger invariant
+    let fixture = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("package root has a parent")
+        .join("artifacts/telemetry_golden.jsonl");
+    let out = bin()
+        .args(["report", "--stream", fixture.to_str().unwrap()])
+        .output()
+        .expect("run binary");
+    assert!(out.status.success(), "report failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("audit OK"), "{text}");
+    assert!(text.contains("decision table"), "{text}");
+    assert!(text.contains("per-job timeline"), "{text}");
+}
+
+#[test]
+fn report_rejects_a_job_trace_and_requires_stream() {
+    // v2 job-submission traces must be redirected, not misparsed
+    let dir = std::env::temp_dir();
+    let trace = dir.join(format!("rm-cli-v2-{}.jsonl", std::process::id()));
+    std::fs::write(&trace, "{\"ringmaster_trace\":2}\n").expect("write trace");
+    let out = bin()
+        .args(["report", "--stream", trace.to_str().unwrap()])
+        .output()
+        .expect("run binary");
+    assert!(!out.status.success(), "report accepted a v2 job trace");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("job-submission trace"));
+    let _ = std::fs::remove_file(&trace);
+
+    let out = bin().arg("report").output().expect("run binary");
+    assert!(!out.status.success(), "report without --stream passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--stream"));
+}
+
+#[test]
+fn simulate_telemetry_round_trips_through_report() {
+    // record a real DES run, then audit it: the end-to-end proof that
+    // the engine's stream satisfies its own invariants
+    let dir = std::env::temp_dir();
+    let stream = dir.join(format!("rm-cli-telemetry-{}.jsonl", std::process::id()));
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "precompute",
+            "--n-jobs",
+            "20",
+            "--nodes",
+            "4",
+            "--gpus-per-node",
+            "4",
+            "--link-contention",
+            "--seed",
+            "7",
+            "--telemetry",
+            stream.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "simulate --telemetry failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("telemetry ("),
+        "simulate didn't report the stream path"
+    );
+    let out = bin()
+        .args(["report", "--stream", stream.to_str().unwrap()])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "report on live stream failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("audit OK"), "{text}");
+    assert!(text.contains("engine=des"), "{text}");
+    let _ = std::fs::remove_file(&stream);
+}
+
+#[test]
+fn simulate_telemetry_rejects_the_all_sweep() {
+    let out = bin()
+        .args(["simulate", "--all", "--telemetry", "/tmp/never-written.jsonl"])
+        .output()
+        .expect("run binary");
+    assert!(!out.status.success(), "--telemetry with --all passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--all"));
 }
 
 #[test]

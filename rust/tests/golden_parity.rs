@@ -21,8 +21,10 @@
 use ringmaster::cluster::PlacePolicy;
 use ringmaster::perfmodel::{LinkContention, PlacementModel};
 use ringmaster::sim::{
-    simulate, simulate_reference, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen,
+    simulate, simulate_reference, simulate_traced, Contention, SimConfig, SimResult,
+    StrategyKind, WorkloadGen,
 };
+use ringmaster::telemetry::Recorder;
 
 fn assert_bit_identical(heap: &SimResult, scan: &SimResult, label: &str) {
     assert_eq!(
@@ -143,6 +145,48 @@ fn contention_on_runs_are_bit_deterministic() {
             assert_eq!(a.completed, cfg.n_jobs, "contended {policy:?} seed {seed}: unfinished");
         }
     }
+}
+
+#[test]
+fn telemetry_off_and_on_stay_reference_identical() {
+    // The telemetry PR's standing parity claim: the public `simulate`
+    // (NullSink inside) must still match the frozen scan oracle bit for
+    // bit, and — because every hook only *reads* engine state — so must
+    // a fully-recorded run. One contended-free grid case per strategy
+    // family keeps the oracle cheap while covering the instrumented
+    // paths (alloc/place/util events all fire on an 8×8 grid).
+    for s in [StrategyKind::Precompute, StrategyKind::Exploratory, StrategyKind::Fixed(4)] {
+        let cfg = SimConfig::paper(s, Contention::Moderate, 42).with_topology(8, 8);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 42);
+        let scan = simulate_reference(&cfg, &jobs);
+        let off = simulate(&cfg, &jobs);
+        assert_bit_identical(&off, &scan, &format!("{} telemetry-off", s.name()));
+        let mut rec = Recorder::new();
+        let on = simulate_traced(&cfg, &jobs, &mut rec);
+        assert_bit_identical(&on, &scan, &format!("{} telemetry-on", s.name()));
+        assert!(!rec.is_empty(), "{}: recorder saw no events", s.name());
+    }
+}
+
+#[test]
+fn telemetry_streams_are_byte_identical_per_seed() {
+    // Determinism of the stream itself: same seeded config run twice
+    // must serialize to the same bytes (wall-clock self-profiling lives
+    // in the recorder's side channel, never the stream), and different
+    // seeds must not collide.
+    let stream = |seed: u64| {
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, seed)
+            .with_topology(8, 8);
+        cfg.link_contention = LinkContention::fair_share();
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
+        let mut rec = Recorder::new();
+        simulate_traced(&cfg, &jobs, &mut rec);
+        rec.to_jsonl()
+    };
+    for seed in [11u64, 23, 42] {
+        assert_eq!(stream(seed), stream(seed), "seed {seed}: stream bytes diverged");
+    }
+    assert_ne!(stream(11), stream(23), "different seeds produced identical streams");
 }
 
 #[test]
