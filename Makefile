@@ -22,8 +22,14 @@ bench:
 
 # 100 -> 100k job scale sweep; writes BENCH_SCALE.json at the repo root
 # (the perf trajectory later PRs race — see EXPERIMENTS.md A5).
+# THREADS caps the sweep-runner workers (default: all cores); PRUNE=0
+# re-times the unpruned completion scan. Results are bit-identical
+# either way — the knobs only move wall time.
+#   make bench-scale THREADS=4 PRUNE=0
+THREADS ?=
+PRUNE ?=
 bench-scale:
-	cargo bench --bench scale_sweep
+	RINGMASTER_THREADS=$(THREADS) RINGMASTER_PRUNE=$(PRUNE) cargo bench --bench scale_sweep
 
 lint:
 	cargo fmt --all --check

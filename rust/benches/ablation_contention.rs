@@ -21,6 +21,11 @@
 //! seeds of [`WorkloadGen::trace_scale`]'s ~65%-load heavy-tailed
 //! trace.
 //!
+//! The nine (arm, seed) cells fan across the [`sweep`] runner
+//! (`RINGMASTER_THREADS` or all cores); results come back in
+//! submission order, so tables and means are byte-stable regardless of
+//! worker count.
+//!
 //! Asserted: aware ≤ blind on mean avg JCT (the issue's acceptance
 //! bar), contention never speeds the blind world up vs off, every run
 //! completes its whole trace, and the aware arm is bit-deterministic
@@ -28,11 +33,15 @@
 //!
 //! `cargo bench --bench ablation_contention`
 
+use std::sync::Arc;
+
 use ringmaster::cluster::PlacePolicy;
 use ringmaster::jsonx::Json;
 use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::perfmodel::{LinkContention, PlacementModel};
-use ringmaster::sim::{simulate, Contention, SimConfig, SimResult, StrategyKind, WorkloadGen};
+use ringmaster::sim::{
+    simulate, sweep, Contention, SimConfig, SimResult, StrategyKind, SweepCell, WorkloadGen,
+};
 
 const NODES: usize = 12;
 const GPUS_PER_NODE: usize = 4;
@@ -40,7 +49,7 @@ const N_JOBS: usize = 240;
 const MODEL_BYTES: f64 = 1.0e8;
 const SEEDS: [u64; 3] = [7, 11, 13];
 
-fn run(seed: u64, policy: PlacePolicy, law: LinkContention) -> SimResult {
+fn cell(seed: u64, policy: PlacePolicy, law: LinkContention) -> SweepCell {
     let jobs = WorkloadGen::trace_scale(N_JOBS, NODES * GPUS_PER_NODE, seed);
     // preset arrivals are irrelevant: trace_scale bakes the arrival
     // process into the profiles, and topology overrides the capacity
@@ -50,7 +59,12 @@ fn run(seed: u64, policy: PlacePolicy, law: LinkContention) -> SimResult {
     cfg.placement = PlacementModel::paper().with_model_bytes(MODEL_BYTES);
     cfg.place_policy = policy;
     cfg.link_contention = law;
-    simulate(&cfg, &jobs)
+    SweepCell::new(cfg, Arc::new(jobs))
+}
+
+fn run(seed: u64, policy: PlacePolicy, law: LinkContention) -> SimResult {
+    let c = cell(seed, policy, law);
+    simulate(&c.cfg, &c.jobs)
 }
 
 fn main() -> ringmaster::Result<()> {
@@ -67,10 +81,19 @@ fn main() -> ringmaster::Result<()> {
         .meta("gpus_per_node", Json::num(GPUS_PER_NODE as f64))
         .meta("n_jobs", Json::num(N_JOBS as f64))
         .meta("model_bytes", Json::num(MODEL_BYTES));
+    // all nine (arm, seed) cells fan across the sweep runner at once;
+    // results come back in submission order, so the arm-major walk
+    // below (and the means accumulation order) is unchanged
+    let cells: Vec<SweepCell> = arms
+        .iter()
+        .flat_map(|(_, policy, law)| SEEDS.iter().map(move |&seed| cell(seed, *policy, *law)))
+        .collect();
+    let results = sweep::run_cells(&cells, sweep::resolve_threads(None));
+
     let mut means = [0.0f64; 3];
-    for (i, (name, policy, law)) in arms.iter().enumerate() {
-        for &seed in &SEEDS {
-            let r = run(seed, *policy, *law);
+    for (i, (name, _, _)) in arms.iter().enumerate() {
+        for (k, &seed) in SEEDS.iter().enumerate() {
+            let r = &results[i * SEEDS.len() + k];
             assert_eq!(
                 r.completed, N_JOBS,
                 "{name} seed {seed} left {} jobs unfinished",

@@ -21,13 +21,17 @@
 //! opens, per-job RMSE never rises between first and last gated refit,
 //! and avg JCT stays within 2x of oracle in both directions.
 //!
-//! `cargo bench --bench ablation_online`
+//! The two arms run concurrently through [`sweep::parallel_map`];
+//! results land in submission order so the report is byte-stable.
+//!
+//! `cargo bench --bench ablation_online` (env: `RINGMASTER_THREADS`)
 
 use ringmaster::jsonx::Json;
 use ringmaster::metrics::{BenchJson, CsvTable};
 use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport,
 };
+use ringmaster::sim::sweep;
 use ringmaster::sim::workload::JobProfile;
 use ringmaster::trainer::TrainConfig;
 
@@ -67,10 +71,18 @@ fn main() -> ringmaster::Result<()> {
     let specs = bursty_trace();
     let base = OrchestratorConfig::new(train, 8);
 
-    let oracle = run(base.clone(), &specs)?;
-    let mut online_cfg = base;
+    // the two worlds are independent (checkpoints live in memory, the
+    // artifacts dir is read-only), so they fan across the sweep runner;
+    // each worker builds its own scheduler inside the closure
+    let mut online_cfg = base.clone();
     online_cfg.online_model = true;
-    let online = run(online_cfg, &specs)?;
+    let cfgs = [base, online_cfg];
+    let mut reports =
+        sweep::parallel_map(&cfgs, sweep::resolve_threads(None).min(cfgs.len()), |cfg| {
+            run(cfg.clone(), &specs)
+        });
+    let online = reports.pop().expect("learned arm missing")?;
+    let oracle = reports.pop().expect("oracle arm missing")?;
 
     let mut table = CsvTable::new(&[
         "world", "avg_jct_s", "p50_jct_s", "makespan_s", "restarts", "learned_jobs",

@@ -124,6 +124,66 @@ fn main() -> ringmaster::Result<()> {
         "full Table 3 = 18 sims".into(),
     ]);
 
+    // ---- DES inner loop: completion scan, pruner on vs off ----------------
+    // fixed-1 on a 128-GPU pool keeps the most jobs running at once —
+    // the scan-heaviest regime the engine sees — so this row is where a
+    // completion-scan regression shows up without a full scale sweep.
+    let scan_trace = WorkloadGen::trace_scale(4_000, 128, 42);
+    let mut scan_cfg = SimConfig::paper(StrategyKind::Fixed(1), Contention::Moderate, 42);
+    scan_cfg.n_jobs = 4_000;
+    scan_cfg.capacity = 128;
+    scan_cfg.topology = ringmaster::cluster::Topology::flat(128);
+    let scan_result = simulate(&scan_cfg, &scan_trace);
+    let scan_on_secs = median_of(3, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(simulate(&scan_cfg, &scan_trace));
+        t.elapsed().as_secs_f64()
+    });
+    scan_cfg.completion_prune = false;
+    let scan_off_secs = median_of(3, || {
+        let t = std::time::Instant::now();
+        std::hint::black_box(simulate(&scan_cfg, &scan_trace));
+        t.elapsed().as_secs_f64()
+    });
+    table.row(&[
+        "DES completion scan (fixed-1, 4k jobs)".into(),
+        "wall ms pruned".into(),
+        format!("{:.1}", scan_on_secs * 1e3),
+        format!(
+            "unpruned {:.1} ms; skip rate {:.0}%",
+            scan_off_secs * 1e3,
+            100.0 * scan_result.scan_skipped as f64 / scan_result.scan_candidates.max(1) as f64
+        ),
+    ]);
+
+    // ---- DES inner loop: ledger resync ------------------------------------
+    // The dirty-job reconcile path: release + largest-first re-place of
+    // a 16-gang batch on a 16x8 grid, the unit of work `touched` pays
+    // per event on grids.
+    let grid = ringmaster::cluster::Topology::cluster(16, 8);
+    let resync_us = median_of(9, || {
+        let mut cluster = ringmaster::cluster::ClusterState::with_policy(
+            grid.spec(),
+            ringmaster::cluster::PlacePolicy::Pack,
+        );
+        let t = std::time::Instant::now();
+        for round in 0..100usize {
+            let movers: Vec<(u64, usize)> =
+                (0..16u64).map(|j| (j, 4 + (round + j as usize) % 5)).collect();
+            cluster.place_batch(&movers).unwrap();
+            for j in 0..16u64 {
+                cluster.release(j).unwrap();
+            }
+        }
+        t.elapsed().as_secs_f64() * 1e6 / (100.0 * 16.0)
+    });
+    table.row(&[
+        "ledger resync (16-gang batch, 16x8)".into(),
+        "µs per place+release".into(),
+        format!("{resync_us:.2}"),
+        "touched-set unit cost per event".into(),
+    ]);
+
     // ---- model fits ---------------------------------------------------------
     let mut rng = Rng::new(7);
     let a = Matrix::from_fn(200, 4, |_, _| rng.uniform_range(0.0, 1.0));

@@ -43,6 +43,7 @@ fn main() -> ringmaster::Result<()> {
         placement: ringmaster::perfmodel::PlacementModel::paper(),
         place_policy: ringmaster::cluster::PlacePolicy::Pack,
         link_contention: ringmaster::perfmodel::LinkContention::OFF,
+        completion_prune: true,
     };
 
     let mut train = TrainConfig::new(

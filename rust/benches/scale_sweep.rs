@@ -1,28 +1,43 @@
-//! A5: scheduling-core scale sweep — the repo's first recorded perf
-//! trajectory.
+//! A5: scheduling-core scale sweep — the repo's recorded perf
+//! trajectory, round 2.
 //!
 //! Replays heavy-tailed traces of J ∈ {100, 1k, 10k, 100k} jobs under
 //! {doubling, optimus, fixed-8} on a flat 128-GPU pool and a 16×8 grid,
-//! measuring wall seconds, events/sec, and µs/event. The workload
-//! targets ~65% offered load at every size ([`WorkloadGen::trace_scale`]),
-//! so the *active* set is bounded while total work grows linearly —
-//! exactly the regime where the event-heap engine must hold per-event
-//! cost flat. The pre-PR-5 scan engine was O(events × jobs) here: every
-//! event walked all J jobs four times, so 100k jobs cost ~1000× more
-//! *per event* than 100 jobs.
+//! in three passes:
 //!
-//! Emits `BENCH_SCALE.json` at the repo root (cargo runs bench binaries
-//! with the *package* root as cwd, so the path is anchored on
-//! `CARGO_MANIFEST_DIR/..`) so later PRs have a trajectory to beat, and
-//! asserts the loose sublinearity bound from the issue: 10× jobs must
-//! cost < 100× wall time.
+//! - **Pass A (per-cell)**: each cell timed serially — wall seconds,
+//!   events/sec, µs/event, plus the completion-scan pruner's skip rate
+//!   (`scan_skipped / scan_candidates`; `RINGMASTER_PRUNE=0` re-runs
+//!   the sweep down the unpruned path).
+//! - **Pass B (threads-vs-wall)**: the same cells fanned across the
+//!   `sim::sweep` runner at 1, 2, and `RINGMASTER_THREADS`-or-all-cores
+//!   workers; every result is asserted bit-identical to Pass A (the
+//!   sweep determinism contract), and total wall per thread count is
+//!   recorded.
+//! - **Pass C (per-phase)**: the 100k cells re-run through a
+//!   [`PhaseProfiler`] sink — phase timings only, no event stream — so
+//!   the fire/reallocate/scan/advance split lands in the trajectory.
 //!
-//! `cargo bench --bench scale_sweep`
+//! The workload targets ~65% offered load at every size
+//! ([`WorkloadGen::trace_scale`]), so the *active* set is bounded while
+//! total work grows linearly — exactly the regime where the event-heap
+//! engine must hold per-event cost flat. Emits `BENCH_SCALE.json` at
+//! the repo root (anchored on `CARGO_MANIFEST_DIR/..`) and asserts the
+//! loose sublinearity bound: 10× jobs must cost < 100× wall time.
+//!
+//! `cargo bench --bench scale_sweep` (env: `RINGMASTER_THREADS`,
+//! `RINGMASTER_PRUNE`)
+
+use std::sync::Arc;
 
 use ringmaster::cluster::Topology;
 use ringmaster::jsonx::Json;
 use ringmaster::metrics::{BenchJson, CsvTable};
-use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::sim::{
+    prune_from_env, simulate_traced, sweep, Contention, SimConfig, SimResult, StrategyKind,
+    SweepCell, WorkloadGen,
+};
+use ringmaster::telemetry::PhaseProfiler;
 
 const CAPACITY: usize = 128;
 const SEED: u64 = 42;
@@ -33,56 +48,100 @@ struct Row {
     topology: String,
     wall_secs: f64,
     events: u64,
+    scan_candidates: u64,
+    scan_skipped: u64,
+}
+
+fn assert_cells_bit_identical(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(
+        a.avg_completion_hours.to_bits(),
+        b.avg_completion_hours.to_bits(),
+        "{label}: avg_completion_hours diverged across thread counts"
+    );
+    assert_eq!(a.total_rescales, b.total_rescales, "{label}: total_rescales");
+    assert_eq!(a.events, b.events, "{label}: events");
+    for (i, (x, y)) in a.completion_secs.iter().zip(&b.completion_secs).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: job {i} completion");
+    }
 }
 
 fn main() -> ringmaster::Result<()> {
     let sizes = [100usize, 1_000, 10_000, 100_000];
     let strategies =
         [StrategyKind::Precompute, StrategyKind::Optimus, StrategyKind::Fixed(8)];
+    let prune = prune_from_env().unwrap_or(true);
 
-    let mut rows: Vec<Row> = Vec::new();
-    let mut table =
-        CsvTable::new(&["jobs", "strategy", "topology", "wall_s", "events", "events/s", "us/event"]);
+    // One fixed trace per size, Arc-shared by every configuration (and
+    // every sweep worker) that races it.
+    let traces: Vec<Arc<Vec<ringmaster::sim::JobProfile>>> = sizes
+        .iter()
+        .map(|&n| Arc::new(WorkloadGen::trace_scale(n, CAPACITY, SEED)))
+        .collect();
 
+    let mut cells: Vec<SweepCell> = Vec::new();
     for grid in [false, true] {
         for &strategy in &strategies {
-            for &n in &sizes {
-                // same seed at every (strategy, topology): each size is
-                // one fixed trace raced by every configuration
-                let jobs = WorkloadGen::trace_scale(n, CAPACITY, SEED);
+            for (si, &n) in sizes.iter().enumerate() {
                 // contention preset is irrelevant: trace_scale sets the
                 // arrival process, and capacity/topology are overridden
                 let mut cfg = SimConfig::paper(strategy, Contention::Moderate, SEED);
                 cfg.n_jobs = n;
+                cfg.completion_prune = prune;
                 if grid {
                     cfg = cfg.with_topology(16, 8);
                 } else {
                     cfg.capacity = CAPACITY;
                     cfg.topology = Topology::flat(CAPACITY);
                 }
-                let t = std::time::Instant::now();
-                let r = simulate(&cfg, &jobs);
-                let wall = t.elapsed().as_secs_f64();
-
-                assert_eq!(
-                    r.completed, n,
-                    "{} on {} left jobs unfinished at J={n}",
-                    r.strategy,
-                    if grid { "16x8" } else { "flat" }
-                );
-                let topology = if grid { "16x8".to_string() } else { format!("flat({CAPACITY})") };
-                table.row(&[
-                    n.to_string(),
-                    r.strategy.clone(),
-                    topology.clone(),
-                    format!("{wall:.3}"),
-                    r.events.to_string(),
-                    format!("{:.0}", r.events as f64 / wall.max(1e-9)),
-                    format!("{:.2}", wall * 1e6 / r.events.max(1) as f64),
-                ]);
-                rows.push(Row { jobs: n, strategy: r.strategy, topology, wall_secs: wall, events: r.events });
+                cells.push(SweepCell::new(cfg, traces[si].clone()));
             }
         }
+    }
+    let cell_topology = |cell: &SweepCell| -> String {
+        if cell.cfg.topology.is_flat() { format!("flat({CAPACITY})") } else { "16x8".into() }
+    };
+
+    // ---- Pass A: per-cell serial timings + pruner skip rates ------------
+    let mut rows: Vec<Row> = Vec::new();
+    let mut serial: Vec<SimResult> = Vec::new();
+    let mut serial_wall = 0.0f64;
+    let mut table = CsvTable::new(&[
+        "jobs", "strategy", "topology", "wall_s", "events", "events/s", "us/event", "skip_%",
+    ]);
+    for cell in &cells {
+        let t = std::time::Instant::now();
+        let r = ringmaster::sim::simulate(&cell.cfg, &cell.jobs);
+        let wall = t.elapsed().as_secs_f64();
+        serial_wall += wall;
+        let topology = cell_topology(cell);
+        assert_eq!(
+            r.completed,
+            cell.cfg.n_jobs,
+            "{} on {topology} left jobs unfinished at J={}",
+            r.strategy,
+            cell.cfg.n_jobs
+        );
+        let skip_pct = 100.0 * r.scan_skipped as f64 / r.scan_candidates.max(1) as f64;
+        table.row(&[
+            cell.cfg.n_jobs.to_string(),
+            r.strategy.clone(),
+            topology.clone(),
+            format!("{wall:.3}"),
+            r.events.to_string(),
+            format!("{:.0}", r.events as f64 / wall.max(1e-9)),
+            format!("{:.2}", wall * 1e6 / r.events.max(1) as f64),
+            format!("{skip_pct:.1}"),
+        ]);
+        rows.push(Row {
+            jobs: cell.cfg.n_jobs,
+            strategy: r.strategy.clone(),
+            topology,
+            wall_secs: wall,
+            events: r.events,
+            scan_candidates: r.scan_candidates,
+            scan_skipped: r.scan_skipped,
+        });
+        serial.push(r);
     }
     print!("{}", table.render());
 
@@ -104,14 +163,65 @@ fn main() -> ringmaster::Result<()> {
         }
     }
 
+    // ---- Pass B: threads vs total wall, bit parity per cell -------------
+    let max_threads = sweep::resolve_threads(None).max(2);
+    let mut thread_counts = vec![1usize, 2, max_threads];
+    thread_counts.dedup();
+    let mut thread_rows: Vec<(usize, f64)> = Vec::new();
+    let mut threads_table = CsvTable::new(&["threads", "total_wall_s", "speedup"]);
+    let mut base_wall = None;
+    for &t in &thread_counts {
+        let t0 = std::time::Instant::now();
+        let results = sweep::run_cells(&cells, t);
+        let wall = t0.elapsed().as_secs_f64();
+        for (i, (r, s)) in results.iter().zip(&serial).enumerate() {
+            assert_cells_bit_identical(r, s, &format!("cell {i} @ {t} threads"));
+        }
+        let base = *base_wall.get_or_insert(wall);
+        threads_table.row(&[
+            t.to_string(),
+            format!("{wall:.3}"),
+            format!("{:.2}x", base / wall.max(1e-9)),
+        ]);
+        thread_rows.push((t, wall));
+    }
+    print!("{}", threads_table.render());
+
+    // ---- Pass C: per-phase wall split on the 100k cells -----------------
+    // PhaseProfiler collects `phase_secs` without building the event
+    // stream, so profiling the biggest cells stays honest.
+    let mut phase_rows: Vec<(String, String, &'static str, u64, f64)> = Vec::new();
+    let mut phase_table = CsvTable::new(&["strategy", "topology", "phase", "calls", "total_s"]);
+    for (idx, cell) in cells.iter().enumerate() {
+        if cell.cfg.n_jobs != *sizes.last().unwrap() {
+            continue;
+        }
+        let mut prof = PhaseProfiler::new();
+        let r = simulate_traced(&cell.cfg, &cell.jobs, &mut prof);
+        assert_cells_bit_identical(&r, &serial[idx], "phase-profiled run");
+        for (phase, calls, total) in prof.totals() {
+            phase_table.row(&[
+                r.strategy.clone(),
+                cell_topology(cell),
+                phase.to_string(),
+                calls.to_string(),
+                format!("{total:.3}"),
+            ]);
+            phase_rows.push((r.strategy.clone(), cell_topology(cell), phase, calls, total));
+        }
+    }
+    print!("{}", phase_table.render());
+
     // ---- BENCH_SCALE.json: the trajectory later PRs race ----------------
     let mut bench = BenchJson::new("scale_sweep");
     bench
         .meta("capacity", Json::num(CAPACITY as f64))
         .meta("seed", Json::num(SEED as f64))
-        .meta("offered_load", Json::num(0.65));
+        .meta("offered_load", Json::num(0.65))
+        .meta("prune", Json::Bool(prune));
     for r in &rows {
         bench.row(vec![
+            ("kind", Json::str("cell")),
             ("jobs", Json::num(r.jobs as f64)),
             ("strategy", Json::str(r.strategy.as_str())),
             ("topology", Json::str(r.topology.as_str())),
@@ -119,6 +229,31 @@ fn main() -> ringmaster::Result<()> {
             ("events", Json::num(r.events as f64)),
             ("events_per_sec", Json::num(r.events as f64 / r.wall_secs.max(1e-9))),
             ("us_per_event", Json::num(r.wall_secs * 1e6 / r.events.max(1) as f64)),
+            ("scan_candidates", Json::num(r.scan_candidates as f64)),
+            ("scan_skipped", Json::num(r.scan_skipped as f64)),
+            (
+                "scan_skip_rate",
+                Json::num(r.scan_skipped as f64 / r.scan_candidates.max(1) as f64),
+            ),
+        ]);
+    }
+    for &(t, wall) in &thread_rows {
+        bench.row(vec![
+            ("kind", Json::str("threads")),
+            ("threads", Json::num(t as f64)),
+            ("total_wall_secs", Json::num(wall)),
+            ("serial_cell_wall_secs", Json::num(serial_wall)),
+        ]);
+    }
+    for (strategy, topology, phase, calls, total) in &phase_rows {
+        bench.row(vec![
+            ("kind", Json::str("phase")),
+            ("jobs", Json::num(*sizes.last().unwrap() as f64)),
+            ("strategy", Json::str(strategy.as_str())),
+            ("topology", Json::str(topology.as_str())),
+            ("phase", Json::str(*phase)),
+            ("calls", Json::num(*calls as f64)),
+            ("total_secs", Json::num(*total)),
         ]);
     }
     let path = bench.save(env!("CARGO_MANIFEST_DIR"), "SCALE")?;

@@ -21,7 +21,10 @@ use ringmaster::metrics::CsvTable;
 use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
 use ringmaster::perfmodel::{ConvergenceModel, LinkContention, PlacementModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
-use ringmaster::sim::{simulate, simulate_traced, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::sim::{
+    prune_from_env, simulate_traced, sweep, Contention, SimConfig, StrategyKind, SweepCell,
+    WorkloadGen,
+};
 use ringmaster::telemetry::{audit, Recorder};
 use ringmaster::trainer::{train, Checkpoint, TrainConfig};
 use ringmaster::Result;
@@ -112,7 +115,12 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --telemetry FILE   record a v3 telemetry stream of the run (events,\n\
              \x20                    decision provenance, placement snapshots) for\n\
              \x20                    `ringmaster report`; incompatible with --all\n\
-             \x20 --seed S           workload seed (default 42)\n"
+             \x20 --threads N        worker threads for the strategy x contention sweep\n\
+             \x20                    (default 0 = $RINGMASTER_THREADS, else all cores);\n\
+             \x20                    output is byte-identical for any N\n\
+             \x20 --seed S           workload seed (default 42)\n\n\
+             env: RINGMASTER_PRUNE=0|1 forces the completion-scan pruner off/on\n\
+             (diagnostics only — results are bit-identical either way)\n"
         }
         "orchestrate" => {
             "ringmaster orchestrate — live multi-job scheduling over real trainers\n\n\
@@ -308,6 +316,7 @@ fn cmd_simulate() -> Result<()> {
     let a = Args::from_env(2)?;
     let seed = a.get_or("seed", 42u64)?;
     let all = a.flag("all");
+    let threads = a.get_or("threads", 0usize)?;
     let contention_opt = a.str_opt("contention");
     let contention_s = contention_opt.clone().unwrap_or_else(|| "moderate".into());
     let strategy_s = a.str_or("strategy", "precompute");
@@ -367,7 +376,13 @@ fn cmd_simulate() -> Result<()> {
         vec![parse_strategy(&strategy_s)?]
     };
 
-    let mut table = CsvTable::new(&["strategy", "contention", "avg_hours", "jobs", "peak", "rescales"]);
+    // Build every (contention, strategy) cell up front, then fan the
+    // batch across the sweep runner. Cell construction order == output
+    // row order regardless of --threads: `sweep::run_cells` returns
+    // results in submission order, so the printed table is a pure
+    // function of the flags (asserted byte-for-byte in cli_smoke).
+    let mut cells: Vec<SweepCell> = Vec::new();
+    let mut cell_contention: Vec<Contention> = Vec::new();
     for &c in &contentions {
         for &s in &strategies {
             let mut cfg = SimConfig::paper(s, c, seed);
@@ -382,6 +397,9 @@ fn cmd_simulate() -> Result<()> {
             if n_jobs > 0 {
                 cfg.n_jobs = n_jobs;
             }
+            if let Some(p) = prune_from_env() {
+                cfg.completion_prune = p;
+            }
             let jobs = if trace_scale {
                 // heavy-tailed trace sized to the pool: --contention's
                 // arrival mean is replaced by a load-targeted one
@@ -389,26 +407,36 @@ fn cmd_simulate() -> Result<()> {
             } else {
                 WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed)
             };
-            let r = match &telemetry {
-                Some(path) => {
-                    let mut rec = Recorder::new();
-                    let r = simulate_traced(&cfg, &jobs, &mut rec);
-                    rec.save(path)?;
-                    println!("telemetry ({} events) -> {path}", rec.len());
-                    print!("{}", rec.phase_summary());
-                    r
-                }
-                None => simulate(&cfg, &jobs),
-            };
-            table.row(&[
-                r.strategy.clone(),
-                c.name().to_string(),
-                format!("{:.2}", r.avg_completion_hours),
-                r.completed.to_string(),
-                r.peak_concurrent.to_string(),
-                r.total_rescales.to_string(),
-            ]);
+            cells.push(SweepCell::new(cfg, std::sync::Arc::new(jobs)));
+            cell_contention.push(c);
         }
+    }
+
+    let results = match &telemetry {
+        Some(path) => {
+            // --telemetry records a single run (ensured above), so the
+            // traced path stays serial and identical to before.
+            let cell = &cells[0];
+            let mut rec = Recorder::new();
+            let r = simulate_traced(&cell.cfg, &cell.jobs, &mut rec);
+            rec.save(path)?;
+            println!("telemetry ({} events) -> {path}", rec.len());
+            print!("{}", rec.phase_summary());
+            vec![r]
+        }
+        None => sweep::run_cells(&cells, sweep::resolve_threads(Some(threads))),
+    };
+
+    let mut table = CsvTable::new(&["strategy", "contention", "avg_hours", "jobs", "peak", "rescales"]);
+    for (r, c) in results.iter().zip(&cell_contention) {
+        table.row(&[
+            r.strategy.clone(),
+            c.name().to_string(),
+            format!("{:.2}", r.avg_completion_hours),
+            r.completed.to_string(),
+            r.peak_concurrent.to_string(),
+            r.total_rescales.to_string(),
+        ]);
     }
     print!("{}", table.render());
     Ok(())

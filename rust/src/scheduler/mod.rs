@@ -416,6 +416,22 @@ mod tests {
     use super::*;
 
     #[test]
+    fn scheduler_inputs_are_send_sync_for_the_sweep_runner() {
+        // `sim::sweep` races whole scheduler invocations across
+        // threads, sharing memo tables (`PlacedSpeed::memo`,
+        // `Speed::Shared`) through `Arc`s. That is sound only while
+        // every scheduler input stays plain data — no `Rc`, `RefCell`,
+        // or un-`Sync` trait object smuggled into a `Speed` variant.
+        // Pin the contract at compile time, next to the types it
+        // constrains.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Speed>();
+        assert_send_sync::<JobInfo>();
+        assert_send_sync::<Allocation>();
+        assert_send_sync::<GrantStep>();
+    }
+
+    #[test]
     fn objective_sums_remaining_times() {
         let jobs = vec![job(1, 10.0, 100.0), job(2, 20.0, 100.0)];
         let mut alloc = Allocation::new();

@@ -35,7 +35,13 @@
 //!   integrated with per-event floating-point subtraction and a cached
 //!   forecast would drift from the scan engine in the last bits. The
 //!   search is O(active), not O(jobs) — active is bounded by offered
-//!   load, not trace length;
+//!   load, not trace length. PR 8 *prunes* that scan without caching
+//!   the winner: each running job carries a slack-discounted **lower
+//!   bound** on the finish the scan would compute, and a job whose
+//!   bound already exceeds the best candidate so far is skipped — the
+//!   surviving candidates go through the exact historical arithmetic,
+//!   so the argmin and its bits are unchanged by construction
+//!   (DESIGN.md §15.2, `SimConfig::completion_prune` switches it off);
 //! - each job carries an `Arc`-shared `1/secs` table (built once) and a
 //!   cached `secs/epoch` at its current `(w, nodes)`, so per-event
 //!   `JobInfo` construction is an `Arc` bump per job (plus, on grids,
@@ -51,6 +57,17 @@
 //! Reallocate-at-every-event semantics are fully preserved: the indexed
 //! sets only change how we *find* the next event and who is
 //! schedulable, never when the scheduler runs or what it sees.
+//!
+//! # Hot/cold state split (PR 8)
+//!
+//! The per-event inner loops (completion scan, progress integration)
+//! stride a dense [`Hot`] array — `(remaining_epochs, secs_placed,
+//! busy_until, w, finish_bound)`, one cache line per two jobs — while
+//! everything an event touches at most once (profile, `Arc` speed
+//! table, ledger bookkeeping, telemetry inputs) stays in the cold
+//! [`SimJob`] array. The split also kills the per-event allocations:
+//! the `JobInfo` batch, the mover list, and the traced-only decision
+//! buffers are hoisted out of the event loop and recycled.
 
 use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
@@ -81,20 +98,16 @@ enum State {
     Done { finish: f64 },
 }
 
+/// Cold per-job state: read at most a handful of times per event
+/// (arrival fire, scheduler input construction, ledger reconciliation,
+/// telemetry). Everything the per-event inner loops stride lives in
+/// the dense [`Hot`] array instead.
 struct SimJob {
     profile: JobProfile,
     state: State,
-    w: usize,
     /// Nodes the current gang spans (0 = unplaced; always 0 on a flat
     /// topology) — the placement half of the `(w, placement)` speed key.
     nodes: usize,
-    remaining_epochs: f64,
-    /// No progress before this time (restart penalty).
-    busy_until: f64,
-    /// Cached true secs/epoch at the current `(w, nodes)` — recomputed
-    /// only when that pair changes, read every event the job runs.
-    /// Meaningless while `w == 0`.
-    secs_placed: f64,
     /// `(w, 1/epoch_secs)` scheduler table, `Arc`-shared into every
     /// per-event `JobInfo` instead of cloned.
     speed: Arc<Vec<(usize, f64)>>,
@@ -109,19 +122,76 @@ struct SimJob {
     tenants: usize,
 }
 
-impl SimJob {
-    /// Refresh the cached secs/epoch after `w`, `nodes`, or `tenants`
-    /// moved. With contention off (or sole tenancy) this is exactly the
-    /// PR-3 `placed_epoch_secs` call — same floats, same order.
-    fn refresh_secs(&mut self, cfg: &SimConfig) {
-        self.secs_placed = cfg.placement.contended_epoch_secs(
-            self.profile.secs_per_epoch(self.w),
-            self.w,
-            self.nodes,
-            cfg.link_contention,
-            self.tenants,
-        );
+/// Hot per-job state: the fields the completion scan and the progress
+/// integrator touch **every event** the job runs, packed into 48 bytes
+/// so the scan strides a dense array instead of chasing `Arc`s through
+/// ~150-byte cold structs (DESIGN.md §15.1).
+#[derive(Clone, Copy)]
+struct Hot {
+    remaining_epochs: f64,
+    /// Cached true secs/epoch at the current `(w, nodes, tenants)` —
+    /// recomputed only when that key changes, read every event the job
+    /// runs. Meaningless while `w == 0`.
+    secs_placed: f64,
+    /// No progress before this time (restart penalty).
+    busy_until: f64,
+    /// Completion-scan pruning bound (DESIGN.md §15.2): a strict lower
+    /// bound on the finish instant the scan would compute for this job
+    /// — the last *live-computed* finish discounted by
+    /// [`BOUND_DISCOUNT`].
+    /// The true finish is analytically constant while the job runs
+    /// undisturbed; per-event FP integration of `remaining_epochs`
+    /// drifts the recomputed value by ≲4 ulps/event, and the slack
+    /// covers ≥10× that drift over [`BOUND_MAX_AGE`] events. Skipping
+    /// a job whose bound is already `>=` the best candidate therefore
+    /// cannot change the `f64::min` — the scan's winner and its bit
+    /// pattern are preserved by construction. Reset to `NEG_INFINITY`
+    /// (never prune) by [`refresh_secs`], which runs on every width /
+    /// placement / tenancy change.
+    finish_bound: f64,
+    w: usize,
+    /// Consecutive events this bound has pruned without a live
+    /// recompute; at [`BOUND_MAX_AGE`] the job is rescanned so FP
+    /// drift can never outrun the slack.
+    bound_age: u32,
+}
+
+impl Hot {
+    fn new(p: &JobProfile) -> Hot {
+        Hot {
+            remaining_epochs: p.total_epochs,
+            secs_placed: f64::INFINITY,
+            busy_until: 0.0,
+            finish_bound: f64::NEG_INFINITY,
+            w: 0,
+            bound_age: 0,
+        }
     }
+}
+
+/// Relative slack discounting a live-computed finish into a prune
+/// bound: ~4.5e6 ulps at f64, versus ≲4 ulps/event of integration
+/// drift × [`BOUND_MAX_AGE`] events ≈ 4e5 ulps worst case — an order
+/// of magnitude of proof margin.
+const BOUND_DISCOUNT: f64 = 1.0 - 1e-9;
+/// Events a bound may keep pruning before a forced live recompute.
+const BOUND_MAX_AGE: u32 = 100_000;
+
+/// Refresh the cached secs/epoch after `w`, `nodes`, or `tenants`
+/// moved. With contention off (or sole tenancy) this is exactly the
+/// PR-3 `placed_epoch_secs` call — same floats, same order. Any such
+/// change also voids the completion-scan prune bound: the job's finish
+/// projection is about to jump, so it must be rescanned live.
+fn refresh_secs(cold: &SimJob, cfg: &SimConfig, h: &mut Hot) {
+    h.secs_placed = cfg.placement.contended_epoch_secs(
+        cold.profile.secs_per_epoch(h.w),
+        h.w,
+        cold.nodes,
+        cfg.link_contention,
+        cold.tenants,
+    );
+    h.finish_bound = f64::NEG_INFINITY;
+    h.bound_age = 0;
 }
 
 /// Outcome of one simulation run.
@@ -139,6 +209,16 @@ pub struct SimResult {
     /// Distinct event instants the engine fired (loop iterations) — the
     /// denominator of the scale sweep's events/sec and µs/event rows.
     pub events: u64,
+    /// Running jobs the completion scan considered over the whole run —
+    /// the denominator of the pruner skip rate. Identical whether the
+    /// pruner is on or off (it counts candidates, not recomputes);
+    /// always 0 from the frozen reference engine. Diagnostics only:
+    /// never part of the golden-parity contract.
+    pub scan_candidates: u64,
+    /// Candidates the finish-bound pruner skipped without a live
+    /// recompute (0 when `completion_prune` is off, and from the
+    /// reference engine). Diagnostics only, like `scan_candidates`.
+    pub scan_skipped: u64,
 }
 
 /// Heap key: ascending time via `total_cmp`, ties by job index so heap
@@ -260,16 +340,17 @@ pub fn simulate_traced(
         .map(|p| SimJob {
             profile: p.clone(),
             state: State::NotArrived,
-            w: 0,
             nodes: 0,
-            remaining_epochs: p.total_epochs,
-            busy_until: 0.0,
-            secs_placed: f64::INFINITY,
             speed: Arc::new(p.speed_table()),
             held: 0,
             tenants: 1,
         })
         .collect();
+    // Dense hot array, index-parallel to `jobs` (see module docs).
+    let mut hot: Vec<Hot> = profiles.iter().map(Hot::new).collect();
+    let prune = cfg.completion_prune;
+    let mut scan_candidates = 0u64;
+    let mut scan_skipped = 0u64;
 
     // Arrival cursor: indices sorted by (arrival, idx). NaN arrivals can
     // never fire (`NaN <= t` is false in the scan engine too), so they
@@ -298,12 +379,22 @@ pub fn simulate_traced(
     // Jobs whose (state, w) changed this event — the only candidates
     // for a ledger move or a cached-speed refresh.
     let mut touched: Vec<usize> = Vec::new();
+    // Per-event work buffers, hoisted out of the loop and recycled so
+    // the steady-state event fires with zero heap allocations (the
+    // scheduler's own internals aside).
+    let mut infos: Vec<JobInfo> = Vec::new();
+    let mut movers: Vec<(u64, usize)> = Vec::new();
+    let mut grant_steps: Vec<GrantStep> = Vec::new();
+    let mut decisions: Vec<(usize, usize, usize, bool)> = Vec::new();
 
     // Telemetry is opt-in: one branch per hook site, engine state only
     // ever *read*. Wall-clock phase timings go through the sink's
     // non-serialized side channel, never into the event stream, so the
-    // stream stays a pure function of (cfg, profiles).
+    // stream stays a pure function of (cfg, profiles). Phase timings
+    // have their own gate (`profiling`) so a PhaseProfiler can time the
+    // run without paying for — or distorting itself with — the stream.
     let traced = sink.enabled();
+    let profiling = sink.profiling();
     if traced {
         let (t_nodes, t_gpn) = match topology {
             Topology::Flat { .. } => (0usize, 0usize),
@@ -336,7 +427,7 @@ pub fn simulate_traced(
         );
         events += 1;
         touched.clear();
-        let mut mark = if traced { Some(std::time::Instant::now()) } else { None };
+        let mut mark = if profiling { Some(std::time::Instant::now()) } else { None };
 
         // ---- 1. fire due events -----------------------------------------
         while next_arrival < arrival_order.len() {
@@ -396,9 +487,9 @@ pub fn simulate_traced(
                     cfg.explore_secs_per_size / secs
                 })
                 .sum();
-            jobs[i].remaining_epochs = (jobs[i].remaining_epochs - gained).max(0.0);
+            hot[i].remaining_epochs = (hot[i].remaining_epochs - gained).max(0.0);
             jobs[i].state = State::Ready;
-            jobs[i].w = 0;
+            hot[i].w = 0;
             insert_ready(&mut ready, &jobs, i);
             touched.push(i); // reservation must be released (or re-won)
             if traced {
@@ -414,9 +505,9 @@ pub fn simulate_traced(
             }
         }
         ready.retain(|&i| {
-            if jobs[i].remaining_epochs <= EPS {
+            if hot[i].remaining_epochs <= EPS {
                 jobs[i].state = State::Done { finish: now };
-                jobs[i].w = 0;
+                hot[i].w = 0;
                 touched.push(i);
                 if traced {
                     sink.count("completions", 1);
@@ -456,7 +547,7 @@ pub fn simulate_traced(
             capacity -= explore_reserve;
             let end = now + explore_duration;
             jobs[i].state = State::Exploring;
-            jobs[i].busy_until = now; // probes include their own startup
+            hot[i].busy_until = now; // probes include their own startup
             exploring.push(Reverse(TimeKey { t: end, idx: i }));
             touched.push(i);
             admitted += 1;
@@ -479,48 +570,46 @@ pub fn simulate_traced(
         // actually grant: on a non-flat topology the speed is wrapped
         // with the eq-2 inter-node penalty at the contiguous best case
         // (memoized once per run).
-        let infos: Vec<JobInfo> = ready
-            .iter()
-            .map(|&i| {
-                let table = Speed::Shared(jobs[i].speed.clone());
-                let speed = match (&memo, topology) {
-                    (Some(m), Topology::Cluster(spec)) => {
-                        if contended {
-                            // f(w, placement, contention): a candidate
-                            // cross-node ring is scored as sharing its
-                            // busiest link with the worst uplink on the
-                            // grid (minus this job's own ring) — the
-                            // pessimistic bound a scheduler can promise
-                            // without knowing where the policy will put
-                            // the gang. Sole tenancy takes the memoized
-                            // uncontended path bit-for-bit.
-                            let tenants = 1 + cluster.max_link_rings_excluding(i as u64);
-                            Speed::placed_contended(
-                                table,
-                                cfg.placement,
-                                spec.gpus_per_node,
-                                Some(m.clone()),
-                                cfg.link_contention,
-                                tenants,
-                            )
-                        } else {
-                            Speed::placed_memo(table, cfg.placement, spec.gpus_per_node, m.clone())
-                        }
+        infos.clear();
+        for &i in ready.iter() {
+            let table = Speed::Shared(jobs[i].speed.clone());
+            let speed = match (&memo, topology) {
+                (Some(m), Topology::Cluster(spec)) => {
+                    if contended {
+                        // f(w, placement, contention): a candidate
+                        // cross-node ring is scored as sharing its
+                        // busiest link with the worst uplink on the
+                        // grid (minus this job's own ring) — the
+                        // pessimistic bound a scheduler can promise
+                        // without knowing where the policy will put
+                        // the gang. Sole tenancy takes the memoized
+                        // uncontended path bit-for-bit.
+                        let tenants = 1 + cluster.max_link_rings_excluding(i as u64);
+                        Speed::placed_contended(
+                            table,
+                            cfg.placement,
+                            spec.gpus_per_node,
+                            Some(m.clone()),
+                            cfg.link_contention,
+                            tenants,
+                        )
+                    } else {
+                        Speed::placed_memo(table, cfg.placement, spec.gpus_per_node, m.clone())
                     }
-                    _ => table,
-                };
-                JobInfo {
-                    id: i as u64,
-                    q: jobs[i].remaining_epochs,
-                    speed,
-                    max_w: cfg.capacity,
                 }
-            })
-            .collect();
+                _ => table,
+            };
+            infos.push(JobInfo {
+                id: i as u64,
+                q: hot[i].remaining_epochs,
+                speed,
+                max_w: cfg.capacity,
+            });
+        }
         // Traced runs route through `allocate_traced`, which is the SAME
         // loop recording its pops; untraced runs keep the exact pre-
         // telemetry dispatch (golden-parity discipline).
-        let mut grant_steps: Vec<GrantStep> = Vec::new();
+        grant_steps.clear();
         let alloc: Allocation = if traced {
             match cfg.strategy {
                 StrategyKind::Fixed(k) => {
@@ -542,19 +631,19 @@ pub fn simulate_traced(
                 }
             }
         };
-        let mut decisions: Vec<(usize, usize, usize, bool)> = Vec::new();
+        decisions.clear();
         for (&id, &w_new) in &alloc {
-            let j = &mut jobs[id as usize];
-            if j.w != w_new {
+            let h = &mut hot[id as usize];
+            if h.w != w_new {
                 if traced {
-                    decisions.push((id as usize, j.w, w_new, w_new > 0));
+                    decisions.push((id as usize, h.w, w_new, w_new > 0));
                 }
                 if w_new > 0 {
                     // stop/checkpoint/restart (or cold start) penalty
-                    j.busy_until = now + cfg.restart_cost;
+                    h.busy_until = now + cfg.restart_cost;
                     total_rescales += 1;
                 }
-                j.w = w_new;
+                h.w = w_new;
                 touched.push(id as usize);
             }
         }
@@ -620,11 +709,11 @@ pub fn simulate_traced(
         if !flat {
             touched.sort_unstable();
             touched.dedup();
-            let mut movers: Vec<(u64, usize)> = Vec::new();
+            movers.clear();
             for &i in touched.iter() {
                 let desired = match jobs[i].state {
                     State::Exploring => explore_reserve,
-                    State::Ready if jobs[i].w > 0 => jobs[i].w,
+                    State::Ready if hot[i].w > 0 => hot[i].w,
                     _ => 0,
                 };
                 if desired == jobs[i].held {
@@ -647,10 +736,11 @@ pub fn simulate_traced(
                 jobs[i].nodes = cluster.nodes_spanned(id);
             }
         }
-        // refresh cached speeds wherever (w, nodes) may have moved
+        // refresh cached speeds wherever (w, nodes) may have moved —
+        // this also voids those jobs' completion-scan prune bounds
         for &i in touched.iter() {
-            if jobs[i].w > 0 {
-                jobs[i].refresh_secs(cfg);
+            if hot[i].w > 0 {
+                refresh_secs(&jobs[i], cfg, &mut hot[i]);
             }
         }
         // Contention-on: any place/release can change the tenancy of
@@ -662,14 +752,14 @@ pub fn simulate_traced(
         // O(active × nodes) per event, paid only when the law is on.
         if contended {
             for &i in ready.iter() {
-                let j = &mut jobs[i];
-                if j.w == 0 {
+                if hot[i].w == 0 {
                     continue;
                 }
+                let j = &mut jobs[i];
                 let t = if j.nodes > 1 { cluster.tenancy_of(i as u64) } else { 1 };
                 if t != j.tenants {
                     j.tenants = t;
-                    j.refresh_secs(cfg);
+                    refresh_secs(&jobs[i], cfg, &mut hot[i]);
                 }
             }
         }
@@ -716,7 +806,7 @@ pub fn simulate_traced(
                     ],
                 ));
             }
-            let used: usize = ready.iter().map(|&i| jobs[i].w).sum::<usize>()
+            let used: usize = ready.iter().map(|&i| hot[i].w).sum::<usize>()
                 + explore_reserve * exploring.len();
             sink.sample("ready_len", ready.len() as f64);
             sink.sample("explore_heap", exploring.len() as f64);
@@ -726,8 +816,8 @@ pub fn simulate_traced(
                 vec![
                     ("used", Json::num(used as f64)),
                     ("capacity", Json::num(cfg.capacity as f64)),
-                    ("running", Json::num(ready.iter().filter(|&&i| jobs[i].w > 0).count() as f64)),
-                    ("queued", Json::num(ready.iter().filter(|&&i| jobs[i].w == 0).count() as f64)),
+                    ("running", Json::num(ready.iter().filter(|&&i| hot[i].w > 0).count() as f64)),
+                    ("queued", Json::num(ready.iter().filter(|&&i| hot[i].w == 0).count() as f64)),
                     ("waiting", Json::num(waiting.len() as f64)),
                     ("exploring", Json::num(exploring.len() as f64)),
                 ],
@@ -743,6 +833,12 @@ pub fn simulate_traced(
         peak_concurrent = peak_concurrent.max(concurrent);
 
         // ---- 3. find the next event --------------------------------------
+        // The completion scan, optionally pruned by each job's finish
+        // lower bound. A skipped job's true candidate provably cannot
+        // lower `next`, so the `f64::min` chain over the survivors is
+        // the historical chain over a superset — same winner, same bits
+        // (invariant spelled out on `Hot::finish_bound`; both paths
+        // CI-tested via RINGMASTER_PRUNE and the golden-parity matrix).
         let mut next = f64::INFINITY;
         if next_arrival < arrival_order.len() {
             next = next.min(jobs[arrival_order[next_arrival]].profile.arrival);
@@ -751,12 +847,25 @@ pub fn simulate_traced(
             next = next.min(k.t);
         }
         for &i in &ready {
-            let j = &jobs[i];
-            if j.w > 0 {
-                let start = now.max(j.busy_until);
-                let finish = start + j.remaining_epochs * j.secs_placed;
+            let h = &mut hot[i];
+            if h.w > 0 {
+                scan_candidates += 1;
+                if prune && h.finish_bound >= next && h.bound_age < BOUND_MAX_AGE {
+                    h.bound_age += 1;
+                    scan_skipped += 1;
+                    continue;
+                }
+                let start = now.max(h.busy_until);
+                let finish = start + h.remaining_epochs * h.secs_placed;
+                h.finish_bound = finish * BOUND_DISCOUNT;
+                h.bound_age = 0;
                 next = next.min(finish);
             }
+        }
+        if let Some(m) = mark.as_mut() {
+            let t = std::time::Instant::now();
+            sink.phase_secs("scan", t.duration_since(*m).as_secs_f64());
+            *m = t;
         }
         if !next.is_finite() {
             break; // nothing left to happen
@@ -765,11 +874,11 @@ pub fn simulate_traced(
 
         // ---- 4. progress running jobs to `next` ---------------------------
         for &i in &ready {
-            let j = &mut jobs[i];
-            if j.w > 0 {
-                let start = now.max(j.busy_until);
+            let h = &mut hot[i];
+            if h.w > 0 {
+                let start = now.max(h.busy_until);
                 let dt = (next - start).max(0.0);
-                j.remaining_epochs = (j.remaining_epochs - dt / j.secs_placed).max(0.0);
+                h.remaining_epochs = (h.remaining_epochs - dt / h.secs_placed).max(0.0);
             }
         }
         if let Some(m) = mark.as_ref() {
@@ -811,6 +920,8 @@ pub fn simulate_traced(
         total_rescales,
         completion_secs,
         events,
+        scan_candidates,
+        scan_skipped,
     }
 }
 
@@ -1109,6 +1220,65 @@ mod tests {
         for (a, b) in flat.completion_secs.iter().zip(&grid.completion_secs) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn pruner_on_and_off_are_bit_identical_and_it_actually_skips() {
+        // The completion-scan pruner's whole contract: flipping it must
+        // not move a single bit, and on a busy workload it must earn
+        // its keep. fixed-1 at extreme contention keeps the most jobs
+        // running concurrently — the scan-heaviest regime.
+        for (s, topo) in [
+            (StrategyKind::Fixed(1), None),
+            (StrategyKind::Precompute, Some((8usize, 8usize))),
+            (StrategyKind::Exploratory, Some((8, 8))),
+        ] {
+            let mut cfg = SimConfig::paper(s, Contention::Extreme, 3);
+            if let Some((n, g)) = topo {
+                cfg = cfg.with_topology(n, g);
+            }
+            let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 3);
+            let on = simulate(&cfg, &jobs);
+            cfg.completion_prune = false;
+            let off = simulate(&cfg, &jobs);
+            assert_eq!(
+                on.avg_completion_hours.to_bits(),
+                off.avg_completion_hours.to_bits(),
+                "{}: avg moved under pruning",
+                on.strategy
+            );
+            assert_eq!(on.total_rescales, off.total_rescales, "{}", on.strategy);
+            assert_eq!(on.events, off.events, "{}", on.strategy);
+            for (i, (a, b)) in on.completion_secs.iter().zip(&off.completion_secs).enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} job {i}", on.strategy);
+            }
+            // candidate counts are prune-invariant; skips only exist
+            // on the pruned path
+            assert_eq!(on.scan_candidates, off.scan_candidates, "{}", on.strategy);
+            assert_eq!(off.scan_skipped, 0, "{}", off.strategy);
+            assert!(
+                on.scan_skipped > 0,
+                "{}: pruner never skipped on a scan-heavy run ({} candidates)",
+                on.strategy,
+                on.scan_candidates
+            );
+        }
+    }
+
+    #[test]
+    fn prune_bound_slack_dominates_drift_over_max_age() {
+        // The invariant's arithmetic: the slack must exceed the worst
+        // per-event drift (≲4 ulps relative) accumulated over the age
+        // cap, with at least 10x margin (DESIGN.md §15.2).
+        let drift_per_event = 4.0 * f64::EPSILON;
+        let worst = drift_per_event * BOUND_MAX_AGE as f64;
+        assert!(
+            (1.0 - BOUND_DISCOUNT) >= 10.0 * worst,
+            "slack {} vs worst-case drift {}",
+            1.0 - BOUND_DISCOUNT,
+            worst
+        );
     }
 
     #[test]

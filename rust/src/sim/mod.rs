@@ -19,10 +19,12 @@
 
 pub mod des;
 pub mod reference;
+pub mod sweep;
 pub mod workload;
 
 pub use des::{simulate, simulate_traced, SimResult};
 pub use reference::simulate_reference;
+pub use sweep::{parallel_map, run_cells, SweepCell};
 pub use workload::{JobProfile, WorkloadGen};
 
 use crate::cluster::{PlacePolicy, Topology};
@@ -94,6 +96,12 @@ pub struct SimConfig {
     /// contention-free engine — every pricing call structurally
     /// delegates to the PR-3 path, bit for bit.
     pub link_contention: LinkContention,
+    /// Completion-scan pruner (DESIGN.md §15): skip running jobs whose
+    /// monotone finish-time lower bound already exceeds the best
+    /// candidate. On or off, the next-event instant is bit-identical by
+    /// construction; the switch exists so CI can prove that claim on
+    /// both code paths. Default: on.
+    pub completion_prune: bool,
 }
 
 impl SimConfig {
@@ -117,6 +125,7 @@ impl SimConfig {
             placement: PlacementModel::paper(),
             place_policy: PlacePolicy::Pack,
             link_contention: LinkContention::OFF,
+            completion_prune: true,
         }
     }
 
@@ -126,6 +135,22 @@ impl SimConfig {
         self.topology = Topology::cluster(nodes, gpus_per_node);
         self.capacity = self.topology.capacity();
         self
+    }
+}
+
+/// `RINGMASTER_PRUNE` env override for [`SimConfig::completion_prune`]:
+/// `0`/`off`/`false` disables the completion-scan pruner, `1`/`on`/`true`
+/// forces it, unset or unrecognised leaves the config default. The CLI,
+/// the scale benches, and `tests/scale_smoke.rs` all honor it so CI can
+/// run the whole suite down either code path.
+pub fn prune_from_env() -> Option<bool> {
+    match std::env::var("RINGMASTER_PRUNE") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "0" | "off" | "false" | "no" => Some(false),
+            "1" | "on" | "true" | "yes" => Some(true),
+            _ => None,
+        },
+        Err(_) => None,
     }
 }
 

@@ -280,5 +280,9 @@ pub fn simulate_reference(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult
         total_rescales,
         completion_secs,
         events,
+        // Scan diagnostics belong to the event-heap engine; the frozen
+        // oracle reports zeros (and parity never compares them).
+        scan_candidates: 0,
+        scan_skipped: 0,
     }
 }

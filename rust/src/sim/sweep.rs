@@ -1,0 +1,188 @@
+//! Parallel sweep runner: fan independent `(config, workload)` cells
+//! across OS threads and collect their [`SimResult`]s **in submission
+//! order**.
+//!
+//! The determinism contract (DESIGN.md §15.3): every cell is a pure
+//! function of its own `(SimConfig, Vec<JobProfile>)` — `simulate`
+//! takes no global state, allocates its own cluster ledger, and never
+//! reads the clock — so the output vector is a pure function of the
+//! input slice regardless of worker count or OS scheduling. Threads
+//! only change *when* a cell runs, never *what* it computes, and the
+//! per-slot collection below erases completion order. `--threads 1`
+//! and `--threads 64` are therefore byte-identical by construction,
+//! and `tests/sweep_invariance.rs` + the golden-parity matrix pin it.
+//!
+//! No new dependencies: plain `std::thread::scope` (vendor/ carries
+//! only `anyhow` and the `xla` shim). Worker panics propagate to the
+//! caller when the scope joins, so a failing cell fails the sweep
+//! loudly instead of yielding a hole.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::des::{simulate, SimResult};
+use super::workload::JobProfile;
+use super::SimConfig;
+
+/// One unit of sweep work: a simulator config plus the trace it runs.
+/// The trace is behind an `Arc` so seed×strategy grids can race many
+/// strategies over one shared workload without cloning 100k-job
+/// vectors per cell (the tables inside `JobProfile` are themselves
+/// `Arc`-shared across threads — see the Send/Sync contract tests in
+/// `scheduler`).
+#[derive(Clone)]
+pub struct SweepCell {
+    pub cfg: SimConfig,
+    pub jobs: Arc<Vec<JobProfile>>,
+}
+
+impl SweepCell {
+    pub fn new(cfg: SimConfig, jobs: Arc<Vec<JobProfile>>) -> SweepCell {
+        SweepCell { cfg, jobs }
+    }
+}
+
+/// Map `f` over `items` on `threads` workers, returning results in
+/// input order. A strict generalization of `items.iter().map(f)`:
+/// with `threads <= 1` (or one item) it *is* the serial loop on the
+/// caller's thread; otherwise workers claim indices from a shared
+/// atomic cursor and deposit into per-slot boxes, so no ordering
+/// information survives the join. `f` must be pure w.r.t. shared
+/// state for the determinism contract to hold — all ringmaster sim
+/// entry points are.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(|it| f(it)).collect();
+    }
+    let slots: Vec<Mutex<Option<R>>> = (0..items.len()).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let workers = threads.min(items.len());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("sweep: worker left an empty slot"))
+        .collect()
+}
+
+/// Run a batch of sweep cells on `threads` workers; `results[i]` is
+/// always cell `i`'s result.
+pub fn run_cells(cells: &[SweepCell], threads: usize) -> Vec<SimResult> {
+    parallel_map(cells, threads, |c| simulate(&c.cfg, &c.jobs))
+}
+
+/// Resolve a worker count: explicit request > `RINGMASTER_THREADS`
+/// env > all available cores. Zero (from either source) means "auto".
+pub fn resolve_threads(explicit: Option<usize>) -> usize {
+    match explicit {
+        Some(n) if n > 0 => n,
+        _ => match threads_from_env() {
+            Some(n) => n,
+            None => default_threads(),
+        },
+    }
+}
+
+/// `RINGMASTER_THREADS` if set to a positive integer, else `None`.
+pub fn threads_from_env() -> Option<usize> {
+    std::env::var("RINGMASTER_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+}
+
+/// The machine's available parallelism (1 if unknown).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Contention, StrategyKind, WorkloadGen};
+
+    // The whole module is sound only because cells and results cross
+    // thread boundaries; pin that at compile time so a future field
+    // (an Rc cache, a RefCell memo) breaks the build here, with a
+    // message, instead of deep inside a thread::scope bound.
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn sweep_types_are_send_sync() {
+        assert_send_sync::<SweepCell>();
+        assert_send_sync::<SimConfig>();
+        assert_send_sync::<JobProfile>();
+        assert_send_sync::<SimResult>();
+    }
+
+    #[test]
+    fn parallel_map_preserves_input_order() {
+        let items: Vec<usize> = (0..97).collect();
+        for threads in [1usize, 3, 8] {
+            let out = parallel_map(&items, threads, |&i| i * i);
+            let want: Vec<usize> = items.iter().map(|&i| i * i).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_batches_work() {
+        let none: Vec<u32> = vec![];
+        assert!(parallel_map(&none, 8, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 8, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn run_cells_matches_serial_simulate_bit_for_bit() {
+        let mut cells = Vec::new();
+        for seed in [11u64, 23] {
+            for s in [StrategyKind::Precompute, StrategyKind::Fixed(4)] {
+                let cfg = SimConfig::paper(s, Contention::None, seed).with_topology(8, 8);
+                let jobs = Arc::new(
+                    WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed),
+                );
+                cells.push(SweepCell::new(cfg, jobs));
+            }
+        }
+        let serial: Vec<SimResult> = cells.iter().map(|c| simulate(&c.cfg, &c.jobs)).collect();
+        for threads in [2usize, 4] {
+            let par = run_cells(&cells, threads);
+            assert_eq!(par.len(), serial.len());
+            for (i, (a, b)) in par.iter().zip(&serial).enumerate() {
+                assert_eq!(
+                    a.avg_completion_hours.to_bits(),
+                    b.avg_completion_hours.to_bits(),
+                    "cell {i} threads {threads}: avg diverged"
+                );
+                assert_eq!(a.total_rescales, b.total_rescales, "cell {i}");
+                assert_eq!(a.events, b.events, "cell {i}");
+                for (j, (x, y)) in a.completion_secs.iter().zip(&b.completion_secs).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "cell {i} job {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_threads_prefers_explicit_over_auto() {
+        assert_eq!(resolve_threads(Some(3)), 3);
+        // Zero means auto — must resolve to something positive.
+        assert!(resolve_threads(Some(0)) >= 1);
+        assert!(resolve_threads(None) >= 1);
+    }
+}

@@ -48,6 +48,15 @@ pub const TELEMETRY_VERSION: u64 = 3;
 pub trait Sink {
     /// Gate: engines skip event construction entirely when false.
     fn enabled(&self) -> bool;
+    /// Gate for wall-clock self-profiling only. Defaults to
+    /// [`Sink::enabled`] so existing sinks are unchanged; a sink may
+    /// override it to collect [`Sink::phase_secs`] *without* paying
+    /// for the event stream (see [`PhaseProfiler`]) — at 100k-job
+    /// scale the stream is gigabytes, the phase table is a dozen
+    /// floats.
+    fn profiling(&self) -> bool {
+        self.enabled()
+    }
     /// Record one structured event (built with [`event`]).
     fn emit(&mut self, ev: Json);
     /// Bump a named counter.
@@ -75,6 +84,49 @@ impl Sink for NullSink {
     fn count(&mut self, _name: &'static str, _delta: u64) {}
     fn sample(&mut self, _name: &'static str, _value: f64) {}
     fn phase_secs(&mut self, _name: &'static str, _secs: f64) {}
+}
+
+/// Phase-timings-only sink: `enabled()` is false (the engine builds no
+/// events, touches no counters — the hot loop stays the telemetry-off
+/// loop except for four `Instant::now()` reads per event), but
+/// `profiling()` is true, so `phase_secs` accumulates. This is what the
+/// scale benches run through to attribute wall time to engine phases
+/// (fire / reallocate / scan / advance) at job counts where a full
+/// [`Recorder`] would distort the measurement it is taking.
+#[derive(Debug, Default)]
+pub struct PhaseProfiler {
+    phases: BTreeMap<&'static str, Stat>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        PhaseProfiler::default()
+    }
+
+    /// `(phase, calls, total_secs)` rows in phase-name order.
+    pub fn totals(&self) -> Vec<(&'static str, u64, f64)> {
+        self.phases.iter().map(|(&k, s)| (k, s.count(), s.mean() * s.count() as f64)).collect()
+    }
+
+    /// Total wall seconds attributed across all phases.
+    pub fn total_secs(&self) -> f64 {
+        self.totals().iter().map(|&(_, _, t)| t).sum()
+    }
+}
+
+impl Sink for PhaseProfiler {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn profiling(&self) -> bool {
+        true
+    }
+    fn emit(&mut self, _ev: Json) {}
+    fn count(&mut self, _name: &'static str, _delta: u64) {}
+    fn sample(&mut self, _name: &'static str, _value: f64) {}
+    fn phase_secs(&mut self, name: &'static str, secs: f64) {
+        self.phases.entry(name).or_insert_with(Stat::new).push(secs);
+    }
 }
 
 /// Build one telemetry event: `{"ev":kind,"t":t, ...fields}`. Keys are
@@ -218,10 +270,34 @@ mod tests {
     fn null_sink_is_disabled_and_inert() {
         let mut s = NullSink;
         assert!(!s.enabled());
+        assert!(!s.profiling(), "profiling() must follow enabled() by default");
         s.emit(event("x", 0.0, vec![]));
         s.count("c", 1);
         s.sample("s", 1.0);
         s.phase_secs("p", 0.1);
+    }
+
+    #[test]
+    fn recorder_profiles_by_default() {
+        // the default-method contract: an enabled sink profiles unless
+        // it opts out
+        assert!(Recorder::new().profiling());
+    }
+
+    #[test]
+    fn phase_profiler_collects_timings_without_events() {
+        let mut p = PhaseProfiler::new();
+        assert!(!p.enabled());
+        assert!(p.profiling());
+        p.emit(event("x", 0.0, vec![])); // must be inert
+        p.phase_secs("scan", 0.25);
+        p.phase_secs("scan", 0.75);
+        p.phase_secs("fire", 0.5);
+        let rows = p.totals();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "fire");
+        assert_eq!(rows[1], ("scan", 2, 1.0));
+        assert!((p.total_secs() - 1.5).abs() < 1e-12);
     }
 
     #[test]

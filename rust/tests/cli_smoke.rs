@@ -9,10 +9,13 @@ const SUBCOMMANDS: [&str; 8] =
 
 fn bin() -> Command {
     let mut c = Command::new(env!("CARGO_BIN_EXE_ringmaster"));
-    // pin the backend-selection env so the smoke tests exercise the
-    // bare-checkout path regardless of the invoking shell's exports
+    // pin the backend-selection and sweep-tuning env so the smoke tests
+    // exercise the bare-checkout defaults regardless of the invoking
+    // shell's exports
     c.env_remove("RINGMASTER_BACKEND");
     c.env_remove("RINGMASTER_ARTIFACTS");
+    c.env_remove("RINGMASTER_THREADS");
+    c.env_remove("RINGMASTER_PRUNE");
     c
 }
 
@@ -118,6 +121,38 @@ fn simulate_trace_scale_runs_a_heavy_tailed_workload() {
         .unwrap_or_else(|| panic!("no optimus row in output:\n{text}"));
     let jobs_cell = row.split_whitespace().nth(3).unwrap_or("");
     assert_eq!(jobs_cell, "60", "completed-jobs column should read exactly 60:\n{text}");
+}
+
+#[test]
+fn simulate_all_is_byte_identical_across_thread_counts() {
+    // the sweep runner's determinism contract, end to end: the printed
+    // Table 3 must be a pure function of the flags, so fanning the
+    // 18-cell --all sweep across 1 worker and 8 workers has to produce
+    // byte-identical stdout (--n-jobs keeps the cells tier-1 cheap)
+    let run = |threads: &str| {
+        let out = bin()
+            .args(["simulate", "--all", "--n-jobs", "24", "--seed", "7", "--threads", threads])
+            .output()
+            .expect("run binary");
+        assert!(
+            out.status.success(),
+            "simulate --all --threads {threads} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out.stdout
+    };
+    let serial = run("1");
+    let fanned = run("8");
+    assert!(
+        serial == fanned,
+        "--threads 1 vs --threads 8 stdout diverged:\n--- 1 ---\n{}\n--- 8 ---\n{}",
+        String::from_utf8_lossy(&serial),
+        String::from_utf8_lossy(&fanned)
+    );
+    assert!(
+        String::from_utf8_lossy(&serial).lines().any(|l| l.trim_start().starts_with("fixed-1")),
+        "sweep output is missing Table 3 rows"
+    );
 }
 
 #[test]

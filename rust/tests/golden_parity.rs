@@ -5,8 +5,10 @@
 //! reconciles against the placement ledger — never when the scheduler
 //! runs, what it sees, or the order anything is placed. These tests pin
 //! that claim on the paper config across every strategy (the six Table 3
-//! rows plus the optimus baseline), three topologies (flat, the
-//! degenerate 1×64 grid, the paper's 8×8 grid), and three seeds:
+//! rows plus the optimus baseline), four topologies (flat, the
+//! degenerate 1×64 grid, the paper's 8×8 grid, the scale sweep's 16×8
+//! grid), three seeds, the PR-8 completion-scan pruner both on and off,
+//! and the PR-8 sweep runner at 1 and 4 workers:
 //! `avg_completion_hours`, `total_rescales`, `makespan_hours`, and every
 //! per-job `completion_secs` must agree to the last bit, and the event
 //! counts must match exactly (same instants fired).
@@ -18,11 +20,13 @@
 //! true pre-PR-5 engine even though both engines here link the new
 //! scheduler code.
 
+use std::sync::Arc;
+
 use ringmaster::cluster::PlacePolicy;
 use ringmaster::perfmodel::{LinkContention, PlacementModel};
 use ringmaster::sim::{
-    simulate, simulate_reference, simulate_traced, Contention, SimConfig, SimResult,
-    StrategyKind, WorkloadGen,
+    simulate, simulate_reference, simulate_traced, sweep, Contention, SimConfig, SimResult,
+    StrategyKind, SweepCell, WorkloadGen,
 };
 use ringmaster::telemetry::Recorder;
 
@@ -55,50 +59,75 @@ fn strategies() -> Vec<StrategyKind> {
     v
 }
 
-fn parity_case(strategy: StrategyKind, topo: Option<(usize, usize)>, seed: u64) {
-    let mut cfg = SimConfig::paper(strategy, Contention::Moderate, seed);
-    let label = match topo {
-        Some((n, g)) => {
-            cfg = cfg.with_topology(n, g);
-            format!("{} {}x{} seed {seed}", strategy.name(), n, g)
-        }
-        None => format!("{} flat seed {seed}", strategy.name()),
-    };
-    let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, seed);
-    let heap = simulate(&cfg, &jobs);
-    let scan = simulate_reference(&cfg, &jobs);
-    assert_bit_identical(&heap, &scan, &label);
-}
-
-#[test]
-fn flat_pool_parity_all_strategies_three_seeds() {
+/// The PR-8 parity matrix for one topology: every strategy × three
+/// seeds, the scan oracle run once per case, then the event-heap engine
+/// re-run through the [`sweep`] runner with the completion-scan pruner
+/// on AND off, at 1 and 4 workers — four heap runs per case, each
+/// bit-identical to the oracle. One call covers the full
+/// `{threads} × {strategy} × {seed} × {prune}` cube for its topology.
+fn sweep_matrix_parity(topo: Option<(usize, usize)>) {
+    let mut cells: Vec<SweepCell> = Vec::new();
+    let mut oracle: Vec<SimResult> = Vec::new();
+    let mut labels: Vec<String> = Vec::new();
     for seed in [11u64, 23, 42] {
+        // n_jobs / mean_interarrival are the paper defaults for every
+        // strategy, so the trace depends on the seed alone — generate it
+        // once and Arc-share it across the whole strategy column.
+        let base = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, seed);
+        let jobs =
+            Arc::new(WorkloadGen::default().generate(base.n_jobs, base.mean_interarrival, seed));
         for s in strategies() {
-            parity_case(s, None, seed);
+            let mut cfg = SimConfig::paper(s, Contention::Moderate, seed);
+            let label = match topo {
+                Some((n, g)) => {
+                    cfg = cfg.with_topology(n, g);
+                    format!("{} {n}x{g} seed {seed}", s.name())
+                }
+                None => format!("{} flat seed {seed}", s.name()),
+            };
+            oracle.push(simulate_reference(&cfg, &jobs));
+            for prune in [true, false] {
+                let mut c = cfg.clone();
+                c.completion_prune = prune;
+                cells.push(SweepCell::new(c, jobs.clone()));
+                labels.push(format!("{label} prune={prune}"));
+            }
+        }
+    }
+    for threads in [1usize, 4] {
+        let results = sweep::run_cells(&cells, threads);
+        for (i, r) in results.iter().enumerate() {
+            // cells come two per oracle case (prune on, prune off)
+            assert_bit_identical(r, &oracle[i / 2], &format!("{} @{threads}t", labels[i]));
         }
     }
 }
 
 #[test]
-fn degenerate_grid_parity_all_strategies_three_seeds() {
+fn flat_pool_sweep_parity_all_strategies_threads_and_prune() {
+    sweep_matrix_parity(None);
+}
+
+#[test]
+fn degenerate_grid_sweep_parity_all_strategies_threads_and_prune() {
     // 1×64: every ring spans one node — the ledger runs but every
     // penalty is zero, so this catches dirty-tracking bugs that flat
     // (which skips the ledger entirely) cannot.
-    for seed in [11u64, 23, 42] {
-        for s in strategies() {
-            parity_case(s, Some((1, 64)), seed);
-        }
-    }
+    sweep_matrix_parity(Some((1, 64)));
 }
 
 #[test]
-fn paper_grid_parity_all_strategies_three_seeds() {
+fn paper_grid_sweep_parity_all_strategies_threads_and_prune() {
     // 8×8: real spans, real penalties, real re-packs.
-    for seed in [11u64, 23, 42] {
-        for s in strategies() {
-            parity_case(s, Some((8, 8)), seed);
-        }
-    }
+    sweep_matrix_parity(Some((8, 8)));
+}
+
+#[test]
+fn tall_grid_sweep_parity_all_strategies_threads_and_prune() {
+    // 16×8: the scale sweep's grid — more nodes than any gang needs,
+    // so best-fit has real choices and the pruner sees reallocation
+    // churn from re-packs it must invalidate against.
+    sweep_matrix_parity(Some((16, 8)));
 }
 
 #[test]
@@ -187,6 +216,37 @@ fn telemetry_streams_are_byte_identical_per_seed() {
         assert_eq!(stream(seed), stream(seed), "seed {seed}: stream bytes diverged");
     }
     assert_ne!(stream(11), stream(23), "different seeds produced identical streams");
+}
+
+#[test]
+fn nan_arrival_never_arrives_identically_under_both_engines() {
+    // A malformed NaN arrival must degrade the same way everywhere: the
+    // job never arrives (NaN completion), every well-formed job still
+    // completes, and the two engines stay bit-identical. The heap engine
+    // excludes NaN arrivals from its cursor up front; the scan oracle
+    // relies on `f64::min` ignoring NaN and `arrival <= now` being false
+    // — different mechanisms, same semantics, pinned here so neither the
+    // pruner nor any future fast path can fork them. Flat and grid, with
+    // the pruner on and off (NaN never poisons the bound: NaN >= next is
+    // false, so the skip test always falls through to the live compute).
+    for &(nodes, gpn) in &[(0usize, 0usize), (8usize, 8usize)] {
+        for prune in [true, false] {
+            let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 5);
+            if nodes > 0 {
+                cfg = cfg.with_topology(nodes, gpn);
+            }
+            cfg.n_jobs = 12;
+            cfg.completion_prune = prune;
+            let mut jobs = WorkloadGen::default().generate(12, cfg.mean_interarrival, 5);
+            jobs[3].arrival = f64::NAN;
+            let heap = simulate(&cfg, &jobs);
+            let scan = simulate_reference(&cfg, &jobs);
+            let label = format!("nan-arrival {nodes}x{gpn} prune={prune}");
+            assert_eq!(heap.completed, 11, "{label}: well-formed jobs must all finish");
+            assert!(heap.completion_secs[3].is_nan(), "{label}: NaN job must never complete");
+            assert_bit_identical(&heap, &scan, &label);
+        }
+    }
 }
 
 #[test]

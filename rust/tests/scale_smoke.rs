@@ -6,13 +6,26 @@
 //! must neither trip the scaled convergence guard nor strand jobs. The
 //! full {100 … 100k} sweep lives in `benches/scale_sweep.rs`; this is
 //! the cheap regression tripwire.
+//!
+//! Every config honors `RINGMASTER_PRUNE`, and CI runs this file twice —
+//! once with the completion-scan pruner forced on, once forced off — so
+//! both scan paths stay exercised at scale on every push.
 
 use ringmaster::cluster::Topology;
-use ringmaster::sim::{simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+use ringmaster::sim::{prune_from_env, simulate, Contention, SimConfig, StrategyKind, WorkloadGen};
+
+/// Apply the CI matrix's `RINGMASTER_PRUNE` override, if any.
+fn with_env_prune(mut cfg: SimConfig) -> SimConfig {
+    if let Some(p) = prune_from_env() {
+        cfg.completion_prune = p;
+    }
+    cfg
+}
 
 #[test]
 fn thousand_job_trace_completes_under_doubling() {
-    let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 7);
+    let mut cfg =
+        with_env_prune(SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 7));
     cfg.capacity = 128;
     cfg.topology = Topology::flat(128);
     cfg.n_jobs = 1000;
@@ -34,8 +47,9 @@ fn thousand_job_trace_completes_under_doubling() {
 fn grid_scale_trace_completes_under_optimus() {
     // the 16×8 grid exercises the dirty-tracked ledger at scale; a
     // smaller n keeps tier-1 fast while still ~10x the paper workload
-    let mut cfg =
-        SimConfig::paper(StrategyKind::Optimus, Contention::Moderate, 9).with_topology(16, 8);
+    let mut cfg = with_env_prune(
+        SimConfig::paper(StrategyKind::Optimus, Contention::Moderate, 9).with_topology(16, 8),
+    );
     cfg.n_jobs = 400;
     let jobs = WorkloadGen::trace_scale(400, 128, 9);
     let r = simulate(&cfg, &jobs);
@@ -48,11 +62,39 @@ fn scaled_guard_admits_legitimate_large_replays() {
     // regression for the old fixed `guard < 10_000_000`: a legitimate
     // large replay must complete without tripping the convergence
     // guard, whose limit now grows with the trace (10M + 200/job).
-    let mut cfg = SimConfig::paper(StrategyKind::Fixed(8), Contention::Moderate, 3);
+    let mut cfg = with_env_prune(SimConfig::paper(StrategyKind::Fixed(8), Contention::Moderate, 3));
     cfg.capacity = 128;
     cfg.topology = Topology::flat(128);
     cfg.n_jobs = 5000;
     let jobs = WorkloadGen::trace_scale(5000, 128, 3);
     let r = simulate(&cfg, &jobs);
     assert_eq!(r.completed, 5000);
+}
+
+#[test]
+fn pruner_on_and_off_agree_bit_for_bit_at_scale() {
+    // independent of what RINGMASTER_PRUNE the CI matrix sets, pin the
+    // pruner's bit-parity claim at tripwire scale: the exact same 1k-job
+    // replay down both scan paths, every statistic and per-job
+    // completion identical to the last bit, and the pruned path actually
+    // skipping (a pruner that never fires would pass parity vacuously).
+    let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 7);
+    cfg.capacity = 128;
+    cfg.topology = Topology::flat(128);
+    cfg.n_jobs = 1000;
+    let jobs = WorkloadGen::trace_scale(1000, 128, 7);
+    cfg.completion_prune = true;
+    let on = simulate(&cfg, &jobs);
+    cfg.completion_prune = false;
+    let off = simulate(&cfg, &jobs);
+    assert_eq!(on.avg_completion_hours.to_bits(), off.avg_completion_hours.to_bits());
+    assert_eq!(on.makespan_hours.to_bits(), off.makespan_hours.to_bits());
+    assert_eq!(on.total_rescales, off.total_rescales);
+    assert_eq!(on.events, off.events);
+    for (i, (a, b)) in on.completion_secs.iter().zip(&off.completion_secs).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "job {i} completion diverged under pruning");
+    }
+    assert_eq!(on.scan_candidates, off.scan_candidates, "candidate count is prune-invariant");
+    assert!(on.scan_skipped > 0, "pruner never fired on a 1k-job replay");
+    assert_eq!(off.scan_skipped, 0, "unpruned path reported skips");
 }

@@ -1,0 +1,104 @@
+//! Thread-count invariance of the `sim::sweep` runner (PR 8).
+//!
+//! The runner's whole contract is that worker count is invisible in the
+//! results: cells are pure functions of `(cfg, jobs)`, workers share
+//! nothing but immutable inputs (Arc'd traces, speed tables), and
+//! results land in submission order. This file pins that contract at
+//! the `SimResult` level — every statistic and every per-job completion
+//! bit-identical between 1 and 8 workers, and both identical to a plain
+//! serial `simulate` call — across flat and 16×8 grids, link contention
+//! off and on, and three seeds. The CLI-level half of the claim (stdout
+//! bytes of `simulate --all`) lives in `cli_smoke.rs`; the
+//! vs-scan-oracle half in `golden_parity.rs`.
+
+use std::sync::Arc;
+
+use ringmaster::cluster::Topology;
+use ringmaster::perfmodel::{LinkContention, PlacementModel};
+use ringmaster::sim::{
+    simulate, sweep, Contention, SimConfig, SimResult, StrategyKind, SweepCell, WorkloadGen,
+};
+
+const N_JOBS: usize = 200;
+const SEEDS: [u64; 3] = [7, 11, 13];
+
+fn assert_bits(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(
+        a.avg_completion_hours.to_bits(),
+        b.avg_completion_hours.to_bits(),
+        "{label}: avg_completion_hours"
+    );
+    assert_eq!(a.makespan_hours.to_bits(), b.makespan_hours.to_bits(), "{label}: makespan");
+    assert_eq!(a.total_rescales, b.total_rescales, "{label}: total_rescales");
+    assert_eq!(a.completed, b.completed, "{label}: completed");
+    assert_eq!(a.peak_concurrent, b.peak_concurrent, "{label}: peak_concurrent");
+    assert_eq!(a.events, b.events, "{label}: events");
+    assert_eq!(a.scan_candidates, b.scan_candidates, "{label}: scan_candidates");
+    assert_eq!(a.scan_skipped, b.scan_skipped, "{label}: scan_skipped");
+    for (i, (x, y)) in a.completion_secs.iter().zip(&b.completion_secs).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: job {i} completion");
+    }
+}
+
+/// The invariance matrix: {flat(128), 16×8} × {contention off, on} ×
+/// three seeds. The contended arms use fixed-6 gangs (forced 6+2 splits
+/// on 8-wide nodes) and a comm-bound payload so uplink sharing — the
+/// most state-heavy engine path — is genuinely in play; on the flat
+/// pool the same law is inert by construction, which is itself part of
+/// the claim (enabling it must change nothing without links to share).
+fn cells() -> (Vec<SweepCell>, Vec<String>) {
+    let mut cells = Vec::new();
+    let mut labels = Vec::new();
+    for grid in [false, true] {
+        for contended in [false, true] {
+            for &seed in &SEEDS {
+                let strategy =
+                    if contended { StrategyKind::Fixed(6) } else { StrategyKind::Precompute };
+                let mut cfg = SimConfig::paper(strategy, Contention::Moderate, seed);
+                cfg.n_jobs = N_JOBS;
+                if grid {
+                    cfg = cfg.with_topology(16, 8);
+                } else {
+                    cfg.capacity = 128;
+                    cfg.topology = Topology::flat(128);
+                }
+                if contended {
+                    cfg.placement = PlacementModel::paper().with_model_bytes(1.0e8);
+                    cfg.link_contention = LinkContention::fair_share();
+                }
+                let jobs = Arc::new(WorkloadGen::trace_scale(N_JOBS, 128, seed));
+                labels.push(format!(
+                    "{} contended={contended} seed={seed}",
+                    if grid { "16x8" } else { "flat" }
+                ));
+                cells.push(SweepCell::new(cfg, jobs));
+            }
+        }
+    }
+    (cells, labels)
+}
+
+#[test]
+fn one_and_eight_workers_produce_identical_simresult_bits() {
+    let (cells, labels) = cells();
+    // ground truth: each cell run serially, no sweep machinery at all
+    let serial: Vec<SimResult> = cells.iter().map(|c| simulate(&c.cfg, &c.jobs)).collect();
+    for threads in [1usize, 8] {
+        let results = sweep::run_cells(&cells, threads);
+        assert_eq!(results.len(), cells.len(), "sweep dropped cells at {threads} workers");
+        for (i, (r, s)) in results.iter().zip(&serial).enumerate() {
+            assert_bits(r, s, &format!("{} @{threads}t", labels[i]));
+        }
+    }
+}
+
+#[test]
+fn every_matrix_cell_completes_its_trace() {
+    // guards the matrix itself: an arm that strands jobs would turn the
+    // invariance assertions above vacuous for the tail of the trace
+    let (cells, labels) = cells();
+    let results = sweep::run_cells(&cells, sweep::resolve_threads(None));
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.completed, N_JOBS, "{}: stranded jobs", labels[i]);
+    }
+}
