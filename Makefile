@@ -3,7 +3,7 @@
 # `make artifacts` needs python3 + jax (build-time only; see DESIGN.md §1).
 # Everything else is pure cargo and runs on a bare toolchain.
 
-.PHONY: all artifacts test bench bench-scale lint clean
+.PHONY: all artifacts test bench bench-scale bench-ckpt lint clean
 
 all:
 	cargo build --release
@@ -30,6 +30,12 @@ THREADS ?=
 PRUNE ?=
 bench-scale:
 	RINGMASTER_THREADS=$(THREADS) RINGMASTER_PRUNE=$(PRUNE) cargo bench --bench scale_sweep
+
+# 1024 jobs' snapshots through the content-addressed checkpoint store vs
+# whole-file Checkpoint::save: bytes written + restart latency per phase
+# (cold / resave / delta / load / drain); writes BENCH_CKPT.json.
+bench-ckpt:
+	cargo bench --bench bench_ckpt
 
 lint:
 	cargo fmt --all --check

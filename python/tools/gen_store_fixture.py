@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Generate artifacts/store_golden/ — the checked-in checkpoint-store
+fixture that pins the on-disk format of rust/src/store (a tripwire like
+telemetry_golden.jsonl: if the chunking, FNV-1a-128 addressing, or the
+snapshot envelope ever drifts, tests/store_fixture.rs fails).
+
+Reimplements, byte-for-byte, what `CkptStore::save` writes:
+
+  chunks/<32-hex-fnv1a128>.chunk   raw chunk content
+  snaps/golden.snap                [version byte 1] + compact JSON
+                                   manifest, keys sorted (jsonx dumps
+                                   BTreeMap order = lexicographic)
+
+The fixture checkpoint is tiny but exercises dedup: chunk 0 and chunk 2
+hold identical bytes, so 3 manifest refs map to 2 chunk files.
+
+Usage: python3 python/tools/gen_store_fixture.py  (from the repo root)
+"""
+
+import json
+import pathlib
+import struct
+
+SNAPSHOT_VERSION = 1
+CHUNK_BYTES = 32
+
+FNV128_OFFSET = 0x6C62272E07BB014262B821756295C58D
+FNV128_PRIME = 0x0000000001000000000000000000013B
+MASK128 = (1 << 128) - 1
+
+
+def fnv1a_128(data: bytes) -> int:
+    h = FNV128_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV128_PRIME) & MASK128
+    return h
+
+
+def le_f32(values) -> bytes:
+    return b"".join(struct.pack("<f", v) for v in values)
+
+
+def main() -> None:
+    root = pathlib.Path(__file__).resolve().parents[2]
+    out = root / "artifacts" / "store_golden"
+    chunks = out / "chunks"
+    snaps = out / "snaps"
+    chunks.mkdir(parents=True, exist_ok=True)
+    snaps.mkdir(parents=True, exist_ok=True)
+
+    # the fixture checkpoint (mirrored by tests/store_fixture.rs):
+    # mu[4..12] == theta[0..8], so chunk 2's bytes equal chunk 0's.
+    theta = [float(i) for i in range(1, 13)]
+    mu = [9.0, 9.0, 9.0, 9.0] + [float(i) for i in range(1, 9)]
+    payload = le_f32(theta) + le_f32(mu)
+    assert len(payload) == 96
+
+    hashes = []
+    for off in range(0, len(payload), CHUNK_BYTES):
+        chunk = payload[off : off + CHUNK_BYTES]
+        h = fnv1a_128(chunk)
+        hashes.append(h)
+        (chunks / f"{h:032x}.chunk").write_bytes(chunk)
+
+    manifest = {
+        "preset": "tiny",
+        "step": 7,
+        "epochs": 0.25,
+        "workers": 2,
+        "lr": 0.25,
+        "n_params": len(theta),
+        "chunk_bytes": CHUNK_BYTES,
+        "chunks": [f"{h:032x}" for h in hashes],
+    }
+    # compact + sorted == jsonx's dump of a BTreeMap-backed object
+    body = json.dumps(manifest, sort_keys=True, separators=(",", ":"))
+    (snaps / "golden.snap").write_bytes(bytes([SNAPSHOT_VERSION]) + body.encode())
+
+    uniq = sorted(set(hashes))
+    print(f"wrote {out}: {len(hashes)} refs over {len(uniq)} unique chunks")
+    for h in hashes:
+        print(f"  ref {h:032x}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+//! Checkpoint-store microbenchmark at fleet scale: 1024 concurrent
+//! jobs' snapshots through the content-addressed store vs the
+//! whole-file `Checkpoint::save` path.
+//!
+//! Phases:
+//!   cold      first save of every job (everything is new content)
+//!   resave    unchanged content again (the width-only-rescale restart:
+//!             the store commits only a manifest per job)
+//!   delta     a localized 1/8th of each payload mutated, then saved
+//!             (only dirtied chunks rewritten)
+//!   load      restore every job (restart latency)
+//!   drain     free every job; the store must GC to empty
+//!
+//! Each phase reports wall seconds and bytes written, alongside the
+//! whole-file baseline doing the same work. The dedup claims are
+//! asserted, not just printed.
+//!
+//! `cargo bench --bench bench_ckpt`
+
+use std::time::Instant;
+
+use ringmaster::jsonx::Json;
+use ringmaster::metrics::{BenchJson, CsvTable};
+use ringmaster::store::CkptStore;
+use ringmaster::trainer::Checkpoint;
+
+const JOBS: usize = 1024;
+const N_PARAMS: usize = 4096; // 32 KiB payload per snapshot
+const CHUNK_BYTES: usize = 4096; // 8 chunks per snapshot
+
+/// Deterministic per-job checkpoint; `round > 0` perturbs the first
+/// 1/8th of theta and of mu, so a delta save dirties 2 of the 8 chunks
+/// (the head chunk of each half) and leaves the rest content-identical.
+fn ck(job: usize, round: u32) -> Checkpoint {
+    let base = |i: usize| ((job * 31 + i) % 997) as f32 * 0.125;
+    let mut theta: Vec<f32> = (0..N_PARAMS).map(base).collect();
+    let mut mu: Vec<f32> = theta.iter().map(|t| t * -0.5).collect();
+    if round > 0 {
+        for (i, t) in theta.iter_mut().take(N_PARAMS / 8).enumerate() {
+            *t = round as f32 + i as f32 * 0.25;
+        }
+        for (i, m) in mu.iter_mut().take(N_PARAMS / 8).enumerate() {
+            *m = (round as f32 + i as f32 * 0.25) * -0.5;
+        }
+    }
+    Checkpoint {
+        preset: "tiny".into(),
+        step: round as u64,
+        epochs: 0.5,
+        workers: 2,
+        lr: 0.25,
+        theta,
+        mu,
+    }
+}
+
+fn key(job: usize) -> String {
+    format!("job-{job}")
+}
+
+fn main() -> ringmaster::Result<()> {
+    let root = std::env::temp_dir().join(format!("rm-bench-ckpt-{}", std::process::id()));
+    let files = std::env::temp_dir().join(format!("rm-bench-ckpt-files-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&files);
+    std::fs::create_dir_all(&files)?;
+    let store = CkptStore::open_with_chunk_bytes(&root, CHUNK_BYTES)?;
+
+    let mut table = CsvTable::new(&[
+        "phase", "store_s", "store_mb", "file_s", "file_mb", "store/file_bytes",
+    ]);
+    let mut bench = BenchJson::new("bench_ckpt");
+    bench
+        .meta("jobs", Json::num(JOBS as f64))
+        .meta("n_params", Json::num(N_PARAMS as f64))
+        .meta("chunk_bytes", Json::num(CHUNK_BYTES as f64));
+
+    let mut emit = |table: &mut CsvTable,
+                    bench: &mut BenchJson,
+                    phase: &str,
+                    store_s: f64,
+                    store_b: u64,
+                    file_s: f64,
+                    file_b: u64| {
+        let ratio = if file_b > 0 { store_b as f64 / file_b as f64 } else { f64::NAN };
+        table.row(&[
+            phase.to_string(),
+            format!("{store_s:.3}"),
+            format!("{:.2}", store_b as f64 / (1024.0 * 1024.0)),
+            format!("{file_s:.3}"),
+            format!("{:.2}", file_b as f64 / (1024.0 * 1024.0)),
+            format!("{ratio:.3}"),
+        ]);
+        bench.row(vec![
+            ("phase", Json::str(phase)),
+            ("store_secs", Json::num(store_s)),
+            ("store_bytes", Json::num(store_b as f64)),
+            ("file_secs", Json::num(file_s)),
+            ("file_bytes", Json::num(file_b as f64)),
+        ]);
+    };
+
+    // --- cold: first save of 1024 jobs --------------------------------
+    let snaps: Vec<Checkpoint> = (0..JOBS).map(|j| ck(j, 0)).collect();
+    let t = Instant::now();
+    let mut store_cold = 0u64;
+    for (j, c) in snaps.iter().enumerate() {
+        store_cold += store.save(&key(j), c)?.bytes_written;
+    }
+    let store_cold_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let mut file_cold = 0u64;
+    for (j, c) in snaps.iter().enumerate() {
+        file_cold += c.save(files.join(format!("{}.ckpt", key(j))))?;
+    }
+    let file_cold_s = t.elapsed().as_secs_f64();
+    emit(&mut table, &mut bench, "cold", store_cold_s, store_cold, file_cold_s, file_cold);
+
+    // --- resave: unchanged content (manifest-only commits) ------------
+    let t = Instant::now();
+    let mut store_resave = 0u64;
+    let mut new_chunks = 0usize;
+    for (j, c) in snaps.iter().enumerate() {
+        let s = store.save(&key(j), c)?;
+        store_resave += s.bytes_written;
+        new_chunks += s.chunks_new;
+    }
+    let store_resave_s = t.elapsed().as_secs_f64();
+    assert_eq!(new_chunks, 0, "resave of unchanged content rewrote chunks");
+    assert!(
+        store_resave * 10 < store_cold,
+        "manifest-only resave wrote {store_resave} bytes vs cold {store_cold}"
+    );
+
+    let t = Instant::now();
+    let mut file_resave = 0u64;
+    for (j, c) in snaps.iter().enumerate() {
+        file_resave += c.save(files.join(format!("{}.ckpt", key(j))))?;
+    }
+    let file_resave_s = t.elapsed().as_secs_f64();
+    emit(&mut table, &mut bench, "resave", store_resave_s, store_resave, file_resave_s, file_resave);
+
+    // --- delta: 1/8th of theta (and mirrored mu head) dirtied ---------
+    let deltas: Vec<Checkpoint> = (0..JOBS).map(|j| ck(j, 1)).collect();
+    let t = Instant::now();
+    let mut store_delta = 0u64;
+    for (j, c) in deltas.iter().enumerate() {
+        store_delta += store.save(&key(j), c)?.bytes_written;
+    }
+    let store_delta_s = t.elapsed().as_secs_f64();
+    assert!(
+        store_delta < store_cold / 2,
+        "localized delta rewrote {store_delta} of {store_cold} cold bytes"
+    );
+
+    let t = Instant::now();
+    let mut file_delta = 0u64;
+    for (j, c) in deltas.iter().enumerate() {
+        file_delta += c.save(files.join(format!("{}.ckpt", key(j))))?;
+    }
+    let file_delta_s = t.elapsed().as_secs_f64();
+    emit(&mut table, &mut bench, "delta", store_delta_s, store_delta, file_delta_s, file_delta);
+
+    // --- load: restart latency for every job --------------------------
+    let t = Instant::now();
+    for (j, c) in deltas.iter().enumerate() {
+        assert_eq!(&store.load(&key(j))?, c, "store load diverged for job {j}");
+    }
+    let store_load_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    for (j, c) in deltas.iter().enumerate() {
+        assert_eq!(&Checkpoint::load(files.join(format!("{}.ckpt", key(j))))?, c);
+    }
+    let file_load_s = t.elapsed().as_secs_f64();
+    emit(&mut table, &mut bench, "load", store_load_s, 0, file_load_s, 0);
+
+    // --- drain: completed fleet must GC the store to nothing ----------
+    let t = Instant::now();
+    for j in 0..JOBS {
+        store.free(&key(j))?;
+    }
+    let drain_s = t.elapsed().as_secs_f64();
+    assert_eq!(store.snapshot_count(), 0);
+    assert_eq!(store.chunk_count(), 0);
+    assert!(store.remove_if_empty()?, "drained store should remove its root");
+    emit(&mut table, &mut bench, "drain", drain_s, 0, 0.0, 0);
+
+    let _ = std::fs::remove_dir_all(&files);
+
+    print!("{}", table.render());
+    table.write_csv("bench_ckpt.csv")?;
+    let path = bench.save(env!("CARGO_MANIFEST_DIR"), "CKPT")?;
+    println!("wrote {} ({} rows)", path.display(), bench.len());
+    println!(
+        "\nresave is the width-only-rescale restart: the store commits ~a manifest per job\n\
+         where the whole-file path rewrites the full theta‖mu image; delta shows the cost\n\
+         scaling with *changed* chunks, not payload size."
+    );
+    Ok(())
+}

@@ -6,8 +6,10 @@
 //! checkpoint I/O + engine startup on every restart. This bench runs one
 //! bursty trace both ways for doubling and fixed-8 and reports the gap —
 //! the boundary-granularity cost of going from simulation to execution —
-//! plus the real wall time and measured restart overhead of the live
-//! runs.
+//! plus the real wall time, measured restart overhead, and checkpoint
+//! bytes of the live runs. A third row reruns doubling through the
+//! content-addressed store (`--ckpt-store`): the schedule must not move,
+//! while restart checkpoint bytes collapse to manifest size.
 //!
 //! `cargo bench --bench orchestrator_live`
 
@@ -58,22 +60,32 @@ fn main() -> ringmaster::Result<()> {
     ocfg.restart_cost = restart_cost;
     ocfg.segment_steps = 16;
 
+    let store_root =
+        std::env::temp_dir().join(format!("rm-live-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_root);
+    let mut store_cfg = ocfg.clone();
+    store_cfg.ckpt_store = Some(store_root.clone());
+
     let mut table = CsvTable::new(&[
         "strategy", "des_avg_jct_s", "live_avg_jct_s", "live/des", "live_util_%", "restarts",
-        "measured_restart_s", "live_wall_s",
+        "measured_restart_s", "ckpt_io_s", "restart_ckpt_kb", "live_wall_s",
     ]);
     let mut bench = BenchJson::new("orchestrator_live");
     bench
         .meta("capacity", Json::num(capacity as f64))
         .meta("n_jobs", Json::num(gen.n_jobs as f64))
         .meta("seed", Json::num(seed as f64));
-    for (name, kind) in [("doubling", StrategyKind::Precompute), ("fixed-8", StrategyKind::Fixed(8))]
-    {
+    let mut doubling_file = None; // (avg_jct bits, restart bytes) of whole-file doubling
+    for (name, kind, cfg) in [
+        ("doubling", StrategyKind::Precompute, &ocfg),
+        ("fixed-8", StrategyKind::Fixed(8), &ocfg),
+        ("doubling+store", StrategyKind::Precompute, &store_cfg),
+    ] {
         let des = simulate(&des_cfg(kind), &profiles);
         let des_avg = des.avg_completion_hours * 3600.0;
 
-        let sched = scheduler_by_name(name)?;
-        let live = orchestrate(&ocfg, sched.as_ref(), &specs)?;
+        let sched = scheduler_by_name(name.trim_end_matches("+store"))?;
+        let live = orchestrate(cfg, sched.as_ref(), &specs)?;
         let measured_restart: f64 = live.jobs.iter().map(|j| j.measured_restart_secs).sum();
         table.row(&[
             name.to_string(),
@@ -83,6 +95,8 @@ fn main() -> ringmaster::Result<()> {
             format!("{:.1}", 100.0 * live.utilization),
             live.total_restarts.to_string(),
             format!("{measured_restart:.2}"),
+            format!("{:.2}", live.ckpt_io_secs()),
+            format!("{:.1}", live.restart_ckpt_bytes() as f64 / 1024.0),
             format!("{:.2}", live.wall_secs),
         ]);
         bench.row(vec![
@@ -93,6 +107,9 @@ fn main() -> ringmaster::Result<()> {
             ("live_utilization", Json::num(live.utilization)),
             ("restarts", Json::num(live.total_restarts as f64)),
             ("measured_restart_s", Json::num(measured_restart)),
+            ("ckpt_io_s", Json::num(live.ckpt_io_secs())),
+            ("ckpt_bytes_written", Json::num(live.ckpt_bytes_written() as f64)),
+            ("restart_ckpt_bytes", Json::num(live.restart_ckpt_bytes() as f64)),
             ("live_wall_s", Json::num(live.wall_secs)),
         ]);
 
@@ -102,6 +119,33 @@ fn main() -> ringmaster::Result<()> {
             live.avg_jct_secs() > 0.0 && des_avg > 0.0,
             "degenerate run for {name}"
         );
+        match name {
+            "doubling" => {
+                doubling_file =
+                    Some((live.avg_jct_secs().to_bits(), live.restart_ckpt_bytes()));
+            }
+            "doubling+store" => {
+                let (jct_bits, file_restart_bytes) =
+                    doubling_file.expect("doubling ran first");
+                // the store lives on the measured side of the two-clock
+                // split: the virtual schedule may not move a bit...
+                assert_eq!(
+                    live.avg_jct_secs().to_bits(),
+                    jct_bits,
+                    "--ckpt-store moved the virtual schedule"
+                );
+                // ...while restart traffic shrinks from full payload
+                // images to manifest commits
+                assert!(
+                    live.restart_ckpt_bytes() < file_restart_bytes,
+                    "store restarts wrote {} bytes vs whole-file {}",
+                    live.restart_ckpt_bytes(),
+                    file_restart_bytes
+                );
+                assert!(!store_root.exists(), "store not drained after the run");
+            }
+            _ => {}
+        }
     }
     print!("{}", table.render());
     table.write_csv("orchestrator_live.csv")?;
@@ -109,7 +153,8 @@ fn main() -> ringmaster::Result<()> {
     println!("wrote {} ({} rows)", path.display(), bench.len());
     println!(
         "\nlive/des > 1 is the boundary-granularity + real-restart cost the DES idealizes away;\n\
-         the strategy ordering (doubling < fixed-8 on a burst) must agree between the two."
+         the strategy ordering (doubling < fixed-8 on a burst) must agree between the two,\n\
+         and doubling+store must match doubling's schedule while shrinking restart_ckpt_kb."
     );
     Ok(())
 }

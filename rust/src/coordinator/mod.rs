@@ -15,20 +15,39 @@ use std::time::Instant;
 
 use crate::perfmodel::{ConvergenceModel, SpeedModel};
 use crate::scheduler::{doubling::Doubling, JobInfo, Scheduler, Speed};
+use crate::store::CkptStore;
 use crate::trainer::{train, Checkpoint, TrainConfig, TrainReport};
 use crate::Result;
 
 /// Round-trip a checkpoint through disk — the stop→restart boundary of
 /// §6, shared by [`run_with_rescales`] and the orchestrator's executor.
-/// Uses the atomic save path, removes the file afterwards, and returns
-/// the reloaded checkpoint plus the measured I/O seconds (part of the
-/// restart cost the paper budgets ~10 s for).
-pub fn checkpoint_roundtrip(ck: &Checkpoint, path: &Path) -> Result<(Checkpoint, f64)> {
+/// Uses the atomic save path and returns the reloaded checkpoint, the
+/// measured I/O seconds (part of the restart cost the paper budgets
+/// ~10 s for), and the bytes written. The round-trip file is removed on
+/// *both* load outcomes — earlier revisions skipped removal whenever the
+/// load failed, leaking one `.ckpt` per failed restart into temp_dir.
+pub fn checkpoint_roundtrip(ck: &Checkpoint, path: &Path) -> Result<(Checkpoint, f64, u64)> {
     let t = Instant::now();
-    ck.save(path)?;
-    let loaded = Checkpoint::load(path)?;
+    let bytes = ck.save(path)?;
+    let loaded = Checkpoint::load(path);
     let _ = std::fs::remove_file(path);
-    Ok((loaded, t.elapsed().as_secs_f64()))
+    Ok((loaded?, t.elapsed().as_secs_f64(), bytes))
+}
+
+/// The same §6 boundary through the content-addressed store: persist
+/// `ck` as `key`'s snapshot and read it back. Only chunks the store does
+/// not already hold touch disk, so restart N of a job dedups against
+/// restart N-1 (and against every other job sharing content) — the
+/// returned bytes-written is the O(delta) cost `--ckpt-store` buys.
+pub fn checkpoint_roundtrip_store(
+    ck: &Checkpoint,
+    store: &CkptStore,
+    key: &str,
+) -> Result<(Checkpoint, f64, u64)> {
+    let t = Instant::now();
+    let stats = store.save(key, ck)?;
+    let loaded = store.load(key)?;
+    Ok((loaded, t.elapsed().as_secs_f64(), stats.bytes_written))
 }
 
 /// One executed segment of a coordinated run.
@@ -84,7 +103,7 @@ pub fn run_with_rescales(base: &TrainConfig, plan: &[(usize, u64)]) -> Result<Ru
             Some(prev) => {
                 let path = std::env::temp_dir()
                     .join(format!("ringmaster-rescale-{}-{i}.ckpt", std::process::id()));
-                let (loaded, _) = checkpoint_roundtrip(&prev, &path)?;
+                let (loaded, _, _) = checkpoint_roundtrip(&prev, &path)?;
                 Some(loaded)
             }
             None => None,

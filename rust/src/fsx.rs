@@ -1,0 +1,131 @@
+//! Crash-safe filesystem primitives shared by every durable artifact in
+//! the tree — checkpoints, job traces, telemetry streams, and store
+//! snapshots: write-to-sibling-tmp + fsync + atomic rename + parent
+//! directory fsync.
+//!
+//! The discipline exists because tmp+rename alone is not durable: POSIX
+//! only promises the rename is atomic *in the namespace*. After a crash
+//! the new directory entry itself can be lost unless the parent
+//! directory is fsynced after the rename — the old `Checkpoint::save`
+//! carried the tmp+fsync+rename half of this since PR 2 but never synced
+//! the directory, so a crash shortly after a "successful" save could
+//! still come back with the previous checkpoint (or none), and a failed
+//! rename leaked the `.tmp` sibling. Centralizing the full sequence here
+//! fixes both once, for every caller.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// Fsync a directory so a just-renamed entry inside it survives a crash.
+/// No-op on platforms where directories cannot be opened for syncing.
+pub fn fsync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let d = std::fs::File::open(dir)
+            .map_err(|e| anyhow::anyhow!("opening dir {} to fsync: {e}", dir.display()))?;
+        d.sync_all()
+            .map_err(|e| anyhow::anyhow!("fsync dir {}: {e}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Atomically and durably replace `path` with `bytes`: write
+/// `<path>.tmp`, flush + fsync, rename over `path`, then fsync the
+/// parent directory. On any failure the tmp sibling is removed and
+/// `path` still holds its previous complete contents (or is still
+/// absent) — a reader can never observe a torn file at `path`. Returns
+/// the number of bytes written.
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<u64> {
+    let path = path.as_ref();
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("path {} has no file name", path.display()))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+
+    let write = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.flush()?;
+        f.sync_all()?;
+        Ok(())
+    };
+    let renamed = write().and_then(|()| {
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+        })
+    });
+    if let Err(e) = renamed {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            fsync_dir(parent)?;
+        }
+    }
+    Ok(bytes.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rm-fsx-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_replaces_without_tmp_residue() {
+        let p = tmppath("basic");
+        assert_eq!(atomic_write(&p, b"first").unwrap(), 5);
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        atomic_write(&p, b"second, longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer");
+        let tmp = tmppath("basic.tmp");
+        assert!(!tmp.exists(), "tmp sibling left behind");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn failed_rename_cleans_tmp_and_keeps_destination_absent_or_intact() {
+        // a directory at the destination makes the rename fail
+        let p = tmppath("dir-target");
+        std::fs::create_dir_all(&p).unwrap();
+        let err = atomic_write(&p, b"payload").unwrap_err().to_string();
+        assert!(err.contains("renaming"), "{err}");
+        let tmp = tmppath("dir-target.tmp");
+        assert!(!tmp.exists(), "tmp sibling must be removed on rename failure");
+        assert!(p.is_dir(), "destination must be untouched");
+        let _ = std::fs::remove_dir(&p);
+    }
+
+    #[test]
+    fn missing_parent_errors_without_residue() {
+        let p = tmppath("no-such-dir").join("leaf.bin");
+        assert!(atomic_write(&p, b"x").is_err());
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn pathless_target_is_rejected() {
+        assert!(atomic_write("/", b"x").is_err());
+    }
+
+    #[test]
+    fn stale_tmp_from_a_torn_writer_is_clobbered() {
+        let p = tmppath("stale");
+        let tmp = tmppath("stale.tmp");
+        std::fs::write(&tmp, b"torn partial write").unwrap();
+        atomic_write(&p, b"good").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        assert!(!tmp.exists());
+        let _ = std::fs::remove_file(&p);
+    }
+}

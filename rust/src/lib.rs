@@ -28,6 +28,7 @@ pub mod collectives;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod fsx;
 pub mod jsonx;
 pub mod linalg;
 pub mod metrics;
@@ -38,6 +39,7 @@ pub mod rngx;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod store;
 pub mod telemetry;
 pub mod trainer;
 

@@ -159,6 +159,13 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20 --segment-steps N  real steps between scheduling decisions (default 16)\n\
              \x20 --dataset-examples M  windows per epoch (default 256)\n\
              \x20 --restart-cost S   virtual stop/restart charge (default 10)\n\
+             \x20 --ckpt-store DIR   content-addressed deduplicated checkpoint store:\n\
+             \x20                    restarts round-trip through chunked, refcounted\n\
+             \x20                    snapshots (only changed chunks hit disk) instead of\n\
+             \x20                    whole-file temp copies; jobs free their snapshots on\n\
+             \x20                    completion so a finished run leaves the store empty.\n\
+             \x20                    Off by default; the schedule is bit-identical either\n\
+             \x20                    way, only measured ckpt io/bytes change\n\
              \x20 --telemetry FILE   record a v3 telemetry stream of the run (segment\n\
              \x20                    lifecycle, decision provenance, placement\n\
              \x20                    snapshots) for `ringmaster report`\n\
@@ -466,6 +473,7 @@ fn cmd_orchestrate() -> Result<()> {
     let segment_steps = a.get_or("segment-steps", 16u64)?;
     let dataset_examples = a.get_or("dataset-examples", 256usize)?;
     let restart_cost = a.get_or("restart-cost", 10.0f64)?;
+    let ckpt_store = a.str_opt("ckpt-store");
     let telemetry = a.str_opt("telemetry");
     let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
     let seed = a.get_or("seed", 42u64)?;
@@ -510,6 +518,7 @@ fn cmd_orchestrate() -> Result<()> {
     cfg.preempt_on_arrival = preempt;
     cfg.segment_budget_secs = segment_budget;
     cfg.online_model = online_model;
+    cfg.ckpt_store = ckpt_store.as_ref().map(std::path::PathBuf::from);
     if nodes > 0 {
         cfg = cfg.with_topology(nodes, gpus_per_node);
         if contention {

@@ -148,6 +148,14 @@ pub struct Job {
     pub measured_restart_secs: f64,
     /// Measured wall seconds spent inside `trainer::train`.
     pub measured_train_secs: f64,
+    /// Measured seconds of all checkpoint I/O: restart round trips plus,
+    /// in store mode, boundary park-saves and the completion free.
+    pub ckpt_io_secs: f64,
+    /// Measured checkpoint bytes written (round trips + store parks).
+    pub ckpt_bytes_written: u64,
+    /// Bytes written by restart round trips only — the apples-to-apples
+    /// whole-file-vs-store dedup metric.
+    pub restart_ckpt_bytes: u64,
     pub final_loss: Option<f32>,
     pub max_w_granted: usize,
     /// Widest node span any of this job's segments ever had.
@@ -188,6 +196,9 @@ impl Job {
             virtual_restart_secs: 0.0,
             measured_restart_secs: 0.0,
             measured_train_secs: 0.0,
+            ckpt_io_secs: 0.0,
+            ckpt_bytes_written: 0,
+            restart_ckpt_bytes: 0,
             final_loss: None,
             max_w_granted: 0,
             max_nodes_spanned: 0,

@@ -80,7 +80,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use event::{Event, EventKind, EventQueue};
-use executor::{spawn_segment, SegmentPlan};
+use executor::{spawn_segment, store_key, SegmentPlan};
 
 use crate::cluster::{ClusterState, PlacePolicy, Topology};
 use crate::jsonx::Json;
@@ -88,6 +88,7 @@ use crate::perfmodel::online::PAPER_EXAMPLES_PER_EPOCH;
 use crate::perfmodel::{LinkContention, OnlineModel, PlacementModel};
 use crate::runtime::Artifacts;
 use crate::scheduler::{total_allocated, GrantStep, JobInfo, Scheduler, Speed};
+use crate::store::CkptStore;
 use crate::telemetry::{event, NullSink, Sink};
 use crate::trainer::TrainConfig;
 use crate::Result;
@@ -147,6 +148,16 @@ pub struct OrchestratorConfig {
     /// the trace-table prior until then. Per-job model-vs-truth RMSE is
     /// reported in [`JobReport`]. Default off (oracle tables).
     pub online_model: bool,
+    /// Content-addressed checkpoint store root (`--ckpt-store DIR`).
+    /// When set, restart round trips go through [`crate::store`] instead
+    /// of throwaway temp files, every segment end parks the job's
+    /// checkpoint durably in the store (so restart N dedups against
+    /// restart N-1 and pays only the delta), and job completion frees
+    /// the snapshot + GCs its chunks. The scheduling clock never reads
+    /// real I/O, so the schedule is bit-identical to the default
+    /// whole-file path; only the *measured* ckpt metrics change.
+    /// Default `None` — structurally the old path.
+    pub ckpt_store: Option<std::path::PathBuf>,
 }
 
 impl OrchestratorConfig {
@@ -163,6 +174,7 @@ impl OrchestratorConfig {
             preempt_on_arrival: false,
             segment_budget_secs: f64::INFINITY,
             online_model: false,
+            ckpt_store: None,
         }
     }
 
@@ -242,6 +254,9 @@ struct Orchestrator {
     total_preemptions: u64,
     cross_node_segments: u64,
     events: u64,
+    /// Content-addressed checkpoint store (`--ckpt-store`), shared with
+    /// every runner thread. None = whole-file temp-path round trips.
+    store: Option<Arc<CkptStore>>,
 }
 
 impl Orchestrator {
@@ -303,6 +318,11 @@ impl Orchestrator {
             jobs.push(job);
         }
 
+        let store = match &cfg.ckpt_store {
+            Some(dir) => Some(Arc::new(CkptStore::open(dir)?)),
+            None => None,
+        };
+
         Ok(Orchestrator {
             cluster: ClusterState::with_policy(cfg.topology.spec(), cfg.place_policy),
             cfg,
@@ -318,6 +338,7 @@ impl Orchestrator {
             total_preemptions: 0,
             cross_node_segments: 0,
             events: 0,
+            store,
         })
     }
 
@@ -396,6 +417,19 @@ impl Orchestrator {
             self.cfg.capacity
         );
 
+        // Store invariant at run end: every job completed, so every
+        // snapshot was freed and every chunk GC'd — a leak here means
+        // the store would grow without bound across fleet runs.
+        if let Some(store) = &self.store {
+            anyhow::ensure!(
+                store.snapshot_count() == 0 && store.chunk_count() == 0,
+                "checkpoint store not drained at run end: {} snapshots, {} chunks live",
+                store.snapshot_count(),
+                store.chunk_count()
+            );
+            let _ = store.remove_if_empty();
+        }
+
         let mut job_reports = Vec::with_capacity(self.jobs.len());
         for j in &self.jobs {
             let finish = match j.state {
@@ -415,6 +449,9 @@ impl Orchestrator {
                 virtual_restart_secs: j.virtual_restart_secs,
                 measured_restart_secs: j.measured_restart_secs,
                 measured_train_secs: j.measured_train_secs,
+                ckpt_io_secs: j.ckpt_io_secs,
+                ckpt_bytes_written: j.ckpt_bytes_written,
+                restart_ckpt_bytes: j.restart_ckpt_bytes,
                 steps: j.steps_done,
                 epochs: j.epochs_done,
                 max_w: j.max_w_granted,
@@ -545,6 +582,12 @@ impl Orchestrator {
         if job.last_segment_restarted {
             job.measured_restart_secs += outcome.ckpt_io_secs + outcome.startup_secs;
         }
+        job.ckpt_io_secs += outcome.ckpt_io_secs;
+        job.ckpt_bytes_written += outcome.ckpt_bytes_written;
+        // restart-only bytes: the apples-to-apples dedup metric (the
+        // park writes below are bounded by it on the whole-file path,
+        // which has no parks at all)
+        job.restart_ckpt_bytes += outcome.ckpt_bytes_written;
         if let Some(l) = outcome.final_loss {
             job.final_loss = Some(l);
         }
@@ -576,6 +619,23 @@ impl Orchestrator {
         }
 
         let done = job.remaining_epochs() <= EPOCH_EPS;
+        // Durable park/free at the boundary (store mode only): parking
+        // the checkpoint now means the *next* restart's store save finds
+        // every unchanged chunk already live and pays only the delta +
+        // manifest; completion frees the snapshot and GCs its chunks so
+        // a finished fleet leaves the store fully drained. Real I/O on
+        // the measured clock only — the virtual schedule never sees it.
+        if let Some(store) = &self.store {
+            let t = Instant::now();
+            if done {
+                store.free(&store_key(id))?;
+            } else {
+                let ck = job.checkpoint.as_ref().expect("folded above");
+                let stats = store.save(&store_key(id), ck)?;
+                job.ckpt_bytes_written += stats.bytes_written;
+            }
+            job.ckpt_io_secs += t.elapsed().as_secs_f64();
+        }
         if sink.enabled() {
             sink.count("segments", 1);
             sink.emit(event(
@@ -601,6 +661,7 @@ impl Orchestrator {
                     ("train_secs", Json::num(outcome.train_secs)),
                     ("startup_secs", Json::num(outcome.startup_secs)),
                     ("ckpt_io_secs", Json::num(outcome.ckpt_io_secs)),
+                    ("ckpt_bytes", Json::num(outcome.ckpt_bytes_written as f64)),
                     ("mean_step_secs", Json::num(outcome.mean_step_secs)),
                     ("mean_allreduce_secs", Json::num(outcome.mean_allreduce_secs)),
                 ],
@@ -1060,6 +1121,7 @@ impl Orchestrator {
             steps,
             resume: job.checkpoint.take(),
             restart_from_disk,
+            store: self.store.clone(),
             config: tcfg,
         };
         job.transition(JobState::Running { workers: w })?;

@@ -30,6 +30,16 @@ pub struct JobReport {
     pub measured_restart_secs: f64,
     /// Real measured seconds inside `trainer::train`.
     pub measured_train_secs: f64,
+    /// Real measured checkpoint I/O seconds: restart round trips plus,
+    /// under `--ckpt-store`, boundary park-saves and the completion free.
+    pub ckpt_io_secs: f64,
+    /// Real checkpoint bytes written over the job's lifetime (round
+    /// trips + store park-saves).
+    pub ckpt_bytes_written: u64,
+    /// Bytes written by restart round trips only — the whole-file vs
+    /// store dedup comparison (`--ckpt-store` makes this the deduped
+    /// delta; the default path pays the full file image per restart).
+    pub restart_ckpt_bytes: u64,
     pub steps: u64,
     pub epochs: f64,
     /// Largest worker count the job ever held.
@@ -111,12 +121,27 @@ impl OrchestratorReport {
         self.jobs.iter().filter(|j| j.learned_after_segments.is_some()).count()
     }
 
+    /// Total measured checkpoint bytes written across the run.
+    pub fn ckpt_bytes_written(&self) -> u64 {
+        self.jobs.iter().map(|j| j.ckpt_bytes_written).sum()
+    }
+
+    /// Total measured checkpoint I/O seconds across the run.
+    pub fn ckpt_io_secs(&self) -> f64 {
+        self.jobs.iter().map(|j| j.ckpt_io_secs).sum()
+    }
+
+    /// Restart-round-trip bytes only (the dedup comparison metric).
+    pub fn restart_ckpt_bytes(&self) -> u64 {
+        self.jobs.iter().map(|j| j.restart_ckpt_bytes).sum()
+    }
+
     /// Aligned per-job table (rendered by `ringmaster orchestrate`).
     pub fn per_job_table(&self) -> CsvTable {
         let mut t = CsvTable::new(&[
             "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "nodes",
-            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "rmse",
-            "final_loss",
+            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "ckpt_kb",
+            "rmse", "final_loss",
         ]);
         for j in &self.jobs {
             t.row(&[
@@ -133,6 +158,7 @@ impl OrchestratorReport {
                 format!("{:.2}", j.epochs),
                 format!("{:.2}", j.measured_train_secs),
                 format!("{:.2}", j.measured_restart_secs),
+                format!("{:.1}", j.ckpt_bytes_written as f64 / 1024.0),
                 j.model_rmse.map(|r| format!("{r:.2}")).unwrap_or_else(|| "-".into()),
                 j.final_loss.map(|l| format!("{l:.4}")).unwrap_or_else(|| "-".into()),
             ]);
@@ -151,7 +177,8 @@ impl OrchestratorReport {
             "strategy={} capacity={} topology={} jobs={} events={}\n\
              avg JCT {:.1}s  p50 JCT {:.1}s  avg queue {:.1}s  makespan {:.1}s (virtual)\n\
              utilization {:.1}%  peak workers {}  restarts {}  preemptions {}  \
-             cross-node segs {}{learned}  orchestration wall {:.2}s (real)",
+             cross-node segs {}{learned}  ckpt io {:.2}s / {:.1} KiB written (real)  \
+             orchestration wall {:.2}s (real)",
             self.strategy,
             self.capacity,
             self.topology.label(),
@@ -166,6 +193,8 @@ impl OrchestratorReport {
             self.total_restarts,
             self.total_preemptions,
             self.cross_node_segments,
+            self.ckpt_io_secs(),
+            self.ckpt_bytes_written() as f64 / 1024.0,
             self.wall_secs,
         )
     }
@@ -188,6 +217,9 @@ mod tests {
             virtual_restart_secs: 10.0,
             measured_restart_secs: 0.01,
             measured_train_secs: 0.5,
+            ckpt_io_secs: 0.005,
+            ckpt_bytes_written: 2048,
+            restart_ckpt_bytes: 2048,
             steps: 32,
             epochs: 1.0,
             max_w: 4,
@@ -234,6 +266,9 @@ mod tests {
         }
         let s = r.summary();
         assert!(s.contains("avg JCT") && s.contains("utilization") && s.contains("doubling"));
+        // 3 jobs x 2048 bytes = 6 KiB of measured checkpoint writes
+        assert!(s.contains("ckpt io") && s.contains("6.0 KiB"), "{s}");
+        assert!(rendered.contains("ckpt_kb") && rendered.contains("2.0"), "{rendered}");
     }
 
     #[test]

@@ -37,6 +37,10 @@ use crate::Result;
 pub const TRACE_VERSION: u64 = 2;
 
 /// Serialize a trace as JSONL (current schema, version preamble first).
+/// Written atomically (tmp + fsync + rename + dir fsync): a crash
+/// mid-write can never leave a torn trace that `load_trace` chokes on —
+/// the destination either keeps its previous complete contents or holds
+/// the new ones.
 pub fn save_trace(path: impl AsRef<Path>, specs: &[JobSpec]) -> Result<()> {
     let mut out = String::new();
     out.push_str(&Json::obj(vec![("ringmaster_trace", Json::num(TRACE_VERSION as f64))]).dump());
@@ -46,7 +50,7 @@ pub fn save_trace(path: impl AsRef<Path>, specs: &[JobSpec]) -> Result<()> {
         out.push('\n');
     }
     let path = path.as_ref();
-    std::fs::write(path, out)
+    crate::fsx::atomic_write(path, out.as_bytes())
         .map_err(|e| anyhow::anyhow!("writing trace {}: {e}", path.display()))?;
     Ok(())
 }
@@ -255,6 +259,29 @@ mod tests {
         let back = load_trace(&p).unwrap();
         assert_eq!(back, specs);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn save_trace_is_atomic_and_cleans_tmp_on_failure() {
+        let specs = generate(&TraceGen::default(), 7);
+        let p = tmpfile("atomic");
+        save_trace(&p, &specs).unwrap();
+        let tmp = p.with_file_name(format!("{}.tmp", p.file_name().unwrap().to_string_lossy()));
+        assert!(!tmp.exists(), "tmp sibling left behind");
+        // a stale tmp from a torn earlier writer must not break a resave
+        std::fs::write(&tmp, b"torn partial trace").unwrap();
+        save_trace(&p, &specs).unwrap();
+        assert!(!tmp.exists());
+        assert_eq!(load_trace(&p).unwrap(), specs);
+        let _ = std::fs::remove_file(&p);
+        // rename failure (directory at the target): tmp removed, target intact
+        let d = tmpfile("atomic-dir");
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(save_trace(&d, &specs).is_err());
+        let dtmp = d.with_file_name(format!("{}.tmp", d.file_name().unwrap().to_string_lossy()));
+        assert!(!dtmp.exists(), "failed save leaked the tmp sibling");
+        assert!(d.is_dir());
+        let _ = std::fs::remove_dir(&d);
     }
 
     #[test]

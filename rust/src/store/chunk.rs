@@ -1,0 +1,72 @@
+//! Content addressing for the checkpoint store: fixed-size chunking plus
+//! a self-contained 128-bit FNV-1a hash (no external deps — the repo
+//! rule is that everything builds from std + the vendored shims).
+//!
+//! FNV-1a is not cryptographic; the store uses it purely as a content
+//! address for dedup, and `CkptStore::load` re-hashes every chunk it
+//! reads, so a corrupted or colliding chunk surfaces as a loud error at
+//! restore time rather than silently restoring the wrong weights. At
+//! 128 bits, accidental collisions across a fleet-scale store (millions
+//! of chunks) are vanishingly unlikely.
+
+/// 128-bit FNV-1a offset basis.
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 128-bit FNV prime: 2^88 + 2^8 + 0x3b.
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// Hash `bytes` with 128-bit FNV-1a — the store's content address.
+pub fn fnv1a_128(bytes: &[u8]) -> u128 {
+    let mut h = FNV128_OFFSET;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// Render a content address as the 32-hex-char chunk file stem.
+pub fn hash_hex(h: u128) -> String {
+    format!("{h:032x}")
+}
+
+/// Parse a 32-hex-char chunk file stem back into a content address.
+pub fn parse_hash_hex(s: &str) -> Option<u128> {
+    if s.len() != 32 {
+        return None;
+    }
+    u128::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_hashes_to_the_offset_basis() {
+        assert_eq!(fnv1a_128(b""), FNV128_OFFSET);
+    }
+
+    #[test]
+    fn known_vectors_match_the_reference_implementation() {
+        // cross-checked against python/tools/gen_store_fixture.py, which
+        // reimplements the same constants for fixture generation
+        assert_eq!(hash_hex(fnv1a_128(b"a")), "d228cb696f1a8caf78912b704e4a8964");
+        assert_eq!(hash_hex(fnv1a_128(b"foobar")), "343e1662793c64bf6f0d3597ba446f18");
+    }
+
+    #[test]
+    fn nearby_inputs_diverge() {
+        assert_ne!(fnv1a_128(b"chunk-0"), fnv1a_128(b"chunk-1"));
+        assert_ne!(fnv1a_128(&[0u8; 64]), fnv1a_128(&[0u8; 65]));
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        for payload in [&b""[..], b"a", b"ringmaster", &[0xff; 100]] {
+            let h = fnv1a_128(payload);
+            assert_eq!(parse_hash_hex(&hash_hex(h)), Some(h));
+        }
+        assert_eq!(parse_hash_hex("not-hex"), None);
+        assert_eq!(parse_hash_hex("abc"), None);
+    }
+}

@@ -1,0 +1,564 @@
+//! Content-addressed deduplicated checkpoint store — the §6 restart
+//! substrate at fleet scale (ROADMAP item; content/snapshot split after
+//! the `pwil3058__ergibus` design).
+//!
+//! Layout under a store root:
+//!
+//! ```text
+//! root/
+//!   chunks/<32-hex-fnv1a128>.chunk   # unique content, stored once
+//!   snaps/<key>.snap                 # versioned snapshot envelope
+//! ```
+//!
+//! A checkpoint is saved as fixed-size chunks of its theta‖mu payload.
+//! Each chunk lands at its content address — identical content across
+//! restarts of one job, across jobs, or within one payload hits disk
+//! once — and the snapshot envelope (one version byte + a JSON manifest
+//! of checkpoint metadata and chunk refs, unknown versions rejected)
+//! is committed atomically via [`crate::fsx::atomic_write`]. A restart
+//! whose payload barely changed therefore rewrites only the changed
+//! chunks plus a few hundred bytes of manifest, instead of the full
+//! n_params·8-byte file `Checkpoint::save` pays.
+//!
+//! Refcounts are *derived*, never persisted: the on-disk truth is the
+//! set of snapshot manifests, and the in-memory map counts references
+//! from live manifests. [`CkptStore::open`] rebuilds it by scanning
+//! `snaps/` and garbage-collects orphan chunks left by a crash.
+//!
+//! Crash-safety argument (detail in DESIGN.md §16): chunks are written
+//! and fsynced *before* the manifest that references them commits, and
+//! the manifest commit is a single atomic+durable rename. So at every
+//! instant the store holds, per key, either the previous complete
+//! snapshot or the new one — never a manifest pointing at missing
+//! content. The only crash residue is unreferenced chunks, which the
+//! next `open` removes. `free` removes the manifest first, then
+//! decrements; a crash between the two leaves orphans, same story.
+//!
+//! One store root belongs to one orchestration at a time: handles share
+//! refcounts through `&self` locking, not through the filesystem.
+
+pub mod chunk;
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::fsx;
+use crate::jsonx::Json;
+use crate::trainer::Checkpoint;
+use crate::Result;
+
+pub use chunk::{fnv1a_128, hash_hex, parse_hash_hex};
+
+/// Snapshot envelope version byte (SNIPPETS.md snippet-1 style: the
+/// first byte names the format; unknown versions are rejected loudly
+/// instead of misread).
+pub const SNAPSHOT_VERSION: u8 = 1;
+
+/// Default payload chunk size. 64 KiB keeps manifests tiny (a 10M-param
+/// payload is ~1200 refs) while still splitting fleet-preset payloads
+/// into enough chunks that a localized weight delta dirties few of them.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
+
+/// What one `save` actually cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SaveStats {
+    /// Bytes that hit disk: new chunks + the manifest. The dedup win is
+    /// this number vs the full file image `Checkpoint::save` writes.
+    pub bytes_written: u64,
+    /// Chunk refs in the new snapshot's manifest.
+    pub chunks_total: usize,
+    /// Chunks that were not already live in the store (actually written).
+    pub chunks_new: usize,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Content address -> number of references from live manifests.
+    /// An address is in this map iff its refcount is >= 1.
+    refs: BTreeMap<u128, u64>,
+    /// Key -> chunk refs of that key's current snapshot, manifest order.
+    snaps: BTreeMap<String, Vec<u128>>,
+}
+
+/// A content-addressed checkpoint repository rooted at one directory.
+pub struct CkptStore {
+    root: PathBuf,
+    chunk_bytes: usize,
+    inner: Mutex<Inner>,
+}
+
+impl CkptStore {
+    /// Open (creating if needed) the store at `root` with the default
+    /// chunk size, rebuilding refcounts from the on-disk manifests and
+    /// garbage-collecting any orphan chunks a crash left behind.
+    pub fn open(root: impl AsRef<Path>) -> Result<CkptStore> {
+        Self::open_with_chunk_bytes(root, DEFAULT_CHUNK_BYTES)
+    }
+
+    /// `open` with an explicit chunk size (tests use tiny chunks so a
+    /// few floats span several chunks). The chunk size only shapes new
+    /// saves; loading uses each manifest's own ref list.
+    pub fn open_with_chunk_bytes(root: impl AsRef<Path>, chunk_bytes: usize) -> Result<CkptStore> {
+        anyhow::ensure!(chunk_bytes >= 16, "chunk_bytes must be >= 16, got {chunk_bytes}");
+        let store = CkptStore {
+            root: root.as_ref().to_path_buf(),
+            chunk_bytes,
+            inner: Mutex::new(Inner::default()),
+        };
+        std::fs::create_dir_all(store.chunks_dir())
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", store.chunks_dir().display()))?;
+        std::fs::create_dir_all(store.snaps_dir())
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", store.snaps_dir().display()))?;
+
+        let mut inner = Inner::default();
+        let mut snap_files: Vec<PathBuf> = Vec::new();
+        for entry in std::fs::read_dir(store.snaps_dir())? {
+            let p = entry?.path();
+            if p.extension().and_then(|e| e.to_str()) == Some("snap") {
+                snap_files.push(p);
+            }
+        }
+        snap_files.sort();
+        for f in &snap_files {
+            let key = f
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| anyhow::anyhow!("unreadable snapshot name {}", f.display()))?
+                .to_string();
+            let env = std::fs::read(f)?;
+            let (_meta, hashes) = decode_snapshot(&env)
+                .map_err(|e| anyhow::anyhow!("snapshot {}: {e}", f.display()))?;
+            for h in &hashes {
+                // a manifest may only commit after its chunks are durable,
+                // so a missing referenced chunk means real corruption
+                anyhow::ensure!(
+                    store.chunk_path(*h).exists(),
+                    "snapshot {} references missing chunk {} (corrupt store)",
+                    f.display(),
+                    hash_hex(*h)
+                );
+                *inner.refs.entry(*h).or_insert(0) += 1;
+            }
+            inner.snaps.insert(key, hashes);
+        }
+        // GC crash residue: chunk files no live manifest references
+        for entry in std::fs::read_dir(store.chunks_dir())? {
+            let p = entry?.path();
+            if p.extension().and_then(|e| e.to_str()) != Some("chunk") {
+                continue;
+            }
+            let orphan = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(parse_hash_hex)
+                .map(|h| !inner.refs.contains_key(&h))
+                .unwrap_or(false);
+            if orphan {
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+        *store.lock()? = inner;
+        Ok(store)
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn chunks_dir(&self) -> PathBuf {
+        self.root.join("chunks")
+    }
+
+    fn snaps_dir(&self) -> PathBuf {
+        self.root.join("snaps")
+    }
+
+    fn chunk_path(&self, h: u128) -> PathBuf {
+        self.chunks_dir().join(format!("{}.chunk", hash_hex(h)))
+    }
+
+    fn snap_path(&self, key: &str) -> PathBuf {
+        self.snaps_dir().join(format!("{key}.snap"))
+    }
+
+    fn lock(&self) -> Result<std::sync::MutexGuard<'_, Inner>> {
+        self.inner
+            .lock()
+            .map_err(|_| anyhow::anyhow!("checkpoint store lock poisoned"))
+    }
+
+    /// Persist `ck` as the snapshot for `key`, replacing any previous
+    /// snapshot under that key. Only chunks not already live in the
+    /// store touch disk; chunks the replaced snapshot no longer needs
+    /// are garbage-collected. The manifest write is the commit point.
+    pub fn save(&self, key: &str, ck: &Checkpoint) -> Result<SaveStats> {
+        check_key(key)?;
+        let payload = ck.payload_bytes();
+        let hashes: Vec<u128> = payload.chunks(self.chunk_bytes).map(fnv1a_128).collect();
+
+        let mut inner = self.lock()?;
+        // pass 1: write content that is not already live (a failure here
+        // leaves only unreferenced chunks — open() residue, no refs moved)
+        let mut bytes_written = 0u64;
+        let mut chunks_new = 0usize;
+        let mut written: std::collections::BTreeSet<u128> = std::collections::BTreeSet::new();
+        for (h, c) in hashes.iter().zip(payload.chunks(self.chunk_bytes)) {
+            if inner.refs.contains_key(h) || written.contains(h) {
+                continue;
+            }
+            write_chunk(&self.chunk_path(*h), c)?;
+            written.insert(*h);
+            bytes_written += c.len() as u64;
+            chunks_new += 1;
+        }
+        if chunks_new > 0 {
+            fsx::fsync_dir(&self.chunks_dir())?;
+        }
+        // pass 2, the commit point: atomically replace the manifest
+        let env = encode_snapshot(ck, self.chunk_bytes, &hashes);
+        bytes_written += fsx::atomic_write(self.snap_path(key), &env)?;
+        // pass 3: flip refcounts — increment the new snapshot first so a
+        // chunk shared with the replaced one never transits through zero
+        for h in &hashes {
+            *inner.refs.entry(*h).or_insert(0) += 1;
+        }
+        if let Some(old) = inner.snaps.insert(key.to_string(), hashes.clone()) {
+            self.release(&mut inner, &old);
+        }
+        Ok(SaveStats { bytes_written, chunks_total: hashes.len(), chunks_new })
+    }
+
+    /// Load the current snapshot for `key`, re-hashing every chunk so
+    /// corruption (or an FNV collision) fails loudly here instead of
+    /// silently restoring the wrong weights.
+    pub fn load(&self, key: &str) -> Result<Checkpoint> {
+        check_key(key)?;
+        // hold the lock so a concurrent free/GC can't remove chunk files
+        // out from under the read
+        let _inner = self.lock()?;
+        let snap = self.snap_path(key);
+        let env = std::fs::read(&snap)
+            .map_err(|e| anyhow::anyhow!("reading snapshot {}: {e}", snap.display()))?;
+        let (meta, hashes) = decode_snapshot(&env)
+            .map_err(|e| anyhow::anyhow!("snapshot {}: {e}", snap.display()))?;
+        let n = meta.get("n_params")?.as_usize()?;
+        let mut payload = Vec::with_capacity(n.saturating_mul(8));
+        for h in &hashes {
+            let p = self.chunk_path(*h);
+            let c = std::fs::read(&p)
+                .map_err(|e| anyhow::anyhow!("reading chunk {}: {e}", p.display()))?;
+            anyhow::ensure!(
+                fnv1a_128(&c) == *h,
+                "chunk {} content does not match its address (corrupt store)",
+                hash_hex(*h)
+            );
+            payload.extend_from_slice(&c);
+        }
+        let (theta, mu) = Checkpoint::split_payload(&payload, n)?;
+        Checkpoint::from_meta_json(&meta, theta, mu)
+    }
+
+    /// Whether `key` has a live snapshot.
+    pub fn contains(&self, key: &str) -> bool {
+        self.lock().map(|i| i.snaps.contains_key(key)).unwrap_or(false)
+    }
+
+    /// Drop `key`'s snapshot and garbage-collect chunks nothing else
+    /// references. Returns whether the key existed; freeing an absent
+    /// key is an idempotent no-op.
+    pub fn free(&self, key: &str) -> Result<bool> {
+        check_key(key)?;
+        let mut inner = self.lock()?;
+        let Some(hashes) = inner.snaps.remove(key) else {
+            return Ok(false);
+        };
+        let snap = self.snap_path(key);
+        if let Err(e) = std::fs::remove_file(&snap) {
+            // put the snapshot back so memory still mirrors disk
+            inner.snaps.insert(key.to_string(), hashes);
+            anyhow::bail!("removing snapshot {}: {e}", snap.display());
+        }
+        self.release(&mut inner, &hashes);
+        Ok(true)
+    }
+
+    /// Decrement refs for one retired manifest and delete chunks that
+    /// hit zero. Deletion is best-effort: a chunk that cannot be removed
+    /// is exactly the orphan residue `open` already cleans.
+    fn release(&self, inner: &mut Inner, hashes: &[u128]) {
+        for h in hashes {
+            let gone = match inner.refs.get_mut(h) {
+                Some(r) if *r > 1 => {
+                    *r -= 1;
+                    false
+                }
+                _ => {
+                    inner.refs.remove(h);
+                    true
+                }
+            };
+            if gone {
+                let _ = std::fs::remove_file(self.chunk_path(*h));
+            }
+        }
+    }
+
+    /// Live unique chunks.
+    pub fn chunk_count(&self) -> usize {
+        self.lock().map(|i| i.refs.len()).unwrap_or(0)
+    }
+
+    /// Live snapshots.
+    pub fn snapshot_count(&self) -> usize {
+        self.lock().map(|i| i.snaps.len()).unwrap_or(0)
+    }
+
+    /// Sum of all refcounts == sum of manifest lengths over live
+    /// snapshots (the conservation law the property tests pin down).
+    pub fn total_refs(&self) -> u64 {
+        self.lock().map(|i| i.refs.values().sum()).unwrap_or(0)
+    }
+
+    /// If the store is fully drained (no snapshots, no chunks), remove
+    /// its directories. Returns whether the root itself was removed;
+    /// a root holding unrelated user files is left in place.
+    pub fn remove_if_empty(&self) -> Result<bool> {
+        let inner = self.lock()?;
+        if !inner.snaps.is_empty() || !inner.refs.is_empty() {
+            return Ok(false);
+        }
+        drop(inner);
+        let _ = std::fs::remove_dir(self.chunks_dir());
+        let _ = std::fs::remove_dir(self.snaps_dir());
+        Ok(std::fs::remove_dir(&self.root).is_ok())
+    }
+}
+
+/// Snapshot keys become file stems; keep them to a portable charset.
+fn check_key(key: &str) -> Result<()> {
+    anyhow::ensure!(
+        !key.is_empty()
+            && key.len() <= 128
+            && !key.starts_with('.')
+            && key.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+        "bad store key {key:?}: want 1-128 chars of [A-Za-z0-9._-], not starting with '.'"
+    );
+    Ok(())
+}
+
+/// Write one chunk at its final content address, fsynced. No tmp+rename
+/// needed: nothing references the address until a manifest commits, so
+/// a torn write here is unreferenced residue that `open` removes.
+fn write_chunk(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating chunk {}: {e}", path.display()))?;
+    f.write_all(bytes)?;
+    f.flush()?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Envelope: `[SNAPSHOT_VERSION]` + compact JSON manifest (checkpoint
+/// metadata + chunk size + content addresses, keys sorted by jsonx).
+fn encode_snapshot(ck: &Checkpoint, chunk_bytes: usize, hashes: &[u128]) -> Vec<u8> {
+    let manifest = Json::obj(vec![
+        ("preset", Json::str(ck.preset.clone())),
+        ("step", Json::num(ck.step as f64)),
+        ("epochs", Json::num(ck.epochs)),
+        ("workers", Json::num(ck.workers as f64)),
+        ("lr", Json::num(ck.lr as f64)),
+        ("n_params", Json::num(ck.theta.len() as f64)),
+        ("chunk_bytes", Json::num(chunk_bytes as f64)),
+        (
+            "chunks",
+            Json::arr(hashes.iter().map(|h| Json::str(hash_hex(*h))).collect()),
+        ),
+    ])
+    .dump();
+    let mut env = Vec::with_capacity(1 + manifest.len());
+    env.push(SNAPSHOT_VERSION);
+    env.extend_from_slice(manifest.as_bytes());
+    env
+}
+
+fn decode_snapshot(env: &[u8]) -> Result<(Json, Vec<u128>)> {
+    anyhow::ensure!(!env.is_empty(), "empty snapshot envelope");
+    let version = env[0];
+    anyhow::ensure!(
+        version == SNAPSHOT_VERSION,
+        "unsupported snapshot envelope version {version} (this build reads {SNAPSHOT_VERSION})"
+    );
+    let meta = crate::jsonx::parse(std::str::from_utf8(&env[1..])?)?;
+    let hashes = meta
+        .get("chunks")?
+        .as_arr()?
+        .iter()
+        .map(|j| {
+            let s = j.as_str()?;
+            parse_hash_hex(s)
+                .ok_or_else(|| anyhow::anyhow!("bad chunk address {s:?} in snapshot manifest"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((meta, hashes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck(step: u64, fill: impl Fn(usize) -> f32, n: usize) -> Checkpoint {
+        Checkpoint {
+            preset: "tiny".into(),
+            step,
+            epochs: 0.5,
+            workers: 2,
+            lr: 0.25,
+            theta: (0..n).map(&fill).collect(),
+            mu: (0..n).map(|i| fill(i) * -0.5).collect(),
+        }
+    }
+
+    fn tmproot(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("rm-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn disk_chunks(store: &CkptStore) -> usize {
+        std::fs::read_dir(store.root().join("chunks")).map(|d| d.count()).unwrap_or(0)
+    }
+
+    #[test]
+    fn save_load_round_trips_exactly() {
+        let root = tmproot("rt");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        let a = ck(7, |i| i as f32 * 0.125, 100);
+        let stats = store.save("job-1", &a).unwrap();
+        assert_eq!(stats.chunks_total, (100 * 8 + 63) / 64);
+        assert_eq!(stats.chunks_new, stats.chunks_total);
+        assert_eq!(store.load("job-1").unwrap(), a);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn identical_content_under_two_keys_is_stored_once() {
+        let root = tmproot("dedup");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        let a = ck(7, |i| i as f32, 64);
+        let first = store.save("job-1", &a).unwrap();
+        let second = store.save("job-2", &a).unwrap();
+        assert_eq!(second.chunks_new, 0, "shared content must not be rewritten");
+        assert!(second.bytes_written < first.bytes_written);
+        assert_eq!(store.chunk_count(), first.chunks_total);
+        assert_eq!(disk_chunks(&store), first.chunks_total);
+        assert_eq!(store.total_refs() as usize, 2 * first.chunks_total);
+        assert_eq!(store.load("job-2").unwrap(), a);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn resave_of_unchanged_content_writes_only_the_manifest() {
+        let root = tmproot("resave");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        let a = ck(7, |i| i as f32, 512);
+        store.save("job-1", &a).unwrap();
+        let again = store.save("job-1", &a).unwrap();
+        assert_eq!(again.chunks_new, 0);
+        // the whole cost of a width-only rescale restart: the manifest
+        assert!(
+            again.bytes_written < a.payload_bytes().len() as u64 / 2,
+            "manifest-only rewrite wrote {} bytes",
+            again.bytes_written
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn replacing_a_snapshot_gcs_chunks_it_no_longer_needs() {
+        let root = tmproot("replace");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        store.save("job-1", &ck(1, |i| i as f32, 64)).unwrap();
+        let b = ck(2, |i| (i + 9999) as f32, 64);
+        let stats = store.save("job-1", &b).unwrap();
+        assert_eq!(store.load("job-1").unwrap(), b);
+        assert_eq!(store.chunk_count(), stats.chunks_total, "old chunks must be GC'd");
+        assert_eq!(disk_chunks(&store), stats.chunks_total);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn free_drains_and_remove_if_empty_removes_the_root() {
+        let root = tmproot("drain");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        store.save("job-1", &ck(1, |i| i as f32, 64)).unwrap();
+        store.save("job-2", &ck(2, |i| i as f32 + 0.5, 64)).unwrap();
+        assert!(!store.remove_if_empty().unwrap(), "non-empty store must survive");
+        assert!(store.free("job-1").unwrap());
+        assert!(!store.free("job-1").unwrap(), "double free is a no-op");
+        assert!(store.free("job-2").unwrap());
+        assert_eq!((store.chunk_count(), store.snapshot_count(), store.total_refs()), (0, 0, 0));
+        assert_eq!(disk_chunks(&store), 0);
+        assert!(store.remove_if_empty().unwrap());
+        assert!(!root.exists());
+    }
+
+    #[test]
+    fn reopen_rebuilds_refcounts_and_gcs_orphans() {
+        let root = tmproot("reopen");
+        let a = ck(7, |i| i as f32, 64);
+        {
+            let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+            store.save("job-1", &a).unwrap();
+            store.save("job-2", &a).unwrap();
+            // crash residue: a chunk no manifest references
+            std::fs::write(root.join("chunks").join(format!("{}.chunk", hash_hex(12345))), b"orphan")
+                .unwrap();
+        }
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        assert_eq!(store.snapshot_count(), 2);
+        assert_eq!(store.total_refs() as usize, 2 * store.chunk_count());
+        assert_eq!(disk_chunks(&store), store.chunk_count(), "orphan must be GC'd at open");
+        assert_eq!(store.load("job-1").unwrap(), a);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn open_rejects_manifest_referencing_missing_chunk() {
+        let root = tmproot("missing");
+        {
+            let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+            store.save("job-1", &ck(1, |i| i as f32, 64)).unwrap();
+        }
+        // violate the commit ordering by hand
+        let chunks_dir = root.join("chunks");
+        for e in std::fs::read_dir(&chunks_dir).unwrap() {
+            std::fs::remove_file(e.unwrap().path()).unwrap();
+        }
+        let err = CkptStore::open_with_chunk_bytes(&root, 64).unwrap_err().to_string();
+        assert!(err.contains("missing chunk"), "{err}");
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn rejects_bad_keys() {
+        let root = tmproot("keys");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        for bad in ["", "../evil", "a/b", ".hidden", "sp ace"] {
+            assert!(store.save(bad, &ck(1, |i| i as f32, 16)).is_err(), "accepted {bad:?}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn empty_payload_is_representable() {
+        let root = tmproot("empty");
+        let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+        let a = ck(1, |i| i as f32, 0);
+        let stats = store.save("job-1", &a).unwrap();
+        assert_eq!((stats.chunks_total, stats.chunks_new), (0, 0));
+        assert_eq!(store.load("job-1").unwrap(), a);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

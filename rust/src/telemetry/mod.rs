@@ -210,10 +210,12 @@ impl Recorder {
         out
     }
 
-    /// Write the stream to a file.
+    /// Write the stream to a file, atomically (tmp + fsync + rename +
+    /// dir fsync) — a crash mid-write must not leave a torn stream that
+    /// `report` then chokes on.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let path = path.as_ref();
-        std::fs::write(path, self.to_jsonl())
+        crate::fsx::atomic_write(path, self.to_jsonl().as_bytes())
             .map_err(|e| anyhow::anyhow!("writing telemetry {}: {e}", path.display()))?;
         Ok(())
     }
@@ -339,5 +341,31 @@ mod tests {
         let text = r.to_jsonl();
         assert!(!text.contains("fire"), "wall-clock phases must not be serialized:\n{text}");
         assert!(r.phase_summary().contains("fire"));
+    }
+
+    #[test]
+    fn save_is_atomic_and_cleans_tmp_on_failure() {
+        let p = std::env::temp_dir()
+            .join(format!("rm-telemetry-atomic-{}.jsonl", std::process::id()));
+        let mut r = Recorder::new();
+        r.emit(event("run_start", 0.0, vec![]));
+        r.save(&p).unwrap();
+        let tmp = p.with_file_name(format!("{}.tmp", p.file_name().unwrap().to_string_lossy()));
+        assert!(!tmp.exists(), "tmp sibling left behind");
+        // a stale tmp from a torn earlier writer must not break a resave
+        std::fs::write(&tmp, b"torn partial stream").unwrap();
+        r.save(&p).unwrap();
+        assert!(!tmp.exists());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), r.to_jsonl());
+        let _ = std::fs::remove_file(&p);
+        // rename failure (directory at the target): tmp removed, target intact
+        let d = std::env::temp_dir()
+            .join(format!("rm-telemetry-atomic-dir-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(r.save(&d).is_err());
+        let dtmp = d.with_file_name(format!("{}.tmp", d.file_name().unwrap().to_string_lossy()));
+        assert!(!dtmp.exists(), "failed save leaked the tmp sibling");
+        assert!(d.is_dir());
+        let _ = std::fs::remove_dir(&d);
     }
 }

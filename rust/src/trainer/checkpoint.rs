@@ -4,8 +4,13 @@
 //! little-endian f32 payloads for theta and the momentum buffer. Save +
 //! load must be fast — the paper's whole argument rests on stop/restart
 //! being ~10 s; ours is dominated by PJRT recompilation, not this I/O.
+//!
+//! Durability goes through [`crate::fsx::atomic_write`]: tmp + fsync +
+//! rename + parent-dir fsync, with tmp cleanup on failure. The
+//! content-addressed store (`crate::store`) persists the same logical
+//! checkpoint as chunked payload + manifest instead of this single file;
+//! [`Checkpoint::payload_bytes`] is the shared payload encoding.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::jsonx::Json;
@@ -31,74 +36,54 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Atomic save: the payload is written to a sibling `.tmp` file and
-    /// renamed over `path` only after a successful flush+fsync, so a
-    /// preemption mid-save can never leave a torn checkpoint at `path` —
-    /// either the previous complete checkpoint survives or the new one
-    /// does. (The orchestrator preempts jobs exactly around this call.)
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        let file_name = path
-            .file_name()
-            .ok_or_else(|| anyhow::anyhow!("checkpoint path {} has no file name", path.display()))?;
-        let mut tmp_name = file_name.to_os_string();
-        tmp_name.push(".tmp");
-        let tmp = path.with_file_name(tmp_name);
-
-        let write = || -> Result<()> {
-            let meta = Json::obj(vec![
-                ("preset", Json::str(self.preset.clone())),
-                ("step", Json::num(self.step as f64)),
-                ("epochs", Json::num(self.epochs)),
-                ("workers", Json::num(self.workers as f64)),
-                ("lr", Json::num(self.lr as f64)),
-                ("n_params", Json::num(self.theta.len() as f64)),
-            ])
-            .dump();
-            let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&(meta.len() as u32).to_le_bytes())?;
-            f.write_all(meta.as_bytes())?;
-            for v in self.theta.iter().chain(self.mu.iter()) {
-                f.write_all(&v.to_le_bytes())?;
-            }
-            f.flush()?;
-            f.get_ref().sync_all()?;
-            Ok(())
-        };
-        if let Err(e) = write() {
-            let _ = std::fs::remove_file(&tmp);
-            return Err(e);
+    /// The raw parameter payload: theta then mu, little-endian f32.
+    /// This is both the tail of the single-file format and the byte
+    /// stream the content-addressed store chunks and hashes.
+    pub fn payload_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity((self.theta.len() + self.mu.len()) * 4);
+        for v in self.theta.iter().chain(self.mu.iter()) {
+            payload.extend_from_slice(&v.to_le_bytes());
         }
-        std::fs::rename(&tmp, path)?;
-        Ok(())
+        payload
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "not a ringmaster checkpoint");
-        let mut word = [0u8; 4];
-        f.read_exact(&mut word)?;
-        let version = u32::from_le_bytes(word);
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
-        f.read_exact(&mut word)?;
-        let meta_len = u32::from_le_bytes(word) as usize;
-        let mut meta_bytes = vec![0u8; meta_len];
-        f.read_exact(&mut meta_bytes)?;
-        let meta = crate::jsonx::parse(std::str::from_utf8(&meta_bytes)?)?;
-
-        let n = meta.get("n_params")?.as_usize()?;
-        let mut payload = vec![0u8; n * 4 * 2];
-        f.read_exact(&mut payload)?;
+    /// Rebuild theta/mu from a payload produced by [`payload_bytes`],
+    /// checking the length against `n_params` exactly.
+    pub fn split_payload(payload: &[u8], n_params: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let want = n_params
+            .checked_mul(8)
+            .ok_or_else(|| anyhow::anyhow!("n_params {n_params} overflows payload size"))?;
+        anyhow::ensure!(
+            payload.len() == want,
+            "checkpoint payload is {} bytes but n_params={} implies {} (truncated or mismatched metadata)",
+            payload.len(),
+            n_params,
+            want
+        );
         let mut floats = payload
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-        let theta: Vec<f32> = floats.by_ref().take(n).collect();
+        let theta: Vec<f32> = floats.by_ref().take(n_params).collect();
         let mu: Vec<f32> = floats.collect();
+        Ok((theta, mu))
+    }
 
+    /// JSON metadata header shared by the file format and the store's
+    /// snapshot manifests.
+    pub fn meta_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("epochs", Json::num(self.epochs)),
+            ("workers", Json::num(self.workers as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("n_params", Json::num(self.theta.len() as f64)),
+        ])
+    }
+
+    /// Rebuild the metadata fields (everything but theta/mu) from a
+    /// header produced by [`meta_json`].
+    pub fn from_meta_json(meta: &Json, theta: Vec<f32>, mu: Vec<f32>) -> Result<Checkpoint> {
         Ok(Checkpoint {
             preset: meta.get("preset")?.as_str()?.to_string(),
             step: meta.get("step")?.as_f64()? as u64,
@@ -108,6 +93,60 @@ impl Checkpoint {
             theta,
             mu,
         })
+    }
+
+    /// The complete single-file image (magic + version + meta + payload).
+    pub fn encode(&self) -> Vec<u8> {
+        let meta = self.meta_json().dump();
+        let payload = self.payload_bytes();
+        let mut out = Vec::with_capacity(12 + meta.len() + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        out.extend_from_slice(meta.as_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Atomic, durable save via [`crate::fsx::atomic_write`]: the image
+    /// is written to a sibling `.tmp`, flushed + fsynced, renamed over
+    /// `path`, and the parent directory is fsynced so the rename itself
+    /// survives a crash. A preemption mid-save can never leave a torn
+    /// checkpoint at `path` — either the previous complete checkpoint
+    /// survives or the new one does — and a failed rename removes the
+    /// tmp sibling instead of leaking it. (The orchestrator preempts
+    /// jobs exactly around this call.) Returns bytes written.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<u64> {
+        crate::fsx::atomic_write(path, &self.encode())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+    }
+
+    /// Parse a full file image, rejecting truncation, trailing garbage,
+    /// and metadata that disagrees with the payload length.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        anyhow::ensure!(bytes.len() >= 12, "truncated checkpoint: {} byte header", bytes.len());
+        anyhow::ensure!(&bytes[0..4] == MAGIC, "not a ringmaster checkpoint");
+        let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let meta_len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
+        anyhow::ensure!(
+            bytes.len() - 12 >= meta_len,
+            "truncated checkpoint: metadata header claims {meta_len} bytes, {} available",
+            bytes.len() - 12
+        );
+        let meta_bytes = &bytes[12..12 + meta_len];
+        let meta = crate::jsonx::parse(std::str::from_utf8(meta_bytes)?)?;
+        let n = meta.get("n_params")?.as_usize()?;
+        // exact-length check: errors on a truncated payload AND on
+        // trailing garbage / an n_params that disagrees with the file
+        let (theta, mu) = Self::split_payload(&bytes[12 + meta_len..], n)?;
+        Self::from_meta_json(&meta, theta, mu)
     }
 }
 
@@ -135,7 +174,8 @@ mod tests {
     fn round_trips_exactly() {
         let p = tmpfile("rt");
         let ck = sample();
-        ck.save(&p).unwrap();
+        let bytes = ck.save(&p).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&p).unwrap().len());
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back, ck);
         let _ = std::fs::remove_file(&p);
@@ -147,6 +187,66 @@ mod tests {
         std::fs::write(&p, b"definitely not a checkpoint").unwrap();
         assert!(Checkpoint::load(&p).is_err());
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let mut img = sample().encode();
+        img[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let err = Checkpoint::decode(&img).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let img = sample().encode();
+        // chop mid-payload and mid-header
+        for cut in [img.len() - 1, img.len() - 123, img.len() / 2, 13, 11, 3] {
+            let err = Checkpoint::decode(&img[..cut]);
+            assert!(err.is_err(), "accepted a {cut}-byte prefix of a {}-byte file", img.len());
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut img = sample().encode();
+        img.extend_from_slice(&[0u8; 16]);
+        let err = Checkpoint::decode(&img).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+    }
+
+    #[test]
+    fn rejects_n_params_mismatch() {
+        // metadata says more params than the payload holds: rebuild the
+        // image with a lying n_params over the real 1000-float payload
+        let ck = sample();
+        let meta = Json::obj(vec![
+            ("preset", Json::str("tiny")),
+            ("step", Json::num(5000.0)),
+            ("epochs", Json::num(51.2)),
+            ("workers", Json::num(4.0)),
+            ("lr", Json::num(0.4)),
+            ("n_params", Json::num(2000.0)),
+        ])
+        .dump();
+        let payload = ck.payload_bytes();
+        let mut img = Vec::new();
+        img.extend_from_slice(MAGIC);
+        img.extend_from_slice(&VERSION.to_le_bytes());
+        img.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        img.extend_from_slice(meta.as_bytes());
+        img.extend_from_slice(&payload);
+        let err = Checkpoint::decode(&img).unwrap_err().to_string();
+        assert!(err.contains("n_params=2000"), "{err}");
+    }
+
+    #[test]
+    fn rejects_meta_len_past_eof() {
+        let mut img = sample().encode();
+        let huge = (img.len() as u32) * 4;
+        img[8..12].copy_from_slice(&huge.to_le_bytes());
+        let err = Checkpoint::decode(&img).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
     }
 
     #[test]
@@ -191,6 +291,22 @@ mod tests {
     }
 
     #[test]
+    fn failed_rename_cleans_tmp_and_preserves_target() {
+        // a directory at the checkpoint path makes the rename fail after
+        // the tmp write succeeded — the tmp must not leak
+        let p = tmpfile("rename-fail");
+        std::fs::create_dir_all(&p).unwrap();
+        assert!(sample().save(&p).is_err());
+        let tmp = p.with_file_name(format!(
+            "{}.tmp",
+            p.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!tmp.exists(), "failed rename leaked the tmp sibling");
+        assert!(p.is_dir(), "failed save must not disturb the target");
+        let _ = std::fs::remove_dir(&p);
+    }
+
+    #[test]
     fn save_rejects_pathless_target() {
         // a bare root (no file name) cannot be renamed into
         assert!(sample().save("/").is_err());
@@ -205,5 +321,15 @@ mod tests {
         assert_eq!(back.workers, 4);
         assert!((back.lr - 0.4).abs() < 1e-7);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn payload_bytes_round_trips_through_split() {
+        let ck = sample();
+        let payload = ck.payload_bytes();
+        let (theta, mu) = Checkpoint::split_payload(&payload, ck.theta.len()).unwrap();
+        assert_eq!(theta, ck.theta);
+        assert_eq!(mu, ck.mu);
+        assert!(Checkpoint::split_payload(&payload[..payload.len() - 4], ck.theta.len()).is_err());
     }
 }

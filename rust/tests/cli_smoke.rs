@@ -285,6 +285,48 @@ fn orchestrate_runs_a_generated_workload_on_bare_checkout() {
 }
 
 #[test]
+fn orchestrate_runs_with_a_checkpoint_store() {
+    // same miniature run routed through `--ckpt-store`: the binary must
+    // parse the flag, report ckpt io in the summary, and leave the store
+    // directory fully drained (removed) once every job completes
+    let root = std::env::temp_dir().join(format!("rm-cli-ckpt-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--capacity",
+            "2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--seed",
+            "7",
+            "--ckpt-store",
+            root.to_str().expect("utf-8 temp path"),
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "orchestrate --ckpt-store failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("ckpt_kb"), "per-job ckpt column missing:\n{text}");
+    assert!(text.contains("ckpt io"), "summary missing ckpt io line:\n{text}");
+    assert!(!root.exists(), "store not drained+removed after the run: {}", root.display());
+}
+
+#[test]
 fn orchestrate_runs_on_a_grid_topology() {
     // 2x2 grid: capacity follows the grid (4), summary names the shape,
     // and the per-job table reports node spans

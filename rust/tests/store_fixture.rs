@@ -1,0 +1,96 @@
+//! Checked-in store-format tripwire (artifacts/store_golden, generated
+//! by python/tools/gen_store_fixture.py) — the checkpoint-store analogue
+//! of telemetry_golden.jsonl: if the chunking, the FNV-1a-128 content
+//! addressing, or the snapshot envelope ever drifts, these tests fail
+//! before any real store in the field stops being readable.
+
+use ringmaster::store::{CkptStore, SNAPSHOT_VERSION};
+use ringmaster::trainer::Checkpoint;
+
+fn fixture_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../artifacts/store_golden")
+}
+
+/// The checkpoint the fixture encodes (mirrors gen_store_fixture.py:
+/// mu[4..12] == theta[0..8], so chunks 0 and 2 share one address).
+fn golden_checkpoint() -> Checkpoint {
+    Checkpoint {
+        preset: "tiny".into(),
+        step: 7,
+        epochs: 0.25,
+        workers: 2,
+        lr: 0.25,
+        theta: (1..=12).map(|i| i as f32).collect(),
+        mu: [9.0, 9.0, 9.0, 9.0]
+            .into_iter()
+            .chain((1..=8).map(|i| i as f32))
+            .collect(),
+    }
+}
+
+#[test]
+fn golden_store_opens_loads_and_dedups() {
+    let store = CkptStore::open_with_chunk_bytes(fixture_root(), 32).expect("fixture opens");
+    assert_eq!(store.snapshot_count(), 1);
+    // 3 manifest refs over 2 unique chunks — the dedup tripwire
+    assert_eq!(store.total_refs(), 3);
+    assert_eq!(store.chunk_count(), 2);
+    assert_eq!(store.load("golden").expect("fixture loads"), golden_checkpoint());
+}
+
+#[test]
+fn rust_save_reproduces_the_fixture_bytes_exactly() {
+    // format pin: the Rust encoder must emit the exact bytes the python
+    // generator checked in — chunk files and snapshot envelope alike
+    let tmp = std::env::temp_dir().join(format!("rm-fixture-resave-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let store = CkptStore::open_with_chunk_bytes(&tmp, 32).unwrap();
+    store.save("golden", &golden_checkpoint()).unwrap();
+
+    let fixture = fixture_root();
+    for sub in ["snaps/golden.snap"] {
+        let want = std::fs::read(fixture.join(sub)).unwrap();
+        let got = std::fs::read(tmp.join(sub)).unwrap();
+        assert_eq!(got, want, "{sub} drifted from the checked-in fixture");
+    }
+    let mut fixture_chunks: Vec<String> = std::fs::read_dir(fixture.join("chunks"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    fixture_chunks.sort();
+    let mut got_chunks: Vec<String> = std::fs::read_dir(tmp.join("chunks"))
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    got_chunks.sort();
+    assert_eq!(got_chunks, fixture_chunks, "chunk addressing drifted");
+    for name in &fixture_chunks {
+        assert_eq!(
+            std::fs::read(tmp.join("chunks").join(name)).unwrap(),
+            std::fs::read(fixture.join("chunks").join(name)).unwrap(),
+            "chunk {name} content drifted"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn future_envelope_version_is_rejected() {
+    // copy the fixture, bump the version byte, and watch both open()
+    // and load() refuse instead of misreading
+    let tmp = std::env::temp_dir().join(format!("rm-fixture-vbump-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let fixture = fixture_root();
+    std::fs::create_dir_all(tmp.join("chunks")).unwrap();
+    std::fs::create_dir_all(tmp.join("snaps")).unwrap();
+    for e in std::fs::read_dir(fixture.join("chunks")).unwrap() {
+        let e = e.unwrap();
+        std::fs::copy(e.path(), tmp.join("chunks").join(e.file_name())).unwrap();
+    }
+    let mut env = std::fs::read(fixture.join("snaps/golden.snap")).unwrap();
+    env[0] = SNAPSHOT_VERSION + 1;
+    std::fs::write(tmp.join("snaps/golden.snap"), &env).unwrap();
+    let err = CkptStore::open_with_chunk_bytes(&tmp, 32).unwrap_err().to_string();
+    assert!(err.contains("unsupported snapshot envelope version"), "{err}");
+    let _ = std::fs::remove_dir_all(&tmp);
+}

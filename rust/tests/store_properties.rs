@@ -1,0 +1,182 @@
+//! Property-style tests for the content-addressed checkpoint store:
+//! refcount conservation under random save/free churn, GC draining to
+//! zero, corruption and version rejection, and concurrent access.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ringmaster::rngx::Rng;
+use ringmaster::store::{CkptStore, SNAPSHOT_VERSION};
+use ringmaster::trainer::Checkpoint;
+
+fn tmproot(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("rm-storeprop-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A checkpoint whose payload is a deterministic function of (seed, n):
+/// same inputs → same bytes → same chunk addresses.
+fn ck(seed: u64, n: usize) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    Checkpoint {
+        preset: "tiny".into(),
+        step: seed,
+        epochs: 0.5,
+        workers: 2,
+        lr: 0.25,
+        theta: (0..n).map(|_| (rng.next_u64() % 1024) as f32).collect(),
+        mu: (0..n).map(|_| (rng.next_u64() % 1024) as f32 * -0.5).collect(),
+    }
+}
+
+fn disk_chunks(store: &CkptStore) -> usize {
+    std::fs::read_dir(store.root().join("chunks"))
+        .map(|rd| rd.filter_map(|e| e.ok()).count())
+        .unwrap_or(0)
+}
+
+#[test]
+fn refcounts_are_conserved_under_random_churn() {
+    let root = tmproot("churn");
+    let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut live: Vec<String> = Vec::new();
+
+    for round in 0..200u64 {
+        let roll = rng.next_u64() % 100;
+        if roll < 60 || live.is_empty() {
+            // save: fresh key, or overwrite an existing one
+            let key = if roll < 20 || live.is_empty() {
+                let k = format!("job-{round}");
+                live.push(k.clone());
+                k
+            } else {
+                live[(rng.next_u64() as usize) % live.len()].clone()
+            };
+            // a small seed pool so distinct keys often share content
+            let seed = rng.next_u64() % 7;
+            let n = 16 + (rng.next_u64() as usize % 48);
+            store.save(&key, &ck(seed, n)).unwrap();
+        } else {
+            let key = live.swap_remove((rng.next_u64() as usize) % live.len());
+            assert!(store.free(&key).unwrap());
+        }
+
+        // invariants after every operation
+        assert_eq!(store.snapshot_count(), live.len());
+        assert_eq!(store.chunk_count(), disk_chunks(&store), "round {round}");
+        // every 25 rounds, a fresh open must reconstruct identical state
+        if round % 25 == 24 {
+            let reopened = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+            assert_eq!(reopened.snapshot_count(), store.snapshot_count());
+            assert_eq!(reopened.chunk_count(), store.chunk_count());
+            assert_eq!(reopened.total_refs(), store.total_refs());
+        }
+    }
+
+    // drain: freeing every live key must GC every chunk
+    for key in live.drain(..) {
+        assert!(store.free(&key).unwrap());
+    }
+    assert_eq!(store.snapshot_count(), 0);
+    assert_eq!(store.chunk_count(), 0);
+    assert_eq!(disk_chunks(&store), 0);
+    assert!(store.remove_if_empty().unwrap());
+    assert!(!root.exists());
+}
+
+#[test]
+fn corrupt_chunk_content_is_detected_on_load() {
+    let root = tmproot("corrupt");
+    let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+    store.save("victim", &ck(1, 64)).unwrap();
+
+    // flip one byte in one chunk file on disk
+    let chunk = std::fs::read_dir(root.join("chunks"))
+        .unwrap()
+        .next()
+        .unwrap()
+        .unwrap()
+        .path();
+    let mut bytes = std::fs::read(&chunk).unwrap();
+    bytes[0] ^= 0xFF;
+    std::fs::write(&chunk, &bytes).unwrap();
+
+    let err = store.load("victim").unwrap_err().to_string();
+    assert!(err.contains("does not match its address"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn future_version_is_rejected_by_load_and_reopen() {
+    let root = tmproot("version");
+    let store = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+    store.save("old", &ck(2, 32)).unwrap();
+
+    let snap = root.join("snaps").join("old.snap");
+    let mut env = std::fs::read(&snap).unwrap();
+    env[0] = SNAPSHOT_VERSION + 1;
+    std::fs::write(&snap, &env).unwrap();
+
+    let err = store.load("old").unwrap_err().to_string();
+    assert!(err.contains("unsupported snapshot envelope version"), "{err}");
+    let err = CkptStore::open_with_chunk_bytes(&root, 64)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unsupported snapshot envelope version"), "{err}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn payload_not_a_multiple_of_chunk_size_round_trips() {
+    let root = tmproot("ragged");
+    // 8 bytes per param, chunk 48 → last chunk is ragged for most n
+    let store = CkptStore::open_with_chunk_bytes(&root, 48).unwrap();
+    for n in [1usize, 5, 6, 7, 13] {
+        let c = ck(n as u64, n);
+        store.save("ragged", &c).unwrap();
+        assert_eq!(store.load("ragged").unwrap(), c);
+    }
+    store.free("ragged").unwrap();
+    assert!(store.remove_if_empty().unwrap());
+}
+
+#[test]
+fn concurrent_saves_and_frees_keep_the_store_consistent() {
+    let root = tmproot("threads");
+    let store = Arc::new(CkptStore::open_with_chunk_bytes(&root, 64).unwrap());
+
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let store = Arc::clone(&store);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25u64 {
+                let key = format!("t{t}-{i}");
+                // shared seed pool → cross-thread dedup pressure
+                store.save(&key, &ck(i % 5, 32)).unwrap();
+                if i % 3 == 0 {
+                    assert!(store.free(&key).unwrap());
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // survivors: per thread, the 17 keys with i % 3 != 0
+    assert_eq!(store.snapshot_count(), 4 * 17);
+    assert_eq!(store.chunk_count(), disk_chunks(&store));
+    let reopened = CkptStore::open_with_chunk_bytes(&root, 64).unwrap();
+    assert_eq!(reopened.snapshot_count(), store.snapshot_count());
+    assert_eq!(reopened.total_refs(), store.total_refs());
+
+    for t in 0..4u64 {
+        for i in (0..25u64).filter(|i| i % 3 != 0) {
+            assert!(store.free(&format!("t{t}-{i}")).unwrap());
+        }
+    }
+    assert_eq!(store.chunk_count(), 0);
+    assert!(store.remove_if_empty().unwrap());
+}
