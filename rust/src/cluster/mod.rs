@@ -173,6 +173,15 @@ pub struct ClusterState {
     /// `sum(link_rings)` always equals the summed span of the jobs
     /// spanning more than one node.
     link_rings: Vec<usize>,
+    /// Failed-node mask (DESIGN.md §17): `down[n]` means node `n` is
+    /// out of the pool — placement never picks its slots and its free
+    /// GPUs do not count toward [`Self::available_gpus`]. Marking a
+    /// node down does *not* evict its tenants; the engine owning the
+    /// ledger evicts (releases) victims itself so their loss of
+    /// progress is charged at one well-defined point. All-false (the
+    /// only state a fault-off run can be in) makes every accessor
+    /// degenerate to its pre-fault form.
+    down: Vec<bool>,
 }
 
 impl ClusterState {
@@ -187,6 +196,7 @@ impl ClusterState {
             busy: vec![vec![None; spec.gpus_per_node]; spec.nodes],
             allocations: BTreeMap::new(),
             link_rings: vec![0; spec.nodes],
+            down: vec![false; spec.nodes],
         }
     }
 
@@ -204,6 +214,46 @@ impl ClusterState {
 
     pub fn used_gpus(&self) -> usize {
         self.spec.capacity() - self.free_gpus()
+    }
+
+    /// Free GPUs on *up* nodes — what placement can actually grant.
+    /// Equal to [`Self::free_gpus`] whenever no node is down (every
+    /// fault-off run), so pre-fault callers may keep using either.
+    pub fn available_gpus(&self) -> usize {
+        (0..self.spec.nodes)
+            .filter(|&n| !self.down[n])
+            .map(|n| self.busy[n].iter().filter(|s| s.is_none()).count())
+            .sum()
+    }
+
+    /// Mark `node` failed: placement skips it until [`Self::set_node_up`].
+    /// Tenants are left in the ledger for the caller to evict.
+    pub fn set_node_down(&mut self, node: usize) {
+        self.down[node] = true;
+    }
+
+    /// Repair `node`: its free slots re-enter the placeable pool.
+    pub fn set_node_up(&mut self, node: usize) {
+        self.down[node] = false;
+    }
+
+    pub fn is_node_down(&self, node: usize) -> bool {
+        self.down[node]
+    }
+
+    /// Nodes currently down, ascending.
+    pub fn down_nodes(&self) -> Vec<usize> {
+        (0..self.spec.nodes).filter(|&n| self.down[n]).collect()
+    }
+
+    /// Jobs with at least one GPU on `node`, ascending by id — the
+    /// eviction set when `node` fails.
+    pub fn jobs_on_node(&self, node: usize) -> Vec<u64> {
+        self.allocations
+            .iter()
+            .filter(|(_, gpus)| gpus.iter().any(|&(n, _)| n == node))
+            .map(|(&j, _)| j)
+            .collect()
     }
 
     /// GPUs currently held by `job`.
@@ -342,9 +392,11 @@ impl ClusterState {
             "job {job} already placed; release first"
         );
         anyhow::ensure!(
-            w <= self.free_gpus(),
-            "insufficient capacity: want {w}, free {}",
-            self.free_gpus()
+            w <= self.available_gpus(),
+            "insufficient capacity: want {w}, available {} ({} free, {} nodes down)",
+            self.available_gpus(),
+            self.free_gpus(),
+            self.down.iter().filter(|&&d| d).count()
         );
 
         let mut picked: Vec<Gpu> = Vec::with_capacity(w);
@@ -355,6 +407,7 @@ impl ClusterState {
             }
             if node < self.spec.nodes
                 && slot < self.spec.gpus_per_node
+                && !self.down[node]
                 && self.busy[node][slot].is_none()
             {
                 self.busy[node][slot] = Some(job);
@@ -363,29 +416,36 @@ impl ClusterState {
             }
         }
         while remaining > 0 {
-            let free_of = |node: &Vec<Option<u64>>| node.iter().filter(|s| s.is_none()).count();
+            // a down node reports zero free slots, so every policy
+            // (and the capacity-checked expect below) skips it without
+            // any fault-specific branch
+            let busy = &self.busy;
+            let down = &self.down;
+            let free_of = |n: usize| {
+                if down[n] {
+                    0
+                } else {
+                    busy[n].iter().filter(|s| s.is_none()).count()
+                }
+            };
             let node = match self.policy {
                 PlacePolicy::Pack => {
                     // best fit: smallest free count still >= remaining…
                     let exact = (0..self.spec.nodes)
-                        .filter(|&n| free_of(&self.busy[n]) >= remaining)
-                        .min_by_key(|&n| free_of(&self.busy[n]));
+                        .filter(|&n| free_of(n) >= remaining)
+                        .min_by_key(|&n| free_of(n));
                     // …else the fullest-free node to minimize node count.
                     exact.or_else(|| {
                         (0..self.spec.nodes)
-                            .filter(|&n| free_of(&self.busy[n]) > 0)
-                            .max_by_key(|&n| free_of(&self.busy[n]))
+                            .filter(|&n| free_of(n) > 0)
+                            .max_by_key(|&n| free_of(n))
                     })
                 }
                 // emptiest node first, one GPU per visit (ties -> lowest
                 // index, so scatter is deterministic too)
                 PlacePolicy::Scatter => (0..self.spec.nodes)
-                    .filter(|&n| free_of(&self.busy[n]) > 0)
-                    .max_by(|&a, &b| {
-                        free_of(&self.busy[a])
-                            .cmp(&free_of(&self.busy[b]))
-                            .then(b.cmp(&a))
-                    }),
+                    .filter(|&n| free_of(n) > 0)
+                    .max_by(|&a, &b| free_of(a).cmp(&free_of(b)).then(b.cmp(&a))),
                 PlacePolicy::Spread => {
                     // A gang that still fits one node is an intra-node
                     // ring — no link, no contention — so locality wins
@@ -395,22 +455,22 @@ impl ClusterState {
                     // tenancy: fewest rings first, then best fit, then
                     // lowest index — all deterministic.
                     let crossing = !picked.is_empty()
-                        || (0..self.spec.nodes).all(|n| free_of(&self.busy[n]) < remaining);
+                        || (0..self.spec.nodes).all(|n| free_of(n) < remaining);
                     if !crossing {
                         (0..self.spec.nodes)
-                            .filter(|&n| free_of(&self.busy[n]) >= remaining)
-                            .min_by_key(|&n| free_of(&self.busy[n]))
+                            .filter(|&n| free_of(n) >= remaining)
+                            .min_by_key(|&n| free_of(n))
                     } else {
                         let exact = (0..self.spec.nodes)
-                            .filter(|&n| free_of(&self.busy[n]) >= remaining)
-                            .min_by_key(|&n| (self.link_rings[n], free_of(&self.busy[n]), n));
+                            .filter(|&n| free_of(n) >= remaining)
+                            .min_by_key(|&n| (self.link_rings[n], free_of(n), n));
                         exact.or_else(|| {
                             (0..self.spec.nodes)
-                                .filter(|&n| free_of(&self.busy[n]) > 0)
+                                .filter(|&n| free_of(n) > 0)
                                 .min_by_key(|&n| {
                                     (
                                         self.link_rings[n],
-                                        std::cmp::Reverse(free_of(&self.busy[n])),
+                                        std::cmp::Reverse(free_of(n)),
                                         n,
                                     )
                                 })
@@ -781,6 +841,52 @@ mod tests {
         assert_eq!(s.tenancy_of(1), 1);
         assert_eq!(s.tenancy_of(2), 1);
         assert_consistent(&s);
+    }
+
+    #[test]
+    fn down_nodes_are_unplaceable_until_repair() {
+        let mut c = ClusterState::new(ClusterSpec::new(2, 4));
+        assert_eq!(c.available_gpus(), 8);
+        assert!(c.down_nodes().is_empty());
+        c.set_node_down(0);
+        assert!(c.is_node_down(0));
+        assert_eq!(c.down_nodes(), vec![0]);
+        assert_eq!(c.available_gpus(), 4);
+        assert_eq!(c.free_gpus(), 8, "free counts raw slots; available excludes down");
+        // placement lands entirely on the surviving node
+        c.place(1, 4).unwrap();
+        assert_eq!(c.node_set(1), vec![1]);
+        // and a gang that no longer fits is refused, not split onto the
+        // dead node
+        let err = c.place(2, 1).unwrap_err().to_string();
+        assert!(err.contains("nodes down"), "{err}");
+        // affinity must not resurrect slots on a down node
+        c.release(1).unwrap();
+        c.set_node_down(1);
+        c.set_node_up(0);
+        let picked = c.place_with_affinity(1, 2, &[(1, 0), (1, 1)]).unwrap();
+        assert!(picked.iter().all(|&(n, _)| n == 0), "{picked:?}");
+        c.release(1).unwrap();
+        // repair restores the full pool
+        c.set_node_up(1);
+        assert_eq!(c.available_gpus(), 8);
+        c.place(3, 8).unwrap();
+        assert_eq!(c.nodes_spanned(3), 2);
+    }
+
+    #[test]
+    fn jobs_on_node_names_the_eviction_set() {
+        let mut c = ClusterState::new(ClusterSpec::new(3, 4));
+        c.place(1, 4).unwrap(); // node 0
+        c.place(2, 6).unwrap(); // nodes 1+2
+        c.place(3, 2).unwrap(); // node 2 (best fit into the remainder)
+        assert_eq!(c.jobs_on_node(0), vec![1]);
+        assert_eq!(c.jobs_on_node(1), vec![2]);
+        assert_eq!(c.jobs_on_node(2), vec![2, 3]);
+        // marking a node down does not evict: the engine owns eviction
+        c.set_node_down(2);
+        assert_eq!(c.jobs_on_node(2), vec![2, 3]);
+        assert_consistent(&c);
     }
 
     #[test]

@@ -22,8 +22,8 @@ use ringmaster::orchestrator::{self, OrchestratorConfig, TraceGen};
 use ringmaster::perfmodel::{ConvergenceModel, LinkContention, PlacementModel, SpeedModel};
 use ringmaster::runtime::manifest::default_dir;
 use ringmaster::sim::{
-    prune_from_env, simulate_traced, sweep, Contention, SimConfig, StrategyKind, SweepCell,
-    WorkloadGen,
+    prune_from_env, simulate_traced, sweep, Contention, FaultPlan, SimConfig, StrategyKind,
+    SweepCell, WorkloadGen,
 };
 use ringmaster::telemetry::{audit, Recorder};
 use ringmaster::trainer::{train, Checkpoint, TrainConfig};
@@ -112,6 +112,15 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20                    other's eq-2 constants (off by default; named\n\
              \x20                    --link-contention because --contention is this\n\
              \x20                    subcommand's arrival-rate preset)\n\
+             \x20 --faults F         off|steady|burst seeded fault injection (default\n\
+             \x20                    off; needs --nodes — faults down whole nodes).\n\
+             \x20                    steady = per-node MTBF/MTTR clocks; burst = fixed\n\
+             \x20                    failure-storm preset (3600s MTBF, 300s repairs,\n\
+             \x20                    transient gang killers). Evicted gangs lose\n\
+             \x20                    progress back to their last segment boundary\n\
+             \x20 --mtbf S           steady preset: per-node mean secs between\n\
+             \x20                    failures (default 20000)\n\
+             \x20 --mttr S           steady preset: mean repair secs (default 600)\n\
              \x20 --telemetry FILE   record a v3 telemetry stream of the run (events,\n\
              \x20                    decision provenance, placement snapshots) for\n\
              \x20                    `ringmaster report`; incompatible with --all\n\
@@ -166,6 +175,17 @@ fn subcommand_help(sub: &str) -> &'static str {
              \x20                    completion so a finished run leaves the store empty.\n\
              \x20                    Off by default; the schedule is bit-identical either\n\
              \x20                    way, only measured ckpt io/bytes change\n\
+             \x20 --faults F         off|steady|burst seeded fault injection (default\n\
+             \x20                    off). Segments die with the plan's per-duration\n\
+             \x20                    hazard; victims roll back to their last durable\n\
+             \x20                    checkpoint and retry with exponential backoff,\n\
+             \x20                    giving up after --max-retries (job marked FAILED\n\
+             \x20                    in the report, run still exits 0)\n\
+             \x20 --mtbf S           steady preset: per-node mean secs between\n\
+             \x20                    failures (default 20000)\n\
+             \x20 --mttr S           steady preset: mean repair secs (default 600)\n\
+             \x20 --max-retries K    consecutive failed attempts of one segment\n\
+             \x20                    before the job is abandoned (default 3)\n\
              \x20 --telemetry FILE   record a v3 telemetry stream of the run (segment\n\
              \x20                    lifecycle, decision provenance, placement\n\
              \x20                    snapshots) for `ringmaster report`\n\
@@ -334,6 +354,9 @@ fn cmd_simulate() -> Result<()> {
     let placement_s = a.str_opt("placement");
     let model_bytes_s = a.str_opt("model-bytes");
     let link_contention = a.flag("link-contention");
+    let faults_s = a.str_opt("faults");
+    let mtbf_s = a.str_opt("mtbf");
+    let mttr_s = a.str_opt("mttr");
     let telemetry = a.str_opt("telemetry");
     a.reject_unknown()?;
     // One stream records one run; the --all sweep would overwrite it
@@ -354,6 +377,13 @@ fn cmd_simulate() -> Result<()> {
         "--gpus-per-node/--placement/--model-bytes/--link-contention require --nodes \
          (a flat pool has no topology penalty)"
     );
+    // Faults down whole nodes; a flat pool has no nodes to down.
+    anyhow::ensure!(
+        nodes > 0 || faults_s.is_none(),
+        "--faults requires --nodes (faults evict whole nodes from the grid)"
+    );
+    let faults =
+        parse_faults(faults_s.as_deref(), mtbf_s.as_deref(), mttr_s.as_deref(), None, seed)?;
     // --trace-scale replaces the contention presets' arrival process, so
     // an explicit --contention (or the --all sweep) would be silently
     // ignored — reject, same convention as the topology knobs above.
@@ -400,6 +430,7 @@ fn cmd_simulate() -> Result<()> {
                 if link_contention {
                     cfg.link_contention = LinkContention::fair_share();
                 }
+                cfg.faults = faults;
             }
             if n_jobs > 0 {
                 cfg.n_jobs = n_jobs;
@@ -474,10 +505,21 @@ fn cmd_orchestrate() -> Result<()> {
     let dataset_examples = a.get_or("dataset-examples", 256usize)?;
     let restart_cost = a.get_or("restart-cost", 10.0f64)?;
     let ckpt_store = a.str_opt("ckpt-store");
+    let faults_s = a.str_opt("faults");
+    let mtbf_s = a.str_opt("mtbf");
+    let mttr_s = a.str_opt("mttr");
+    let max_retries_s = a.str_opt("max-retries");
     let telemetry = a.str_opt("telemetry");
     let artifacts = a.str_or("artifacts", &default_dir().to_string_lossy());
     let seed = a.get_or("seed", 42u64)?;
     a.reject_unknown()?;
+    let faults = parse_faults(
+        faults_s.as_deref(),
+        mtbf_s.as_deref(),
+        mttr_s.as_deref(),
+        max_retries_s.as_deref(),
+        seed,
+    )?;
     anyhow::ensure!(
         nodes > 0 || (gpn_s.is_none() && placement_s.is_none() && !contention),
         "--gpus-per-node/--placement/--contention require --nodes \
@@ -519,6 +561,7 @@ fn cmd_orchestrate() -> Result<()> {
     cfg.segment_budget_secs = segment_budget;
     cfg.online_model = online_model;
     cfg.ckpt_store = ckpt_store.as_ref().map(std::path::PathBuf::from);
+    cfg.faults = faults;
     if nodes > 0 {
         cfg = cfg.with_topology(nodes, gpus_per_node);
         if contention {
@@ -629,6 +672,63 @@ fn parse_contention(s: &str) -> Result<Contention> {
         "none" => Contention::None,
         other => anyhow::bail!("contention {other:?}: want extreme|moderate|none"),
     })
+}
+
+/// Build a [`FaultPlan`] from the CLI knobs. The default (`--faults`
+/// absent or `off`) is `FaultPlan::OFF` itself, so the no-faults CLI
+/// path is structurally the pre-fault binary — no clocks, no draws.
+fn parse_faults(
+    preset: Option<&str>,
+    mtbf: Option<&str>,
+    mttr: Option<&str>,
+    max_retries: Option<&str>,
+    seed: u64,
+) -> Result<FaultPlan> {
+    // Fault clocks stop here (pending repairs still complete). Chosen
+    // generously past any run this CLI produces, so `steady` behaves
+    // like an unbounded failure process without an extra flag.
+    const FAULT_HORIZON_SECS: f64 = 4.0e6;
+    let knobs_given = mtbf.is_some() || mttr.is_some() || max_retries.is_some();
+    let parse_f64 = |name: &str, s: Option<&str>, default: f64| -> Result<f64> {
+        match s {
+            None => Ok(default),
+            Some(s) => {
+                let v: f64 = s.parse().map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}"))?;
+                anyhow::ensure!(v > 0.0, "--{name} must be > 0 (got {s})");
+                Ok(v)
+            }
+        }
+    };
+    let mut plan = match preset.unwrap_or("off") {
+        "off" => {
+            // Inert knobs are bugs waiting to happen — reject, same
+            // convention as the topology flags.
+            anyhow::ensure!(
+                !knobs_given,
+                "--mtbf/--mttr/--max-retries require --faults steady|burst"
+            );
+            return Ok(FaultPlan::OFF);
+        }
+        "steady" => FaultPlan::steady(
+            parse_f64("mtbf", mtbf, 20_000.0)?,
+            parse_f64("mttr", mttr, 600.0)?,
+            FAULT_HORIZON_SECS,
+            seed,
+        ),
+        "burst" => {
+            anyhow::ensure!(
+                mtbf.is_none() && mttr.is_none(),
+                "--faults burst is a fixed storm preset; use --faults steady \
+                 to tune --mtbf/--mttr"
+            );
+            FaultPlan::burst(FAULT_HORIZON_SECS, seed)
+        }
+        other => anyhow::bail!("faults {other:?}: want off|steady|burst"),
+    };
+    if let Some(k) = max_retries {
+        plan.max_retries = k.parse().map_err(|e| anyhow::anyhow!("--max-retries {k:?}: {e}"))?;
+    }
+    Ok(plan)
 }
 
 fn parse_placement(s: &str) -> Result<PlacePolicy> {

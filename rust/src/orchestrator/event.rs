@@ -24,6 +24,11 @@ pub enum EventKind {
     /// `SegmentEnd` so a deadline that coincides with its own segment's
     /// end is trivially stale.
     BudgetCheck,
+    /// A failed job's recovery backoff expired: the job re-enters the
+    /// schedulable pool (`--faults` only). Ordered last at equal times
+    /// so the instant's frees are pooled before the retry is admitted;
+    /// appending the variant leaves every pre-fault ordering intact.
+    Retry,
 }
 
 /// One scheduled event.

@@ -53,8 +53,15 @@ pub enum JobState {
     Running { workers: usize },
     /// Stopped at a segment boundary (checkpoint held), awaiting workers.
     Preempted,
+    /// A segment died (injected fault or a real runner failure); the job
+    /// sits out its recovery backoff until the queued `Retry` event
+    /// fires, then resumes from its last durable checkpoint.
+    Recovering,
     /// Finished; `finish` is the virtual completion time.
     Done { finish: f64 },
+    /// Gave up after exhausting the fault plan's retry budget; `at` is
+    /// the virtual give-up instant. Terminal, like `Done`.
+    Failed { at: f64 },
 }
 
 impl JobState {
@@ -64,7 +71,9 @@ impl JobState {
             JobState::Queued => "queued",
             JobState::Running { .. } => "running",
             JobState::Preempted => "preempted",
+            JobState::Recovering => "recovering",
             JobState::Done { .. } => "done",
+            JobState::Failed { .. } => "failed",
         }
     }
 }
@@ -96,6 +105,10 @@ pub struct SegmentMeta {
     /// when the segment fits its budget); a check event not matching
     /// this is stale and ignored.
     pub budget_deadline: Option<f64>,
+    /// Drawn at launch from the job's fault clock (`--faults` only):
+    /// this segment dies at its virtual end instead of committing its
+    /// progress. Always false on the default path.
+    pub fail_injected: bool,
 }
 
 /// One registered job: spec, lifecycle state, the in-memory checkpoint
@@ -137,9 +150,25 @@ pub struct Job {
     /// this job's finished-segment observations and serves the
     /// confidence-gated fit the scheduler consumes.
     pub online: Option<crate::perfmodel::OnlineModel>,
+    /// Last durable checkpoint — the rank-0 state as of the most recent
+    /// *successful* segment boundary, the state a failed segment rolls
+    /// back to. Kept only while a fault plan is active (`None` on the
+    /// default path, which never rolls back).
+    pub recovery_ckpt: Option<Checkpoint>,
+    /// Seeded per-job fault clock (`--faults` only): one draw per
+    /// segment launch decides whether that segment dies. Per-job streams
+    /// make each job's fate independent of how other jobs' launches
+    /// interleave.
+    pub fault_rng: Option<crate::rngx::Rng>,
+    /// Consecutive failed segments since the last successful boundary;
+    /// exceeding the plan's `max_retries` marks the job `Failed`.
+    pub fail_attempts: u32,
     // ---- metrics ----
     pub first_start: Option<f64>,
     pub segments: u64,
+    /// Segments lost to faults (injected or real runner death) over the
+    /// job's whole lifetime — rework, not the consecutive-retry counter.
+    pub failures: u64,
     /// Cold starts + worker-count changes (each pays the restart cost).
     pub restarts: u64,
     /// Virtual seconds charged for restarts.
@@ -190,8 +219,12 @@ impl Job {
             boundary_time: None,
             last_segment_restarted: false,
             online: None,
+            recovery_ckpt: None,
+            fault_rng: None,
+            fail_attempts: 0,
             first_start: None,
             segments: 0,
+            failures: 0,
             restarts: 0,
             virtual_restart_secs: 0.0,
             measured_restart_secs: 0.0,
@@ -221,7 +254,10 @@ impl Job {
 
     /// Validated state-machine edge. Legal edges:
     /// `Pending→Queued`, `Queued→Running`, `Preempted→Running`,
-    /// `Running→Preempted`, `Running→Done`.
+    /// `Running→Preempted`, `Running→Done`, plus the recovery cycle
+    /// `Running→Recovering→{Queued, Preempted, Failed}` (back to
+    /// `Queued` when no durable checkpoint exists — the retry is a cold
+    /// start — `Preempted` when one does, `Failed` at give-up).
     pub fn transition(&mut self, to: JobState) -> Result<()> {
         let legal = matches!(
             (&self.state, &to),
@@ -230,6 +266,10 @@ impl Job {
                 | (JobState::Preempted, JobState::Running { .. })
                 | (JobState::Running { .. }, JobState::Preempted)
                 | (JobState::Running { .. }, JobState::Done { .. })
+                | (JobState::Running { .. }, JobState::Recovering)
+                | (JobState::Recovering, JobState::Queued)
+                | (JobState::Recovering, JobState::Preempted)
+                | (JobState::Recovering, JobState::Failed { .. })
         );
         anyhow::ensure!(
             legal,
@@ -284,6 +324,31 @@ mod tests {
         assert!(j.transition(JobState::Queued).is_err());
         j.transition(JobState::Done { finish: 1.0 }).unwrap();
         assert!(j.transition(JobState::Running { workers: 1 }).is_err());
+    }
+
+    #[test]
+    fn recovery_cycle_is_legal_and_failed_is_terminal() {
+        // fail -> backoff -> resume-from-checkpoint -> fail -> give up
+        let mut j = Job::new(spec(2));
+        j.transition(JobState::Queued).unwrap();
+        j.transition(JobState::Running { workers: 2 }).unwrap();
+        j.transition(JobState::Recovering).unwrap();
+        assert!(!j.is_schedulable(), "recovering jobs must sit out the backoff");
+        j.transition(JobState::Preempted).unwrap();
+        j.transition(JobState::Running { workers: 2 }).unwrap();
+        j.transition(JobState::Recovering).unwrap();
+        j.transition(JobState::Failed { at: 99.0 }).unwrap();
+        assert!(!j.is_schedulable());
+        assert!(j.transition(JobState::Queued).is_err());
+        assert!(j.transition(JobState::Running { workers: 1 }).is_err());
+
+        // cold-start retry: no checkpoint -> back to Queued
+        let mut c = Job::new(spec(3));
+        c.transition(JobState::Queued).unwrap();
+        c.transition(JobState::Running { workers: 1 }).unwrap();
+        c.transition(JobState::Recovering).unwrap();
+        c.transition(JobState::Queued).unwrap();
+        assert!(c.is_schedulable());
     }
 
     #[test]

@@ -86,8 +86,10 @@ use crate::cluster::{ClusterState, PlacePolicy, Topology};
 use crate::jsonx::Json;
 use crate::perfmodel::online::PAPER_EXAMPLES_PER_EPOCH;
 use crate::perfmodel::{LinkContention, OnlineModel, PlacementModel};
+use crate::rngx::Rng;
 use crate::runtime::Artifacts;
 use crate::scheduler::{total_allocated, GrantStep, JobInfo, Scheduler, Speed};
+use crate::sim::workload::FaultPlan;
 use crate::store::CkptStore;
 use crate::telemetry::{event, NullSink, Sink};
 use crate::trainer::TrainConfig;
@@ -158,6 +160,16 @@ pub struct OrchestratorConfig {
     /// whole-file path; only the *measured* ckpt metrics change.
     /// Default `None` — structurally the old path.
     pub ckpt_store: Option<std::path::PathBuf>,
+    /// Seeded fault plan (`--faults`, DESIGN.md §17): each launched
+    /// segment draws once from its job's fault clock and dies at its
+    /// virtual end with the plan's hazard probability. A failed segment
+    /// commits nothing — the job rolls back to its last durable
+    /// checkpoint, sits out an exponential backoff
+    /// (`backoff_base · 2^(attempt-1)`), and is marked `Failed` once
+    /// consecutive failures exceed `max_retries`. [`FaultPlan::OFF`]
+    /// (the default) is provably the fault-free orchestrator: no rng
+    /// exists and every fault branch is a false boolean.
+    pub faults: FaultPlan,
 }
 
 impl OrchestratorConfig {
@@ -175,6 +187,7 @@ impl OrchestratorConfig {
             segment_budget_secs: f64::INFINITY,
             online_model: false,
             ckpt_store: None,
+            faults: FaultPlan::OFF,
         }
     }
 
@@ -274,6 +287,16 @@ impl Orchestrator {
         );
         anyhow::ensure!(cfg.train.dataset_examples >= 1, "dataset_examples must be >= 1");
         anyhow::ensure!(!specs.is_empty(), "no jobs to orchestrate");
+        anyhow::ensure!(
+            cfg.faults.mtbf_secs >= 0.0
+                && cfg.faults.mtbf_secs.is_finite()
+                && cfg.faults.transient_mtbf_secs >= 0.0
+                && cfg.faults.transient_mtbf_secs.is_finite()
+                && cfg.faults.backoff_base_secs >= 0.0
+                && cfg.faults.backoff_base_secs.is_finite(),
+            "bad fault plan: mtbf/transient-mtbf/backoff must be finite and >= 0"
+        );
+        let faults_on = !cfg.faults.is_off();
 
         let batch = Artifacts::resolve(&cfg.train.artifacts_dir)?
             .preset(&cfg.train.preset)?
@@ -305,6 +328,15 @@ impl Orchestrator {
                 job: spec.id,
             });
             let mut job = Job::new(spec.clone());
+            if faults_on {
+                // Per-job fault clock: one draw per segment launch, so a
+                // job's fate depends only on the plan seed, its id, and
+                // its own launch count — never on how other jobs'
+                // launches interleave with it.
+                job.fault_rng = Some(Rng::new(
+                    cfg.faults.seed ^ 0xFA117 ^ spec.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                ));
+            }
             if cfg.online_model {
                 // The learner knows the interconnect (cluster config) so
                 // it can strip placement from samples; it must *not* know
@@ -386,6 +418,7 @@ impl Orchestrator {
                     }
                     EventKind::SegmentEnd => self.on_segment_end(ev.job, sink)?,
                     EventKind::BudgetCheck => self.on_budget_check(ev.job, sink)?,
+                    EventKind::Retry => self.on_retry(ev.job, sink)?,
                 }
             }
             if self.cfg.preempt_on_arrival && arrivals {
@@ -406,7 +439,7 @@ impl Orchestrator {
         let stuck: Vec<u64> = self
             .jobs
             .iter()
-            .filter(|j| !matches!(j.state, JobState::Done { .. }))
+            .filter(|j| !matches!(j.state, JobState::Done { .. } | JobState::Failed { .. }))
             .map(|j| j.spec.id)
             .collect();
         anyhow::ensure!(
@@ -417,9 +450,10 @@ impl Orchestrator {
             self.cfg.capacity
         );
 
-        // Store invariant at run end: every job completed, so every
-        // snapshot was freed and every chunk GC'd — a leak here means
-        // the store would grow without bound across fleet runs.
+        // Store invariant at run end: every job completed (or was freed
+        // at give-up), so every snapshot was freed and every chunk GC'd
+        // — a leak here means the store would grow without bound across
+        // fleet runs.
         if let Some(store) = &self.store {
             anyhow::ensure!(
                 store.snapshot_count() == 0 && store.chunk_count() == 0,
@@ -432,11 +466,16 @@ impl Orchestrator {
 
         let mut job_reports = Vec::with_capacity(self.jobs.len());
         for j in &self.jobs {
-            let finish = match j.state {
-                JobState::Done { finish } => finish,
+            // A failed job's `finish` is its give-up instant; `failed`
+            // flags it so the JCT aggregates exclude it (it never
+            // completed — averaging its lifetime in would reward giving
+            // up early).
+            let (finish, failed) = match j.state {
+                JobState::Done { finish } => (finish, false),
+                JobState::Failed { at } => (at, true),
                 _ => unreachable!("checked above"),
             };
-            let first_start = j.first_start.expect("done job must have started");
+            let first_start = j.first_start.expect("terminal job must have started");
             job_reports.push(JobReport {
                 id: j.spec.id,
                 arrival: j.spec.profile.arrival,
@@ -444,6 +483,8 @@ impl Orchestrator {
                 finish,
                 queue_secs: first_start - j.spec.profile.arrival,
                 jct_secs: finish - j.spec.profile.arrival,
+                failed,
+                failures: j.failures,
                 segments: j.segments,
                 restarts: j.restarts,
                 virtual_restart_secs: j.virtual_restart_secs,
@@ -465,13 +506,18 @@ impl Orchestrator {
         }
 
         let makespan = self.now;
+        let done_jobs = self
+            .jobs
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Done { .. }))
+            .count();
         if sink.enabled() {
             sink.phase_secs("run", wall.elapsed().as_secs_f64());
             sink.emit(event(
                 "run_end",
                 makespan,
                 vec![
-                    ("completed", Json::num(self.jobs.len() as f64)),
+                    ("completed", Json::num(done_jobs as f64)),
                     ("restarts", Json::num(self.total_restarts as f64)),
                     ("preemptions", Json::num(self.total_preemptions as f64)),
                     ("events", Json::num(self.events as f64)),
@@ -543,9 +589,30 @@ impl Orchestrator {
             .inflight
             .take()
             .ok_or_else(|| anyhow::anyhow!("job {id}: no in-flight segment"))?;
-        let outcome = rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("job {id}: segment runner thread vanished"))??;
+        // Both failure layers are recoverable, never fatal: a vanished
+        // runner thread (panicked or dropped its sender) and a segment-
+        // level error surface as a failed segment the recovery path
+        // consumes — exactly like a plan-injected fault. The old
+        // double-unwrap here took the whole orchestrator down with the
+        // first dead trainer.
+        let received = rx.recv();
+        let failure: Option<String> = if meta.fail_injected {
+            Some("injected fault".to_string())
+        } else {
+            match &received {
+                Err(_) => Some("segment runner thread vanished".to_string()),
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Ok(Ok(_)) => None,
+            }
+        };
+        if let Some(reason) = failure {
+            return self.on_segment_failed(idx, workers, &meta, reason, sink);
+        }
+        let outcome = match received {
+            Ok(Ok(o)) => o,
+            _ => unreachable!("failure handled above"),
+        };
+        let job = &mut self.jobs[idx];
 
         if preempt_capable {
             // Preemption-capable modes (arrival preemption or a segment
@@ -563,6 +630,14 @@ impl Orchestrator {
             job.steps_done = outcome.checkpoint.step;
         }
         job.checkpoint = Some(outcome.checkpoint);
+        // The boundary checkpoint is durable: it is what a later failed
+        // segment rolls back to (`--faults`). Any successful segment
+        // also resets the *consecutive*-failure counter the give-up
+        // policy counts.
+        if !self.cfg.faults.is_off() {
+            job.recovery_ckpt = job.checkpoint.clone();
+            job.fail_attempts = 0;
+        }
         job.last_w = workers;
         job.last_nodes = self.cluster.node_set(id);
         job.last_gpus = self.cluster.allocation_of(id).unwrap_or(&[]).to_vec();
@@ -685,6 +760,111 @@ impl Orchestrator {
         }
         self.committed -= workers;
         self.cluster.release(id)?;
+        Ok(())
+    }
+
+    /// A segment died at its virtual end — plan-injected or a real
+    /// runner failure. Nothing the segment did commits: progress rolls
+    /// back to the launch boundary, the resume image to the last durable
+    /// checkpoint, and the job either waits out an exponential backoff
+    /// (`base · 2^(attempt-1)`) before rejoining the schedulable pool or
+    /// — past the plan's retry budget — is marked `Failed` for good.
+    fn on_segment_failed(
+        &mut self,
+        idx: usize,
+        workers: usize,
+        meta: &SegmentMeta,
+        reason: String,
+        sink: &mut dyn Sink,
+    ) -> Result<()> {
+        let now = self.now;
+        let plan = self.cfg.faults;
+        let job = &mut self.jobs[idx];
+        let id = job.spec.id;
+        // Roll back: the failed segment's work is rework, not progress.
+        // `launch` took `checkpoint` as the resume image, so without the
+        // restore here a retry would silently cold-start from epoch 0.
+        job.epochs_done = meta.launch_epochs;
+        job.steps_done = meta.launch_steps;
+        job.checkpoint = job.recovery_ckpt.clone();
+        // A retry is never a continuation — the ring died.
+        job.boundary_time = None;
+        job.last_w = 0;
+        job.last_nodes = Vec::new();
+        job.last_gpus = Vec::new();
+        job.failures += 1;
+        job.fail_attempts += 1;
+        let attempt = job.fail_attempts;
+        let ckpt_epochs = job.epochs_done;
+        job.transition(JobState::Recovering)?;
+        self.committed -= workers;
+        self.cluster.release(id)?;
+        let give_up = attempt > plan.max_retries;
+        if sink.enabled() {
+            sink.count("seg_failures", 1);
+            sink.emit(event(
+                "seg_failed",
+                now,
+                vec![
+                    ("job", Json::num(id as f64)),
+                    ("w", Json::num(workers as f64)),
+                    ("attempt", Json::num(attempt as f64)),
+                    ("ckpt_epochs", Json::num(ckpt_epochs)),
+                    ("reason", Json::str(&reason)),
+                    ("gave_up", Json::Bool(give_up)),
+                ],
+            ));
+        }
+        if give_up {
+            self.jobs[idx].transition(JobState::Failed { at: now })?;
+            // Store mode: drop any parked snapshot so the run-end drain
+            // invariant still holds (no-op when nothing was parked).
+            if let Some(store) = &self.store {
+                store.free(&store_key(id))?;
+            }
+            if sink.enabled() {
+                sink.count("jobs_failed", 1);
+                sink.emit(event(
+                    "job_failed",
+                    now,
+                    vec![
+                        ("job", Json::num(id as f64)),
+                        ("attempts", Json::num(attempt as f64)),
+                    ],
+                ));
+            }
+            return Ok(());
+        }
+        let delay = (plan.backoff_base_secs * 2f64.powi(attempt as i32 - 1)).max(EPOCH_EPS);
+        self.queue.push(Event { time: now + delay, kind: EventKind::Retry, job: id });
+        Ok(())
+    }
+
+    /// A failed job's backoff expired: re-enter the schedulable pool,
+    /// resuming from the last durable checkpoint (cold if none exists).
+    /// The batch loop's post-event reallocation hands it workers like
+    /// any other parked job.
+    fn on_retry(&mut self, id: u64, sink: &mut dyn Sink) -> Result<()> {
+        let idx = self.idx(id)?;
+        let now = self.now;
+        let job = &mut self.jobs[idx];
+        if !matches!(job.state, JobState::Recovering) {
+            return Ok(()); // stale — the job already gave up
+        }
+        let to = if job.checkpoint.is_some() { JobState::Preempted } else { JobState::Queued };
+        job.transition(to)?;
+        if sink.enabled() {
+            sink.count("recoveries", 1);
+            sink.emit(event(
+                "recovered",
+                now,
+                vec![
+                    ("job", Json::num(id as f64)),
+                    ("attempt", Json::num(job.fail_attempts as f64)),
+                    ("resume_epochs", Json::num(job.epochs_done)),
+                ],
+            ));
+        }
         Ok(())
     }
 
@@ -1097,6 +1277,16 @@ impl Orchestrator {
         let duration = restart_pay + seg_epochs * epoch_secs;
         let end = now + duration;
 
+        // One fault-clock draw per launch (`--faults` only): does this
+        // segment survive its own duration? The per-job rng is consumed
+        // in launch order, so the fault pattern is a pure function of
+        // (plan seed, schedule) — bit-reproducible across runs. Fault-off
+        // jobs carry no rng and never draw.
+        let fail_injected = match job.fault_rng.as_mut() {
+            Some(rng) => rng.uniform() < self.cfg.faults.segment_fail_probability(duration),
+            None => false,
+        };
+
         // Segment budget: if the training part of this segment outruns
         // the budget, schedule a check at the deadline; firing, it cuts
         // the segment at the first whole-step boundary past the budget
@@ -1137,6 +1327,7 @@ impl Orchestrator {
             stop,
             preempted_steps: None,
             budget_deadline,
+            fail_injected,
         });
         job.inflight = Some(spawn_segment(plan));
         job.last_segment_restarted = pay_restart;

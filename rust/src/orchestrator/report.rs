@@ -58,6 +58,13 @@ pub struct JobReport {
     /// Completed segments when the confidence gate first opened; `None`
     /// when the scheduler only ever consulted the trace-table prior.
     pub learned_after_segments: Option<u64>,
+    /// `--faults` give-up flag: the job exhausted its retry budget and
+    /// never finished. `finish` is then the give-up instant and the job
+    /// is excluded from every JCT/queueing aggregate.
+    pub failed: bool,
+    /// Failed segments over the job's lifetime (0 without `--faults`
+    /// unless a real trainer died).
+    pub failures: u64,
 }
 
 /// Whole-run outcome.
@@ -86,18 +93,27 @@ pub struct OrchestratorReport {
 }
 
 impl OrchestratorReport {
+    /// Jobs that actually completed — JCT statistics are over these
+    /// only; a failed job's "JCT" would be the give-up instant, which
+    /// is a policy artifact, not a completion time.
+    fn finished(&self) -> impl Iterator<Item = &JobReport> {
+        self.jobs.iter().filter(|j| !j.failed)
+    }
+
     fn jcts_sorted(&self) -> Vec<f64> {
-        let mut v: Vec<f64> = self.jobs.iter().map(|j| j.jct_secs).collect();
+        let mut v: Vec<f64> = self.finished().map(|j| j.jct_secs).collect();
         v.sort_by(|a, b| a.total_cmp(b));
         v
     }
 
-    /// Average job completion time in virtual seconds (Table 3's metric).
+    /// Average job completion time in virtual seconds (Table 3's
+    /// metric), over finished jobs.
     pub fn avg_jct_secs(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.finished().count();
+        if n == 0 {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.jct_secs).sum::<f64>() / self.jobs.len() as f64
+        self.finished().map(|j| j.jct_secs).sum::<f64>() / n as f64
     }
 
     pub fn p50_jct_secs(&self) -> f64 {
@@ -110,10 +126,21 @@ impl OrchestratorReport {
     }
 
     pub fn avg_queue_secs(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let n = self.finished().count();
+        if n == 0 {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.queue_secs).sum::<f64>() / self.jobs.len() as f64
+        self.finished().map(|j| j.queue_secs).sum::<f64>() / n as f64
+    }
+
+    /// Jobs that exhausted their retry budget (`--faults` give-ups).
+    pub fn failed_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.failed).count()
+    }
+
+    /// Failed segments across the whole run.
+    pub fn total_failures(&self) -> u64 {
+        self.jobs.iter().map(|j| j.failures).sum()
     }
 
     /// Jobs whose confidence gate opened (ran on a learned model).
@@ -139,18 +166,20 @@ impl OrchestratorReport {
     /// Aligned per-job table (rendered by `ringmaster orchestrate`).
     pub fn per_job_table(&self) -> CsvTable {
         let mut t = CsvTable::new(&[
-            "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "max_w", "nodes",
-            "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)", "ckpt_kb",
-            "rmse", "final_loss",
+            "job", "arrival_s", "queue_s", "jct_s", "segs", "restarts", "fails", "max_w",
+            "nodes", "xnode_segs", "steps", "epochs", "train_s(real)", "restart_s(real)",
+            "ckpt_kb", "rmse", "final_loss",
         ]);
         for j in &self.jobs {
             t.row(&[
                 j.id.to_string(),
                 format!("{:.1}", j.arrival),
                 format!("{:.1}", j.queue_secs),
-                format!("{:.1}", j.jct_secs),
+                // a failed job has no completion time — mark the give-up
+                if j.failed { "FAILED".into() } else { format!("{:.1}", j.jct_secs) },
                 j.segments.to_string(),
                 j.restarts.to_string(),
+                j.failures.to_string(),
                 j.max_w.to_string(),
                 j.max_nodes.to_string(),
                 j.cross_node_segments.to_string(),
@@ -173,11 +202,21 @@ impl OrchestratorReport {
         } else {
             String::new()
         };
+        let failed = if self.failed_jobs() > 0 || self.total_failures() > 0 {
+            format!(
+                "  failures {} (jobs failed {}/{})",
+                self.total_failures(),
+                self.failed_jobs(),
+                self.jobs.len()
+            )
+        } else {
+            String::new()
+        };
         format!(
             "strategy={} capacity={} topology={} jobs={} events={}\n\
              avg JCT {:.1}s  p50 JCT {:.1}s  avg queue {:.1}s  makespan {:.1}s (virtual)\n\
              utilization {:.1}%  peak workers {}  restarts {}  preemptions {}  \
-             cross-node segs {}{learned}  ckpt io {:.2}s / {:.1} KiB written (real)  \
+             cross-node segs {}{learned}{failed}  ckpt io {:.2}s / {:.1} KiB written (real)  \
              orchestration wall {:.2}s (real)",
             self.strategy,
             self.capacity,
@@ -229,6 +268,8 @@ mod tests {
             model_rmse_first: None,
             model_rmse: None,
             learned_after_segments: None,
+            failed: false,
+            failures: 0,
         }
     }
 
@@ -284,6 +325,27 @@ mod tests {
         assert_eq!(r.learned_jobs(), 1);
         assert!(r.summary().contains("learned models 1/3"), "{}", r.summary());
         assert!(r.per_job_table().render().contains("1.25"));
+    }
+
+    #[test]
+    fn failed_jobs_are_excluded_from_jct_aggregates() {
+        let mut r = report();
+        // job 2's "finish" becomes a give-up instant, not a completion
+        r.jobs[2].failed = true;
+        r.jobs[2].failures = 4;
+        assert_eq!(r.failed_jobs(), 1);
+        assert_eq!(r.total_failures(), 4);
+        // aggregates over jobs 0 and 1 only
+        assert!((r.avg_jct_secs() - 150.0).abs() < 1e-9);
+        assert!((r.avg_queue_secs() - 25.0).abs() < 1e-9);
+        let s = r.summary();
+        assert!(s.contains("jobs failed 1/3"), "{s}");
+        assert!(r.per_job_table().render().contains("FAILED"));
+        // an all-failed fleet must not divide by zero
+        for j in r.jobs.iter_mut() {
+            j.failed = true;
+        }
+        assert_eq!(r.avg_jct_secs(), 0.0);
     }
 
     #[test]

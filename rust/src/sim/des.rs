@@ -73,7 +73,7 @@ use std::cmp::{Ordering, Reverse};
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use super::workload::JobProfile;
+use super::workload::{FaultEvent, FaultKind, JobProfile};
 use super::{SimConfig, StrategyKind};
 use crate::cluster::{ClusterState, Topology};
 use crate::jsonx::Json;
@@ -120,6 +120,17 @@ struct SimJob {
     /// `(w, placement, contention)` speed key. Re-read from the link
     /// ledger after every reconciliation while contention is on.
     tenants: usize,
+    /// Remaining epochs at the last stop/restart boundary — the durable
+    /// checkpoint a fault eviction rolls back to (DESIGN.md §17).
+    /// Snapshotted at every width change (each rescale stops the job
+    /// through a checkpoint) and at probe completion. Only read when a
+    /// fault fires, so fault-off runs merely store it.
+    ckpt_remaining: f64,
+    /// End instant of the probe currently in the explore heap; heap
+    /// entries whose time no longer matches are stale (the probe was
+    /// killed by a fault and the job re-queued). Fault-off probes are
+    /// never killed, so every entry matches.
+    probe_end: f64,
 }
 
 /// Hot per-job state: the fields the completion scan and the progress
@@ -219,6 +230,10 @@ pub struct SimResult {
     /// recompute (0 when `completion_prune` is off, and from the
     /// reference engine). Diagnostics only, like `scan_candidates`.
     pub scan_skipped: u64,
+    /// Gangs evicted by fault events (node-down + transient), probe
+    /// reservations included. Always 0 with [`super::FaultPlan::OFF`]
+    /// and from the reference engine.
+    pub evictions: u64,
 }
 
 /// Heap key: ascending time via `total_cmp`, ties by job index so heap
@@ -326,6 +341,25 @@ pub fn simulate_traced(
     let explore_duration = cfg.explore_secs_per_size * cfg.explore_sizes.len() as f64;
     let mut cluster = ClusterState::with_policy(topology.spec(), cfg.place_policy);
 
+    // Fault injection (DESIGN.md §17): the whole timeline is drawn up
+    // front from the plan's own seed, so fault-on runs are as
+    // deterministic as fault-off ones — and with `FaultPlan::OFF` the
+    // timeline is empty, no rng exists, and every fault branch below is
+    // a false integer compare: the fault-off engine is the pre-fault
+    // engine (golden-parity tested).
+    let faults_on = !cfg.faults.is_off();
+    assert!(
+        !faults_on || !flat,
+        "fault injection needs a grid topology (node failures are \
+         meaningless on a flat pool) — use with_topology / --nodes"
+    );
+    let fault_timeline: Vec<FaultEvent> =
+        if faults_on { cfg.faults.timeline(topology.spec().nodes) } else { Vec::new() };
+    let mut next_fault = 0usize;
+    let gpus_per_node = topology.spec().gpus_per_node;
+    let mut down_count = 0usize;
+    let mut total_evictions = 0u64;
+
     // One eq-2–4 span-penalty memo per run: in the sim the placement
     // model is global, so every job shares it.
     let memo: Option<Arc<Vec<f64>>> = match topology {
@@ -344,6 +378,8 @@ pub fn simulate_traced(
             speed: Arc::new(p.speed_table()),
             held: 0,
             tenants: 1,
+            ckpt_remaining: p.total_epochs,
+            probe_end: 0.0,
         })
         .collect();
     // Dense hot array, index-parallel to `jobs` (see module docs).
@@ -365,6 +401,10 @@ pub fn simulate_traced(
     let mut ready: Vec<usize> = Vec::new(); // sorted by (arrival, idx)
     let mut waiting: Vec<usize> = Vec::new(); // FIFO explore-admission queue
     let mut exploring: BinaryHeap<Reverse<TimeKey>> = BinaryHeap::new();
+    // Live probes. Equals `exploring.len()` except while the heap holds
+    // stale entries for fault-killed probes — always equal when faults
+    // are off, so using it for capacity/util keeps bit parity.
+    let mut exploring_count = 0usize;
 
     let mut now = 0.0f64;
     let mut peak_concurrent = 0usize;
@@ -430,6 +470,92 @@ pub fn simulate_traced(
         let mut mark = if profiling { Some(std::time::Instant::now()) } else { None };
 
         // ---- 1. fire due events -----------------------------------------
+        // Faults first: a completion scheduled at exactly the fault
+        // instant loses the race — the failure hits before the epoch
+        // boundary is checkpointed. With `FaultPlan::OFF` the timeline
+        // is empty and this whole block is one false integer compare.
+        while next_fault < fault_timeline.len() && fault_timeline[next_fault].t <= now + EPS {
+            let f = fault_timeline[next_fault];
+            next_fault += 1;
+            match f.kind {
+                FaultKind::Up => {
+                    if cluster.is_node_down(f.node) {
+                        cluster.set_node_up(f.node);
+                        down_count -= 1;
+                        if traced {
+                            sink.count("node_ups", 1);
+                            sink.emit(event(
+                                "node_up",
+                                now,
+                                vec![("node", Json::num(f.node as f64))],
+                            ));
+                        }
+                    }
+                    continue;
+                }
+                FaultKind::Down => {
+                    if cluster.is_node_down(f.node) {
+                        continue; // overlapping bursts: already down
+                    }
+                    cluster.set_node_down(f.node);
+                    down_count += 1;
+                    if traced {
+                        sink.count("node_downs", 1);
+                        sink.emit(event(
+                            "node_down",
+                            now,
+                            vec![("node", Json::num(f.node as f64))],
+                        ));
+                    }
+                }
+                FaultKind::Transient => {}
+            }
+            // Down and Transient both kill every gang with a GPU on the
+            // node. Victims roll back to their last stop/restart
+            // checkpoint; probes are killed outright and re-queued.
+            // Slots are released *now*, not in the 2b sync: the
+            // touched-only reconciliation compares widths, so a victim
+            // re-granted its old width would otherwise keep its slots
+            // on the failed node.
+            for id in cluster.jobs_on_node(f.node) {
+                let i = id as usize;
+                let (probe, rework) = match jobs[i].state {
+                    State::Ready => {
+                        let rework =
+                            (jobs[i].ckpt_remaining - hot[i].remaining_epochs).max(0.0);
+                        hot[i].remaining_epochs = jobs[i].ckpt_remaining;
+                        hot[i].w = 0;
+                        (false, rework)
+                    }
+                    State::Exploring => {
+                        jobs[i].state = State::WaitingExplore;
+                        exploring_count -= 1;
+                        waiting.push(i); // re-queue at the back, FIFO
+                        (true, 0.0)
+                    }
+                    _ => continue,
+                };
+                cluster.release(id).expect("victim held the slots the ledger reported");
+                jobs[i].held = 0;
+                jobs[i].nodes = 0;
+                touched.push(i);
+                total_evictions += 1;
+                if traced {
+                    sink.count("evictions", 1);
+                    sink.emit(event(
+                        "seg_failed",
+                        now,
+                        vec![
+                            ("job", Json::num(i as f64)),
+                            ("node", Json::num(f.node as f64)),
+                            ("kind", Json::str(f.kind.name())),
+                            ("probe", Json::Bool(probe)),
+                            ("rework_epochs", Json::num(rework)),
+                        ],
+                    ));
+                }
+            }
+        }
         while next_arrival < arrival_order.len() {
             let i = arrival_order[next_arrival];
             if jobs[i].profile.arrival > now + EPS {
@@ -464,6 +590,19 @@ pub fn simulate_traced(
             }
             exploring.pop();
             let i = k.idx;
+            // Entries for fault-killed probes are stale: the job was
+            // re-queued (and possibly re-admitted with a new end). The
+            // live probe's end is `probe_end` — bits-equal to its own
+            // heap entry by construction, never to a stale one (ends
+            // are `now + explore_duration` at distinct admission
+            // instants). Fault-off probes are never killed, so this
+            // guard never skips on the off path.
+            if jobs[i].state != State::Exploring
+                || jobs[i].probe_end.to_bits() != k.t.to_bits()
+            {
+                continue;
+            }
+            exploring_count -= 1;
             // Lump-sum progress of the probe runs (2.5 min each size).
             // Probes run *inside* the reservation the ledger granted, so
             // on a grid each probe size pays the eq-2 penalty of the
@@ -489,6 +628,8 @@ pub fn simulate_traced(
                 .sum();
             hot[i].remaining_epochs = (hot[i].remaining_epochs - gained).max(0.0);
             jobs[i].state = State::Ready;
+            // probe progress is committed at the probe's end boundary
+            jobs[i].ckpt_remaining = hot[i].remaining_epochs;
             hot[i].w = 0;
             insert_ready(&mut ready, &jobs, i);
             touched.push(i); // reservation must be released (or re-won)
@@ -533,10 +674,14 @@ pub fn simulate_traced(
         }
 
         // ---- 2. reallocate ----------------------------------------------
-        // exploration reservations are sticky
-        let mut capacity = cfg
+        // exploration reservations are sticky; down nodes' GPUs leave
+        // the schedulable pool until repair (their gangs were evicted
+        // above, so the subtraction is exact)
+        let pool = cfg
             .capacity
-            .saturating_sub(explore_reserve.saturating_mul(exploring.len()));
+            .saturating_sub(gpus_per_node.saturating_mul(down_count));
+        let mut capacity =
+            pool.saturating_sub(explore_reserve.saturating_mul(exploring_count));
         // admit waiting explorers FIFO (they all need the same reserve,
         // so the first refusal ends the scan engine's full walk too)
         let mut admitted = 0usize;
@@ -547,8 +692,10 @@ pub fn simulate_traced(
             capacity -= explore_reserve;
             let end = now + explore_duration;
             jobs[i].state = State::Exploring;
+            jobs[i].probe_end = end;
             hot[i].busy_until = now; // probes include their own startup
             exploring.push(Reverse(TimeKey { t: end, idx: i }));
+            exploring_count += 1;
             touched.push(i);
             admitted += 1;
             if traced {
@@ -643,6 +790,10 @@ pub fn simulate_traced(
                     h.busy_until = now + cfg.restart_cost;
                     total_rescales += 1;
                 }
+                // every stop/restart passes through a checkpoint — the
+                // durable boundary a later fault rolls back to (a pure
+                // cold-state store; never read while faults are off)
+                jobs[id as usize].ckpt_remaining = h.remaining_epochs;
                 h.w = w_new;
                 touched.push(id as usize);
             }
@@ -807,7 +958,7 @@ pub fn simulate_traced(
                 ));
             }
             let used: usize = ready.iter().map(|&i| hot[i].w).sum::<usize>()
-                + explore_reserve * exploring.len();
+                + explore_reserve * exploring_count;
             sink.sample("ready_len", ready.len() as f64);
             sink.sample("explore_heap", exploring.len() as f64);
             sink.emit(event(
@@ -819,7 +970,7 @@ pub fn simulate_traced(
                     ("running", Json::num(ready.iter().filter(|&&i| hot[i].w > 0).count() as f64)),
                     ("queued", Json::num(ready.iter().filter(|&&i| hot[i].w == 0).count() as f64)),
                     ("waiting", Json::num(waiting.len() as f64)),
-                    ("exploring", Json::num(exploring.len() as f64)),
+                    ("exploring", Json::num(exploring_count as f64)),
                 ],
             ));
         }
@@ -829,7 +980,7 @@ pub fn simulate_traced(
             *m = t;
         }
 
-        let concurrent = ready.len() + exploring.len() + waiting.len();
+        let concurrent = ready.len() + exploring_count + waiting.len();
         peak_concurrent = peak_concurrent.max(concurrent);
 
         // ---- 3. find the next event --------------------------------------
@@ -845,6 +996,18 @@ pub fn simulate_traced(
         }
         if let Some(&Reverse(k)) = exploring.peek() {
             next = next.min(k.t);
+        }
+        if next_fault < fault_timeline.len() {
+            // Faults only matter while there is work to disturb: once
+            // every job is done, draining the repair tail would just
+            // inflate events and makespan for nothing.
+            let work_left = next_arrival < arrival_order.len()
+                || !ready.is_empty()
+                || !waiting.is_empty()
+                || exploring_count > 0;
+            if work_left {
+                next = next.min(fault_timeline[next_fault].t);
+            }
         }
         for &i in &ready {
             let h = &mut hot[i];
@@ -922,12 +1085,13 @@ pub fn simulate_traced(
         events,
         scan_candidates,
         scan_skipped,
+        evictions: total_evictions,
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::workload::WorkloadGen;
+    use super::super::workload::{FaultPlan, WorkloadGen};
     use super::super::{Contention, SimConfig, StrategyKind};
     use super::*;
 
@@ -1279,6 +1443,97 @@ mod tests {
             1.0 - BOUND_DISCOUNT,
             worst
         );
+    }
+
+    #[test]
+    fn faults_evict_and_every_job_still_completes() {
+        // Steady per-node failures on an 8x8 grid: gangs get evicted,
+        // roll back to their checkpoints, and — because every Down is
+        // paired with a repair — the whole trace still drains.
+        for s in [
+            StrategyKind::Precompute,
+            StrategyKind::Exploratory,
+            StrategyKind::Fixed(8),
+        ] {
+            let mut cfg =
+                SimConfig::paper(s, Contention::Moderate, 61).with_topology(8, 8);
+            cfg.faults = FaultPlan::steady(20_000.0, 600.0, 400_000.0, 61);
+            let jobs =
+                WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 61);
+            let r = simulate(&cfg, &jobs);
+            assert_eq!(r.completed, cfg.n_jobs, "{}", r.strategy);
+            assert!(r.evictions > 0, "{}: the plan never fired", r.strategy);
+            for c in &r.completion_secs {
+                assert!(c.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn fault_runs_are_bit_deterministic() {
+        let mk = || {
+            let mut cfg =
+                SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 67)
+                    .with_topology(8, 8);
+            cfg.faults = FaultPlan::burst(400_000.0, 67);
+            let jobs =
+                WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 67);
+            simulate(&cfg, &jobs)
+        };
+        let a = mk();
+        let b = mk();
+        assert!(a.evictions > 0, "burst preset never fired");
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(a.total_rescales, b.total_rescales);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.avg_completion_hours.to_bits(), b.avg_completion_hours.to_bits());
+        for (x, y) in a.completion_secs.iter().zip(&b.completion_secs) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn faults_never_speed_up_a_fixed_strategy() {
+        // Fixed-k consults no speed model, so the only effect of faults
+        // is lost progress and lost capacity: average JCT must not
+        // improve, and with evictions observed it strictly degrades.
+        let mut clean = SimConfig::paper(StrategyKind::Fixed(8), Contention::Moderate, 71)
+            .with_topology(8, 8);
+        let jobs =
+            WorkloadGen::default().generate(clean.n_jobs, clean.mean_interarrival, 71);
+        let base = simulate(&clean, &jobs);
+        clean.faults = FaultPlan::steady(15_000.0, 900.0, 400_000.0, 71);
+        let faulted = simulate(&clean, &jobs);
+        assert_eq!(base.completed, faulted.completed);
+        assert!(faulted.evictions > 0);
+        assert!(
+            faulted.avg_completion_hours > base.avg_completion_hours,
+            "faulted {:.3}h did not degrade vs clean {:.3}h ({} evictions)",
+            faulted.avg_completion_hours,
+            base.avg_completion_hours,
+            faulted.evictions
+        );
+        assert_eq!(base.evictions, 0);
+    }
+
+    #[test]
+    fn zero_rate_plan_is_the_off_plan() {
+        // mtbf == 0 means "never fails" (rate-0), and the engine must
+        // treat it as structurally off: same bits as the default OFF.
+        let cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 73)
+            .with_topology(8, 8);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 73);
+        let off = simulate(&cfg, &jobs);
+        let mut zero = cfg.clone();
+        zero.faults = FaultPlan::steady(0.0, 600.0, 400_000.0, 73);
+        assert!(zero.faults.is_off());
+        let z = simulate(&zero, &jobs);
+        assert_eq!(off.avg_completion_hours.to_bits(), z.avg_completion_hours.to_bits());
+        assert_eq!(off.events, z.events);
+        assert_eq!(z.evictions, 0);
+        for (a, b) in off.completion_secs.iter().zip(&z.completion_secs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub mod workload;
 pub use des::{simulate, simulate_traced, SimResult};
 pub use reference::simulate_reference;
 pub use sweep::{parallel_map, run_cells, SweepCell};
-pub use workload::{JobProfile, WorkloadGen};
+pub use workload::{FaultEvent, FaultKind, FaultPlan, JobProfile, WorkloadGen};
 
 use crate::cluster::{PlacePolicy, Topology};
 use crate::perfmodel::{LinkContention, PlacementModel};
@@ -102,6 +102,11 @@ pub struct SimConfig {
     /// construction; the switch exists so CI can prove that claim on
     /// both code paths. Default: on.
     pub completion_prune: bool,
+    /// Seeded node-failure model (DESIGN.md §17). [`FaultPlan::OFF`]
+    /// (the default) is provably the fault-free engine: no timeline is
+    /// generated, no fault state is allocated, and the event loop never
+    /// consults the fault cursor.
+    pub faults: workload::FaultPlan,
 }
 
 impl SimConfig {
@@ -126,6 +131,7 @@ impl SimConfig {
             place_policy: PlacePolicy::Pack,
             link_contention: LinkContention::OFF,
             completion_prune: true,
+            faults: workload::FaultPlan::OFF,
         }
     }
 

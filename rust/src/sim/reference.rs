@@ -281,8 +281,11 @@ pub fn simulate_reference(cfg: &SimConfig, profiles: &[JobProfile]) -> SimResult
         completion_secs,
         events,
         // Scan diagnostics belong to the event-heap engine; the frozen
-        // oracle reports zeros (and parity never compares them).
+        // oracle reports zeros (and parity never compares them). The
+        // oracle predates faults, so evictions is identically 0 — which
+        // is exactly what fault-off parity asserts.
         scan_candidates: 0,
         scan_skipped: 0,
+        evictions: 0,
     }
 }

@@ -162,6 +162,182 @@ impl WorkloadGen {
     }
 }
 
+/// What one fault event does to its node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Node leaves the pool: gangs touching it are evicted and the node
+    /// is unplaceable until its paired `Up`.
+    Down,
+    /// Node repair finished; it may be placed on again.
+    Up,
+    /// Transient process failure: gangs touching the node are evicted
+    /// (losing progress back to their last segment boundary) but the
+    /// node itself stays placeable.
+    Transient,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Down => "down",
+            FaultKind::Up => "up",
+            FaultKind::Transient => "transient",
+        }
+    }
+}
+
+/// One scheduled fault on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub t: f64,
+    pub node: usize,
+    pub kind: FaultKind,
+}
+
+/// Seeded fault model: per-node exponential failure/repair clocks plus
+/// transient (process-level) gang killers. `FaultPlan::OFF` is the
+/// default everywhere and is off *by construction*: no clocks are
+/// drawn, no timeline exists, and every engine hook short-circuits on
+/// [`FaultPlan::is_off`], so the fault-off engine is the pre-fault
+/// engine bit for bit (asserted in `tests/golden_parity.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Mean seconds between failures of one node (exponential clock).
+    /// `0` disables node-down events.
+    pub mtbf_secs: f64,
+    /// Mean seconds a downed node stays out of the pool before repair.
+    pub mttr_secs: f64,
+    /// Mean seconds between transient gang-killing failures per node.
+    /// `0` disables transient events.
+    pub transient_mtbf_secs: f64,
+    /// Fault clocks stop here: no events are generated past this
+    /// virtual time, so a drained cluster can always finish its queue.
+    pub horizon_secs: f64,
+    /// Orchestrator: consecutive failed attempts of one segment before
+    /// the job is abandoned and marked failed in its report.
+    pub max_retries: u32,
+    /// Orchestrator: retry k waits `backoff_base_secs * 2^(k-1)`
+    /// virtual seconds before relaunching.
+    pub backoff_base_secs: f64,
+    /// Seed of the fault clocks — independent of the workload stream,
+    /// so fault-on never perturbs job generation.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The no-faults plan (the default everywhere).
+    pub const OFF: FaultPlan = FaultPlan {
+        mtbf_secs: 0.0,
+        mttr_secs: 0.0,
+        transient_mtbf_secs: 0.0,
+        horizon_secs: 0.0,
+        max_retries: 0,
+        backoff_base_secs: 0.0,
+        seed: 0,
+    };
+
+    /// True when no fault source is active; every engine hook gates on
+    /// this before touching any fault state.
+    pub fn is_off(&self) -> bool {
+        self.mtbf_secs <= 0.0 && self.transient_mtbf_secs <= 0.0
+    }
+
+    /// Steady-state plan: node MTBF/MTTR clocks, no transients, and the
+    /// orchestrator's default retry policy.
+    pub fn steady(mtbf_secs: f64, mttr_secs: f64, horizon_secs: f64, seed: u64) -> FaultPlan {
+        FaultPlan {
+            mtbf_secs,
+            mttr_secs,
+            transient_mtbf_secs: 0.0,
+            horizon_secs,
+            max_retries: 3,
+            backoff_base_secs: 30.0,
+            seed,
+        }
+    }
+
+    /// Failure-burst preset (the ROADMAP's real-trace scenario): short
+    /// MTBF with quick repairs plus transient process deaths — a storm,
+    /// not an outage.
+    pub fn burst(horizon_secs: f64, seed: u64) -> FaultPlan {
+        FaultPlan {
+            mtbf_secs: 3_600.0,
+            mttr_secs: 300.0,
+            transient_mtbf_secs: 7_200.0,
+            horizon_secs,
+            max_retries: 3,
+            backoff_base_secs: 30.0,
+            seed,
+        }
+    }
+
+    /// Probability that a segment of `duration_secs` virtual seconds is
+    /// killed by a fault — the orchestrator's per-segment hazard, the
+    /// node and transient rates combined into one exponential law.
+    /// Exactly 0 when the plan is off (no rng is ever consulted).
+    pub fn segment_fail_probability(&self, duration_secs: f64) -> f64 {
+        if self.is_off() || duration_secs <= 0.0 {
+            return 0.0;
+        }
+        let mut rate = 0.0;
+        if self.mtbf_secs > 0.0 {
+            rate += 1.0 / self.mtbf_secs;
+        }
+        if self.transient_mtbf_secs > 0.0 {
+            rate += 1.0 / self.transient_mtbf_secs;
+        }
+        1.0 - (-duration_secs * rate).exp()
+    }
+
+    /// Materialize the plan's full fault timeline for an `n_nodes`-node
+    /// pool, sorted by `(t, node, kind)`. Each node gets forked clocks
+    /// (fail/repair and transient streams independent of each other and
+    /// of every other node), so the timeline for node `i` is invariant
+    /// to the pool size. Returns an empty timeline when the plan is
+    /// off — callers never draw a single random number in that case.
+    pub fn timeline(&self, n_nodes: usize) -> Vec<FaultEvent> {
+        let mut events = Vec::new();
+        if self.is_off() {
+            return events;
+        }
+        let mut root = Rng::new(self.seed ^ 0xFA117);
+        for node in 0..n_nodes {
+            let mut clock = root.fork();
+            if self.mtbf_secs > 0.0 {
+                let mut t = 0.0;
+                loop {
+                    t += clock.exponential(self.mtbf_secs);
+                    if t >= self.horizon_secs {
+                        break;
+                    }
+                    events.push(FaultEvent { t, node, kind: FaultKind::Down });
+                    // repair completes even past the horizon: a node
+                    // must never stay down forever
+                    t += clock.exponential(self.mttr_secs.max(1.0));
+                    events.push(FaultEvent { t, node, kind: FaultKind::Up });
+                }
+            }
+            let mut transient = root.fork();
+            if self.transient_mtbf_secs > 0.0 {
+                let mut t = 0.0;
+                loop {
+                    t += transient.exponential(self.transient_mtbf_secs);
+                    if t >= self.horizon_secs {
+                        break;
+                    }
+                    events.push(FaultEvent { t, node, kind: FaultKind::Transient });
+                }
+            }
+        }
+        events.sort_by(|a, b| {
+            a.t.total_cmp(&b.t)
+                .then_with(|| a.node.cmp(&b.node))
+                .then_with(|| (a.kind as u8).cmp(&(b.kind as u8)))
+        });
+        events
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +450,69 @@ mod tests {
         let load = gpu_secs / (horizon * 128.0);
         assert!(load < 0.95, "offered load {load:.2} would diverge");
         assert!(load > 0.3, "offered load {load:.2} — sweep would be idle");
+    }
+
+    #[test]
+    fn fault_plan_off_draws_nothing() {
+        assert!(FaultPlan::OFF.is_off());
+        assert!(FaultPlan::OFF.timeline(16).is_empty());
+        // zero-rate plans with other fields set are still off
+        let p = FaultPlan { mttr_secs: 100.0, horizon_secs: 1e6, seed: 9, ..FaultPlan::OFF };
+        assert!(p.is_off());
+        assert!(p.timeline(16).is_empty());
+    }
+
+    #[test]
+    fn fault_timeline_is_deterministic_and_sorted() {
+        let p = FaultPlan::burst(100_000.0, 7);
+        let a = p.timeline(8);
+        let b = p.timeline(8);
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+        for w in a.windows(2) {
+            assert!(w[0].t <= w[1].t, "unsorted timeline");
+        }
+        for e in &a {
+            assert!(e.node < 8);
+            assert!(e.t > 0.0);
+        }
+        // a different seed moves the clocks
+        assert_ne!(a, FaultPlan::burst(100_000.0, 8).timeline(8));
+    }
+
+    #[test]
+    fn fault_down_up_strictly_alternate_per_node() {
+        let p = FaultPlan::steady(5_000.0, 600.0, 200_000.0, 3);
+        let tl = p.timeline(4);
+        for node in 0..4 {
+            let mut down = false;
+            for e in tl.iter().filter(|e| e.node == node) {
+                match e.kind {
+                    FaultKind::Down => {
+                        assert!(!down, "double down on node {node}");
+                        down = true;
+                    }
+                    FaultKind::Up => {
+                        assert!(down, "up without down on node {node}");
+                        down = false;
+                    }
+                    FaultKind::Transient => {}
+                }
+            }
+            assert!(!down, "node {node} left down forever");
+        }
+    }
+
+    #[test]
+    fn fault_timeline_per_node_invariant_to_pool_size() {
+        // node i's clocks come from forks drawn in node order, so the
+        // same node sees the same faults in a bigger pool
+        let p = FaultPlan::burst(50_000.0, 11);
+        let small: Vec<FaultEvent> =
+            p.timeline(2).into_iter().filter(|e| e.node < 2).collect();
+        let large: Vec<FaultEvent> =
+            p.timeline(6).into_iter().filter(|e| e.node < 2).collect();
+        assert_eq!(small, large);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! real trainer threads; they are summarized but never fed into an
 //! invariant (they are not deterministic — DESIGN.md §14).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 use crate::jsonx::{self, Json};
@@ -56,6 +56,21 @@ struct JobTrack {
     scored_tenancy: Option<usize>,
     /// Last tenancy observed at execution (place snapshot / launch).
     observed_tenancy: Option<usize>,
+    /// Epochs at the last durable checkpoint an orchestrator
+    /// `seg_failed` rolled back to — the `recovered` invariant bound.
+    last_ckpt_epochs: Option<f64>,
+    /// The job exhausted its retry budget; no further recovery allowed.
+    gave_up: bool,
+}
+
+/// Fault/recovery event tallies for the rendered ledger.
+#[derive(Default)]
+struct FaultTally {
+    node_downs: u64,
+    evictions: u64,
+    failures: u64,
+    recoveries: u64,
+    gave_ups: u64,
 }
 
 struct Run {
@@ -118,6 +133,8 @@ pub fn audit_str(text: &str) -> Result<Audit> {
     let mut run_end: Option<Json> = None;
     let mut summary: Option<Json> = None;
     let mut makespan = 0.0f64;
+    let mut down_nodes: BTreeSet<usize> = BTreeSet::new();
+    let mut faults = FaultTally::default();
 
     macro_rules! check {
         ($line:expr, $cond:expr, $($msg:tt)*) => {
@@ -255,7 +272,87 @@ pub fn audit_str(text: &str) -> Result<Audit> {
             }
             "place" => {
                 let r = run.as_ref().expect("checked above");
-                audit_place(&ev, r, &jobs, ln, &mut checks)?;
+                audit_place(&ev, r, &jobs, &down_nodes, ln, &mut checks)?;
+            }
+            "node_down" => {
+                let r = run.as_ref().expect("checked above");
+                let node = ev.get("node")?.as_usize()?;
+                check!(ln, node < r.nodes, "node_down for node {node} of {}", r.nodes);
+                check!(ln, down_nodes.insert(node), "node {node} went down twice");
+                faults.node_downs += 1;
+            }
+            "node_up" => {
+                let node = ev.get("node")?.as_usize()?;
+                check!(ln, down_nodes.remove(&node), "node {node} repaired while up");
+            }
+            "seg_failed" => {
+                // Two emitters share this kind: the DES eviction record
+                // carries `node`, the orchestrator recovery record
+                // carries `attempt`/`ckpt_epochs`.
+                let id = ev.get("job")?.as_usize()? as u64;
+                if let Some(node) = ev.opt("node") {
+                    let r = run.as_ref().expect("checked above");
+                    let node = node.as_usize()?;
+                    check!(ln, node < r.nodes, "eviction on node {node} of {}", r.nodes);
+                    let probe = ev.get("probe")?.as_bool()?;
+                    let rework = ev.get("rework_epochs")?.as_f64()?;
+                    check!(
+                        ln,
+                        rework.is_finite() && rework >= 0.0,
+                        "job {id} evicted with negative rework {rework}"
+                    );
+                    let job = track(&mut jobs, id, ln)?;
+                    if probe {
+                        check!(ln, job.hold > 0, "job {id} probe evicted while not probing");
+                        job.hold = 0;
+                    } else {
+                        check!(ln, job.width > 0, "job {id} evicted while not running");
+                        job.width = 0;
+                    }
+                    faults.evictions += 1;
+                } else {
+                    let w = ev.get("w")?.as_usize()?;
+                    let ckpt = ev.get("ckpt_epochs")?.as_f64()?;
+                    let gave_up = ev.get("gave_up")?.as_bool()?;
+                    let job = track(&mut jobs, id, ln)?;
+                    check!(
+                        ln,
+                        job.width == w,
+                        "job {id} failed at width {w} but replay says {}",
+                        job.width
+                    );
+                    check!(ln, !job.gave_up, "job {id} failed again after giving up");
+                    job.width = 0;
+                    job.last_ckpt_epochs = Some(ckpt);
+                    if gave_up {
+                        job.gave_up = true;
+                        faults.gave_ups += 1;
+                    }
+                    faults.failures += 1;
+                }
+            }
+            "recovered" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let resume = ev.get("resume_epochs")?.as_f64()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, !job.gave_up, "job {id} recovered after giving up");
+                // The central recovery invariant: a retry may only
+                // resume from (at most) the last durable checkpoint —
+                // progress past it did not survive the failure.
+                let ckpt = job.last_ckpt_epochs;
+                check!(
+                    ln,
+                    matches!(ckpt, Some(c) if resume <= c + TIME_EPS),
+                    "job {id} resumed at {resume} epochs, past its checkpoint {ckpt:?}"
+                );
+                faults.recoveries += 1;
+            }
+            "job_failed" => {
+                let id = ev.get("job")?.as_usize()? as u64;
+                let attempts = ev.get("attempts")?.as_usize()?;
+                let job = track(&mut jobs, id, ln)?;
+                check!(ln, job.gave_up, "job {id} marked failed without a gave_up seg_failed");
+                check!(ln, attempts >= 1, "job {id} gave up after {attempts} attempts");
             }
             "util" => {
                 let r = run.as_ref().expect("checked above");
@@ -332,6 +429,7 @@ pub fn audit_str(text: &str) -> Result<Audit> {
         total_restarts,
         total_restart_secs,
         preemptions,
+        &faults,
     );
     Ok(Audit { engine: run.engine, events, checks, rendered })
 }
@@ -490,6 +588,7 @@ fn audit_place(
     ev: &Json,
     run: &Run,
     jobs: &BTreeMap<u64, JobTrack>,
+    down_nodes: &BTreeSet<usize>,
     ln: usize,
     checks: &mut u64,
 ) -> Result<()> {
@@ -524,6 +623,12 @@ fn audit_place(
                 "line {}: job {id} on node {node} of {}",
                 ln + 1,
                 run.nodes
+            );
+            // recovery invariant: nothing runs on a downed node
+            anyhow::ensure!(
+                !down_nodes.contains(&node),
+                "line {}: job {id} placed on downed node {node}",
+                ln + 1
             );
             *node_used.entry(node).or_insert(0) += count;
             total += count;
@@ -599,6 +704,7 @@ fn render(
     total_restarts: u64,
     total_restart_secs: f64,
     preemptions: u64,
+    faults: &FaultTally,
 ) -> String {
     let mut out = String::new();
     let topo = if run.nodes == 0 {
@@ -664,6 +770,18 @@ fn render(
         out.push_str(&format!(
             "  job {id}: {} restarts, {:.1}s ({} segments)\n",
             j.restarts, j.restart_secs, j.segments
+        ));
+    }
+
+    if faults.node_downs + faults.evictions + faults.failures + faults.recoveries > 0 {
+        out.push_str(&format!(
+            "\nfault ledger: {} node-down events, {} gang evictions, {} failed segments, \
+             {} recoveries, {} jobs gave up\n",
+            faults.node_downs,
+            faults.evictions,
+            faults.failures,
+            faults.recoveries,
+            faults.gave_ups
         ));
     }
 
@@ -788,6 +906,95 @@ mod tests {
         assert!(err.contains("v99"), "{err}");
         assert!(audit_str("").is_err());
         assert!(audit_str("{\"x\":1}").is_err());
+    }
+
+    /// DES-style fault lines spliced between golden()'s two epochs:
+    /// node 1 dies at t=100 evicting job 1's gang, repairs at t=200
+    /// (before the t=500 placement that spans nodes 0 and 1 again).
+    fn golden_with_faults() -> String {
+        golden().replace(
+            "{\"ev\":\"complete\",\"jct\":500,\"job\":1,\"t\":500}",
+            "{\"ev\":\"node_down\",\"node\":1,\"t\":100}\n\
+             {\"ev\":\"seg_failed\",\"job\":1,\"kind\":\"down\",\"node\":1,\"probe\":false,\"rework_epochs\":12.5,\"t\":100}\n\
+             {\"ev\":\"node_up\",\"node\":1,\"t\":200}\n\
+             {\"ev\":\"complete\",\"jct\":500,\"job\":1,\"t\":500}",
+        )
+    }
+
+    #[test]
+    fn fault_events_audit_clean_and_render_a_ledger() {
+        let audit = audit_str(&golden_with_faults()).expect("fault stream must audit");
+        assert!(audit.rendered.contains("fault ledger"), "{}", audit.rendered);
+        assert!(audit.rendered.contains("1 gang evictions"), "{}", audit.rendered);
+    }
+
+    #[test]
+    fn placement_on_a_downed_node_is_caught() {
+        // drop the repair: the t=500 placement spans node 1 while down
+        let bad = golden_with_faults()
+            .replace("{\"ev\":\"node_up\",\"node\":1,\"t\":200}\n", "");
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("downed node 1"), "{err}");
+    }
+
+    #[test]
+    fn repairing_an_up_node_is_caught() {
+        let bad = golden_with_faults().replace(
+            "{\"ev\":\"node_up\",\"node\":1,\"t\":200}",
+            "{\"ev\":\"node_up\",\"node\":0,\"t\":200}",
+        );
+        let err = audit_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("repaired while up"), "{err}");
+    }
+
+    /// A minimal orchestrator-style recovery stream: one job fails its
+    /// first segment, backs off, recovers from the (empty) checkpoint,
+    /// then finishes.
+    fn recovery_stream(resume_epochs: &str) -> String {
+        [
+            r#"{"ringmaster_trace":3,"stream":"telemetry"}"#,
+            r#"{"capacity":8,"contended":false,"engine":"orchestrator","ev":"run_start","gpus_per_node":8,"n_jobs":1,"nodes":1,"restart_cost":10,"seed":1,"strategy":"doubling","t":0}"#,
+            r#"{"at":0,"ev":"arrival","job":0,"t":0}"#,
+            r#"{"ev":"seg_launch","job":0,"restart":true,"restart_pay":10,"t":0,"tenancy":1,"w":4}"#,
+            r#"{"attempt":1,"ckpt_epochs":0,"ev":"seg_failed","gave_up":false,"job":0,"reason":"injected fault","t":50,"w":4}"#,
+        ]
+        .join("\n")
+            + &format!(
+                "\n{{\"attempt\":1,\"ev\":\"recovered\",\"job\":0,\"resume_epochs\":{resume_epochs},\"t\":80}}\n"
+            )
+            + &[
+                r#"{"ev":"seg_launch","job":0,"restart":true,"restart_pay":10,"t":80,"tenancy":1,"w":4}"#,
+                r#"{"done":true,"ev":"seg_end","epochs":1,"job":0,"preempted":false,"steps":32,"t":200,"w":4}"#,
+                r#"{"ev":"complete","jct":200,"job":0,"t":200}"#,
+                r#"{"completed":1,"ev":"run_end","events":4,"t":200}"#,
+            ]
+            .join("\n")
+    }
+
+    #[test]
+    fn recovery_resumes_at_most_from_its_checkpoint() {
+        let audit = audit_str(&recovery_stream("0")).expect("recovery stream must audit");
+        assert!(audit.rendered.contains("1 recoveries"), "{}", audit.rendered);
+        // claiming to resume *past* the rolled-back checkpoint is the
+        // lost-progress lie the audit exists to catch
+        let err = audit_str(&recovery_stream("5.0")).unwrap_err().to_string();
+        assert!(err.contains("past its checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn traced_faulted_des_run_audits_clean() {
+        use crate::sim::workload::{FaultPlan, WorkloadGen};
+        use crate::sim::{simulate_traced, Contention, SimConfig, StrategyKind};
+        use crate::telemetry::Recorder;
+        let mut cfg = SimConfig::paper(StrategyKind::Precompute, Contention::Moderate, 61)
+            .with_topology(8, 8);
+        cfg.faults = FaultPlan::steady(20_000.0, 600.0, 400_000.0, 61);
+        let jobs = WorkloadGen::default().generate(cfg.n_jobs, cfg.mean_interarrival, 61);
+        let mut rec = Recorder::new();
+        let r = simulate_traced(&cfg, &jobs, &mut rec);
+        assert!(r.evictions > 0, "plan never fired — the audit path went untested");
+        let audit = audit_str(&rec.to_jsonl()).expect("faulted DES stream must audit clean");
+        assert!(audit.rendered.contains("fault ledger"), "{}", audit.rendered);
     }
 
     #[test]

@@ -209,6 +209,111 @@ fn link_contention_flags_require_a_grid() {
 }
 
 #[test]
+fn fault_flags_are_validated() {
+    // faults down whole nodes: simulate must reject them on a flat pool
+    let out = bin().args(["simulate", "--faults", "burst"]).output().expect("run binary");
+    assert!(!out.status.success(), "simulate --faults without --nodes passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--nodes"));
+
+    // fault knobs without a fault preset are inert — reject, same
+    // convention as the topology flags
+    let out = bin()
+        .args(["orchestrate", "--mtbf", "100", "--jobs", "1"])
+        .output()
+        .expect("run binary");
+    assert!(!out.status.success(), "orchestrate --mtbf without --faults passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--faults"));
+
+    // unknown preset names the valid set
+    let out = bin()
+        .args(["simulate", "--nodes", "8", "--faults", "meteor"])
+        .output()
+        .expect("run binary");
+    assert!(!out.status.success(), "simulate --faults meteor passed");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("off|steady|burst"));
+}
+
+#[test]
+fn simulate_runs_a_faulted_grid_end_to_end() {
+    // the fault-injected DES through the real CLI: burst preset on the
+    // paper grid, every job must still complete (victims roll back and
+    // re-queue; downed nodes return after repair)
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "fixed-8",
+            "--n-jobs",
+            "40",
+            "--nodes",
+            "8",
+            "--gpus-per-node",
+            "8",
+            "--faults",
+            "burst",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "faulted simulate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    let row = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("fixed-8"))
+        .unwrap_or_else(|| panic!("no fixed-8 row in output:\n{text}"));
+    let jobs_cell = row.split_whitespace().nth(3).unwrap_or("");
+    assert_eq!(jobs_cell, "40", "completed-jobs column should read exactly 40:\n{text}");
+}
+
+#[test]
+fn orchestrate_runs_under_injected_faults() {
+    // miniature faulted live run: segments die with ~50% hazard, the
+    // deep retry budget means the run still drains and exits 0
+    let out = bin()
+        .args([
+            "orchestrate",
+            "--strategy",
+            "doubling",
+            "--capacity",
+            "2",
+            "--jobs",
+            "2",
+            "--epochs",
+            "0.25",
+            "--segment-steps",
+            "8",
+            "--dataset-examples",
+            "128",
+            "--mean-interarrival",
+            "5",
+            "--faults",
+            "steady",
+            "--mtbf",
+            "60",
+            "--mttr",
+            "60",
+            "--max-retries",
+            "30",
+            "--seed",
+            "7",
+        ])
+        .output()
+        .expect("run binary");
+    assert!(
+        out.status.success(),
+        "faulted orchestrate failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("avg JCT"), "summary missing avg JCT:\n{text}");
+}
+
+#[test]
 fn orchestrate_runs_under_link_contention() {
     // miniature contended live run: 2x2 grid, two jobs, spread placement
     let out = bin()

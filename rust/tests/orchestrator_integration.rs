@@ -12,7 +12,7 @@ use ringmaster::orchestrator::{
     orchestrate, scheduler_by_name, JobSpec, OrchestratorConfig, OrchestratorReport, TraceGen,
 };
 use ringmaster::perfmodel::LinkContention;
-use ringmaster::sim::workload::JobProfile;
+use ringmaster::sim::workload::{FaultPlan, JobProfile};
 use ringmaster::trainer::TrainConfig;
 
 fn train_cfg() -> TrainConfig {
@@ -558,6 +558,144 @@ fn contended_runs_are_seed_deterministic_down_to_model_bits() {
             ja.id
         );
     }
+}
+
+/// A storm every job survives: ~50% per-segment hazard (segments here
+/// run 40–80 virtual seconds against a 60 s MTBF) with a retry budget
+/// deep enough that abandonment needs 31 consecutive losses of a fair
+/// coin — so failures certainly happen and give-ups certainly don't.
+fn survivable_plan(seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::steady(60.0, 60.0, 1e9, seed);
+    plan.max_retries = 30;
+    plan.backoff_base_secs = 2.0;
+    plan
+}
+
+fn faulted_cfg(plan: FaultPlan) -> OrchestratorConfig {
+    let mut cfg = OrchestratorConfig::new(train_cfg(), 8);
+    cfg.segment_steps = 16;
+    cfg.restart_cost = 10.0;
+    cfg.faults = plan;
+    cfg
+}
+
+#[test]
+fn fault_injected_runs_recover_and_every_job_completes() {
+    let specs = bursty_trace();
+    let r = run_with(faulted_cfg(survivable_plan(42)), "doubling", &specs);
+    assert_eq!(r.jobs.len(), specs.len());
+    assert_eq!(r.failed_jobs(), 0, "the survivable plan abandoned a job");
+    assert!(r.total_failures() > 0, "a ~50% hazard never fired across the whole burst");
+    for j in &r.jobs {
+        assert!(!j.failed);
+        assert!(j.epochs + 1e-9 >= 1.0, "job {} under-trained after recovery", j.id);
+        assert!(j.final_loss.is_some());
+    }
+    // failures cost rework + backoff, never correctness — the clean run
+    // must be strictly faster on the same trace
+    let clean = run_with(faulted_cfg(FaultPlan::OFF), "doubling", &specs);
+    assert!(
+        r.avg_jct_secs() > clean.avg_jct_secs(),
+        "faulted {:.1}s not slower than clean {:.1}s",
+        r.avg_jct_secs(),
+        clean.avg_jct_secs()
+    );
+}
+
+#[test]
+fn fault_injected_runs_are_seed_deterministic_to_model_bits() {
+    let specs = bursty_trace();
+    let a = run_with(faulted_cfg(survivable_plan(42)), "doubling", &specs);
+    let b = run_with(faulted_cfg(survivable_plan(42)), "doubling", &specs);
+    assert_same_schedule(&a, &b);
+    for (ja, jb) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(ja.failures, jb.failures, "job {}: fault pattern diverged", ja.id);
+        // recovery replays training from the rolled-back checkpoint, so
+        // even the learned weights are a pure function of the seed
+        assert_eq!(
+            ja.final_loss.map(f32::to_bits),
+            jb.final_loss.map(f32::to_bits),
+            "job {} trained different models under faults",
+            ja.id
+        );
+    }
+    // and a different fault seed produces a different failure pattern
+    let c = run_with(faulted_cfg(survivable_plan(43)), "doubling", &specs);
+    let fa: Vec<u64> = a.jobs.iter().map(|j| j.failures).collect();
+    let fc: Vec<u64> = c.jobs.iter().map(|j| j.failures).collect();
+    assert_ne!(fa, fc, "reseeding the plan changed nothing");
+}
+
+#[test]
+fn zero_rate_plan_is_bit_identical_to_fault_off() {
+    // rate 0 means "never fails": the hooks must short-circuit exactly
+    // like the default OFF plan, down to the model bits.
+    let specs = bursty_trace();
+    let off = run_with(faulted_cfg(FaultPlan::OFF), "doubling", &specs);
+    let zero = faulted_cfg(FaultPlan::steady(0.0, 60.0, 1e9, 7));
+    assert!(zero.faults.is_off());
+    let z = run_with(zero, "doubling", &specs);
+    assert_same_schedule(&off, &z);
+    for (jo, jz) in off.jobs.iter().zip(&z.jobs) {
+        assert_eq!(jz.failures, 0);
+        assert_eq!(jo.final_loss.map(f32::to_bits), jz.final_loss.map(f32::to_bits));
+    }
+}
+
+#[test]
+fn exhausted_retry_budget_marks_the_job_failed_not_the_run() {
+    // MTBF of 1 s against 40 s segments: every attempt dies (hazard
+    // 1 - e^-40), so every job burns 1 + max_retries attempts and is
+    // abandoned — and the run must still exit cleanly with a report.
+    let mut plan = FaultPlan::steady(1.0, 60.0, 1e9, 11);
+    plan.max_retries = 2;
+    plan.backoff_base_secs = 5.0;
+    let specs = vec![paper_job(0, 0.0, 1.0, 1.0), paper_job(1, 1.0, 1.0, 1.0)];
+    let r = run_with(faulted_cfg(plan), "doubling", &specs);
+    assert_eq!(r.failed_jobs(), specs.len(), "the doomed plan let a job finish");
+    assert_eq!(r.avg_jct_secs(), 0.0, "failed jobs leaked into the JCT aggregate");
+    for j in &r.jobs {
+        assert!(j.failed);
+        assert_eq!(j.failures, 3, "job {}: 1 attempt + 2 retries expected", j.id);
+        assert!(j.epochs < 1.0, "job {}: rollback should have discarded progress", j.id);
+    }
+}
+
+#[test]
+fn recovery_through_the_checkpoint_store_matches_whole_file_bit_for_bit() {
+    // The schedule is priced on the virtual clock, so routing recovery
+    // restarts through the content-addressed store must not move a bit
+    // of it — and a run whose jobs all recover must still drain the
+    // store completely (give-ups free their parked snapshots too).
+    let root = std::env::temp_dir().join(format!("rm-faultstore-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let specs = bursty_trace();
+    let whole_file = run_with(faulted_cfg(survivable_plan(42)), "doubling", &specs);
+    let mut store_cfg = faulted_cfg(survivable_plan(42));
+    store_cfg.ckpt_store = Some(root.clone());
+    let through_store = run_with(store_cfg, "doubling", &specs);
+    assert_same_schedule(&whole_file, &through_store);
+    assert_eq!(through_store.failed_jobs(), 0);
+    assert!(through_store.total_failures() > 0);
+    assert!(!root.exists(), "store root survived a fully recovered run");
+}
+
+#[test]
+fn faulted_orchestrator_telemetry_passes_the_report_audit() {
+    // The `report` audit replays recovery invariants (resume <= last
+    // checkpoint, no width held across a failure) from the stream alone;
+    // a live fault-injected run must produce a stream it accepts.
+    use ringmaster::telemetry::{audit::audit_str, Recorder};
+    let specs = bursty_trace();
+    let cfg = faulted_cfg(survivable_plan(42));
+    let sched = scheduler_by_name("doubling").unwrap();
+    let mut rec = Recorder::new();
+    let r = ringmaster::orchestrator::orchestrate_traced(&cfg, sched.as_ref(), &specs, &mut rec)
+        .expect("faulted run");
+    assert!(r.total_failures() > 0, "plan never fired — the audit path went untested");
+    let audit = audit_str(&rec.to_jsonl()).expect("faulted orchestrator stream must audit clean");
+    assert_eq!(audit.engine, "orchestrator");
+    assert!(audit.rendered.contains("fault ledger"), "{}", audit.rendered);
 }
 
 #[test]
